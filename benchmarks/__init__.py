@@ -1,0 +1,2 @@
+# One module per paper table/figure; `python -m benchmarks.run` prints
+# `name,us_per_call,derived` CSV rows for all of them.

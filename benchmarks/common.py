@@ -1,0 +1,49 @@
+"""Shared benchmark plumbing."""
+from __future__ import annotations
+
+import os
+import time
+
+from repro.core.estimators import NoisyEstimator, OracleEstimator, UNetEstimator
+from repro.core.partitions import a100_mig_space
+from repro.core.perfmodel import PerfModel
+from repro.core.simulator import SimConfig, simulate
+from repro.core.traces import generate_trace
+
+SPACE = a100_mig_space()
+PM = PerfModel(SPACE)
+ORACLE_EST = OracleEstimator(PM)
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "predictor.npz")
+
+
+def unet_estimator():
+    if os.path.exists(ARTIFACT):
+        return UNetEstimator.from_artifact(PM, ARTIFACT)
+    return None
+
+
+def miso_estimator():
+    """The real learned estimator if the artifact exists, else oracle."""
+    return unet_estimator() or ORACLE_EST
+
+
+def testbed_trace(n_jobs=100, lam=60.0, seed=1, **kw):
+    return generate_trace(n_jobs, lam_s=lam, seed=seed, **kw)
+
+
+def run_policies(jobs, policies, n_gpus=8, estimator=None, **simkw):
+    out = {}
+    for pol in policies:
+        est = estimator if (estimator is not None and pol == "miso") \
+            else ORACLE_EST
+        cfg = SimConfig(n_gpus=n_gpus, policy=pol, **simkw)
+        t0 = time.time()
+        m = simulate(jobs, cfg, SPACE, PM, est)
+        out[pol] = (m, time.time() - t0)
+    return out
+
+
+def row(name, seconds_per_call, derived):
+    return (name, f"{seconds_per_call * 1e6:.1f}", derived)

@@ -1,0 +1,115 @@
+"""Component benchmarks: predictor accuracy (paper §4.1), Algorithm-1
+latency (paper §4.2/§8), kernel microbenches, TPU-pod adaptation."""
+from __future__ import annotations
+
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (ARTIFACT, ORACLE_EST, PM, SPACE,
+                               miso_estimator, row)
+from repro.core.optimizer import (optimize_partition,
+                                  optimize_partition_bruteforce)
+
+
+def predictor_accuracy(fast=True):
+    """Validation MAE (paper: 0.017) + linreg R^2 (paper: 0.96) + accuracy
+    on completely fresh mixes."""
+    import os
+    if not os.path.exists(ARTIFACT):
+        return [row("predictor_skipped", 0.0, "artifact missing")]
+    t0 = time.time()
+    from repro.core.predictor import dataset as ds
+    from repro.core.predictor import unet
+    from repro.core.predictor.train import load_artifact
+    params, heads, hist = load_artifact(ARTIFACT)
+    net = unet.UNet(params)
+    fresh = ds.generate_dataset(PM, mixes_per_count=20 if fast else 100,
+                                seed=31337)
+    pred = np.asarray(net(jnp.asarray(fresh["val_x"])))
+    mae = float(np.abs(pred - fresh["val_y"]).mean())
+    return [row("predictor_accuracy", time.time() - t0,
+                f"val_mae={hist['val_mae'][-1]:.4f};fresh_mix_mae={mae:.4f};"
+                f"linreg_r2_2g={heads['r2'][0]:.3f};"
+                f"linreg_r2_1g={heads['r2'][1]:.3f}")]
+
+
+def optimizer_latency(fast=True):
+    """Algorithm 1 latency (paper: <=0.5ms; 80ms at 10x combinations)."""
+    rng = random.Random(0)
+    rows = []
+    for m in (3, 5, 7):
+        speeds = []
+        for _ in range(m):
+            sv = {7: 1.0}
+            for s in (4, 3, 2, 1):
+                sv[s] = rng.uniform(0.1, 1.0)
+            speeds.append(sv)
+        reps = 50 if fast else 500
+        t0 = time.time()
+        for _ in range(reps):
+            optimize_partition(SPACE, speeds)
+        dp = (time.time() - t0) / reps
+        t0 = time.time()
+        for _ in range(max(reps // 10, 5)):
+            optimize_partition_bruteforce(SPACE, speeds)
+        bf = (time.time() - t0) / max(reps // 10, 5)
+        rows.append(row(f"optimizer_m{m}", dp,
+                        f"dp_ms={dp*1e3:.3f};bruteforce_ms={bf*1e3:.3f}"))
+    return rows
+
+
+def kernel_bench(fast=True):
+    """Pure-JAX flash vs naive attention on CPU (wall time + peak-residual
+    note); Pallas kernels run in interpret mode for correctness, so their
+    timing is not meaningful off-TPU — FLOPs parity is reported instead."""
+    from repro.models import flash, modules
+    rows = []
+    B, S, H, D = 2, 1024, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    pos = jnp.arange(S, dtype=jnp.int32)
+
+    def loss_flash(q, k, v):
+        return flash.flash_attention(q, k, v, q_positions=pos,
+                                     kv_positions=pos, causal=True,
+                                     block_q=128, block_kv=128).sum()
+
+    def loss_naive(q, k, v):
+        return modules.naive_attention(q, k, v, q_positions=pos,
+                                       kv_positions=pos, causal=True).sum()
+
+    for name, fn in (("flash", loss_flash), ("naive", loss_naive)):
+        g = jax.jit(jax.grad(fn, argnums=(0, 1, 2)))
+        g(q, k, v)[0].block_until_ready()  # compile
+        reps = 3 if fast else 10
+        t0 = time.time()
+        for _ in range(reps):
+            g(q, k, v)[0].block_until_ready()
+        rows.append(row(f"attn_bwd_{name}_S{S}", (time.time() - t0) / reps,
+                        "custom-vjp flash vs naive, CPU wall time"))
+    return rows
+
+
+def tpu_cluster(fast=True):
+    """MISO over TPU-pod sub-slices (the DESIGN.md adaptation)."""
+    from repro.core.estimators import OracleEstimator
+    from repro.core.partitions import tpu_pod_space
+    from repro.core.perfmodel import PerfModel, TPU_V5E_POD
+    from repro.core.simulator import SimConfig, simulate
+    from repro.core.traces import generate_trace
+    t0 = time.time()
+    space = tpu_pod_space()
+    pm = PerfModel(space, TPU_V5E_POD)
+    jobs = generate_trace(60 if fast else 200, lam_s=20.0, seed=77)
+    est = OracleEstimator(pm)
+    m = simulate(jobs, SimConfig(n_gpus=4, policy="miso"), space, pm, est)
+    n = simulate(jobs, SimConfig(n_gpus=4, policy="nopart"), space, pm, est)
+    return [row("tpu_pod_miso", time.time() - t0,
+                f"jct_gain={1 - m.avg_jct / n.avg_jct:+.3f};"
+                f"slices=2x16..16x16;pods=4")]

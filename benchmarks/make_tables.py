@@ -1,0 +1,136 @@
+"""Render EXPERIMENTS.md tables from the dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.make_tables > artifacts/roofline_tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+ORDER = ["smollm-360m", "granite-8b", "qwen3-32b", "command-r-plus-104b",
+         "chameleon-34b", "musicgen-large", "mixtral-8x22b",
+         "qwen2-moe-a2.7b", "rwkv6-3b", "recurrentgemma-2b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load():
+    recs = {}
+    for p in glob.glob(os.path.join(ART, "*.json")):
+        r = json.load(open(p))
+        recs[(r["arch"], r["shape"], r.get("tag", "pod"))] = r
+    return recs
+
+
+def _ms(x):
+    return f"{x * 1e3:,.1f}"
+
+
+def fits(r):
+    """Resident state per device (params/opt/cache: args+out-alias) vs the
+    16 GiB v5e budget.  XLA's temp high-water on *this CPU backend* includes
+    f32-upcast copies a TPU build would not materialize, so temps are
+    reported as a separate footnote, not a verdict."""
+    ma = r.get("memory_analysis") or {}
+    if "argument_size_in_bytes" not in ma:
+        return "?"
+    resident = ma["argument_size_in_bytes"] + ma.get("output_size_in_bytes", 0) \
+        - ma.get("alias_size_in_bytes", 0)
+    ok = resident <= 16e9
+    return f"{'yes' if ok else 'NO'} ({resident/1e9:.1f}G)"
+
+
+def baseline_table(recs, tag):
+    print(f"| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+          f"dominant | useful (6ND/HLO) | fits 16GB | compile (s) |")
+    print("|---|---|---:|---:|---:|---|---:|---|---:|")
+    for arch in ORDER:
+        for shape in SHAPES:
+            r = recs.get((arch, shape, tag))
+            if r is None:
+                continue
+            if r.get("skipped"):
+                print(f"| {arch} | {shape} | — | — | — | SKIP (full attention"
+                      f" @512k) | — | — | — |")
+                continue
+            rl = r["roofline"]
+            print(f"| {arch} | {shape} | {_ms(rl['compute_s'])} | "
+                  f"{_ms(rl['memory_s'])} | {_ms(rl['collective_s'])} | "
+                  f"{rl['dominant']} | {r['model_flops_ratio']:.2f} | "
+                  f"{fits(r)} | {r['compile_s']:.0f} |")
+
+
+def collective_detail(recs, cells):
+    print("| cell | all-gather | all-reduce | reduce-scatter | all-to-all | "
+          "permute |")
+    print("|---|---:|---:|---:|---:|---:|")
+    for arch, shape, tag in cells:
+        r = recs.get((arch, shape, tag))
+        if not r or r.get("skipped"):
+            continue
+        c = r["collectives"]
+        g = lambda k: f"{c.get(k, 0) / 1e9:.2f} GB"
+        print(f"| {arch} x {shape} ({tag}) | {g('all-gather')} | "
+              f"{g('all-reduce')} | {g('reduce-scatter')} | "
+              f"{g('all-to-all')} | {g('collective-permute')} |")
+
+
+def hillclimb_table(recs, arch, shape, tags):
+    print(f"| iteration | compute (ms) | memory (ms) | memory-kern (ms) | "
+          f"collective (ms) | bound (ms) | useful | fits |")
+    print("|---|---:|---:|---:|---:|---:|---:|---|")
+    for tag, label in tags:
+        r = recs.get((arch, shape, tag))
+        if not r or r.get("skipped"):
+            print(f"| {label} | (missing) |")
+            continue
+        rl, rk = r["roofline"], r["roofline_kernelized"]
+        print(f"| {label} | {_ms(rl['compute_s'])} | {_ms(rl['memory_s'])} | "
+              f"{_ms(rk['memory_s'])} | {_ms(rl['collective_s'])} | "
+              f"{_ms(rl['bound_s'])} | {r['model_flops_ratio']:.2f} | "
+              f"{fits(r)} |")
+
+
+def main():
+    recs = _load()
+    print("## Single-pod (16x16 = 256 chips) baseline\n")
+    baseline_table(recs, "pod")
+    print("\n## Multi-pod (2x16x16 = 512 chips)\n")
+    baseline_table(recs, "multipod")
+    print("\n## Collective composition of the hillclimb cells (per device)\n")
+    collective_detail(recs, [
+        ("rwkv6-3b", "train_4k", "pod"),
+        ("qwen2-moe-a2.7b", "train_4k", "pod"),
+        ("qwen2-moe-a2.7b", "train_4k", "it_ep4"),
+        ("command-r-plus-104b", "decode_32k", "pod"),
+        ("command-r-plus-104b", "decode_32k", "it_int8tp"),
+    ])
+    print("\n## Hillclimb: rwkv6-3b x train_4k\n")
+    hillclimb_table(recs, "rwkv6-3b", "train_4k", [
+        ("pod", "baseline (16x16)"),
+        ("it_bf16streams", "+bf16 r/k/v streams"),
+        ("it_chunk128", "+chunk 128 (refuted)"),
+    ])
+    print("\n## Hillclimb: qwen2-moe-a2.7b x train_4k\n")
+    hillclimb_table(recs, "qwen2-moe-a2.7b", "train_4k", [
+        ("pod", "baseline (16x16, TP experts)"),
+        ("it_ep4", "EP: 64x4 mesh, experts 4-way"),
+    ])
+    print("\n## Hillclimb: command-r-plus-104b x decode_32k\n")
+    hillclimb_table(recs, "command-r-plus-104b", "decode_32k", [
+        ("pod", "baseline (FSDP weights)"),
+        ("it_tponly", "TP-only weights (no per-layer gather)"),
+        ("it_int8tp", "TP-only + int8 weight streams"),
+    ])
+    print("\n## Bonus: smollm-360m x train_4k (MISO right-sizing)\n")
+    hillclimb_table(recs, "smollm-360m", "train_4k", [
+        ("pod", "baseline (16x16)"),
+        ("it_rightsize64x4", "right-sized 64x4 mesh"),
+        ("it_puredp", "pure DP 256x1, microbatches=1"),
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""§Roofline: per (arch x shape x mesh) three-term roofline from the dry-run
+artifacts (launch/dryrun.py writes them; launch/dryrun_all.sh runs the full
+campaign)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from benchmarks.common import row
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def roofline_table(fast=True):
+    t0 = time.time()
+    paths = sorted(glob.glob(os.path.join(ART, "*.json")))
+    if not paths:
+        return [row("roofline_skipped", 0.0,
+                    "run launch/dryrun_all.sh first")]
+    rows = []
+    for p in paths:
+        r = json.load(open(p))
+        name = f"roofline_{r['arch']}__{r['shape']}__{r.get('tag', 'pod')}"
+        if r.get("skipped"):
+            rows.append(row(name, 0.0, "SKIP:" + r["reason"][:70]))
+            continue
+        rl = r["roofline"]
+        rows.append(row(
+            name, rl["bound_s"],
+            f"comp_ms={rl['compute_s']*1e3:.1f};mem_ms={rl['memory_s']*1e3:.1f};"
+            f"coll_ms={rl['collective_s']*1e3:.1f};dom={rl['dominant']};"
+            f"useful={r['model_flops_ratio']:.2f};compile_s={r['compile_s']}"))
+    rows.append(row("roofline_total_cells", time.time() - t0,
+                    f"cells={len(paths)}"))
+    return rows

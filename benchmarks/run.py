@@ -1,0 +1,61 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows.  ``--full`` runs paper-scale trials (slow); default is a fast
+# pass suitable for CI.
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale trial counts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark names")
+    args = ap.parse_args()
+    fast = not args.full
+
+    from benchmarks import components, paper_figs, roofline_table, \
+        simulation_figs
+
+    benches = [
+        paper_figs.fig2_takeaway1,
+        paper_figs.fig3_mig_vs_mps,
+        paper_figs.fig4_optimal_partition_varies,
+        paper_figs.fig5_heuristics_suboptimal,
+        components.predictor_accuracy,
+        components.optimizer_latency,
+        paper_figs.fig10_testbed,
+        paper_figs.fig11_cdf,
+        paper_figs.fig12_breakdown,
+        paper_figs.fig13_jobcount,
+        paper_figs.fig14_mps_time,
+        paper_figs.fig15_mps_only,
+        simulation_figs.fig16_simulation,
+        simulation_figs.fig17_ckpt_overhead,
+        simulation_figs.fig18_pred_error,
+        simulation_figs.fig19_arrival_rate,
+        simulation_figs.fault_tolerance,
+        components.tpu_cluster,
+        components.kernel_bench,
+        roofline_table.roofline_table,
+    ]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in benches:
+        if args.only and args.only not in bench.__name__:
+            continue
+        try:
+            for name, us, derived in bench(fast=fast):
+                print(f"{name},{us},{derived}", flush=True)
+        except Exception as e:  # keep the harness going
+            failures += 1
+            print(f"{bench.__name__},NaN,ERROR:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Fault-tolerance walkthrough: train, kill, resume bit-exactly — the
+job-level durability MISO's re-partitioning relies on.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import RunConfig
+from repro.data.pipeline import SyntheticLMData
+from repro.models import LM
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+from repro.train.optim import adamw_init
+from repro.train.train_step import make_train_step
+
+
+def main():
+    cfg = configs.get_smoke_config("granite-8b")
+    run = RunConfig(param_dtype="float32", activation_dtype="float32",
+                    attn_block_q=16, attn_block_kv=16, loss_chunk=32)
+    data = SyntheticLMData(cfg.vocab_size, 32, 4, seed=0)
+    step_fn = jax.jit(make_train_step(cfg, run))
+    ckpt = tempfile.mkdtemp()
+
+    def run_steps(params, opt, start, n):
+        for s in range(start, start + n):
+            t, l = data.batch_at(s)
+            params, opt, m = step_fn(params, opt, jnp.asarray(t),
+                                     jnp.asarray(l))
+        return params, opt, float(m["loss"])
+
+    params, _ = LM.init(cfg, run, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+
+    # uninterrupted run
+    pa, _, loss_a = run_steps(params, opt, 0, 10)
+
+    # interrupted run: 6 steps -> "crash" -> restore -> 4 more
+    pb, ob, _ = run_steps(params, opt, 0, 6)
+    save_checkpoint(ckpt, 6, {"params": pb, "opt": ob})
+    print("killed after step 6; restoring from checkpoint...")
+    state, step = restore_checkpoint(ckpt)
+    pc, _, loss_c = run_steps(state["params"], state["opt"], step, 4)
+
+    diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+               zip(jax.tree_util.tree_leaves(pa),
+                   jax.tree_util.tree_leaves(pc)))
+    print(f"final loss {loss_a:.4f} vs resumed {loss_c:.4f}; "
+          f"max param diff {diff:.2e} (bit-exact resume: {diff < 1e-6})")
+    shutil.rmtree(ckpt, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

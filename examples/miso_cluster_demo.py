@@ -1,0 +1,46 @@
+"""MISO vs the competing schedulers on one cluster trace (paper Fig 10 in
+miniature), using the trained U-Net predictor when available.
+
+    PYTHONPATH=src python examples/miso_cluster_demo.py
+"""
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.estimators import OracleEstimator, UNetEstimator
+from repro.core.partitions import a100_mig_space
+from repro.core.perfmodel import PerfModel
+from repro.core.simulator import SimConfig, simulate
+from repro.core.traces import generate_trace
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "predictor.npz")
+
+
+def main():
+    space = a100_mig_space()
+    pm = PerfModel(space)
+    jobs = generate_trace(80, lam_s=45.0, seed=0)
+    oracle = OracleEstimator(pm)
+    miso_est = (UNetEstimator.from_artifact(pm, ARTIFACT)
+                if os.path.exists(ARTIFACT) else oracle)
+    print(f"estimator: {'U-Net' if miso_est is not oracle else 'oracle'}; "
+          f"{len(jobs)} jobs on 8 GPUs\n")
+    print(f"{'policy':10s} {'avgJCT(s)':>10s} {'makespan(s)':>12s} "
+          f"{'STP':>6s}  queue/mps/ckpt/run (s)")
+    base = None
+    for pol in ("nopart", "optsta", "mpsonly", "miso", "oracle"):
+        est = miso_est if pol == "miso" else oracle
+        m = simulate(jobs, SimConfig(n_gpus=8, policy=pol), space, pm, est)
+        if pol == "nopart":
+            base = m
+        b = m.breakdown
+        gain = f" ({100 * (1 - m.avg_jct / base.avg_jct):+.0f}%)" if base else ""
+        print(f"{pol:10s} {m.avg_jct:10,.0f} {m.makespan:12,.0f} "
+              f"{m.stp:6.3f}  {b['queue']:.0f}/{b['mps']:.0f}/"
+              f"{b['ckpt']:.0f}/{b['run']:.0f}{gain}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Quickstart: train a small LM end-to-end on CPU with the public API.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 200]
+
+Uses the 20M preset (a reduced smollm-family model), the deterministic data
+pipeline, AdamW with grad clipping, and checkpoints every 50 steps.  Loss
+drops visibly within ~100 steps on the structured synthetic stream.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    sys.exit(train_main([
+        "--preset", "20m", "--steps", str(args.steps), "--batch", "8",
+        "--seq", "128", "--lr", "3e-3", "--ckpt-dir", "/tmp/repro_quickstart",
+        "--log-every", "10",
+    ]))

@@ -1,0 +1,56 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` returns the exact published configuration;
+``get_smoke_config(arch_id)`` returns a reduced same-family variant for CPU
+smoke tests (small widths/layers/experts, tiny vocab).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig, MoEConfig, RunConfig
+from repro.configs import shapes
+
+ARCH_IDS = (
+    "mixtral-8x22b",
+    "qwen2-moe-a2.7b",
+    "rwkv6-3b",
+    "musicgen-large",
+    "smollm-360m",
+    "qwen3-32b",
+    "granite-8b",
+    "command-r-plus-104b",
+    "recurrentgemma-2b",
+    "chameleon-34b",
+)
+
+_MODULES = {
+    "mixtral-8x22b": "mixtral_8x22b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2p7b",
+    "rwkv6-3b": "rwkv6_3b",
+    "musicgen-large": "musicgen_large",
+    "smollm-360m": "smollm_360m",
+    "qwen3-32b": "qwen3_32b",
+    "granite-8b": "granite_8b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "chameleon-34b": "chameleon_34b",
+}
+
+
+def _mod(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _mod(arch_id).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _mod(arch_id).smoke()
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,168 @@
+"""Model / run configuration dataclasses.
+
+One ``ModelConfig`` per assigned architecture lives in ``repro/configs/<id>.py``
+with the exact published numbers; every config also provides a ``smoke()``
+reduction of the same family for CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 8
+    top_k: int = 2
+    d_ff_expert: int = 0           # per-expert hidden size
+    n_shared_experts: int = 0      # qwen2-moe: always-on shared expert(s)
+    d_ff_shared: int = 0           # total hidden size of the merged shared expert
+    capacity_factor: float = 1.25
+    group_size: int = 512          # tokens per dispatch group (einsum dispatch)
+    router_aux_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    sliding_window: Optional[int] = None   # SWA window (mixtral)
+    local_window: Optional[int] = None     # local-attn window for hybrid blocks
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    attn_bias: bool = False
+    mlp_variant: str = "swiglu"    # "swiglu" (3-mat) | "gelu" (2-mat)
+    moe: Optional[MoEConfig] = None
+    # layer pattern for hybrids: e.g. ("rglru","rglru","attn") repeated.
+    # None -> homogeneous ("attn" or "rwkv" depending on family).
+    block_pattern: Optional[Sequence[str]] = None
+    # rwkv6 specifics
+    rwkv_head_dim: int = 64
+    # rg-lru specifics
+    rglru_conv_width: int = 4
+    notes: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if the arch supports O(1)-state or bounded-window decoding at
+        arbitrary context length (gates long_500k applicability)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window is not None
+
+    @property
+    def layer_kinds(self) -> tuple:
+        if self.block_pattern is None:
+            kind = "rwkv" if self.family == "ssm" else "attn"
+            return tuple([kind] * self.n_layers)
+        pat = list(self.block_pattern)
+        out = []
+        while len(out) < self.n_layers:
+            out.extend(pat)
+        return tuple(out[: self.n_layers])
+
+    def param_count(self) -> int:
+        """Analytic parameter count (matches models.model.init within ties)."""
+        M, V, L = self.d_model, self.vocab_size, self.n_layers
+        D = self.resolved_head_dim
+        total = V * M                       # embed
+        if not self.tie_embeddings:
+            total += V * M                  # unembed
+        total += M                          # final norm
+        for kind in self.layer_kinds:
+            if kind == "attn":
+                attn = M * self.n_heads * D + 2 * M * self.n_kv_heads * D \
+                    + self.n_heads * D * M
+                if self.qk_norm:
+                    attn += 2 * D
+                total += attn + 2 * M       # norms
+                total += self._ffn_params() if self.moe is None else self._moe_params()
+            elif kind == "rwkv":
+                total += self._rwkv_params() + 2 * M
+            elif kind == "rglru":
+                total += self._rglru_params() + 2 * M
+                total += self._ffn_params()
+            else:
+                raise ValueError(kind)
+        return total
+
+    def _ffn_params(self) -> int:
+        mats = 2 if self.mlp_variant == "gelu" else 3
+        return mats * self.d_model * self.d_ff
+
+    def _moe_params(self) -> int:
+        m = self.moe
+        M = self.d_model
+        total = M * m.n_experts                      # router
+        total += m.n_experts * 3 * M * m.d_ff_expert
+        if m.n_shared_experts:
+            total += 3 * M * m.d_ff_shared + M       # shared + gate
+        return total
+
+    def _rwkv_params(self) -> int:
+        M = self.d_model
+        # time-mix: r,k,v,g,w,o projections + decay lora + mix params + ln
+        tm = 5 * M * M + M * M + 2 * (M * 64 + 64 * M) + 6 * M + 2 * M
+        # channel-mix: k,v ffn with token shift
+        cm = M * self.d_ff + self.d_ff * M + 2 * M
+        return tm + cm
+
+    def _rglru_params(self) -> int:
+        M = self.d_model
+        W = self.rglru_conv_width
+        # recurrent block: in-proj x2, conv1d, input+rec gates, Lambda, out-proj
+        return 2 * M * M + W * M + 2 * M * M + M + M * M
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top-k experts count)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        dense_like = self.param_count() - self.n_layers * self._moe_params()
+        act = self.d_model * m.n_experts \
+            + m.top_k * 3 * self.d_model * m.d_ff_expert
+        if m.n_shared_experts:
+            act += 3 * self.d_model * m.d_ff_shared + self.d_model
+        return dense_like + self.n_layers * act
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Execution knobs, orthogonal to architecture."""
+    param_dtype: str = "bfloat16"
+    activation_dtype: str = "bfloat16"
+    use_pallas: bool = False       # CPU CI: pure-JAX path (kernels need TPU/interpret)
+    remat: bool = True
+    scan_layers: bool = True
+    microbatches: int = 1          # gradient-accumulation steps per train step
+    attn_block_q: int = 512        # blockwise-attention chunking (pure-JAX flash)
+    attn_block_kv: int = 1024
+    loss_chunk: int = 512          # chunked cross-entropy seq chunk
+    fsdp: bool = True              # shard params/opt over "data" axis too
+    zero_opt: bool = True          # shard optimizer state over "data"
+    swa_block_skip: bool = True    # skip out-of-window kv blocks (beyond-paper opt)
+    rwkv_chunk: int = 64           # WKV6 chunk length (kernel block size)
+    rwkv_bf16_streams: bool = False  # store r/k/v chunk streams in bf16
+    quantize_serving: bool = False # int8 weight-only quant for decode (beyond-paper)
+    grad_compression: bool = False # int8 pod-axis gradient all-reduce
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    seed: int = 0

@@ -1,0 +1,39 @@
+"""chameleon-34b [vlm] — early-fusion, VQ image tokens.
+[arXiv:2405.09818; unverified]
+
+48L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=65536 (unified text +
+VQ-VAE image codebook), qk-norm.  The VQ image tokenizer frontend is a
+STUB: ``input_specs()`` provides precomputed token ids covering interleaved
+text/image streams.  ~34B parameters.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab_size=65536,
+    qk_norm=True,
+    notes="modality frontend stubbed (VQ token ids); "
+          "full attention: long_500k skipped.",
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="chameleon-34b-smoke",
+        family="vlm",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        qk_norm=True,
+    )

@@ -1,0 +1,38 @@
+"""command-r-plus-104b [dense] — GQA, no-bias.
+[hf:CohereForAI/c4ai-command-r-plus; unverified]
+
+64L d_model=12288 96H (GQA kv=8) d_ff=33792 vocab=256000, tied embeddings.
+~104B parameters — the largest assigned arch; the decode_32k cell is the
+serving stress test (KV cache ~1.1 TB global in bf16).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=33792,
+    vocab_size=256000,
+    tie_embeddings=True,
+    rope_theta=75_000_000.0,
+    notes="full attention: long_500k skipped.",
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="command-r-plus-104b-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=96,
+        n_heads=6,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=192,
+        vocab_size=512,
+        tie_embeddings=True,
+    )

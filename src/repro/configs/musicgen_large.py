@@ -1,0 +1,39 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens.
+[arXiv:2306.05284; hf]
+
+48L d_model=2048 32H (GQA kv=32 = MHA) d_ff=8192 vocab=2048.  The EnCodec
+modality frontend is a STUB: ``input_specs()`` provides precomputed audio
+token ids (the backbone sees a plain token stream).  2-matrix GELU FFN per
+the reference.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=2048,
+    mlp_variant="gelu",
+    notes="modality frontend stubbed (EnCodec token ids); "
+          "full attention: long_500k skipped.",
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large-smoke",
+        family="audio",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=128,
+        mlp_variant="gelu",
+    )

@@ -1,0 +1,40 @@
+"""qwen2-moe-a2.7b [moe] — 60 routed experts top-4 + 4 shared.
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]
+
+24L d_model=2048 16H (GQA kv=16 = MHA) d_ff=1408 (per routed expert)
+vocab=151936.  The 4 shared experts are merged into one always-on SwiGLU of
+hidden 5632 (= 4 x 1408) with a per-token sigmoid gate, matching the HF
+reference implementation.  ~14.3B total / ~2.7B active.
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    vocab_size=151936,
+    moe=MoEConfig(n_experts=60, top_k=4, d_ff_expert=1408,
+                  n_shared_experts=4, d_ff_shared=5632),
+    notes="full attention: long_500k skipped.",
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-moe-a2.7b-smoke",
+        family="moe",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=96,
+        vocab_size=256,
+        moe=MoEConfig(n_experts=6, top_k=3, d_ff_expert=96,
+                      n_shared_experts=2, d_ff_shared=128, group_size=32),
+    )

@@ -1,0 +1,36 @@
+"""qwen3-32b [dense] — qk_norm, GQA. [hf:Qwen/Qwen3-8B family; hf]
+
+64L d_model=5120 64H (GQA kv=8) d_ff=25600 vocab=151936, head_dim=128,
+per-head RMS qk-norm.  ~32.8B parameters.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=25600,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    notes="full attention: long_500k skipped.",
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-32b-smoke",
+        family="dense",
+        n_layers=3,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        qk_norm=True,
+    )

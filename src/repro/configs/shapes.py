@@ -1,0 +1,45 @@
+"""Assigned input shapes and (arch x shape) applicability.
+
+LM transformer shapes are seq_len x global_batch.  ``decode_*``/``long_*``
+lower ``serve_step`` (one new token against a KV cache of seq_len), not
+``train_step``.  ``long_500k`` requires sub-quadratic attention: it runs for
+SSM / hybrid / sliding-window archs and is recorded as skipped for pure
+full-attention archs (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def applicable(cfg, shape: InputShape) -> bool:
+    if shape.name == "long_500k":
+        return cfg.is_subquadratic
+    return True
+
+
+def skip_reason(cfg, shape: InputShape) -> str | None:
+    if applicable(cfg, shape):
+        return None
+    return (f"{cfg.name}: long_500k skipped — pure full attention "
+            f"(no O(1)-state / bounded-window decode at 512k context)")
+
+
+def cells(cfg):
+    """All assigned (shape, applicable) pairs for an arch."""
+    return [(s, applicable(cfg, s)) for s in SHAPES.values()]

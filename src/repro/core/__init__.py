@@ -1,0 +1,5 @@
+# MISO core: partition spaces, performance model, MPS->MIG predictor,
+# partition optimizer, cluster scheduler and event simulator.
+from repro.core.partitions import a100_mig_space, tpu_pod_space, PartitionSpace
+from repro.core.jobs import Job, JobProfile, WORKLOADS, job_profile
+from repro.core.perfmodel import PerfModel, A100, TPU_V5E_POD

@@ -1,0 +1,120 @@
+"""Slice-speed estimators: how a scheduling policy learns f_i(x).
+
+* OracleEstimator  — ground-truth speeds from the performance model (the
+  paper's Oracle; also used *after* partitioning for actual execution speed).
+* NoisyEstimator   — ground truth + multiplicative Gaussian error (paper
+  Fig 18 sensitivity).
+* UNetEstimator    — the full MISO path: the job mix's measured MPS matrix ->
+  U-Net -> (7g,4g,3g), then the linear-regression heads -> (2g,1g), then the
+  memory monitor zeroes OOM slices (paper §4.1 + §4.3).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.jobs import DUMMY_PROFILE, JobProfile
+from repro.core.partitions import PartitionSpace
+from repro.core.perfmodel import PerfModel
+from repro.core.predictor import linreg as linreg_mod
+from repro.core.predictor import unet as unet_mod
+from repro.core.predictor.dataset import LIN_SLICES, OUT_SLICES
+
+
+def _apply_mem_constraints(space: PartitionSpace, prof: JobProfile,
+                           speeds: Dict[int, float],
+                           qos_min_slice: int = 0) -> Dict[int, float]:
+    out = {}
+    for size, v in speeds.items():
+        st = space.slices[size]
+        if prof.mem_gb > st.memory_gb or size < qos_min_slice:
+            out[size] = 0.0
+        else:
+            out[size] = max(0.0, min(1.0, v))
+    return out
+
+
+class OracleEstimator:
+    needs_mps = False
+
+    def __init__(self, pm: PerfModel):
+        self.pm = pm
+
+    def estimate(self, profs: Sequence[JobProfile], mps_matrix=None,
+                 qos=None) -> List[Dict[int, float]]:
+        qos = qos or [0] * len(profs)
+        return [
+            _apply_mem_constraints(self.pm.space, p, self.pm.speed_vector(p), q)
+            for p, q in zip(profs, qos)]
+
+
+class NoisyEstimator(OracleEstimator):
+    """Ground truth with relative error ~ N(0, sigma) (paper Fig 18)."""
+    needs_mps = False
+
+    def __init__(self, pm: PerfModel, sigma: float, seed: int = 0):
+        super().__init__(pm)
+        self.sigma = sigma
+        self.rng = np.random.default_rng(seed)
+
+    def estimate(self, profs, mps_matrix=None, qos=None):
+        qos = qos or [0] * len(profs)
+        out = []
+        for p, q in zip(profs, qos):
+            sv = {s: v * float(1.0 + self.rng.normal(0.0, self.sigma))
+                  for s, v in self.pm.speed_vector(p).items()}
+            sv[self.pm.space.full_size] = 1.0   # normalization anchor
+            out.append(_apply_mem_constraints(self.pm.space, p, sv, q))
+        return out
+
+
+class UNetEstimator:
+    """MPS-profile -> U-Net -> linreg heads -> memory-constrained speeds."""
+    needs_mps = True
+
+    def __init__(self, pm: PerfModel, params, heads, jobs: int = 7):
+        self.pm = pm
+        self.net = unet_mod.UNet(params, jobs=jobs)
+        self.heads = heads
+        self.jobs = jobs
+
+    @classmethod
+    def from_artifact(cls, pm: PerfModel, path: str, jobs: int = 7):
+        from repro.core.predictor.train import load_artifact
+        params, heads, _ = load_artifact(path)
+        return cls(pm, params, heads, jobs=jobs)
+
+    def measure_mps(self, profs: Sequence[JobProfile],
+                    noise_sigma: float = 0.0,
+                    rng: Optional[np.random.Generator] = None) -> np.ndarray:
+        """The profiling measurement itself (what the 30s MPS phase yields).
+
+        ``noise_sigma`` models measurement noise from a finite profiling
+        window: speeds are averaged over ~10s per level, so shorter windows
+        give noisier estimates (paper Fig 14 sensitivity: sigma ~ 1/sqrt(T)).
+        """
+        padded = list(profs) + [DUMMY_PROFILE] * (self.jobs - len(profs))
+        m = np.asarray(self.pm.mps_matrix(padded), dtype=np.float32)
+        if noise_sigma > 0:
+            rng = rng or np.random.default_rng(0)
+            m = m * (1.0 + rng.normal(0.0, noise_sigma, size=m.shape)
+                     ).astype(np.float32)
+            m = np.maximum(m, 1e-6)
+        return m / np.maximum(m.max(axis=0, keepdims=True), 1e-9)
+
+    def estimate(self, profs, mps_matrix: Optional[np.ndarray] = None,
+                 qos=None) -> List[Dict[int, float]]:
+        qos = qos or [0] * len(profs)
+        if mps_matrix is None:
+            mps_matrix = self.measure_mps(profs)
+        pred = np.asarray(self.net(mps_matrix))            # (3, J)
+        lin = linreg_mod.apply_linreg(self.heads, pred.T)  # (J, 2)
+        out = []
+        for j, (p, q) in enumerate(zip(profs, qos)):
+            sv = {s: float(pred[r, j]) for r, s in enumerate(OUT_SLICES)}
+            sv[self.pm.space.full_size] = 1.0
+            for r, s in enumerate(LIN_SLICES):
+                sv[s] = float(lin[j, r])
+            out.append(_apply_mem_constraints(self.pm.space, p, sv, q))
+        return out

@@ -1,0 +1,47 @@
+"""Figures of merit (paper §2.3): average JCT, makespan, system throughput."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.jobs import Job
+
+
+@dataclass(frozen=True)
+class TraceMetrics:
+    avg_jct: float
+    makespan: float
+    stp: float                   # time-averaged aggregate progress rate / GPU
+    p50_jct: float
+    p90_jct: float
+    jcts: tuple
+    relative_jcts: tuple         # JCT / exclusive-execution time (Fig 11)
+    breakdown: dict              # mean seconds in queue / mps / ckpt / run
+
+
+def compute_metrics(jobs: Sequence[Job], n_gpus: int) -> TraceMetrics:
+    done = [j for j in jobs if j.finish_time is not None]
+    if not done:
+        raise ValueError("no completed jobs")
+    jcts = np.array([j.finish_time - j.arrival for j in done])
+    rel = np.array([(j.finish_time - j.arrival) / j.work for j in done])
+    t0 = min(j.arrival for j in done)
+    t1 = max(j.finish_time for j in done)
+    makespan = t1 - t0
+    total_work = sum(j.work for j in done)
+    stp = total_work / makespan / n_gpus if makespan > 0 else 0.0
+    breakdown = {
+        "queue": float(np.mean([j.t_queue for j in done])),
+        "mps": float(np.mean([j.t_mps for j in done])),
+        "ckpt": float(np.mean([j.t_ckpt for j in done])),
+        "run": float(np.mean([j.t_run for j in done])),
+    }
+    return TraceMetrics(
+        avg_jct=float(jcts.mean()), makespan=float(makespan), stp=float(stp),
+        p50_jct=float(np.percentile(jcts, 50)),
+        p90_jct=float(np.percentile(jcts, 90)),
+        jcts=tuple(float(x) for x in jcts),
+        relative_jcts=tuple(float(x) for x in rel),
+        breakdown=breakdown)

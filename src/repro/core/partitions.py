@@ -1,0 +1,152 @@
+"""Accelerator partition spaces.
+
+``A100MIGSpace`` models the paper's Table 1 exactly: slice profiles
+{1g.5gb, 2g.10gb, 3g.20gb, 4g.20gb, 7g.40gb} over 7 compute (GPC) slots and
+8 memory slots (3g occupies 4 memory slots — the A100 quirk that makes
+(3g,3g) a full configuration), per-type max counts, and the paper's explicit
+placement exclusion (4g and 3g cannot coexist).  The paper's appendix figure
+shows the 18 placement-maximal rows; scheduling per Eq. (4) needs exactly one
+slice per job, so the optimizer searches *all* valid multisets (including
+non-maximal ones such as (4g, 2g) for a 2-job mix) — ``maximal_partitions``
+reproduces the appendix-figure semantics.
+
+``TPUPodSpace`` is the TPU adaptation (DESIGN.md §2): a 16x16 v5e pod is
+sliced into contiguous row-range sub-meshes in units of 2 rows (32 chips).
+Memory is per-chip, so memory slots == compute units and there is no 4+3
+exclusion; up to 8 co-located jobs per pod.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class SliceType:
+    size: int            # compute units (GPCs / row-pairs); the f_i(x) key
+    name: str
+    compute_slots: int
+    mem_slots: int
+    memory_gb: float
+    max_count: int
+    cache_frac: float    # fraction of shared cache (A100 L2); 1.0 on TPU
+    chips: int = 0       # TPU: chips in the sub-mesh
+    mesh_shape: Optional[Tuple[int, int]] = None
+
+
+class PartitionSpace:
+    """Enumerates valid slice multisets (partitions) of one accelerator."""
+
+    def __init__(self, slice_types: Sequence[SliceType], total_compute: int,
+                 total_mem: int, exclusions: Sequence[frozenset] = (),
+                 name: str = "space"):
+        self.name = name
+        self.slices: Dict[int, SliceType] = {s.size: s for s in slice_types}
+        self.sizes = tuple(sorted(self.slices, reverse=True))
+        self.total_compute = total_compute
+        self.total_mem = total_mem
+        self.exclusions = tuple(frozenset(e) for e in exclusions)
+        self.partitions = self._enumerate()
+        self.max_jobs = max(len(p) for p in self.partitions)
+        self.full_size = max(self.sizes)
+
+    # -------------------------------------------------------- enumeration
+
+    def _enumerate(self) -> Tuple[Tuple[int, ...], ...]:
+        found = set()
+
+        def rec(idx, current, compute, mem):
+            if current:
+                found.add(tuple(sorted(current, reverse=True)))
+            if idx >= len(self.sizes):
+                return
+            size = self.sizes[idx]
+            st = self.slices[size]
+            max_n = min(st.max_count,
+                        (self.total_compute - compute) // st.compute_slots if st.compute_slots else 0,
+                        (self.total_mem - mem) // st.mem_slots if st.mem_slots else 0)
+            for n in range(max_n, -1, -1):
+                nxt = current + [size] * n
+                if n and any(e <= set(nxt) for e in self.exclusions):
+                    continue
+                rec(idx + 1, nxt, compute + n * st.compute_slots,
+                    mem + n * st.mem_slots)
+
+        rec(0, [], 0, 0)
+        return tuple(sorted(found, key=lambda p: (len(p), [-x for x in p])))
+
+    def is_valid(self, partition: Sequence[int]) -> bool:
+        return tuple(sorted(partition, reverse=True)) in set(self.partitions)
+
+    @functools.lru_cache(maxsize=None)
+    def partitions_of_len(self, m: int) -> Tuple[Tuple[int, ...], ...]:
+        return tuple(p for p in self.partitions if len(p) == m)
+
+    @property
+    def maximal_partitions(self) -> Tuple[Tuple[int, ...], ...]:
+        """Partitions to which no further slice can be added (the appendix
+        figure's rows, multiset-level)."""
+        out = []
+        for p in self.partitions:
+            compute = sum(self.slices[s].compute_slots for s in p)
+            mem = sum(self.slices[s].mem_slots for s in p)
+            can_extend = False
+            for size, st in self.slices.items():
+                if (compute + st.compute_slots <= self.total_compute
+                        and mem + st.mem_slots <= self.total_mem
+                        and list(p).count(size) < st.max_count
+                        and not any(e <= set(p) | {size} for e in self.exclusions)):
+                    can_extend = True
+                    break
+            if not can_extend:
+                out.append(p)
+        return tuple(out)
+
+    def slice_mem_gb(self, size: int) -> float:
+        return self.slices[size].memory_gb
+
+    def compute_frac(self, size: int) -> float:
+        return self.slices[size].compute_slots / self.total_compute
+
+    def mem_bw_frac(self, size: int) -> float:
+        return self.slices[size].mem_slots / self.total_mem
+
+    def cache_frac(self, size: int) -> float:
+        return self.slices[size].cache_frac
+
+
+def a100_mig_space() -> PartitionSpace:
+    """Paper Table 1. 4g+3g cannot coexist (paper §2.2)."""
+    slices = [
+        SliceType(7, "7g.40gb", 7, 8, 40.0, 1, 1.0),
+        SliceType(4, "4g.20gb", 4, 4, 20.0, 1, 0.5),
+        SliceType(3, "3g.20gb", 3, 4, 20.0, 2, 0.5),
+        SliceType(2, "2g.10gb", 2, 2, 10.0, 3, 0.25),
+        SliceType(1, "1g.5gb", 1, 1, 5.0, 7, 0.125),
+    ]
+    return PartitionSpace(slices, total_compute=7, total_mem=8,
+                          exclusions=[frozenset({4, 3})], name="a100-mig")
+
+
+def tpu_pod_space(rows: int = 16, cols: int = 16,
+                  hbm_per_chip_gb: float = 16.0) -> PartitionSpace:
+    """16x16 v5e pod sliced into contiguous row ranges, 2 rows per unit."""
+    unit_chips = 2 * cols
+    total_units = rows // 2
+    defs = [(1, 4 * total_units), (2, total_units // 2), (3, 2),
+            (4, 2), (total_units, 1)]
+    slices = []
+    for units, max_count in defs:
+        chips = units * unit_chips
+        slices.append(SliceType(
+            size=units,
+            name=f"{units}u.{int(chips * hbm_per_chip_gb)}gb",
+            compute_slots=units, mem_slots=units,
+            memory_gb=chips * hbm_per_chip_gb,
+            max_count=min(max_count, total_units // units),
+            cache_frac=1.0,           # per-chip VMEM/HBM: no shared cache
+            chips=chips, mesh_shape=(2 * units, cols)))
+    return PartitionSpace(slices, total_compute=total_units,
+                          total_mem=total_units, name="tpu-pod")

@@ -1,0 +1,135 @@
+"""Ground-truth performance model: job speeds on MIG slices and under MPS.
+
+No A100s (or TPUs) exist in this container, so measured speeds are replaced
+by a roofline-analytic model (DESIGN.md §2, "what changed"):
+
+* **MIG slice** (interference-free): the slice provides ``compute_frac`` of
+  peak FLOP/s, ``mem_bw_frac`` of HBM bandwidth and ``cache_frac`` of shared
+  L2.  Losing cache inflates a job's HBM bytes by its ``cache_sens``.
+  ``t = max(t_compute, t_memory)``; speed = 1/t.
+
+* **MPS level** (interference-prone): every co-located job is capped at
+  ``level`` of the SMs; total compute is time-multiplexed when oversubscribed,
+  HBM bandwidth is contended proportionally to demand (fixed-point
+  iteration), and co-runners add cache pressure that inflates bytes.
+
+The U-Net predictor is trained purely on (MPS-matrix -> MIG-matrix) pairs
+from this model — it never sees these internals, mirroring how the paper
+trains on measured pairs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from repro.core.jobs import JobProfile
+from repro.core.partitions import PartitionSpace
+
+MPS_LEVELS = (1.00, 0.50, 0.14)       # paper §4.1: 100 / 50 / 14 %
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float                 # per accelerator (full)
+    hbm_bw: float
+    mem_gb: float
+    cache_mps_kappa: float = 1.50     # byte inflation per unit cache pressure (MPS)
+    cache_mig_kappa: float = 0.45     # byte inflation for reduced-cache slices
+    mps_mux_overhead: float = 0.12    # per-co-runner time-multiplexing cost (MPS)
+    mps_bw_loss: float = 0.15         # achievable-HBM-bandwidth loss per co-runner
+    sched_overhead_s: float = 1e-3    # fixed per-step latency floor
+
+
+A100 = Hardware("a100-40gb", peak_flops=312e12, hbm_bw=1.555e12, mem_gb=40.0)
+# one v5e pod as "one accelerator": 256 chips
+TPU_V5E_POD = Hardware("tpu-v5e-pod", peak_flops=256 * 197e12,
+                       hbm_bw=256 * 819e9, mem_gb=256 * 16.0,
+                       cache_mps_kappa=0.15, cache_mig_kappa=0.0)
+
+
+class PerfModel:
+    def __init__(self, space: PartitionSpace, hw: Hardware = A100):
+        self.space = space
+        self.hw = hw
+
+    # ----------------------------------------------------------- MIG side
+
+    def slice_time(self, prof: JobProfile, size: int) -> float:
+        """Seconds per step on slice ``size`` (inf if OOM)."""
+        st = self.space.slices[size]
+        if prof.mem_gb > st.memory_gb:
+            return float("inf")
+        # the job can only keep `sm_util` of the full GPU's SMs busy; a slice
+        # smaller than that clips it (paper Takeaway 1: small jobs lose little
+        # on small slices)
+        usable = min(self.space.compute_frac(size), prof.sm_util)
+        t_comp = prof.flops_per_step / (
+            self.hw.peak_flops * usable * prof.compute_eff)
+        bytes_eff = prof.bytes_per_step * (
+            1.0 + self.hw.cache_mig_kappa * prof.cache_sens
+            * (1.0 - self.space.cache_frac(size)))
+        t_mem = bytes_eff / (self.hw.hbm_bw * self.space.mem_bw_frac(size))
+        return max(t_comp, t_mem) + self.hw.sched_overhead_s
+
+    def slice_speed(self, prof: JobProfile, size: int) -> float:
+        """Execution speed on a slice normalized by full-slice speed: (0,1]."""
+        t_full = self.slice_time(prof, self.space.full_size)
+        t = self.slice_time(prof, size)
+        if t == float("inf"):
+            return 0.0
+        return t_full / t
+
+    def speed_vector(self, prof: JobProfile) -> dict:
+        return {s: self.slice_speed(prof, s) for s in self.space.sizes}
+
+    # ----------------------------------------------------------- MPS side
+
+    def mps_speeds(self, profs: Sequence[JobProfile], level: float,
+                   iters: int = 12) -> list:
+        """Normalized speeds (vs. solo full-GPU) for jobs co-located in MPS at
+        ``level`` active-thread fraction each."""
+        m = len(profs)
+        if m == 0:
+            return []
+        # cache pressure from co-runners (shared L2 in MPS)
+        pressures = []
+        for i, p in enumerate(profs):
+            others = sum(q.cache_sens for j, q in enumerate(profs) if j != i)
+            pressures.append(min(2.0, others / 2.0))
+        bytes_eff = [p.bytes_per_step *
+                     (1.0 + self.hw.cache_mps_kappa * p.cache_sens * pr)
+                     for p, pr in zip(profs, pressures)]
+
+        # compute shares: each job is capped at min(level, its own achievable
+        # occupancy); oversubscription time-multiplexes proportionally
+        caps = [min(level, p.sm_util) for p in profs]
+        total_cap = sum(caps)
+        shares = [c / max(1.0, total_cap) for c in caps]
+
+        # contended DRAM loses efficiency (row-buffer conflicts etc.)
+        bw_total = self.hw.hbm_bw * max(0.4, 1.0 - self.hw.mps_bw_loss * (m - 1))
+        rates = [1.0 / self.slice_time(p, self.space.full_size) for p in profs]
+        for _ in range(iters):
+            demand = [r * b for r, b in zip(rates, bytes_eff)]
+            total_d = sum(demand)
+            new_rates = []
+            for i, p in enumerate(profs):
+                t_comp = p.flops_per_step / (
+                    self.hw.peak_flops * shares[i] * p.compute_eff)
+                if total_d > bw_total and total_d > 0:
+                    bw_i = bw_total * demand[i] / total_d
+                else:
+                    bw_i = bw_total
+                t_mem = bytes_eff[i] / max(bw_i, 1e-6)
+                mux = 1.0 + self.hw.mps_mux_overhead * (m - 1)
+                new_rates.append(1.0 / (max(t_comp, t_mem) * mux
+                                        + self.hw.sched_overhead_s))
+            rates = [0.5 * a + 0.5 * b for a, b in zip(rates, new_rates)]
+
+        solo = [1.0 / self.slice_time(p, self.space.full_size) for p in profs]
+        return [r / s for r, s in zip(rates, solo)]
+
+    def mps_matrix(self, profs: Sequence[JobProfile]) -> list:
+        """3 x m matrix of MPS speeds (rows = MPS_LEVELS)."""
+        return [self.mps_speeds(profs, lv) for lv in MPS_LEVELS]

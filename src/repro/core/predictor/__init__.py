@@ -1,0 +1,3 @@
+from repro.core.predictor.unet import UNet
+from repro.core.predictor.dataset import generate_dataset, mix_to_matrices
+from repro.core.predictor.linreg import fit_linreg, apply_linreg

@@ -1,0 +1,73 @@
+"""Training data for the MPS->MIG predictor (paper §4.1 "Model training").
+
+400 random job mixes per job count 1..7 (2800 mixes), each a (3 x 7 MPS
+input, 3 x 7 MIG target) pair with dummy-workload padding, plus 4 extra
+column permutations per mix (14,000 samples), 75/25 train/validation split.
+Targets for the 2g/1g linear-regression heads are generated alongside.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.jobs import DUMMY_PROFILE, WORKLOADS
+from repro.core.perfmodel import MPS_LEVELS, PerfModel
+
+OUT_SLICES = (7, 4, 3)      # U-Net output rows
+LIN_SLICES = (2, 1)         # linear-regression heads
+
+
+def mix_to_matrices(pm: PerfModel, profs, jobs: int = 7):
+    """One mix -> (mps 3xJ, mig 3xJ, lin 2xJ, n_real).
+
+    Matrices include dummy padding columns; per-column max normalization as
+    in the paper (all elements in (0, 1]).
+    """
+    m = len(profs)
+    padded = list(profs) + [DUMMY_PROFILE] * (jobs - m)
+    mps = np.asarray(pm.mps_matrix(padded), dtype=np.float32)   # (3, J)
+    col_max = np.maximum(mps.max(axis=0, keepdims=True), 1e-9)
+    mps = mps / col_max
+
+    mig = np.zeros((len(OUT_SLICES), jobs), np.float32)
+    lin = np.zeros((len(LIN_SLICES), jobs), np.float32)
+    for j, p in enumerate(padded):
+        sv = pm.speed_vector(p)
+        for r, s in enumerate(OUT_SLICES):
+            mig[r, j] = sv.get(s, 0.0)
+        for r, s in enumerate(LIN_SLICES):
+            lin[r, j] = sv.get(s, 0.0)
+    mcol = np.maximum(mig.max(axis=0, keepdims=True), 1e-9)
+    mig = mig / mcol
+    return mps, mig, lin, m
+
+
+def generate_dataset(pm: PerfModel, *, mixes_per_count: int = 400,
+                     max_jobs: int = 7, n_perms: int = 4, seed: int = 0,
+                     val_frac: float = 0.25):
+    """Returns dict of train/val arrays (paper: 2800 mixes -> 14k samples)."""
+    rng = np.random.default_rng(seed)
+    pool = list(WORKLOADS)
+    xs, ys, lins = [], [], []
+    for count in range(1, max_jobs + 1):
+        for _ in range(mixes_per_count):
+            idx = rng.integers(0, len(pool), size=count)
+            profs = [pool[i] for i in idx]
+            mps, mig, lin, _ = mix_to_matrices(pm, profs, jobs=max_jobs)
+            variants = [np.arange(max_jobs)]
+            for _ in range(n_perms):
+                variants.append(rng.permutation(max_jobs))
+            for perm in variants:
+                xs.append(mps[:, perm])
+                ys.append(mig[:, perm])
+                lins.append(lin[:, perm])
+    x = np.stack(xs)
+    y = np.stack(ys)
+    lin = np.stack(lins)
+    n = len(x)
+    order = rng.permutation(n)
+    x, y, lin = x[order], y[order], lin[order]
+    n_val = int(n * val_frac)
+    return {
+        "train_x": x[n_val:], "train_y": y[n_val:], "train_lin": lin[n_val:],
+        "val_x": x[:n_val], "val_y": y[:n_val], "val_lin": lin[:n_val],
+    }

@@ -1,0 +1,33 @@
+"""Linear-regression heads for the 2g/1g slices (paper §4.1 "Memory
+considerations"): speeds on 2g and 1g are predicted from the (7g, 4g, 3g)
+speeds by least squares.  The paper reports R^2 ~= 0.96; OOM handling is
+separate (the memory monitor zeroes f_i before the optimizer runs), so the
+fit uses only non-OOM samples.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def fit_linreg(mig_cols: np.ndarray, lin_cols: np.ndarray):
+    """mig_cols: (N, 3) = (k7, k4, k3); lin_cols: (N, 2) = (k2, k1).
+
+    Returns dict with weights (4, 2) incl. bias and per-target R^2.
+    """
+    mask = (lin_cols > 0).all(axis=1)          # exclude OOM rows
+    X = mig_cols[mask]
+    Y = lin_cols[mask]
+    A = np.concatenate([X, np.ones((len(X), 1))], axis=1)   # (N, 4)
+    W, *_ = np.linalg.lstsq(A, Y, rcond=None)
+    pred = A @ W
+    ss_res = ((Y - pred) ** 2).sum(axis=0)
+    ss_tot = ((Y - Y.mean(axis=0)) ** 2).sum(axis=0) + 1e-12
+    r2 = 1.0 - ss_res / ss_tot
+    return {"w": W, "r2": r2}
+
+
+def apply_linreg(model, mig_cols: np.ndarray) -> np.ndarray:
+    """mig_cols: (..., 3) -> (..., 2) clipped to [0, 1]."""
+    A = np.concatenate([mig_cols, np.ones(mig_cols.shape[:-1] + (1,))], axis=-1)
+    out = A @ model["w"]
+    return np.clip(out, 0.0, 1.0)

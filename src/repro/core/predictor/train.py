@@ -1,0 +1,130 @@
+"""Predictor training (paper §4.1): MAE loss, Adam, 50 epochs.
+
+The paper reports validation MAE ~= 0.017 over the (0,1] speedup range and
+trains in seconds per epoch; this module reproduces that loop, fits the
+2g/1g linear-regression heads on the same training split, and persists
+everything to an .npz artifact used by the simulator and the cluster driver.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.predictor import dataset as ds
+from repro.core.predictor import linreg, unet
+from repro.train.optim import adam_init, adam_update
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "..", "..",
+                            "artifacts", "predictor.npz")
+
+
+def mae(pred, target):
+    return jnp.mean(jnp.abs(pred - target))
+
+
+def train_predictor(data, *, epochs: int = 50, batch: int = 128,
+                    lr: float = 4e-4, lr_min: float = 2e-5, seed: int = 0,
+                    jobs: int = 7, log_every: int = 10, verbose: bool = True):
+    """Returns (params, history dict)."""
+    key = jax.random.PRNGKey(seed)
+    params, _ = unet.init(key, jobs=jobs)
+    opt = adam_init(params)
+
+    tx = jnp.asarray(data["train_x"])
+    ty = jnp.asarray(data["train_y"])
+    vx = jnp.asarray(data["val_x"])
+    vy = jnp.asarray(data["val_y"])
+
+    @jax.jit
+    def step(params, opt, x, y, lr_t):
+        def loss_fn(p):
+            return mae(unet.apply(p, x, jobs=jobs), y)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(params, grads, opt, lr=lr_t)
+        return params, opt, loss
+
+    @jax.jit
+    def val_loss(params):
+        return mae(unet.apply(params, vx, jobs=jobs), vy)
+
+    n = len(tx)
+    steps_per_epoch = max(1, n // batch)
+    rng = np.random.default_rng(seed)
+    history = {"val_mae": [], "train_mae": [], "epoch_s": []}
+    for epoch in range(epochs):
+        t0 = time.time()
+        # cosine decay
+        frac = epoch / max(1, epochs - 1)
+        lr_t = lr_min + 0.5 * (lr - lr_min) * (1 + np.cos(np.pi * frac))
+        order = rng.permutation(n)
+        losses = []
+        for i in range(steps_per_epoch):
+            idx = order[i * batch:(i + 1) * batch]
+            params, opt, loss = step(params, opt, tx[idx], ty[idx],
+                                     jnp.float32(lr_t))
+            losses.append(float(loss))
+        vm = float(val_loss(params))
+        history["val_mae"].append(vm)
+        history["train_mae"].append(float(np.mean(losses)))
+        history["epoch_s"].append(time.time() - t0)
+        if verbose and (epoch % log_every == 0 or epoch == epochs - 1):
+            print(f"[predictor] epoch {epoch:3d} train_mae={np.mean(losses):.4f} "
+                  f"val_mae={vm:.4f} ({history['epoch_s'][-1]:.1f}s)")
+    return params, history
+
+
+def fit_heads(data):
+    """Fit 2g/1g linreg heads on the training split."""
+    mig = data["train_y"].transpose(0, 2, 1).reshape(-1, 3)
+    lin = data["train_lin"].transpose(0, 2, 1).reshape(-1, 2)
+    return linreg.fit_linreg(mig, lin)
+
+
+def save_artifact(path, params, heads, history):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    arrays = {"/".join(str(k.key) for k in kp): np.asarray(v)
+              for kp, v in flat}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path,
+             __head_w=heads["w"], __head_r2=heads["r2"],
+             __val_mae=np.asarray(history["val_mae"]),
+             **arrays)
+
+
+def load_artifact(path):
+    z = np.load(path)
+    params = {}
+    heads = {"w": z["__head_w"], "r2": z["__head_r2"]}
+    for k in z.files:
+        if k.startswith("__"):
+            continue
+        node = params
+        parts = k.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(z[k])
+    return params, heads, {"val_mae": z["__val_mae"].tolist()}
+
+
+def train_and_save(path=DEFAULT_PATH, *, pm=None, epochs=80,
+                   mixes_per_count=400, seed=0, verbose=True):
+    from repro.core.partitions import a100_mig_space
+    from repro.core.perfmodel import PerfModel
+    pm = pm or PerfModel(a100_mig_space())
+    data = ds.generate_dataset(pm, mixes_per_count=mixes_per_count, seed=seed)
+    params, history = train_predictor(data, epochs=epochs, seed=seed,
+                                      verbose=verbose)
+    heads = fit_heads(data)
+    save_artifact(path, params, heads, history)
+    if verbose:
+        print(f"[predictor] final val MAE {history['val_mae'][-1]:.4f}; "
+              f"linreg R^2 {heads['r2']}")
+    return params, heads, history
+
+
+if __name__ == "__main__":
+    train_and_save()

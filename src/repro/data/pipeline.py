@@ -1,0 +1,58 @@
+"""Deterministic synthetic LM data pipeline.
+
+Step-addressable: batch(step) is a pure function of (seed, step, shard), so
+* resume-after-failure replays the exact stream (no data loss/duplication);
+* data-parallel shards draw disjoint substreams (multi-host ready);
+* tests can assert bit-exact batches across restarts and re-meshes.
+
+The token stream is structured (Zipf unigrams + a Markov chain + EOS-split
+documents) rather than uniform noise so that small-model training in the
+examples actually shows a falling loss.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class SyntheticLMData:
+    def __init__(self, vocab_size: int, seq_len: int, global_batch: int,
+                 *, seed: int = 0, n_shards: int = 1, shard: int = 0,
+                 order: int = 1):
+        assert global_batch % n_shards == 0
+        self.vocab = int(vocab_size)
+        self.seq = int(seq_len)
+        self.batch = global_batch // n_shards
+        self.seed = seed
+        self.shard = shard
+        self.n_shards = n_shards
+        # fixed Markov transition table derived from the seed
+        rng = np.random.default_rng(seed)
+        self._hot = rng.integers(0, self.vocab,
+                                 size=(min(self.vocab, 4096), 4))
+        self._zipf_a = 1.3
+
+    def _zipf(self, rng, n):
+        z = rng.zipf(self._zipf_a, size=n).astype(np.int64)
+        return (z - 1) % self.vocab
+
+    def batch_at(self, step: int):
+        """Returns (tokens, labels) uint32 arrays (batch, seq)."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, self.shard, step]))
+        B, S = self.batch, self.seq
+        toks = self._zipf(rng, B * (S + 1)).reshape(B, S + 1)
+        # inject Markov continuity: with p=.5, next token = f(prev)
+        follow = rng.random((B, S)) < 0.5
+        mapped = self._hot[toks[:, :-1] % len(self._hot),
+                           toks[:, :-1] % 4]
+        toks[:, 1:] = np.where(follow, mapped % self.vocab, toks[:, 1:])
+        # documents: EOS (=0) every ~Geometric(1/128) tokens
+        eos = rng.random((B, S + 1)) < (1.0 / 128)
+        toks = np.where(eos, 0, toks)
+        return toks[:, :-1].astype(np.int32), toks[:, 1:].astype(np.int32)
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

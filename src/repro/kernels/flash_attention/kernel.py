@@ -1,0 +1,120 @@
+"""Pallas TPU flash-attention forward kernel.
+
+TPU adaptation of the flash algorithm (DESIGN.md §6): instead of a CUDA
+warp-level softmax, each grid step processes one (q-block x kv-block) tile in
+VMEM, streaming kv blocks through the *innermost sequential grid dimension*
+while the running (m, l, acc) state lives in VMEM scratch — the TPU-native
+replacement for shared-memory accumulators.  Block shapes default to
+(128, 128) so the MXU sees aligned tiles; masking is an additive bias
+computed from block offsets with iota (no O(S^2) mask tensor in HBM).
+
+grid = (batch, q_heads, n_q_blocks, n_kv_blocks)   [last dim sequential]
+  q   block (1, 1, block_q, head_dim)   indexed by (b, h, iq)
+  k,v block (1, 1, block_kv, head_dim)  indexed by (b, h // group, ik)  [GQA]
+  out block (1, 1, block_q, head_dim)   written on the last kv step
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, causal: bool, window, block_q: int,
+               block_kv: int, n_kv: int, seq_q: int, seq_kv: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bkv, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0)
+    k_pos = ik * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+    mask = (k_pos < seq_kv) & (q_pos < seq_q)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=None, block_q=128,
+                        block_kv=128, interpret=False):
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D). Returns (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    block_q = max(8, min(block_q, Sq))
+    block_kv = max(8, min(block_kv, Skv))
+    nq = -(-Sq // block_q)
+    nkv = -(-Skv // block_kv)
+    scale = D ** -0.5
+
+    def pad_seq(x, n, blk):
+        pad = n * blk - x.shape[2]
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return x
+
+    qt = pad_seq(q.transpose(0, 2, 1, 3), nq, block_q)
+    kt = pad_seq(k.transpose(0, 2, 1, 3), nkv, block_kv)
+    vt = pad_seq(v.transpose(0, 2, 1, 3), nkv, block_kv)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, n_kv=nkv, seq_q=Sq, seq_kv=Skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, nq * block_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),        # running max m
+            pltpu.VMEM((block_q,), jnp.float32),        # running sum l
+            pltpu.VMEM((block_q, D), jnp.float32),      # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out[:, :, :Sq, :].transpose(0, 2, 1, 3)

@@ -1,0 +1,22 @@
+"""jit'd wrapper for the Pallas flash-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=128,
+                    block_kv=128, interpret=False):
+    """Inference/forward flash attention (TPU Pallas; interpret=True on CPU).
+
+    Training uses repro.models.flash (custom-VJP pure-JAX twin of this
+    kernel); this entry point serves prefill and kernel validation.
+    """
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv,
+                               interpret=interpret)

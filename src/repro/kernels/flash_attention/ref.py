@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = D ** -0.5
+    qg = q.transpose(0, 2, 1, 3).reshape(B, Hkv, G, Sq, D).astype(jnp.float32)
+    kg = k.transpose(0, 2, 1, 3).astype(jnp.float32)
+    vg = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kg) * scale
+    qp = jnp.arange(Sq)
+    kp = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kp[None, :] <= qp[:, None]
+    if window is not None:
+        mask &= (qp[:, None] - kp[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vg)
+    return o.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3).astype(v.dtype)

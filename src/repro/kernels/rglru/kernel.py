@@ -1,0 +1,101 @@
+"""Pallas TPU blocked linear-recurrence kernel (RG-LRU core).
+
+h_t = a_t * h_{t-1} + b_t, independent per channel.  GPU implementations use
+warp-parallel prefix scans; the TPU-native shape (DESIGN.md §6) is a *blocked*
+scan: channels tile the lane dimension (block_d multiple of 128), a chunk of
+``block_s`` timesteps is brought into VMEM, the in-chunk recurrence is
+evaluated by an unrolled VPU loop over rows, and the (block_d,) carry state
+lives in VMEM scratch across the sequential chunk grid dimension.
+
+grid = (B, n_d_blocks, n_chunks)   [chunks sequential innermost]
+  a, b blocks (1, block_s, block_d); y block (1, block_s, block_d);
+  h scratch (1, block_d) f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(a_ref, b_ref, y_ref, hT_ref, h_ref, *, block_s: int,
+                 n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)       # (block_s, block_d)
+    b = b_ref[0].astype(jnp.float32)
+
+    # log2(block_s)-step Blelloch-style composition within the chunk:
+    # compose (a, b) pairs pairwise so the full chunk prefix is materialized
+    # without a length-block_s sequential loop.
+    acc_a, acc_b = a, b
+    shift = 1
+    while shift < block_s:
+        prev_a = jnp.roll(acc_a, shift, axis=0)
+        prev_b = jnp.roll(acc_b, shift, axis=0)
+        row = jax.lax.broadcasted_iota(jnp.int32, acc_a.shape, 0)
+        valid = row >= shift
+        comp_a = jnp.where(valid, acc_a * prev_a, acc_a)
+        comp_b = jnp.where(valid, acc_a * prev_b + acc_b, acc_b)
+        acc_a, acc_b = comp_a, comp_b
+        shift *= 2
+    # now h_t (from zero state) = acc_b[t]; fold in the carried state:
+    h_in = h_ref[0]
+    y = acc_b + acc_a * h_in[None, :]
+    y_ref[0] = y.astype(y_ref.dtype)
+    h_ref[0] = y[block_s - 1]
+
+    @pl.when(ic == n_chunks - 1)
+    def _finish():
+        hT_ref[0] = h_ref[0]
+
+
+def linear_scan_blocked(a, b, *, block_s=128, block_d=128, interpret=False):
+    """a, b: (B, S, D). Returns (y (B,S,D) f32, h_final (B,D) f32) with
+    zero initial state (ops wrapper folds a nonzero h0 in)."""
+    B, S, D = a.shape
+    bs = min(block_s, S)
+    nC = -(-S // bs)
+    Sp = nC * bs
+    bd = min(block_d, D)
+    nD = -(-D // bd)
+    Dp = nD * bd
+
+    def pad(x, a_fill):
+        if Sp != S or Dp != D:
+            # pad a with 1 (identity decay) and b with 0 in padded channels /
+            # steps so the carry stays exact
+            x = jnp.pad(x, ((0, 0), (0, Sp - S), (0, Dp - D)),
+                        constant_values=a_fill)
+        return x
+
+    ap = pad(a, 1.0)
+    bp = pad(b, 0.0)
+
+    kernel = functools.partial(_scan_kernel, block_s=bs, n_chunks=nC)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(B, nD, nC),
+        in_specs=[
+            pl.BlockSpec((1, bs, bd), lambda ib, idd, ic: (ib, ic, idd)),
+            pl.BlockSpec((1, bs, bd), lambda ib, idd, ic: (ib, ic, idd)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, bd), lambda ib, idd, ic: (ib, ic, idd)),
+            pl.BlockSpec((1, bd), lambda ib, idd, ic: (ib, idd)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sp, Dp), jnp.float32),
+            jax.ShapeDtypeStruct((B, Dp), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
+        interpret=interpret,
+    )(ap, bp)
+    return y[:, :S, :D], hT[:, :D]

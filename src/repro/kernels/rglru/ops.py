@@ -1,0 +1,21 @@
+"""jit'd wrapper for the blocked RG-LRU linear scan; folds in a nonzero
+initial state: h_t = (prod_{s<=t} a_s) h_0 + h_t^{(0)}."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru.kernel import linear_scan_blocked
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_d", "interpret"))
+def linear_scan(a, b, h0, *, block_s=128, block_d=128, interpret=False):
+    """a, b: (B, S, D) f32; h0: (B, D) f32 -> (y (B,S,D) f32, h_final)."""
+    y0, hT0 = linear_scan_blocked(a, b, block_s=block_s, block_d=block_d,
+                                  interpret=interpret)
+    cum_a = jnp.cumprod(a.astype(jnp.float32), axis=1)
+    y = y0 + cum_a * h0.astype(jnp.float32)[:, None, :]
+    hT = hT0 + cum_a[:, -1, :] * h0.astype(jnp.float32)
+    return y, hT

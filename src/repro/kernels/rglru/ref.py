@@ -1,0 +1,18 @@
+"""Naive sequential oracle for the blocked linear-recurrence kernel:
+h_t = a_t * h_{t-1} + b_t  (per channel)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def linear_scan_ref(a, b, h0):
+    """a, b: (B, S, D) f32; h0: (B, D) f32. Returns (y (B,S,D), h_final)."""
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    xs = (a.transpose(1, 0, 2), b.transpose(1, 0, 2))
+    hT, ys = lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2), hT

@@ -1,0 +1,117 @@
+"""Pallas TPU chunked WKV6 kernel (RWKV-6 time-mix recurrence).
+
+TPU adaptation (DESIGN.md §6): the CUDA reference processes one token per
+thread; on TPU we use the chunked matrix formulation so intra-chunk work is
+three MXU matmuls, and the (N x N) per-head state is carried in VMEM scratch
+across the sequential chunk grid dimension.  The pairwise decay tensor
+D[t,s,i] = exp(c_{t-1,t,i} - c_{s,i}) is <= 1 by construction, so the kernel
+is stable at any chunk length (no exp(+c) factoring; see models/rwkv6.py).
+
+grid = (B * H, n_chunks)      [chunks sequential]
+  r,k,v,logw blocks (1, L, N); y block (1, L, N); state scratch (N, N) f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sout_ref, s_ref, *,
+                n_chunks: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)               # (L, N)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)               # log decay, <= 0
+    u = u_ref[0].astype(jnp.float32)               # (1, N) bonus
+
+    c = jnp.cumsum(w, axis=0)                      # (L, N) inclusive
+    c_prev = c - w
+    L = r.shape[0]
+
+    # intra-chunk: A[t,s] = sum_i r[t,i] k[s,i] exp(c_prev[t,i] - c[s,i]), s<t
+    D = jnp.exp(jnp.clip(c_prev[:, None, :] - c[None, :, :], -60.0, 0.0))
+    A = jnp.einsum("ti,si,tsi->ts", r, k, D)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    A = jnp.where(tri, A, 0.0)
+    diag = jnp.sum(u * r * k, axis=1)              # (L,)
+    y = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y + diag[:, None] * v
+
+    # inter-chunk: y_t += (r_t * exp(c_prev_t)) @ S_in
+    S_in = s_ref[...]
+    q_dec = r * jnp.exp(c_prev)
+    y = y + jax.lax.dot_general(q_dec, S_in, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: S_out = diag(exp(c_L)) S_in + sum_s (k_s exp(c_L-c_s)) v_s^T
+    c_last = c[-1:, :]
+    k_dec = k * jnp.exp(jnp.clip(c_last - c, -60.0, 0.0))
+    s_ref[...] = jnp.exp(c_last[0])[:, None] * S_in + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ic == n_chunks - 1)
+    def _finish():
+        sout_ref[0] = s_ref[...]
+
+
+def wkv6_chunked(r, k, v, logw, u, state0, *, chunk=64, interpret=False):
+    """r,k,v,logw: (B,H,S,N); u: (H,N); state0: (B,H,N,N) f32.
+    Returns (y (B,H,S,N) f32, state_out (B,H,N,N) f32).
+
+    NOTE: state0 must be zeros in the kernel path (the fused state-carry
+    scratch starts at zero); the ops wrapper folds a nonzero state0 in.
+    """
+    B, H, S, N = r.shape
+    L = min(chunk, S)
+    nC = -(-S // L)
+    Sp = nC * L
+
+    def pad(x):
+        if Sp != S:
+            return jnp.pad(x, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+        return x
+
+    # layout: (B*H, nC*L, N) -> grid (B*H, nC) with the chunk dim sequential
+    rf = pad(r).reshape(B * H, nC * L, N)
+    kf = pad(k).reshape(B * H, nC * L, N)
+    vf = pad(v).reshape(B * H, nC * L, N)
+    wf = pad(logw).reshape(B * H, nC * L, N)
+    uf = jnp.broadcast_to(u[None], (B, H, N)).reshape(B * H, 1, N)
+
+    kernel = functools.partial(_wkv_kernel, n_chunks=nC)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(B * H, nC),
+        in_specs=[
+            pl.BlockSpec((1, L, N), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, L, N), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, L, N), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, L, N), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, 1, N), lambda bh, ic: (bh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, N), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, N, N), lambda bh, ic: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Sp, N), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf)
+    y = y.reshape(B, H, Sp, N)[:, :, :S]
+    return y, state.reshape(B, H, N, N)

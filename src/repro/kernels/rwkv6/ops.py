@@ -1,0 +1,33 @@
+"""jit'd wrapper for the WKV6 kernel, including nonzero initial state.
+
+The kernel carries state from zero; a nonzero ``state0`` contributes
+y_t += (r_t * exp(c_{t-1})) @ state0 * prod-of-previous-chunks decay — which
+is exactly (r_t * exp(C_{t-1})) @ state0 with C the *global* cumulative
+decay.  We add that term (and the decayed state0 to the final state) outside
+the kernel; both are O(S*N^2 / chunk-free) streaming ops.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.kernel import wkv6_chunked
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, logw, u, state0, *, chunk=64, interpret=False):
+    """r,k,v,logw: (B,H,S,N); u: (H,N); state0: (B,H,N,N) f32.
+    Returns (y (B,H,S,N) f32, state_out (B,H,N,N) f32)."""
+    y, state = wkv6_chunked(r, k, v, logw, u,
+                            jnp.zeros_like(state0, dtype=jnp.float32),
+                            chunk=chunk, interpret=interpret)
+    # fold in nonzero initial state
+    c_global = jnp.cumsum(logw.astype(jnp.float32), axis=2)
+    c_prev = c_global - logw.astype(jnp.float32)
+    q_dec = r.astype(jnp.float32) * jnp.exp(c_prev)
+    y = y + jnp.einsum("bhsn,bhnm->bhsm", q_dec, state0.astype(jnp.float32))
+    total_decay = jnp.exp(c_global[:, :, -1, :])
+    state = state + total_decay[..., None] * state0.astype(jnp.float32)
+    return y, state

@@ -1,0 +1,31 @@
+"""Naive per-token WKV6 recurrence — the oracle for the chunked kernel.
+
+S_t = diag(w_t) S_{t-1} + k_t v_t^T
+y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv6_ref(r, k, v, logw, u, state0):
+    """r,k,v,logw: (B, H, S, N); u: (H, N); state0: (B, H, N, N) fp32.
+    Returns (y (B,H,S,N) f32, state (B,H,N,N) f32)."""
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    w = jnp.exp(logw.astype(jnp.float32))
+    u = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                       # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]   # (B,H,N,N)
+        y = jnp.einsum("bhi,bhin->bhn", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    xs = tuple(x.transpose(2, 0, 1, 3) for x in (r, k, v, w))
+    state, ys = lax.scan(step, state0.astype(jnp.float32), xs)
+    return ys.transpose(1, 2, 0, 3), state

@@ -1,0 +1,100 @@
+"""MISO cluster controller driver: the paper's Fig 6 pipeline end-to-end.
+
+Central controller + per-accelerator server API over a job trace:
+FCFS queue -> least-loaded placement -> MPS profiling (interference-prone
+co-run) -> U-Net MPS->MIG translation -> Algorithm 1 -> dynamic partitions.
+The execution backend is the event simulator (no A100s/TPUs in this
+container, DESIGN.md §2); with ``--space tpu`` the accelerators are v5e pods
+partitioned into contiguous sub-mesh slices and each slice maps onto a
+``launch.mesh.make_slice_mesh`` JAX mesh (printed per scheduling decision
+with ``--show-meshes``).
+
+  PYTHONPATH=src python -m repro.launch.cluster --policy miso --jobs 60
+  PYTHONPATH=src python -m repro.launch.cluster --space tpu --show-meshes
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+if "--show-meshes" in sys.argv:
+    # slice meshes need placeholder devices; must be set before first jax init
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=256").strip()
+
+from repro.core.estimators import NoisyEstimator, OracleEstimator, UNetEstimator
+from repro.core.partitions import a100_mig_space, tpu_pod_space
+from repro.core.perfmodel import A100, TPU_V5E_POD, PerfModel
+from repro.core.simulator import SimConfig, simulate
+from repro.core.traces import generate_trace
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "artifacts", "predictor.npz")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--space", choices=["a100", "tpu"], default="a100")
+    ap.add_argument("--policy", default="miso",
+                    choices=["nopart", "optsta", "mpsonly", "miso", "oracle"])
+    ap.add_argument("--estimator", default="auto",
+                    choices=["auto", "unet", "oracle", "noisy"])
+    ap.add_argument("--sigma", type=float, default=0.05)
+    ap.add_argument("--accelerators", type=int, default=8)
+    ap.add_argument("--jobs", type=int, default=100)
+    ap.add_argument("--lam", type=float, default=60.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mtbf", type=float, default=0.0,
+                    help="accelerator MTBF seconds (fault injection)")
+    ap.add_argument("--show-meshes", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.space == "tpu":
+        space, hw = tpu_pod_space(), TPU_V5E_POD
+    else:
+        space, hw = a100_mig_space(), A100
+    pm = PerfModel(space, hw)
+
+    if args.estimator == "oracle" or args.policy == "oracle":
+        est = OracleEstimator(pm)
+    elif args.estimator == "noisy":
+        est = NoisyEstimator(pm, sigma=args.sigma, seed=args.seed)
+    elif args.estimator == "unet" or (args.estimator == "auto"
+                                      and os.path.exists(ARTIFACT)
+                                      and args.space == "a100"):
+        est = UNetEstimator.from_artifact(pm, ARTIFACT)
+        print("[cluster] estimator: trained U-Net + linreg heads")
+    else:
+        est = OracleEstimator(pm)
+        print("[cluster] estimator: oracle (no artifact / tpu space)")
+
+    jobs = generate_trace(args.jobs, lam_s=args.lam, seed=args.seed)
+    cfg = SimConfig(n_gpus=args.accelerators, policy=args.policy,
+                    gpu_mtbf_s=args.mtbf, seed=args.seed)
+    metrics = simulate(jobs, cfg, space, pm, est)
+
+    if args.show_meshes and args.space == "tpu":
+        from repro.launch.mesh import make_slice_mesh
+        print("[cluster] slice -> JAX mesh mapping:")
+        for size in sorted(space.slices):
+            st = space.slices[size]
+            if st.mesh_shape:
+                mesh = make_slice_mesh(*st.mesh_shape)
+                print(f"  {st.name}: mesh {st.mesh_shape} axes "
+                      f"{mesh.axis_names} = {mesh.devices.size} devices")
+
+    b = metrics.breakdown
+    print(f"[cluster] {args.policy} on {args.accelerators} x {args.space}: "
+          f"{len(metrics.jcts)} jobs")
+    print(f"  avg JCT   : {metrics.avg_jct:,.0f} s (p50 {metrics.p50_jct:,.0f},"
+          f" p90 {metrics.p90_jct:,.0f})")
+    print(f"  makespan  : {metrics.makespan:,.0f} s")
+    print(f"  STP       : {metrics.stp:.3f} work-seconds/s/accelerator")
+    print(f"  breakdown : queue {b['queue']:,.0f}s | mps {b['mps']:,.0f}s | "
+          f"ckpt {b['ckpt']:,.0f}s | run {b['run']:,.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

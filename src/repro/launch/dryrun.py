@@ -1,0 +1,386 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: AOT-lower + compile every (arch x input-shape x mesh)
+cell and extract the roofline terms (EXPERIMENTS.md §Dry-run / §Roofline).
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and only the dry-run wants 512 placeholder devices (smoke tests and
+benches see the real single CPU device).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --multi-pod
+Each cell writes artifacts/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs import shapes as shp
+from repro.configs.base import RunConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import LM
+from repro.roofline import costs as roofline_costs
+from repro.roofline.hlo_analysis import analyze_hlo
+from repro.sharding.rules import make_rules, specs_to_shardings
+from repro.serve.engine import make_serve_step
+from repro.train.train_step import batch_pspec, init_train_state, make_train_step
+from repro.utils.tree import tree_count
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts", "dryrun")
+
+# TPU v5e constants (system prompt):
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+HBM_GB = 16.0
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+
+def default_run(cfg, shape, overrides=None) -> RunConfig:
+    kw = dict(
+        param_dtype="bfloat16", activation_dtype="bfloat16",
+        remat=True, scan_layers=True,
+        microbatches=4 if shape.kind == "train" else 1,
+        attn_block_q=512, attn_block_kv=1024, loss_chunk=512,
+        fsdp=True, zero_opt=True,
+    )
+    if overrides:
+        kw.update(overrides)
+    return RunConfig(**kw)
+
+
+def input_specs(arch: str, shape_name: str, run=None):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train:  {tokens, labels}: (global_batch, seq) int32
+    prefill:{tokens}: (global_batch, seq) int32
+    decode: {tokens}: (global_batch, 1) int32 + KV/state cache of seq_len + pos
+    Modality-frontend archs (musicgen/chameleon) take precomputed token ids —
+    the frontend is a stub per the assignment.
+    """
+    cfg = configs.get_config(arch)
+    shape = shp.SHAPES[shape_name]
+    run = run or default_run(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if shape.kind == "train":
+        return {"tokens": tok, "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"tokens": tok}
+    cache = LM.cache_shape(cfg, run, B, S, jnp.bfloat16)
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "cache": cache,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# collective-bytes extraction from the partitioned HLO
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Sum of operand bytes per collective opcode, from the per-device
+    partitioned HLO (so totals are bytes *per chip*)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.search(r"=\s+(\S+)\s+(\S+)\(", line)
+        if not m:
+            continue
+        opcode = m.group(2).split(".")[0]
+        if opcode.endswith("-start"):
+            opcode = opcode[:-6]
+        if opcode not in _COLLECTIVES:
+            continue
+        # operand types are inside the parens
+        paren = line[line.index("(") + 1:]
+        ops = _shape_bytes(paren)
+        if ops == 0:  # fall back to result type (left of '=')
+            ops = _shape_bytes(line[:line.index("=")])
+        out[opcode] += ops
+        count[opcode] += 1
+    return out, count
+
+
+# ---------------------------------------------------------------------------
+# per-cell dry run
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             overrides=None, save: bool = True, mesh=None, tag: str = "",
+             mesh_shape=None):
+    """``mesh_shape``: optional (data, model) or (pod, data, model) override
+    for §Perf hillclimbing (e.g. right-sizing small archs)."""
+    cfg = configs.get_config(arch)
+    shape = shp.SHAPES[shape_name]
+    if not shp.applicable(cfg, shape):
+        rec = {"arch": arch, "shape": shape_name, "skipped": True,
+               "reason": shp.skip_reason(cfg, shape)}
+        if save:
+            _save(rec, arch, shape_name, multi_pod, tag)
+        return rec
+
+    run = default_run(cfg, shape, overrides)
+    if mesh is None and mesh_shape is not None:
+        axes = ("pod", "data", "model")[-len(mesh_shape):]
+        mesh = jax.make_mesh(tuple(mesh_shape), axes,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(mesh_shape))
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rules = make_rules(mesh, fsdp=run.fsdp)
+    t0 = time.time()
+
+    params, opt, pspecs, ospecs = init_train_state(cfg, run, abstract=True)
+    param_sh = specs_to_shardings(params, pspecs, mesh, rules)
+    n_params = tree_count(params)
+    B, S = shape.global_batch, shape.seq_len
+
+    def sh(axes, dims):   # divisibility-aware NamedSharding
+        return NamedSharding(mesh, rules.pspec(axes, dims))
+
+    with mesh:
+        if shape.kind == "train":
+            tok_sh = sh(("batch", "seq"), (B, S))
+            opt_sh = {"m": param_sh, "v": param_sh,
+                      "step": NamedSharding(mesh, P())}
+            step = make_train_step(cfg, run)
+            jitted = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, tok_sh, tok_sh),
+                out_shardings=(param_sh, opt_sh, None),
+                donate_argnums=(0, 1))
+            ins = input_specs(arch, shape_name, run)
+            lowered = jitted.lower(params, opt, ins["tokens"], ins["labels"])
+        elif shape.kind == "prefill":
+            tok_sh = sh(("batch", "seq"), (B, S))
+            logit_sh = sh(("batch", "seq", "vocab"), (B, 1, cfg.vocab_size))
+            cache_sh = specs_to_shardings(
+                LM.cache_shape(cfg, run, B, S), LM.cache_specs(cfg, run),
+                mesh, rules)
+
+            def prefill_step(params, tokens):
+                return LM.prefill(params, cfg, run, tokens, max_seq=S)
+
+            jitted = jax.jit(prefill_step, in_shardings=(param_sh, tok_sh),
+                             out_shardings=(logit_sh, cache_sh))
+            ins = input_specs(arch, shape_name, run)
+            lowered = jitted.lower(params, ins["tokens"])
+        else:  # decode
+            ins = input_specs(arch, shape_name, run)
+            tok_sh = sh(("batch", "seq"), (B, 1))
+            logit_sh = sh(("batch", "seq", "vocab"), (B, 1, cfg.vocab_size))
+            cache_sh = specs_to_shardings(ins["cache"], LM.cache_specs(cfg, run),
+                                          mesh, rules)
+            serve_params = params
+            serve_param_sh = param_sh
+            if run.quantize_serving:
+                from repro.utils.quant import abstract_quantize
+                serve_params, qspecs = abstract_quantize(params, pspecs)
+                serve_param_sh = specs_to_shardings(serve_params, qspecs,
+                                                    mesh, rules)
+            step = make_serve_step(cfg, run)
+            jitted = jax.jit(
+                step,
+                in_shardings=(serve_param_sh, tok_sh, cache_sh,
+                              NamedSharding(mesh, P())),
+                out_shardings=(logit_sh, cache_sh),
+                donate_argnums=(2,))
+            lowered = jitted.lower(serve_params, ins["tokens"], ins["cache"],
+                                   ins["pos"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    # loop-aware HLO walk (backend cost_analysis counts while bodies once)
+    walk = analyze_hlo(hlo)
+    coll = walk["collectives"]
+    coll_count = walk["collective_counts"]
+    flops_dev = float(walk["flops"])
+    bytes_dev = float(walk["hbm_bytes"])
+    bytes_kern_dev = float(walk["hbm_bytes_kernelized"])
+    coll_dev = float(walk["collective_bytes"])
+    if run.quantize_serving and shape.kind == "decode":
+        # the lazy-dequant HLO reads int8 then re-reads the bf16 dequant as
+        # the dot operand; a fused int8 kernel reads 1 byte/param instead of
+        # 2 — subtract the difference (documented modeling adjustment)
+        adj = float(n_params)  # 1 byte per (active) parameter per step
+        bytes_dev = max(bytes_dev - adj / chips, 0.0)
+        bytes_kern_dev = max(bytes_kern_dev - adj / chips, 0.0)
+
+    # roofline terms (seconds); cost_analysis is per-device post-SPMD
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_mem_kern = bytes_kern_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+
+    n_active = cfg.active_param_count()
+    model_fl = roofline_costs.model_flops(cfg, shape.seq_len,
+                                          shape.global_batch, shape.kind,
+                                          n_params=n_active)
+    flops_global = flops_dev * chips
+
+    rec = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "mesh": "x".join(str(d) for d in mesh.devices.shape),
+        "mesh_axes": list(mesh.axis_names), "chips": chips,
+        "tag": tag or ("multipod" if multi_pod else "pod"),
+        "overrides": overrides or {},
+        "n_params": int(n_params), "n_active_params": int(n_active),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": flops_dev, "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "backend_cost_analysis": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "collectives": coll, "collective_counts": coll_count,
+        "roofline": {
+            "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+            "dominant": dominant,
+            "bound_s": max(t_comp, t_mem, t_coll),
+        },
+        "roofline_kernelized": {
+            "compute_s": t_comp, "memory_s": t_mem_kern,
+            "collective_s": t_coll,
+            "dominant": max(("compute", t_comp), ("memory", t_mem_kern),
+                            ("collective", t_coll), key=lambda kv: kv[1])[0],
+            "bound_s": max(t_comp, t_mem_kern, t_coll),
+        },
+        "model_flops": model_fl,
+        "model_flops_ratio": model_fl / max(flops_global, 1.0),
+        "memory_analysis": _mem_summary(mem),
+        "skipped": False,
+    }
+    if save:
+        _save(rec, arch, shape_name, multi_pod, tag)
+    return rec
+
+
+def _mem_summary(mem):
+    if mem is None:
+        return None
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if "argument_size_in_bytes" in out and "temp_size_in_bytes" in out:
+        live = out["argument_size_in_bytes"] + out["temp_size_in_bytes"] \
+            - out.get("alias_size_in_bytes", 0) + out.get("output_size_in_bytes", 0)
+        resident = out["argument_size_in_bytes"] \
+            + out.get("output_size_in_bytes", 0) \
+            - out.get("alias_size_in_bytes", 0)
+        out["approx_live_bytes_per_device"] = live
+        out["resident_bytes_per_device"] = resident
+        # CPU-backend temps include f32-upcast copies TPU would not have;
+        # the residency check is the hard floor, `live` the upper bound
+        out["fits_v5e_16gb"] = bool(live <= HBM_GB * 1e9)
+        out["resident_fits_v5e_16gb"] = bool(resident <= HBM_GB * 1e9)
+    return out
+
+
+def _save(rec, arch, shape_name, multi_pod, tag=""):
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    mesh_tag = tag or ("multipod" if multi_pod else "pod")
+    path = os.path.join(ARTIFACTS, f"{arch}__{shape_name}__{mesh_tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="RunConfig overrides key=value (e.g. fsdp=False)")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="e.g. 64x4 (data x model) or 2x16x16")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    mesh_shape = tuple(int(x) for x in args.mesh_shape.split("x")) \
+        if args.mesh_shape else None
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        overrides[k] = {"True": True, "False": False}.get(v) \
+            if v in ("True", "False") else (int(v) if v.isdigit() else v)
+
+    archs = configs.ARCH_IDS if args.arch == "all" else [args.arch]
+    names = list(shp.SHAPES) if args.shape == "all" else [args.shape]
+    for arch in archs:
+        for shape_name in names:
+            t0 = time.time()
+            try:
+                rec = run_cell(arch, shape_name, multi_pod=args.multi_pod,
+                               overrides=overrides or None,
+                               mesh_shape=mesh_shape, tag=args.tag)
+                if rec.get("skipped"):
+                    print(f"[dryrun] {arch} x {shape_name}: SKIP "
+                          f"({rec['reason']})")
+                else:
+                    r = rec["roofline"]
+                    rk = rec["roofline_kernelized"]
+                    print(f"[dryrun] {arch} x {shape_name} "
+                          f"[{rec['mesh']}]: compile={rec['compile_s']:.0f}s "
+                          f"comp={r['compute_s']*1e3:.1f}ms "
+                          f"mem={r['memory_s']*1e3:.1f}ms "
+                          f"(kern={rk['memory_s']*1e3:.1f}ms) "
+                          f"coll={r['collective_s']*1e3:.1f}ms "
+                          f"dom={r['dominant']} "
+                          f"useful={rec['model_flops_ratio']:.2f}")
+            except Exception as e:
+                print(f"[dryrun] {arch} x {shape_name}: FAIL {e}")
+                traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""End-to-end training driver.
+
+CPU-runnable on smoke/preset configs; the same step lowers on the production
+meshes (launch/dryrun.py proves it).  Features: deterministic resumable data,
+periodic checkpointing with atomic writes, resume-from-latest, graceful
+SIGTERM checkpoint (fault tolerance), throughput logging.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
+      --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import RunConfig
+from repro.data.pipeline import SyntheticLMData
+from repro.models import LM
+from repro.roofline.costs import model_flops
+from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.optim import adamw_init
+from repro.train.train_step import make_train_step
+
+
+def preset_config(name: str):
+    """Training presets: 'smoke' per-arch reductions, or ~sized LMs."""
+    if name == "100m":
+        return configs.get_config("smollm-360m").replace(
+            name="lm-100m", n_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32768)
+    if name == "20m":
+        return configs.get_config("smollm-360m").replace(
+            name="lm-20m", n_layers=8, d_model=384, n_heads=6, n_kv_heads=2,
+            head_dim=64, d_ff=1024, vocab_size=8192)
+    raise KeyError(name)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m",
+                    help="arch id (see repro.configs.ARCH_IDS)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config for this arch")
+    ap.add_argument("--preset", default=None, choices=[None, "20m", "100m"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    if args.preset:
+        cfg = preset_config(args.preset)
+    elif args.smoke:
+        cfg = configs.get_smoke_config(args.arch)
+    else:
+        cfg = configs.get_config(args.arch)
+    run = RunConfig(param_dtype="float32", activation_dtype="float32",
+                    learning_rate=args.lr, microbatches=args.microbatches,
+                    attn_block_q=64, attn_block_kv=64,
+                    loss_chunk=min(256, args.seq))
+
+    data = SyntheticLMData(cfg.vocab_size, args.seq, args.batch,
+                           seed=args.seed)
+    step_fn = jax.jit(make_train_step(cfg, run))
+
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        state, start = restore_checkpoint(args.ckpt_dir)
+        params, opt = state["params"], state["opt"]
+        print(f"[train] resumed from step {start}")
+    else:
+        params, _ = LM.init(cfg, run, jax.random.PRNGKey(args.seed))
+        opt = adamw_init(params)
+
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"[train] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"batch={args.batch} seq={args.seq}")
+
+    stop = {"now": False}
+
+    def _sigterm(signum, frame):
+        stop["now"] = True
+    try:
+        signal.signal(signal.SIGTERM, _sigterm)
+    except ValueError:
+        pass   # non-main thread (tests)
+
+    tokens_per_step = args.batch * args.seq
+    flops_per_step = model_flops(cfg, args.seq, args.batch, "train",
+                                 n_params=n_params)
+    t_start = time.time()
+    losses = []
+    for s in range(start, args.steps):
+        toks, labs = data.batch_at(s)
+        t0 = time.time()
+        params, opt, metrics = step_fn(params, opt, jnp.asarray(toks),
+                                       jnp.asarray(labs))
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        dt = time.time() - t0
+        if s % args.log_every == 0 or s == args.steps - 1:
+            print(f"[train] step {s:5d} loss={loss:.4f} "
+                  f"tok/s={tokens_per_step/dt:,.0f} "
+                  f"gflop/s={flops_per_step/dt/1e9:.1f}")
+        if args.ckpt_dir and ((s + 1) % args.ckpt_every == 0 or stop["now"]
+                              or s == args.steps - 1):
+            save_checkpoint(args.ckpt_dir, s + 1,
+                            {"params": params, "opt": opt})
+        if stop["now"]:
+            print("[train] SIGTERM: checkpointed and exiting")
+            return 0
+    print(f"[train] done in {time.time()-t_start:.1f}s; "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,148 @@
+"""GQA attention block: qk-norm, rope, sliding-window, full/ring KV caches.
+
+Three execution paths share one parameter layout:
+  * train/prefill  -> blockwise (flash-style) pure-JAX attention, or the
+                      Pallas kernel when ``run.use_pallas``;
+  * decode         -> naive attention over the cache (Sq == 1, linear cost);
+  * ring decode    -> sliding-window archs keep a ring buffer of size W.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import flash, modules
+from repro.utils.tree import ParamBuilder, fan_in_init
+
+
+def init(pb: ParamBuilder, cfg):
+    M, Hq, Hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    D = cfg.resolved_head_dim
+    pb.param("wq", (M, Hq, D), ("d_model", "heads", "head_dim"), init=fan_in_init(M))
+    pb.param("wk", (M, Hkv, D), ("d_model", "kv_heads", "head_dim"), init=fan_in_init(M))
+    pb.param("wv", (M, Hkv, D), ("d_model", "kv_heads", "head_dim"), init=fan_in_init(M))
+    pb.param("wo", (Hq, D, M), ("heads", "head_dim", "d_model"), init=fan_in_init(Hq * D))
+    if cfg.qk_norm:
+        pb.param("q_norm", (D,), ("head_dim",), init=lambda k, s, d: jnp.zeros(s, d))
+        pb.param("k_norm", (D,), ("head_dim",), init=lambda k, s, d: jnp.zeros(s, d))
+
+
+def _project_qkv(p, cfg, x, positions):
+    q = jnp.einsum("bsm,mhd->bshd", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsm,mhd->bshd", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsm,mhd->bshd", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = modules.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = modules.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = modules.rope_angles(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    q = modules.apply_rope(q, cos, sin)
+    k = modules.apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def apply(p, cfg, run, x, positions, window=None):
+    """Full-sequence forward (train / prefill). x: (B, S, M)."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if run.use_pallas:
+        from repro.kernels.flash_attention import ops as fa_ops
+        o = fa_ops.flash_attention(
+            q, k, v, causal=True, window=window,
+            block_q=run.attn_block_q, block_kv=run.attn_block_kv,
+            interpret=True)
+    else:
+        o = flash.flash_attention(
+            q, k, v, q_positions=positions, kv_positions=positions,
+            causal=True, window=window,
+            block_q=run.attn_block_q, block_kv=run.attn_block_kv,
+            window_block_skip=run.swa_block_skip)
+    return jnp.einsum("bshd,hdm->bsm", o, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# KV cache (full or ring)
+# ---------------------------------------------------------------------------
+
+
+def cache_shape(cfg, batch: int, max_seq: int, window=None, dtype=jnp.bfloat16):
+    S = min(max_seq, window) if window else max_seq
+    Hkv, D = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, S, Hkv, D), dtype),
+        "v": jax.ShapeDtypeStruct((batch, S, Hkv, D), dtype),
+    }
+
+
+def cache_specs(window_or_none):
+    return {"k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+            "v": ("batch", "kv_seq", "kv_heads", "head_dim")}
+
+
+def init_cache(cfg, batch, max_seq, window=None, dtype=jnp.bfloat16):
+    return jax.tree_util.tree_map(
+        lambda sd: jnp.zeros(sd.shape, sd.dtype),
+        cache_shape(cfg, batch, max_seq, window, dtype))
+
+
+def prefill_cache(p, cfg, run, x, positions, cache, window=None):
+    """Fill the KV cache from a full prefix. x: (B, Sp, M) (already normed).
+
+    For ring-buffer (window) caches only the last W tokens are kept, laid out
+    so that entry i holds the token with absolute position ``pos % W == i`` —
+    the same invariant ``decode`` maintains.
+    """
+    _, k, v = _project_qkv(p, cfg, x, positions)
+    S = cache["k"].shape[1]
+    Sp = k.shape[1]
+    if Sp >= S:
+        k_keep, v_keep = k[:, -S:], v[:, -S:]
+        if window:
+            # roll so that absolute position p sits at slot p % S
+            shift = Sp % S
+            k_keep = jnp.roll(k_keep, shift, axis=1)
+            v_keep = jnp.roll(v_keep, shift, axis=1)
+        return {"k": k_keep.astype(cache["k"].dtype),
+                "v": v_keep.astype(cache["v"].dtype)}
+    k_full = lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+    v_full = lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+    return {"k": k_full, "v": v_full}
+
+
+def decode(p, cfg, run, x, cache, pos, window=None):
+    """One-token decode. x: (B, 1, M); pos: () int32 tokens already cached.
+
+    Returns (y, new_cache).  With ``window`` the cache is a ring buffer of
+    size W and writes wrap; positions are tracked absolutely for rope/mask.
+    """
+    B = x.shape[0]
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+
+    S = cache["k"].shape[1]
+    slot = (pos % S) if window else pos
+    k = lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+
+    idx = jnp.arange(S)
+    if window:
+        # ring buffer: entry i holds absolute position with (abs % S == i) and
+        # abs in (pos - S, pos]; reconstruct absolute positions for the mask.
+        n_wraps = (pos // S) + 1
+        abs_pos = idx + jnp.where(idx <= slot, (pos // S) * S, ((pos // S) - 1) * S)
+        # entries never written yet (pos < S) are invalid -> future-dated
+        abs_pos = jnp.where(abs_pos < 0, jnp.iinfo(jnp.int32).max // 2, abs_pos)
+        abs_pos = jnp.where((idx > pos) & (n_wraps == 1),
+                            jnp.iinfo(jnp.int32).max // 2, abs_pos)
+        kv_positions = abs_pos.astype(jnp.int32)
+    else:
+        valid = idx <= pos
+        kv_positions = jnp.where(valid, idx,
+                                 jnp.iinfo(jnp.int32).max // 2).astype(jnp.int32)
+
+    o = modules.naive_attention(
+        q, k, v, q_positions=positions, kv_positions=kv_positions,
+        causal=True, window=window)
+    y = jnp.einsum("bshd,hdm->bsm", o, p["wo"].astype(x.dtype))
+    return y, {"k": k, "v": v}

@@ -1,0 +1,115 @@
+"""Feed-forward blocks: SwiGLU MLP and capacity-based top-k MoE.
+
+MoE uses the einsum-dispatch formulation (GShard/Switch style), which maps
+onto the MXU and onto GSPMD sharding: tokens are grouped (``group_size`` per
+group), each group builds a (T, E, C) one-hot dispatch tensor via an
+intra-group position cumsum, and expert FFNs run as batched einsums over the
+expert dimension.  Experts shard over the "model" axis when divisible (EP);
+otherwise the per-expert hidden dim shards (TP) — see sharding/rules.py.
+
+Shared experts (qwen2-moe) are a dense SwiGLU branch gated by a per-token
+sigmoid, always active.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.activations import shard_activation
+from repro.utils.tree import ParamBuilder, fan_in_init
+
+
+def init_mlp(pb: ParamBuilder, d_model: int, d_ff: int, variant: str = "swiglu"):
+    if variant == "swiglu":
+        pb.param("w_gate", (d_model, d_ff), ("d_model", "d_ff"),
+                 init=fan_in_init(d_model))
+    pb.param("w_up", (d_model, d_ff), ("d_model", "d_ff"), init=fan_in_init(d_model))
+    pb.param("w_down", (d_ff, d_model), ("d_ff", "d_model"), init=fan_in_init(d_ff))
+
+
+def apply_mlp(p, x):
+    u = jnp.einsum("...m,mf->...f", x, p["w_up"].astype(x.dtype))
+    if "w_gate" in p:  # swiglu
+        g = jnp.einsum("...m,mf->...f", x, p["w_gate"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    else:              # gelu 2-mat
+        h = jax.nn.gelu(u)
+    return jnp.einsum("...f,fm->...m", h, p["w_down"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def init_moe(pb: ParamBuilder, cfg):
+    m = cfg.moe
+    M, E, F = cfg.d_model, m.n_experts, m.d_ff_expert
+    pb.param("router", (M, E), ("d_model", "experts_r"), init=fan_in_init(M))
+    pb.param("we_gate", (E, M, F), ("experts", "d_model", "d_ff_expert"),
+             init=fan_in_init(M))
+    pb.param("we_up", (E, M, F), ("experts", "d_model", "d_ff_expert"),
+             init=fan_in_init(M))
+    pb.param("we_down", (E, F, M), ("experts", "d_ff_expert", "d_model"),
+             init=fan_in_init(F))
+    if m.n_shared_experts:
+        shared = pb.child("shared")
+        init_mlp(shared, M, m.d_ff_shared)
+        pb.param("shared_gate", (M, 1), ("d_model", "one"), init=fan_in_init(M))
+
+
+def apply_moe(p, cfg, x):
+    """x: (B, S, M) -> (y, aux_loss)."""
+    m = cfg.moe
+    B, S, M = x.shape
+    E, K = m.n_experts, m.top_k
+    T = min(m.group_size, B * S)
+    if (B * S) % T:
+        T = B * S  # small/odd shapes (smoke tests): one group
+    n_groups = (B * S) // T
+    xg = x.reshape(n_groups, T, M)
+
+    logits = jnp.einsum("gtm,me->gte", xg, p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)          # (G,T,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * mean(frac_tokens * frac_probs)
+    tok_onehot = jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32)
+    frac_tokens = jnp.mean(tok_onehot, axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs) * m.router_aux_weight
+
+    C = max(1, int(T * K / E * m.capacity_factor))
+    C = min(C, T)
+    # position of each (token, k) within its expert queue
+    kth_onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # (G,T,K,E)
+    flat = kth_onehot.reshape(n_groups, T * K, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(n_groups, T, K, E)
+    pos = jnp.sum(pos_in_expert * kth_onehot, axis=-1)             # (G,T,K)
+    keep = pos < C
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    pos_onehot = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=x.dtype)  # (G,T,K,C)
+    dispatch = jnp.einsum("gtke,gtkc->gtec",
+                          kth_onehot.astype(x.dtype) * keep[..., None].astype(x.dtype),
+                          pos_onehot)                              # (G,T,E,C)
+    combine = jnp.einsum("gtk,gtke,gtkc->gtec",
+                         gate_vals.astype(x.dtype),
+                         kth_onehot.astype(x.dtype), pos_onehot)
+
+    xe = jnp.einsum("gtm,gtec->gecm", xg, dispatch)
+    xe = shard_activation(xe, "batch", "experts", None, None)
+    g = jnp.einsum("gecm,emf->gecf", xe, p["we_gate"].astype(x.dtype))
+    u = jnp.einsum("gecm,emf->gecf", xe, p["we_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    ye = jnp.einsum("gecf,efm->gecm", h, p["we_down"].astype(x.dtype))
+    y = jnp.einsum("gecm,gtec->gtm", ye, combine)
+
+    if m.n_shared_experts:
+        sg = jax.nn.sigmoid(
+            jnp.einsum("gtm,mo->gto", xg, p["shared_gate"].astype(x.dtype)))
+        y = y + sg * apply_mlp(p["shared"], xg)
+
+    return y.reshape(B, S, M), aux

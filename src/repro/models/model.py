@@ -1,0 +1,128 @@
+"""Top-level LM facade: embedding, stack, loss, prefill/decode.
+
+`LM` is a thin namespace of pure functions over (params, cfg, run); params are
+plain pytrees so pjit/scan/checkpointing compose without a module framework.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.modules import chunked_cross_entropy, rms_norm
+from repro.utils.quant import maybe_dequant
+from repro.sharding.activations import shard_activation
+from repro.utils.tree import ParamBuilder, fan_in_init, tree_count
+
+
+class LM:
+    # ----------------------------------------------------------------- init
+
+    @staticmethod
+    def init(cfg, run, key=None, abstract: bool = False):
+        """Returns (params, specs). ``abstract=True`` -> ShapeDtypeStructs."""
+        dtype = jnp.dtype(run.param_dtype)
+        pb = ParamBuilder(key, dtype=dtype, abstract=abstract)
+        pb.param("embed", (cfg.vocab_size, cfg.d_model), ("vocab", "d_model"),
+                 init=fan_in_init(cfg.d_model))
+        pb.param("final_norm", (cfg.d_model,), ("d_model",),
+                 init=lambda k, s, d: jnp.zeros(s, d))
+        if not cfg.tie_embeddings:
+            pb.param("unembed", (cfg.d_model, cfg.vocab_size),
+                     ("d_model", "vocab"), init=fan_in_init(cfg.d_model))
+        sub_key = None if abstract else jax.random.fold_in(key, 1)
+        stack_params, stack_specs = transformer.init_stack(
+            cfg, run, sub_key, dtype, abstract=abstract)
+        params, specs = pb.build()
+        params["stack"] = stack_params
+        specs["stack"] = stack_specs
+        return params, specs
+
+    @staticmethod
+    def param_count(cfg, run) -> int:
+        params, _ = LM.init(cfg, run, abstract=True)
+        return tree_count(params)
+
+    # -------------------------------------------------------------- forward
+
+    @staticmethod
+    def _unembed(params, cfg, dtype=jnp.float32):
+        if cfg.tie_embeddings:
+            return maybe_dequant(params["embed"], dtype).T
+        return maybe_dequant(params["unembed"], dtype)
+
+    @staticmethod
+    def hidden(params, cfg, run, tokens, mode="train", cache=None, pos=None):
+        """tokens: (B, S) int32 -> (h, new_cache, aux)."""
+        B, S = tokens.shape
+        adt = jnp.dtype(run.activation_dtype)
+        embed = maybe_dequant(params["embed"], adt)
+        x = jnp.take(embed, tokens, axis=0).astype(adt)
+        x = shard_activation(x, "batch", "seq", "d_model")
+        if mode == "decode":
+            positions = None
+        else:
+            positions = jnp.arange(S, dtype=jnp.int32)   # shared across batch
+        x, new_cache, aux = transformer.apply_stack(
+            params["stack"], cfg, run, x, positions, mode=mode,
+            cache=cache, pos=pos)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, new_cache, aux
+
+    @staticmethod
+    def loss(params, cfg, run, tokens, labels, label_mask=None):
+        """Next-token cross-entropy + MoE aux. Returns (loss, metrics)."""
+        h, _, aux = LM.hidden(params, cfg, run, tokens, mode="train")
+        ce, count = chunked_cross_entropy(
+            h, LM._unembed(params, cfg).astype(h.dtype), labels,
+            chunk=run.loss_chunk, label_mask=label_mask)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux, "tokens": count}
+
+    @staticmethod
+    def logits(params, cfg, run, tokens):
+        """Full logits (small-model paths only: examples, tests)."""
+        h, _, _ = LM.hidden(params, cfg, run, tokens, mode="train")
+        return jnp.einsum("bsm,mv->bsv", h,
+                          LM._unembed(params, cfg).astype(h.dtype),
+                          preferred_element_type=jnp.float32)
+
+    # ------------------------------------------------------------- serving
+
+    @staticmethod
+    def prefill(params, cfg, run, tokens, max_seq):
+        """Process the prompt; returns (last_logits, cache)."""
+        adt = jnp.dtype(run.activation_dtype)
+        cache = transformer.init_cache(cfg, run, tokens.shape[0], max_seq, adt)
+        h, cache, _ = LM.hidden(params, cfg, run, tokens, mode="prefill",
+                                cache=cache)
+        last = h[:, -1:, :]
+        logits = jnp.einsum("bsm,mv->bsv", last,
+                            LM._unembed(params, cfg).astype(last.dtype),
+                            preferred_element_type=jnp.float32)
+        return logits, cache
+
+    @staticmethod
+    def decode_step(params, cfg, run, tokens, cache, pos):
+        """tokens: (B, 1); pos: () int32 = number of tokens already cached.
+        Returns (logits (B,1,V), new_cache)."""
+        h, cache, _ = LM.hidden(params, cfg, run, tokens, mode="decode",
+                                cache=cache, pos=pos)
+        logits = jnp.einsum("bsm,mv->bsv", h,
+                            LM._unembed(params, cfg).astype(h.dtype),
+                            preferred_element_type=jnp.float32)
+        return logits, cache
+
+    # ------------------------------------------------------------ cache api
+
+    @staticmethod
+    def init_cache(cfg, run, batch, max_seq, dtype=jnp.bfloat16):
+        return transformer.init_cache(cfg, run, batch, max_seq, dtype)
+
+    @staticmethod
+    def cache_shape(cfg, run, batch, max_seq, dtype=jnp.bfloat16):
+        return transformer.cache_shape(cfg, run, batch, max_seq, dtype)
+
+    @staticmethod
+    def cache_specs(cfg, run):
+        return transformer.cache_specs(cfg, run)

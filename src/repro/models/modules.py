@@ -1,0 +1,240 @@
+"""Shared building blocks: norms, rope, blockwise (flash-style) attention in
+pure JAX, chunked cross-entropy.
+
+Everything here is shape-polymorphic pure-function code — no module classes —
+so it scans, remats, vmaps and AOT-lowers cleanly on 512 placeholder devices.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding.activations import shard_activation
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: int array (...,) -> (cos, sin) of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D); cos/sin: (S, D//2) (positions shared across batch)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    while cos.ndim < x.ndim:    # (S, half) -> (1, S, 1, half)
+        cos = cos[None] if cos.ndim + 2 <= x.ndim else cos[..., None, :]
+        sin = sin[None] if sin.ndim + 2 <= x.ndim else sin[..., None, :]
+    c, s = cos.astype(x.dtype), sin.astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# blockwise "flash" attention, pure JAX (production fallback path; the Pallas
+# kernel in repro.kernels.flash_attention implements the same contract)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _pad_to(x, size, axis):
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def blockwise_attention(q, k, v, *, q_positions, kv_positions, causal=True,
+                        window=None, block_q=512, block_kv=1024, softmax_scale=None,
+                        window_block_skip=False):
+    """Streaming-softmax attention.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+    q_positions: (Sq,) int32 absolute positions (shared across the batch);
+    kv_positions: (Skv,).
+    Mask: kv_pos <= q_pos (if causal) and q_pos - kv_pos < window (if window).
+
+    ``window_block_skip``: for sliding-window attention, only materialize the
+    kv band [q_pos - window, q_pos] per q block via dynamic_slice — a real
+    FLOPs reduction (beyond-paper optimization; the baseline masks instead).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    nq = -(-Sq // block_q)
+    q = _pad_to(q, nq * block_q, 1)
+    qpos = _pad_to(q_positions, nq * block_q, 0)
+
+    use_band = bool(window_block_skip and window is not None and Skv > block_kv
+                    and Sq == Skv)
+    if use_band:
+        # kv band width: window rounded up to blocks + one q block of lookback
+        band = min(Skv, (-(-int(window) // block_kv) + -(-block_q // block_kv)) * block_kv)
+    else:
+        nkv = -(-Skv // block_kv)
+        k = _pad_to(k, nkv * block_kv, 1)
+        v = _pad_to(v, nkv * block_kv, 1)
+        kvpos = _pad_to(kv_positions, nkv * block_kv, 0)
+        # padded kv positions must never win the mask
+        if nkv * block_kv != Skv:
+            pad_mask = jnp.arange(nkv * block_kv) >= Skv
+            kvpos = jnp.where(pad_mask, jnp.iinfo(jnp.int32).max // 2, kvpos)
+
+    q = q.reshape(B, nq, block_q, Hq, D)
+    qpos = qpos.reshape(nq, block_q)
+
+    def one_q_block(qb, qpb, qblock_idx):
+        # qb: (B, block_q, Hq, D) -> grouped (B, Hkv, G, block_q, D)
+        qg = qb.transpose(0, 2, 1, 3).reshape(B, Hkv, G, block_q, D)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kb, vb, kpb = inp                     # (B, block_kv, Hkv, D), (block_kv,)
+            kg = kb.transpose(0, 2, 1, 3)         # (B, Hkv, block_kv, D)
+            vg = vb.transpose(0, 2, 1, 3)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kg,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((block_q, kb.shape[1]), dtype=bool)
+            if causal:
+                mask &= kpb[None, :] <= qpb[:, None]
+            if window is not None:
+                mask &= (qpb[:, None] - kpb[None, :]) < window
+            # additive bias: keeps the mask (bq, bkv)-sized and fusible; a
+            # broadcasted where() would pin a giant bool residual for the VJP
+            bias = jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)
+            s = s + bias[None, None, None, :, :]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(vg.dtype), vg,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, block_q, D), jnp.float32)
+
+        if use_band:
+            start = jnp.maximum(qblock_idx * block_q + block_q - band, 0)
+            start = jnp.minimum(start, Skv - band)
+            kb_band = lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vb_band = lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            kp_band = lax.dynamic_slice_in_dim(kv_positions, start, band, axis=0)
+            nb = band // block_kv
+            ks = kb_band.reshape(B, nb, block_kv, Hkv, D).transpose(1, 0, 2, 3, 4)
+            vs = vb_band.reshape(B, nb, block_kv, Hkv, D).transpose(1, 0, 2, 3, 4)
+            ps = kp_band.reshape(nb, block_kv)
+        else:
+            nb = k.shape[1] // block_kv
+            ks = k.reshape(B, nb, block_kv, Hkv, D).transpose(1, 0, 2, 3, 4)
+            vs = v.reshape(B, nb, block_kv, Hkv, D).transpose(1, 0, 2, 3, 4)
+            ps = kvpos.reshape(nb, block_kv)
+
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), (ks, vs, ps))
+        l = jnp.maximum(l, 1e-30)
+        out = acc / l[..., None]
+        return out.reshape(B, Hq, block_q, D).transpose(0, 2, 1, 3)  # (B,bq,Hq,D)
+
+    outs = lax.map(
+        lambda i: one_q_block(q[:, i], qpos[i], i), jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * block_q, Hq, D)
+    return out[:, :Sq].astype(v.dtype)
+
+
+def naive_attention(q, k, v, *, q_positions, kv_positions, causal=True,
+                    window=None, softmax_scale=None):
+    """O(S^2)-memory reference; also the decode path (Sq tiny).
+    Positions are 1-D (shared across batch)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    qg = q.transpose(0, 2, 1, 3).reshape(B, Hkv, G, Sq, D)
+    kg = k.transpose(0, 2, 1, 3)
+    vg = v.transpose(0, 2, 1, 3)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kg,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kv_positions[None, :] <= q_positions[:, None]
+    if window is not None:
+        mask &= (q_positions[:, None] - kv_positions[None, :]) < window
+    s = s + jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)[None, None, None, :, :]
+    p = jax.nn.softmax(s, axis=-1).astype(vg.dtype)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vg)
+    return o.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy: never materializes (B, S, V) logits
+# ---------------------------------------------------------------------------
+
+
+def chunked_cross_entropy(x, unembed, labels, *, chunk=512, label_mask=None):
+    """x: (B, S, M) final hidden; unembed: (M, V); labels: (B, S) int32.
+
+    Returns (mean_loss_f32, total_tokens).  Scans over sequence chunks and
+    recomputes logits in the backward pass (jax.checkpoint), so peak memory is
+    O(B * chunk * V) instead of O(B * S * V).
+    """
+    B, S, M = x.shape
+    chunk = min(chunk, S)
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        pad_valid = jnp.pad(jnp.ones((B, S), bool), ((0, 0), (0, pad)))
+    else:
+        pad_valid = jnp.ones((B, S), bool)
+    if label_mask is not None:
+        pad_valid &= jnp.pad(label_mask, ((0, 0), (0, pad))) if pad else label_mask
+
+    xs = x.reshape(B, n, chunk, M).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+    vs = pad_valid.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(carry, inp):
+        xc, lc, vc = inp
+        logits = jnp.einsum("bsm,mv->bsv", xc, unembed.astype(xc.dtype),
+                            preferred_element_type=jnp.float32)
+        logits = shard_activation(logits, "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = jnp.where(vc, lse - gold, 0.0)
+        return carry + jnp.sum(nll), None
+
+    total, _ = lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (xs, ls, vs))
+    count = jnp.maximum(jnp.sum(pad_valid.astype(jnp.float32)), 1.0)
+    return total / count, count

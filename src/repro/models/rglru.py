@@ -1,0 +1,130 @@
+"""RecurrentGemma / Griffin recurrent block (arXiv:2402.19427).
+
+Block: x -> [branch_a: linear -> causal depthwise conv1d(width 4) -> RG-LRU]
+            [branch_b: linear -> GeLU]
+       y = out_proj(branch_a * branch_b)
+
+RG-LRU: a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t))        (c = 8)
+        h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (sigmoid(W_x x_t) * x_t)
+
+Training/prefill evaluates the linear recurrence with
+``jax.lax.associative_scan`` (log-depth, vectorized); decode is the exact
+single-step update.  The Pallas kernel (repro/kernels/rglru) implements a
+blocked sequential scan over chunk boundaries with in-chunk closed form.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.utils.tree import ParamBuilder, fan_in_init
+
+RG_LRU_C = 8.0
+
+
+def init(pb: ParamBuilder, cfg):
+    M = cfg.d_model
+    D = M  # lru width = d_model
+    W = cfg.rglru_conv_width
+    pb.param("w_in_a", (M, D), ("d_model", "d_rnn"), init=fan_in_init(M))
+    pb.param("w_in_b", (M, D), ("d_model", "d_rnn"), init=fan_in_init(M))
+    pb.param("conv_w", (W, D), ("conv_w", "d_rnn"),
+             init=lambda k, s, d: (jax.random.normal(k, s) * 0.1).astype(d))
+    pb.param("w_gate_a", (D, D), ("d_rnn", "d_rnn_out"), init=fan_in_init(D))
+    pb.param("w_gate_x", (D, D), ("d_rnn", "d_rnn_out"), init=fan_in_init(D))
+    pb.param("lam", (D,), ("d_rnn",),
+             init=lambda k, s, d: jnp.full(s, 1.0, d))
+    pb.param("w_out", (D, M), ("d_rnn", "d_model"), init=fan_in_init(D))
+
+
+def _conv1d_causal(x, w, conv_state):
+    """Depthwise causal conv. x: (B,S,D); w: (W,D); conv_state: (B,W-1,D)."""
+    W = w.shape[0]
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i:i + x.shape[1], :] * w[W - 1 - i][None, None, :].astype(x.dtype)
+    return out, xp[:, -(W - 1):, :]
+
+
+def _gates(p, xc):
+    lam = jax.nn.softplus(p["lam"].astype(jnp.float32))
+    r = jax.nn.sigmoid(
+        jnp.einsum("...d,de->...e", xc, p["w_gate_a"]).astype(jnp.float32))
+    log_a = -RG_LRU_C * lam * r                     # log a_t  (<= 0)
+    i = jax.nn.sigmoid(
+        jnp.einsum("...d,de->...e", xc, p["w_gate_x"]).astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12))
+    b = beta * i * xc.astype(jnp.float32)
+    return a, b
+
+
+@jax.named_scope("rglru_kernel_region")
+def rg_lru_scan(p, xc, h0):
+    """xc: (B,S,D) conv output; h0: (B,D) fp32. Returns (y, h_final)."""
+    a, b = _gates(p, xc)                            # (B,S,D) fp32
+    # fold initial state into the first element: h_1 = a_1 h_0 + b_1
+    b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = lax.associative_scan(combine, (a, b), axis=1)
+    return hh.astype(xc.dtype), hh[:, -1, :]
+
+
+def rg_lru_step(p, xc, h):
+    """xc: (B,1,D); h: (B,D) fp32."""
+    a, b = _gates(p, xc)
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new[:, None, :].astype(xc.dtype), h_new
+
+
+def cache_shape(cfg, batch, dtype=jnp.bfloat16):
+    D = cfg.d_model
+    W = cfg.rglru_conv_width
+    return {"h": jax.ShapeDtypeStruct((batch, D), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, W - 1, D), dtype)}
+
+
+def cache_specs():
+    return {"h": ("batch", "d_rnn"), "conv": ("batch", "conv_w", "d_rnn")}
+
+
+def init_cache(cfg, batch, dtype=jnp.bfloat16):
+    return jax.tree_util.tree_map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                                  cache_shape(cfg, batch, dtype))
+
+
+def apply(p, cfg, run, x, cache=None, use_pallas=False):
+    """x: (B,S,M) -> (y, new_cache)."""
+    B = x.shape[0]
+    if cache is None:
+        cache = init_cache(cfg, B, dtype=x.dtype)
+    xa = jnp.einsum("bsm,md->bsd", x, p["w_in_a"].astype(x.dtype))
+    xb = jnp.einsum("bsm,md->bsd", x, p["w_in_b"].astype(x.dtype))
+    xc, conv_state = _conv1d_causal(xa, p["conv_w"], cache["conv"])
+    if use_pallas:
+        from repro.kernels.rglru import ops as rglru_ops
+        a, b = _gates(p, xc)
+        y, h_f = rglru_ops.linear_scan(a, b, cache["h"], interpret=True)
+        y = y.astype(xc.dtype)
+    else:
+        y, h_f = rg_lru_scan(p, xc, cache["h"])
+    y = y * jax.nn.gelu(xb)
+    y = jnp.einsum("bsd,dm->bsm", y, p["w_out"].astype(x.dtype))
+    return y, {"h": h_f, "conv": conv_state}
+
+
+def decode(p, cfg, run, x, cache, pos=None):
+    xa = jnp.einsum("bsm,md->bsd", x, p["w_in_a"].astype(x.dtype))
+    xb = jnp.einsum("bsm,md->bsd", x, p["w_in_b"].astype(x.dtype))
+    xc, conv_state = _conv1d_causal(xa, p["conv_w"], cache["conv"])
+    y, h_new = rg_lru_step(p, xc, cache["h"])
+    y = y * jax.nn.gelu(xb)
+    y = jnp.einsum("bsd,dm->bsm", y, p["w_out"].astype(x.dtype))
+    return y, {"h": h_new, "conv": conv_state}

@@ -1,0 +1,243 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): data-dependent decay linear
+attention (time-mix) + squared-relu channel-mix, both with token shift.
+
+Training/prefill uses a *chunked* formulation: within a chunk of length L the
+pairwise decay factor exp(c_{t-1} - c_s) (s < t, c = cumulative log-decay) is
+materialized directly — it is always <= 1, so the chunked path is
+unconditionally stable (no exp(+c) factoring).  Chunks are carried by a
+sequential scan over the per-(key,value) state S in (B, H, N, N).
+
+The Pallas kernel (repro/kernels/rwkv6) implements the same chunked contract;
+ref.py there is the naive per-token recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.modules import rms_norm
+from repro.utils.tree import ParamBuilder, fan_in_init
+
+LORA_RANK = 64
+
+
+def init(pb: ParamBuilder, cfg):
+    M = cfg.d_model
+    N = cfg.rwkv_head_dim
+    assert M % N == 0
+    zeros = lambda k, s, d: jnp.zeros(s, d)
+    for z in ("r", "k", "v", "w", "g"):
+        pb.param(f"mix_{z}", (M,), ("d_model",), init=zeros)
+    pb.param("w_bias", (M,), ("d_model",),
+             init=lambda k, s, d: jnp.full(s, -1.0, d))  # exp(-exp(-1)) ~ .69 decay
+    pb.param("w_lora_a", (M, LORA_RANK), ("d_model", "lora"), init=fan_in_init(M))
+    pb.param("w_lora_b", (LORA_RANK, M), ("lora", "d_model"),
+             init=lambda k, s, d: jnp.zeros(s, d))
+    pb.param("bonus_u", (M,), ("d_model",), init=zeros)
+    for z in ("r", "k", "v", "g", "o"):
+        pb.param(f"w{z}", (M, M), ("d_model", "d_model_out"), init=fan_in_init(M))
+    pb.param("ln_x_scale", (M,), ("d_model",), init=zeros)
+    # channel mix
+    cm = pb.child("cm")
+    cm.param("mix_k", (M,), ("d_model",), init=zeros)
+    cm.param("mix_r", (M,), ("d_model",), init=zeros)
+    cm.param("wk", (M, cfg.d_ff), ("d_model", "d_ff"), init=fan_in_init(M))
+    cm.param("wv", (cfg.d_ff, M), ("d_ff", "d_model"), init=fan_in_init(cfg.d_ff))
+    cm.param("wr", (M, M), ("d_model", "d_model_out"), init=fan_in_init(M))
+
+
+def _token_shift(x, x_prev):
+    """shift(x)_t = x_{t-1}; x_prev is the last token of the previous segment
+    (zeros at sequence start). x: (B, S, M); x_prev: (B, M)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix(x, sx, mu):
+    return x + (sx - x) * mu.astype(x.dtype)
+
+
+def _projections(p, cfg, x, x_prev):
+    sx = _token_shift(x, x_prev)
+    xr = _mix(x, sx, p["mix_r"])
+    xk = _mix(x, sx, p["mix_k"])
+    xv = _mix(x, sx, p["mix_v"])
+    xw = _mix(x, sx, p["mix_w"])
+    xg = _mix(x, sx, p["mix_g"])
+    r = xr @ p["wr"].astype(x.dtype)
+    k = xk @ p["wk"].astype(x.dtype)
+    v = xv @ p["wv"].astype(x.dtype)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    lora = jnp.tanh(xw @ p["w_lora_a"].astype(x.dtype)) @ p["w_lora_b"].astype(x.dtype)
+    logw = -jnp.exp(
+        jnp.clip(p["w_bias"].astype(jnp.float32) + lora.astype(jnp.float32), -8.0, 4.0))
+    return r, k, v, g, logw  # logw in (-inf, 0): per-token per-channel log decay
+
+
+def _heads(x, N):
+    B, S, M = x.shape
+    return x.reshape(B, S, M // N, N).transpose(0, 2, 1, 3)  # (B,H,S,N)
+
+
+def time_mix_chunked(p, cfg, x, x_prev, state, *, chunk=64,
+                     bf16_streams=False):
+    """x: (B,S,M); state: (B,H,N,N). Returns (y, new_x_prev, new_state)."""
+    B, S, M = x.shape
+    N = cfg.rwkv_head_dim
+    H = M // N
+    r, k, v, g, logw = _projections(p, cfg, x, x_prev)
+    u = p["bonus_u"].astype(jnp.float32).reshape(H, N)
+
+    L = min(chunk, S)
+    Sp = -(-S // L) * L
+    if Sp != S:
+        # pad: zero k/v contributions, decay=1 (logw=0) -> state is unaffected
+        pad = ((0, 0), (0, Sp - S), (0, 0))
+        r, k, v = jnp.pad(r, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+        logw = jnp.pad(logw, pad)
+    nC = Sp // L
+    sdt = jnp.bfloat16 if bf16_streams else jnp.float32
+    rh = _heads(r, N).reshape(B, H, nC, L, N).astype(sdt)
+    kh = _heads(k, N).reshape(B, H, nC, L, N).astype(sdt)
+    vh = _heads(v, N).reshape(B, H, nC, L, N).astype(sdt)
+    wh = _heads(logw.astype(jnp.float32), N).reshape(B, H, nC, L, N)
+
+    @jax.checkpoint   # recompute D/A in backward: O(L^2 N) residuals per
+    @jax.named_scope("wkv_kernel_region")
+    def chunk_step(S_in, inp):  # chunk would otherwise be stacked across nC
+        rc, kc, vc, wc = inp                       # (B,H,L,N)
+        rc, kc, vc = (t.astype(jnp.float32) for t in (rc, kc, vc))
+        c = jnp.cumsum(wc, axis=2)                 # inclusive cumulative log decay
+        c_prev = c - wc                            # c_{t-1} (exclusive)
+        # intra-chunk: A[t,s] = sum_i r[t,i] k[s,i] exp(c_prev[t,i] - c[s,i]), s<t
+        D = jnp.exp(jnp.clip(
+            c_prev[:, :, :, None, :] - c[:, :, None, :, :], -60.0, 0.0))
+        A = jnp.einsum("bhti,bhsi,bhtsi->bhts", rc, kc, D)
+        tri = jnp.tril(jnp.ones((rc.shape[2], rc.shape[2]), jnp.float32), -1)
+        A = A * tri
+        diag = jnp.einsum("hi,bhti,bhti->bht", u, rc, kc)
+        y = jnp.einsum("bhts,bhsn->bhtn", A, vc) + diag[..., None] * vc
+        # inter-chunk: y_t += (r_t * exp(c_prev_t)) @ S_in
+        q_dec = rc * jnp.exp(c_prev)
+        y = y + jnp.einsum("bhti,bhin->bhtn", q_dec, S_in)
+        # state update: S_out = diag(exp(c_L)) S_in + sum_s (k_s exp(c_L - c_s)) v_s^T
+        c_last = c[:, :, -1:, :]
+        k_dec = kc * jnp.exp(jnp.clip(c_last - c, -60.0, 0.0))
+        S_out = jnp.exp(c_last.squeeze(2))[..., None] * S_in \
+            + jnp.einsum("bhsi,bhsn->bhin", k_dec, vc)
+        return S_out, y
+
+    xs = (rh.transpose(2, 0, 1, 3, 4), kh.transpose(2, 0, 1, 3, 4),
+          vh.transpose(2, 0, 1, 3, 4), wh.transpose(2, 0, 1, 3, 4))
+    state_f, ys = lax.scan(chunk_step, state.astype(jnp.float32), xs)
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, Sp, N).transpose(0, 2, 1, 3)
+    y = y.reshape(B, Sp, M)[:, :S].astype(x.dtype)
+
+    y = rms_norm(y, p["ln_x_scale"], cfg.norm_eps) * g
+    y = y @ p["wo"].astype(x.dtype)
+    return y, x[:, -1, :], state_f.astype(state.dtype)
+
+
+def time_mix_decode(p, cfg, x, x_prev, state):
+    """Single-token recurrence. x: (B,1,M); state: (B,H,N,N) fp32."""
+    B, _, M = x.shape
+    N = cfg.rwkv_head_dim
+    H = M // N
+    r, k, v, g, logw = _projections(p, cfg, x, x_prev)
+    rh = r.reshape(B, H, N).astype(jnp.float32)
+    kh = k.reshape(B, H, N).astype(jnp.float32)
+    vh = v.reshape(B, H, N).astype(jnp.float32)
+    wh = jnp.exp(logw.reshape(B, H, N).astype(jnp.float32))
+    u = p["bonus_u"].astype(jnp.float32).reshape(H, N)
+    kv = kh[..., :, None] * vh[..., None, :]               # (B,H,N,N)
+    y = jnp.einsum("bhi,bhin->bhn", rh, state + u[None, :, :, None] * kv)
+    state = wh[..., None] * state + kv
+    y = y.reshape(B, 1, M).astype(x.dtype)
+    y = rms_norm(y, p["ln_x_scale"], cfg.norm_eps) * g
+    return y @ p["wo"].astype(x.dtype), x[:, -1, :], state
+
+
+def channel_mix(p, x, x_prev):
+    sx = _token_shift(x, x_prev)
+    xk = _mix(x, sx, p["mix_k"])
+    xr = _mix(x, sx, p["mix_r"])
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    kv = k @ p["wv"].astype(x.dtype)
+    return jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype)) * kv, x[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
+# block-level API (norms included)
+# ---------------------------------------------------------------------------
+
+
+def init_block(pb: ParamBuilder, cfg):
+    zeros = lambda k, s, d: jnp.zeros(s, d)
+    pb.param("norm_tm", (cfg.d_model,), ("d_model",), init=zeros)
+    pb.param("norm_cm", (cfg.d_model,), ("d_model",), init=zeros)
+    init(pb, cfg)
+
+
+def cache_shape(cfg, batch, dtype=jnp.bfloat16):
+    M = cfg.d_model
+    N = cfg.rwkv_head_dim
+    H = M // N
+    return {
+        "state": jax.ShapeDtypeStruct((batch, H, N, N), jnp.float32),
+        "tm_x_prev": jax.ShapeDtypeStruct((batch, M), dtype),
+        "cm_x_prev": jax.ShapeDtypeStruct((batch, M), dtype),
+    }
+
+
+def cache_specs():
+    return {"state": ("batch", "heads", "rwkv_n", "rwkv_n2"),
+            "tm_x_prev": ("batch", "d_model"),
+            "cm_x_prev": ("batch", "d_model")}
+
+
+def init_cache(cfg, batch, dtype=jnp.bfloat16):
+    return jax.tree_util.tree_map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                                  cache_shape(cfg, batch, dtype))
+
+
+def apply(p, cfg, run, x, cache=None, use_pallas=False):
+    """Full-sequence forward. Returns (y, new_cache)."""
+    B = x.shape[0]
+    if cache is None:
+        cache = jax.tree_util.tree_map(
+            lambda sd: jnp.zeros(sd.shape, sd.dtype),
+            cache_shape(cfg, B, dtype=x.dtype))
+    h = rms_norm(x, p["norm_tm"], cfg.norm_eps)
+    if use_pallas:
+        from repro.kernels.rwkv6 import ops as rwkv_ops
+        r, k, v, g, logw = _projections(p, cfg, h, cache["tm_x_prev"])
+        N = cfg.rwkv_head_dim
+        y, state_f = rwkv_ops.wkv6(
+            _heads(r, N), _heads(k, N), _heads(v, N),
+            _heads(logw.astype(jnp.float32), N),
+            p["bonus_u"].astype(jnp.float32).reshape(-1, N),
+            cache["state"], interpret=True)
+        M = cfg.d_model
+        y = y.transpose(0, 2, 1, 3).reshape(B, x.shape[1], M).astype(x.dtype)
+        y = rms_norm(y, p["ln_x_scale"], cfg.norm_eps) * g
+        y = y @ p["wo"].astype(x.dtype)
+        tm_prev = h[:, -1, :]
+    else:
+        y, tm_prev, state_f = time_mix_chunked(
+            p, cfg, h, cache["tm_x_prev"], cache["state"],
+            chunk=run.rwkv_chunk, bf16_streams=run.rwkv_bf16_streams)
+    x = x + y
+    h = rms_norm(x, p["norm_cm"], cfg.norm_eps)
+    y, cm_prev = channel_mix(p["cm"], h, cache["cm_x_prev"])
+    x = x + y
+    return x, {"state": state_f, "tm_x_prev": tm_prev, "cm_x_prev": cm_prev}
+
+
+def decode(p, cfg, run, x, cache, pos=None):
+    h = rms_norm(x, p["norm_tm"], cfg.norm_eps)
+    y, tm_prev, state = time_mix_decode(p, cfg, h, cache["tm_x_prev"], cache["state"])
+    x = x + y
+    h = rms_norm(x, p["norm_cm"], cfg.norm_eps)
+    y, cm_prev = channel_mix(p["cm"], h, cache["cm_x_prev"])
+    x = x + y
+    return x, {"state": state, "tm_x_prev": tm_prev, "cm_x_prev": cm_prev}

@@ -1,0 +1,318 @@
+"""Decoder stack: heterogeneous layer patterns under a single group-scan.
+
+``layer_kinds`` (from the config) is split into ``n_groups`` repetitions of the
+block pattern plus an unrolled tail, e.g. recurrentgemma-2b's 26 layers =
+8 x (rglru, rglru, attn) + (rglru, rglru).  Homogeneous archs degenerate to a
+pattern of length 1.  All three modes (train / prefill / decode) scan over the
+same stacked parameter trees, which keeps the lowered HLO small enough that a
+512-device AOT compile of a 104B-parameter model is tractable on one CPU core.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention, ffn, rglru, rwkv6
+from repro.models.modules import rms_norm
+from repro.utils.quant import dequantize_params
+from repro.sharding.activations import shard_activation
+from repro.utils.tree import ParamBuilder
+
+# ---------------------------------------------------------------------------
+# pattern / grouping helpers
+# ---------------------------------------------------------------------------
+
+
+def pattern_of(cfg):
+    if cfg.block_pattern is not None:
+        return tuple(cfg.block_pattern)
+    return ("rwkv",) if cfg.family == "ssm" else ("attn",)
+
+
+def grouping(cfg):
+    pat = pattern_of(cfg)
+    n_groups = cfg.n_layers // len(pat)
+    tail = cfg.layer_kinds[n_groups * len(pat):]
+    return pat, n_groups, tail
+
+
+def kind_window(cfg, kind: str) -> Optional[int]:
+    if kind != "attn":
+        return None
+    if cfg.family == "hybrid":
+        return cfg.local_window
+    return cfg.sliding_window
+
+
+# ---------------------------------------------------------------------------
+# per-layer block init / apply
+# ---------------------------------------------------------------------------
+
+
+def _init_block(pb: ParamBuilder, cfg, kind: str):
+    zeros = lambda k, s, d: jnp.zeros(s, d)
+    if kind == "attn":
+        pb.param("norm1", (cfg.d_model,), ("d_model",), init=zeros)
+        pb.param("norm2", (cfg.d_model,), ("d_model",), init=zeros)
+        attention.init(pb.child("attn"), cfg)
+        if cfg.moe is not None:
+            ffn.init_moe(pb.child("moe"), cfg)
+        else:
+            ffn.init_mlp(pb.child("mlp"), cfg.d_model, cfg.d_ff, cfg.mlp_variant)
+    elif kind == "rglru":
+        pb.param("norm1", (cfg.d_model,), ("d_model",), init=zeros)
+        pb.param("norm2", (cfg.d_model,), ("d_model",), init=zeros)
+        rglru.init(pb.child("rec"), cfg)
+        ffn.init_mlp(pb.child("mlp"), cfg.d_model, cfg.d_ff)
+    elif kind == "rwkv":
+        rwkv6.init_block(pb, cfg)
+    else:
+        raise ValueError(kind)
+
+
+def layer_init_fn(cfg, run, kind: str, dtype):
+    def f(key):
+        pb = ParamBuilder(key, dtype=dtype)
+        _init_block(pb, cfg, kind)
+        return pb.params
+    return f
+
+
+def layer_specs(cfg, kind: str, dtype):
+    pb = ParamBuilder(None, dtype=dtype, abstract=True)
+    _init_block(pb, cfg, kind)
+    return pb.params, pb.specs
+
+
+def block_forward(p, cfg, run, kind, x, positions, cache, mode, pos=None):
+    """Returns (x, new_cache, aux).  cache may be None in train mode."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        window = kind_window(cfg, kind)
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        if mode == "decode":
+            a, new_kv = attention.decode(p["attn"], cfg, run, h, cache["kv"], pos,
+                                         window=window)
+            new_cache = {"kv": new_kv}
+        elif mode == "prefill":
+            a = attention.apply(p["attn"], cfg, run, h, positions, window=window)
+            new_cache = {"kv": attention.prefill_cache(
+                p["attn"], cfg, run, h, positions, cache["kv"], window=window)}
+        else:
+            a = attention.apply(p["attn"], cfg, run, h, positions, window=window)
+            new_cache = None
+        x = x + a
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            f, aux = ffn.apply_moe(p["moe"], cfg, h)
+        else:
+            f = ffn.apply_mlp(p["mlp"], h)
+        x = x + f
+        return x, new_cache, aux
+
+    if kind == "rglru":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        if mode == "decode":
+            r, new_rc = rglru.decode(p["rec"], cfg, run, h, cache["rec"])
+        else:
+            r, new_rc = rglru.apply(p["rec"], cfg, run, h,
+                                    cache["rec"] if cache else None,
+                                    use_pallas=run.use_pallas)
+        x = x + r
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + ffn.apply_mlp(p["mlp"], h)
+        return x, ({"rec": new_rc} if mode != "train" else None), aux
+
+    if kind == "rwkv":
+        if mode == "decode":
+            x, new_c = rwkv6.decode(p, cfg, run, x, cache)
+        else:
+            x, new_c = rwkv6.apply(p, cfg, run, x, cache if cache else None,
+                                   use_pallas=run.use_pallas)
+        return x, (new_c if mode != "train" else None), aux
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+
+def _block_cache_shape(cfg, run, kind, batch, max_seq, dtype):
+    if kind == "attn":
+        return {"kv": attention.cache_shape(cfg, batch, max_seq,
+                                            window=kind_window(cfg, kind),
+                                            dtype=dtype)}
+    if kind == "rglru":
+        return {"rec": rglru.cache_shape(cfg, batch, dtype)}
+    if kind == "rwkv":
+        return rwkv6.cache_shape(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def _block_cache_specs(cfg, kind):
+    if kind == "attn":
+        return {"kv": attention.cache_specs(kind_window(cfg, kind))}
+    if kind == "rglru":
+        return {"rec": rglru.cache_specs()}
+    if kind == "rwkv":
+        return rwkv6.cache_specs()
+    raise ValueError(kind)
+
+
+def _stack_shape(tree, n):
+    return jax.tree_util.tree_map(
+        lambda sd: jax.ShapeDtypeStruct((n,) + sd.shape, sd.dtype), tree)
+
+
+def _prepend_spec(specs, name):
+    return jax.tree_util.tree_map(lambda t: (name,) + t, specs,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+
+
+def cache_shape(cfg, run, batch, max_seq, dtype=jnp.bfloat16):
+    """Abstract cache pytree: {"groups": (per-slot stacked,), "tail": (...,)}."""
+    pat, n_groups, tail = grouping(cfg)
+    groups = tuple(
+        _stack_shape(_block_cache_shape(cfg, run, kind, batch, max_seq, dtype),
+                     n_groups)
+        for kind in pat)
+    tail_caches = tuple(
+        _block_cache_shape(cfg, run, kind, batch, max_seq, dtype) for kind in tail)
+    return {"groups": groups, "tail": tail_caches}
+
+
+def cache_specs(cfg, run):
+    pat, n_groups, tail = grouping(cfg)
+    groups = tuple(
+        _prepend_spec(_block_cache_specs(cfg, kind), "layers") for kind in pat)
+    tail_specs = tuple(_block_cache_specs(cfg, kind) for kind in tail)
+    return {"groups": groups, "tail": tail_specs}
+
+
+def init_cache(cfg, run, batch, max_seq, dtype=jnp.bfloat16):
+    return jax.tree_util.tree_map(
+        lambda sd: jnp.zeros(sd.shape, sd.dtype),
+        cache_shape(cfg, run, batch, max_seq, dtype))
+
+
+# ---------------------------------------------------------------------------
+# stack init
+# ---------------------------------------------------------------------------
+
+
+def init_stack(cfg, run, key, dtype, abstract=False):
+    """Returns (params, specs) for all layers."""
+    pat, n_groups, tail = grouping(cfg)
+    params = {"groups": [], "tail": []}
+    specs = {"groups": [], "tail": []}
+    for kind in pat:
+        one_abs, one_specs = layer_specs(cfg, kind, dtype)
+        if abstract:
+            stacked = _stack_shape(one_abs, n_groups)
+        else:
+            key, sub = jax.random.split(key)
+            stacked = jax.vmap(layer_init_fn(cfg, run, kind, dtype))(
+                jax.random.split(sub, n_groups))
+        params["groups"].append(stacked)
+        specs["groups"].append(_prepend_spec(one_specs, "layers"))
+    for kind in tail:
+        one_abs, one_specs = layer_specs(cfg, kind, dtype)
+        if abstract:
+            params["tail"].append(one_abs)
+        else:
+            key, sub = jax.random.split(key)
+            params["tail"].append(layer_init_fn(cfg, run, kind, dtype)(sub))
+        specs["tail"].append(one_specs)
+    params["groups"] = tuple(params["groups"])
+    params["tail"] = tuple(params["tail"])
+    specs["groups"] = tuple(specs["groups"])
+    specs["tail"] = tuple(specs["tail"])
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# stack apply
+# ---------------------------------------------------------------------------
+
+
+def _group_step(cfg, run, pat, mode):
+    """One scan step: applies the whole pattern once."""
+
+    def step(x, slot_params, slot_caches, positions, pos):
+        if run.quantize_serving:
+            # int8 weight-only serving: weights stream from HBM as int8 and
+            # dequantize in-register, once per layer (see serve/engine.py)
+            slot_params = dequantize_params(
+                slot_params, jnp.dtype(run.activation_dtype))
+        x = shard_activation(x, "batch", "seq", "d_model")
+        new_caches = []
+        aux = jnp.zeros((), jnp.float32)
+        for j, kind in enumerate(pat):
+            cache_j = slot_caches[j] if slot_caches is not None else None
+            x, nc, a = block_forward(slot_params[j], cfg, run, kind, x,
+                                     positions, cache_j, mode, pos=pos)
+            new_caches.append(nc)
+            aux = aux + a
+        return x, tuple(new_caches), aux
+
+    return step
+
+
+def apply_stack(stack_params, cfg, run, x, positions, mode="train",
+                cache=None, pos=None):
+    """Run all layers. Returns (x, new_cache_or_None, total_aux)."""
+    pat, n_groups, tail = grouping(cfg)
+    step = _group_step(cfg, run, pat, mode)
+    with_cache = mode != "train"
+
+    def scan_body(carry, xs):
+        x = carry
+        slot_params = xs[0]
+        slot_caches = xs[1] if with_cache else None
+        x, new_caches, aux = step(x, slot_params, slot_caches, positions, pos)
+        ys = (new_caches, aux) if with_cache else aux
+        return x, ys
+
+    body = scan_body
+    if run.remat and mode == "train":
+        body = jax.checkpoint(scan_body)
+
+    if n_groups > 0:
+        xs = (stack_params["groups"],)
+        if with_cache:
+            xs = xs + (cache["groups"],)
+        x, ys = lax.scan(body, x, xs)
+        if with_cache:
+            group_caches, auxs = ys
+        else:
+            group_caches, auxs = None, ys
+        total_aux = jnp.sum(auxs)
+    else:
+        group_caches = cache["groups"] if with_cache else None
+        total_aux = jnp.zeros((), jnp.float32)
+
+    tail_caches = []
+    for i, kind in enumerate(tail):
+        cache_i = cache["tail"][i] if with_cache else None
+
+        def fwd(p_, x_, cache_i_, _kind=kind):
+            if run.quantize_serving:
+                p_ = dequantize_params(p_, jnp.dtype(run.activation_dtype))
+            return block_forward(p_, cfg, run, _kind, x_, positions,
+                                 cache_i_, mode, pos=pos)
+
+        if run.remat and mode == "train":
+            fwd = jax.checkpoint(fwd)
+        x, nc, a = fwd(stack_params["tail"][i], x, cache_i)
+        tail_caches.append(nc)
+        total_aux = total_aux + a
+
+    new_cache = ({"groups": group_caches, "tail": tuple(tail_caches)}
+                 if with_cache else None)
+    return x, new_cache, total_aux

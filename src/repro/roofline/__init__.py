@@ -1,0 +1,1 @@
+from repro.roofline.costs import step_costs, CostReport, model_flops

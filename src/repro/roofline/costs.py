@@ -1,0 +1,118 @@
+"""Analytic per-step cost model shared by (a) the MISO performance model
+(ground-truth job speeds for the cluster simulator + predictor training) and
+(b) the §Roofline MODEL_FLOPS reference term.
+
+All counts are *algorithmic* (useful work): MODEL_FLOPS = 6·N·D for training
+(2·N·D for prefill) plus the attention quadratic term; the HLO terms from
+``compiled.cost_analysis()`` are compared against these to expose
+remat/dispatch waste.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class CostReport:
+    flops: float           # algorithmic FLOPs per step
+    hbm_bytes: float       # estimated HBM traffic per step
+    mem_bytes: float       # resident footprint (params + opt/kv + activations)
+    param_bytes: float
+    tokens: int
+
+    @property
+    def intensity(self) -> float:
+        return self.flops / max(self.hbm_bytes, 1.0)
+
+
+def _attn_flops(cfg, seq: int, batch: int, kind: str) -> float:
+    """Quadratic (or windowed / recurrent) sequence-mixing FLOPs."""
+    D = cfg.resolved_head_dim
+    total = 0.0
+    for k in cfg.layer_kinds:
+        if k == "attn":
+            from repro.models.transformer import kind_window
+            w = kind_window(cfg, k)
+            if kind == "decode":
+                kv = min(seq, w) if w else seq
+                total += 4 * batch * cfg.n_heads * kv * D
+            else:
+                eff = min(seq, w) if w else seq
+                # causal: each query sees ~eff/2 keys on average (full) or ~w
+                avg_kv = (eff / 2) if w is None else min(w, seq / 2)
+                f = 4 * batch * cfg.n_heads * seq * avg_kv * D
+                total += f * (3 if kind == "train" else 1)
+        elif k == "rwkv":
+            H = cfg.d_model // cfg.rwkv_head_dim
+            N = cfg.rwkv_head_dim
+            steps = 1 if kind == "decode" else seq
+            f = 4 * batch * H * steps * N * N
+            total += f * (3 if kind == "train" else 1)
+        elif k == "rglru":
+            steps = 1 if kind == "decode" else seq
+            f = 8 * batch * steps * cfg.d_model
+            total += f * (3 if kind == "train" else 1)
+    return total
+
+
+def model_flops(cfg, seq: int, batch: int, kind: str, n_params: int | None = None) -> float:
+    """6·N_active·D (train) / 2·N_active·D (prefill/decode) + seq-mixing term."""
+    n = n_params if n_params is not None else cfg.active_param_count()
+    if kind == "train":
+        tokens = seq * batch
+        return 6.0 * n * tokens + _attn_flops(cfg, seq, batch, kind)
+    if kind == "prefill":
+        tokens = seq * batch
+        return 2.0 * n * tokens + _attn_flops(cfg, seq, batch, kind)
+    if kind == "decode":
+        return 2.0 * n * batch + _attn_flops(cfg, seq, batch, kind)
+    raise ValueError(kind)
+
+
+def kv_cache_bytes(cfg, seq: int, batch: int, dtype_bytes: int = 2) -> float:
+    total = 0.0
+    for k in cfg.layer_kinds:
+        if k == "attn":
+            from repro.models.transformer import kind_window
+            w = kind_window(cfg, k)
+            s = min(seq, w) if w else seq
+            total += 2 * batch * s * cfg.n_kv_heads * cfg.resolved_head_dim * dtype_bytes
+        elif k == "rwkv":
+            H = cfg.d_model // cfg.rwkv_head_dim
+            total += batch * H * cfg.rwkv_head_dim ** 2 * 4  # fp32 state
+            total += 2 * batch * cfg.d_model * dtype_bytes
+        elif k == "rglru":
+            total += batch * cfg.d_model * 4
+            total += batch * (cfg.rglru_conv_width - 1) * cfg.d_model * dtype_bytes
+    return total
+
+
+def step_costs(cfg, seq: int, batch: int, kind: str, *, dtype_bytes: int = 2,
+               opt_bytes_per_param: int = 8, remat: bool = True,
+               n_params: int | None = None,
+               n_active: int | None = None) -> CostReport:
+    n = n_params if n_params is not None else cfg.param_count()
+    na = n_active if n_active is not None else cfg.active_param_count()
+    flops = model_flops(cfg, seq, batch, kind, n_params=na)
+    tokens = seq * batch if kind != "decode" else batch
+    pbytes = n * dtype_bytes
+
+    act_unit = tokens * cfg.d_model * dtype_bytes
+    if kind == "train":
+        # weights fwd+bwd (+grad +opt traffic) + boundary activations per layer
+        hbm = 4.0 * pbytes + 1.5 * opt_bytes_per_param * n \
+            + cfg.n_layers * act_unit * (4.0 if remat else 8.0)
+        mem = pbytes + opt_bytes_per_param * n \
+            + cfg.n_layers * act_unit * (1.0 if remat else 6.0)
+    elif kind == "prefill":
+        hbm = pbytes + cfg.n_layers * act_unit * 3.0
+        mem = pbytes + kv_cache_bytes(cfg, seq, batch, dtype_bytes) \
+            + 4 * act_unit
+    else:  # decode: weight-read bound
+        kv = kv_cache_bytes(cfg, seq, batch, dtype_bytes)
+        # active weights are read once per token step; kv cache read once
+        hbm = na * dtype_bytes + kv + cfg.n_layers * act_unit * 3.0
+        mem = pbytes + kv + 4 * act_unit
+    return CostReport(flops=float(flops), hbm_bytes=float(hbm),
+                      mem_bytes=float(mem), param_bytes=float(pbytes),
+                      tokens=int(tokens))

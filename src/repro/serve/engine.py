@@ -1,0 +1,72 @@
+"""Serving: prefill + decode steps and a batched engine.
+
+``make_serve_step`` builds the one-token decode step that decode_32k /
+long_500k lower on the production mesh: inputs are (params, tokens (B,1),
+cache, pos).  ``ServeEngine`` drives real batched generation on small models
+(examples + tests): prefill the prompt batch, then greedy/temperature decode
+with the same step, optionally with int8 weight-only quantization
+(beyond-paper serving optimization; see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LM
+from repro.utils.quant import (abstract_quantize, dequantize_params,
+                               is_quantized_leaf, maybe_dequant,
+                               quantize_params)
+
+
+def make_serve_step(cfg, run):
+    def serve_step(params, tokens, cache, pos):
+        logits, cache = LM.decode_step(params, cfg, run, tokens, cache, pos)
+        return logits, cache
+    return serve_step
+
+
+def make_prefill_step(cfg, run, max_seq: int):
+    def prefill_step(params, tokens):
+        return LM.prefill(params, cfg, run, tokens, max_seq)
+    return prefill_step
+
+
+class ServeEngine:
+    """Batched generation for small models (CPU-runnable examples/tests)."""
+
+    def __init__(self, cfg, run, params, max_seq: int = 512):
+        self.cfg, self.run = cfg, run
+        self.max_seq = max_seq
+        if run.quantize_serving:
+            # keep the int8 tree: the model dequantizes lazily per layer
+            params = quantize_params(params)
+        self.params = params
+        self._prefill = jax.jit(make_prefill_step(cfg, run, max_seq))
+        self._step = jax.jit(make_serve_step(cfg, run))
+
+    def generate(self, prompts: jnp.ndarray, max_new_tokens: int = 32,
+                 temperature: float = 0.0, key=None):
+        """prompts: (B, S0) int32. Returns (B, S0 + max_new_tokens)."""
+        B, S0 = prompts.shape
+        logits, cache = self._prefill(self.params, prompts)
+        out = [prompts]
+        tok = self._sample(logits[:, -1], temperature, key, 0)
+        for i in range(max_new_tokens):
+            out.append(tok)
+            if i == max_new_tokens - 1:
+                break
+            logits, cache = self._step(self.params, tok, cache,
+                                       jnp.int32(S0 + i))
+            tok = self._sample(logits[:, -1], temperature, key, i + 1)
+        return jnp.concatenate(out, axis=1)
+
+    @staticmethod
+    def _sample(logits, temperature, key, i):
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        k = jax.random.fold_in(key, i)
+        return jax.random.categorical(
+            k, logits / temperature, axis=-1)[:, None].astype(jnp.int32)

@@ -1,0 +1,2 @@
+from repro.sharding.rules import (ShardingRules, make_rules, specs_to_shardings,
+                                  logical_to_pspec)

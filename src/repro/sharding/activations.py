@@ -1,0 +1,76 @@
+"""Activation sharding constraints.
+
+Model code is mesh-agnostic; these helpers read the mesh from the ambient
+``with mesh:`` context and emit ``with_sharding_constraint`` anchors at block
+boundaries.  Without them GSPMD is free to propagate *weight* layouts onto
+activations (e.g. d_model-sharded-over-"data" activations from FSDP weights),
+which manifests as involuntary full rematerialization and ~100x inflated
+per-device FLOPs.  With a single batch anchor per block, propagation settles
+into the intended DP x TP pattern.  No-ops when no mesh is active (CPU smoke
+tests) or when a dim does not divide.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# logical activation dims -> candidate mesh axes (in priority order)
+_ACT_RULES = {
+    "batch": (("pod", "data"), ("data",)),
+    "seq": (),
+    "d_model": (),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "d_ff": (("model",),),
+    "vocab": (("model",),),
+    "kv_seq": (("model",),),
+    "experts": (("model",),),
+    None: (),
+}
+
+
+def current_mesh():
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is None or m.empty:
+            return None
+        return m
+    except Exception:
+        return None
+
+
+def shard_activation(x, *logical):
+    """x with dims named by ``logical`` (None = unsharded). Returns x with a
+    with_sharding_constraint if a mesh is active."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = set()
+    spec = []
+    for name, dim in zip(logical, x.shape):
+        placed = None
+        for cand in _ACT_RULES.get(name, ()):
+            cand = tuple(a for a in cand if a in axes)
+            if not cand or any(a in used for a in cand):
+                continue
+            size = 1
+            for a in cand:
+                size *= axes[a]
+            if dim % size == 0 and dim > 0:
+                placed = cand
+                used.update(cand)
+                break
+        if placed is None:
+            spec.append(None)
+        elif len(placed) == 1:
+            spec.append(placed[0])
+        else:
+            spec.append(placed)
+    while spec and spec[-1] is None:
+        spec.pop()
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x

@@ -1,0 +1,114 @@
+"""Divisibility-aware logical-axis -> mesh-axis sharding rules.
+
+Every parameter / cache tensor carries a tuple of logical dim names (built by
+ParamBuilder).  A ``ShardingRules`` table maps each logical name to an ordered
+list of *candidate* mesh axes; at spec-build time a candidate is accepted only
+if (a) the dim size divides the remaining mesh-axis size and (b) the axis is
+not already used by another dim of the same tensor.  This is what lets one
+rule table serve all 10 architectures: smollm's 15 heads simply fail the
+divisibility check on a 16-way "model" axis and the d_ff/vocab shardings
+carry the TP load instead (DESIGN.md §Arch-applicability).
+
+Default placement (training):
+  batch        -> ("pod", "data")      pure DP across pods, DP within pod
+  vocab/heads/kv_heads/d_ff/d_ff_expert/experts/d_rnn -> "model"   (TP / EP)
+  d_model      -> "data"               FSDP: weights gathered per layer
+  kv_seq       -> "model"              SP for long decode caches
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils.tree import map_with_spec
+
+Candidate = Tuple[str, ...]  # mesh axes, possibly compound e.g. ("pod","data")
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    table: Dict[str, Tuple[Candidate, ...]]
+    mesh_axes: Dict[str, int]
+
+    def pspec(self, logical_axes: Sequence[str], dims: Sequence[int]) -> P:
+        return logical_to_pspec(logical_axes, dims, self)
+
+
+def make_rules(mesh: Mesh, *, fsdp: bool = True, seq_shard: bool = True,
+               expert_parallel: bool = True) -> ShardingRules:
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp: Candidate = tuple(a for a in ("pod", "data") if a in axes)
+    tp: Candidate = ("model",) if "model" in axes else ()
+    t: Dict[str, Tuple[Candidate, ...]] = {
+        # activations / caches
+        "batch": (dp,),
+        "seq": (),
+        "kv_seq": ((("model",),) if (seq_shard and tp) else ()),
+        # params
+        "vocab": (tp,) if tp else (),
+        "heads": (tp,) if tp else (),
+        "kv_heads": (tp,) if tp else (),
+        "d_ff": (tp,) if tp else (),
+        "d_ff_expert": (tp,) if tp else (),
+        "d_rnn": (tp,) if tp else (),
+        "d_rnn_out": (tp,) if tp else (),
+        "experts": ((tp,) if expert_parallel and tp else ()),
+        "d_model": ((("data",),) if fsdp and "data" in axes else ()),
+        "d_model_out": ((("data",),) if fsdp and "data" in axes else ()),
+        # never sharded
+        "layers": (), "head_dim": (), "one": (), "lora": (), "conv_w": (),
+        "rwkv_n": (), "rwkv_n2": (), "experts_r": (),
+        "kh": (), "kw": (), "cin": (), "cout": (),
+    }
+    return ShardingRules(table=t, mesh_axes=axes)
+
+
+def logical_to_pspec(logical_axes: Sequence[str], dims: Sequence[int],
+                     rules: ShardingRules) -> P:
+    used: set = set()
+    out = []
+    for name, dim in zip(logical_axes, dims):
+        placed: Optional[Candidate] = None
+        for cand in rules.table.get(name, ()):
+            axes = tuple(a for a in cand if a in rules.mesh_axes)
+            if not axes or any(a in used for a in axes):
+                continue
+            size = 1
+            for a in axes:
+                size *= rules.mesh_axes[a]
+            if dim % size == 0:
+                placed = axes
+                used.update(axes)
+                break
+        if placed is None:
+            out.append(None)
+        elif len(placed) == 1:
+            out.append(placed[0])
+        else:
+            out.append(placed)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def specs_to_shardings(tree, specs, mesh: Mesh, rules: Optional[ShardingRules]
+                       = None, overrides: Optional[Dict[str, Tuple]] = None):
+    """Map a (params/cache) tree + logical-spec tree to NamedShardings.
+
+    ``overrides``: logical-name -> candidate tuple replacing the rule table
+    entry (used by the perf hillclimb to flip sharding strategies).
+    """
+    rules = rules or make_rules(mesh)
+    if overrides:
+        table = dict(rules.table)
+        table.update(overrides)
+        rules = ShardingRules(table=table, mesh_axes=rules.mesh_axes)
+
+    def one(leaf, axes):
+        pspec = logical_to_pspec(axes, leaf.shape, rules)
+        return NamedSharding(mesh, pspec)
+
+    return map_with_spec(one, tree, specs)

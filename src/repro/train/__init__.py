@@ -1,0 +1,1 @@
+from repro.train.optim import adam_init, adam_update, adamw_init, adamw_update

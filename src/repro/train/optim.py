@@ -1,0 +1,93 @@
+"""Optimizers: Adam (predictor training) and AdamW (LM training).
+
+Pure-pytree implementations: state is {"m": tree, "v": tree, "step": scalar}
+with fp32 moments regardless of parameter dtype (mixed-precision training
+keeps bf16 params + fp32 Adam state; see train/train_step.py for the ZeRO
+sharding of this state over the "data" mesh axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _zeros_like_f32(tree):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+
+
+def adam_init(params):
+    return {"m": _zeros_like_f32(params), "v": _zeros_like_f32(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, *, lr, b1=0.9, b2=0.999, eps=1e-8):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    corr1 = 1.0 - b1 ** t
+    corr2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        update = (m_new / corr1) / (jnp.sqrt(v_new / corr2) + eps)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+adamw_init = adam_init
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.0, grad_clip=0.0):
+    if grad_clip and grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    corr1 = 1.0 - b1 ** t
+    corr2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        update = (m_new / corr1) / (jnp.sqrt(v_new / corr2) + eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = weight_decay if p.ndim >= 2 else 0.0
+        p32 = p.astype(jnp.float32)
+        return (p32 - lr * (update + wd * p32)).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm

@@ -1,0 +1,89 @@
+"""Training step: loss -> grads -> AdamW, with microbatch gradient
+accumulation, remat (inside the layer scan), and activation sharding
+constraints at the step boundary.
+
+The same ``train_step`` lowers on 1 CPU device (smoke tests / examples) and
+on the 512-device production mesh (dry-run): sharding is injected purely via
+``in_shardings``/``out_shardings`` on ``jax.jit``, never inside the step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.model import LM
+from repro.train.optim import adamw_init, adamw_update
+
+
+def make_train_step(cfg, run):
+    """Returns train_step(params, opt_state, tokens, labels) ->
+    (params, opt_state, metrics)."""
+
+    def loss_fn(params, tokens, labels):
+        loss, metrics = LM.loss(params, cfg, run, tokens, labels)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, tokens, labels):
+        B = tokens.shape[0]
+        n_micro = run.microbatches
+        if n_micro > 1 and B % n_micro == 0:
+            mb = B // n_micro
+            toks = tokens.reshape(n_micro, mb, *tokens.shape[1:])
+            labs = labels.reshape(n_micro, mb, *labels.shape[1:])
+
+            def micro(acc, xs):
+                tk, lb = xs
+                (loss, metrics), grads = grad_fn(params, tk, lb)
+                grads = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), acc[0], grads)
+                return (grads, acc[1] + loss), metrics
+
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = lax.scan(micro, (zero, jnp.zeros((), jnp.float32)),
+                                            (toks, labs))
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+            loss = loss_sum / n_micro
+            metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32),
+                       "tokens": jnp.float32(tokens.size)}
+        else:
+            (loss, metrics), grads = grad_fn(params, tokens, labels)
+
+        params, opt_state, gnorm = adamw_update(
+            params, grads, opt_state, lr=run.learning_rate,
+            weight_decay=run.weight_decay, grad_clip=run.grad_clip)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg, run, key=None, abstract: bool = False):
+    """Returns (params, opt_state, specs, opt_specs)."""
+    params, specs = LM.init(cfg, run, key, abstract=abstract)
+    if abstract:
+        opt_state = {
+            "m": jax.tree_util.tree_map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params),
+            "v": jax.tree_util.tree_map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    else:
+        opt_state = adamw_init(params)
+    opt_specs = {"m": specs, "v": specs, "step": ()}
+    return params, opt_state, specs, opt_specs
+
+
+def batch_pspec(mesh_axes) -> P:
+    dp = tuple(a for a in ("pod", "data") if a in mesh_axes)
+    return P(dp if len(dp) > 1 else (dp[0] if dp else None))

@@ -1,0 +1,1 @@
+from repro.utils.tree import ParamBuilder, tree_bytes, tree_count, map_with_spec

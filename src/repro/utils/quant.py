@@ -1,0 +1,76 @@
+"""int8 weight-only quantization (serving): q = round(w/s) with a
+per-out-channel scale.  Quantized leaves are {"__q": int8, "__s": f32}
+dicts; model code reads them transparently via maybe_dequant (weights stream
+from HBM as int8 and dequantize in-register, once per consumer)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _quantizable(leaf) -> bool:
+    return len(leaf.shape) >= 2 and int(np.prod(leaf.shape)) >= 4096
+
+
+def is_quantized_leaf(leaf):
+    return isinstance(leaf, dict) and "__q" in leaf
+
+
+def _reduce_axes(ndim):
+    """Scale granularity: per-out-channel (last dim), and per-layer for
+    stacked scan parameters (keep the leading dim when ndim >= 3)."""
+    start = 1 if ndim >= 3 else 0
+    return tuple(range(start, ndim - 1))
+
+
+def quantize_params(params):
+    """bf16/f32 matrices -> (int8, scale) pairs; small tensors left alone."""
+    def q(leaf):
+        if _quantizable(leaf):
+            amax = jnp.max(jnp.abs(leaf.astype(jnp.float32)),
+                           axis=_reduce_axes(leaf.ndim), keepdims=True)
+            scale = jnp.maximum(amax, 1e-8) / 127.0
+            qv = jnp.clip(jnp.round(leaf.astype(jnp.float32) / scale),
+                          -127, 127).astype(jnp.int8)
+            return {"__q": qv, "__s": scale.astype(jnp.float32)}
+        return leaf
+    return jax.tree_util.tree_map(q, params)
+
+
+def maybe_dequant(leaf, dtype):
+    """Transparent read of a possibly-quantized parameter leaf."""
+    if is_quantized_leaf(leaf):
+        return (leaf["__q"].astype(jnp.float32) * leaf["__s"]).astype(dtype)
+    return leaf
+
+
+def dequantize_params(qparams, dtype=jnp.bfloat16):
+    return jax.tree_util.tree_map(
+        lambda l: maybe_dequant(l, dtype), qparams,
+        is_leaf=is_quantized_leaf)
+
+
+def abstract_quantize(params, specs):
+    """ShapeDtypeStruct tree -> quantized SDS tree (+ matching spec tree)."""
+    from repro.utils.tree import map_with_spec
+
+    def q(leaf, axes):
+        # stacked (scan) 1-D-per-layer tensors (norm scales etc.) are tiny:
+        # quantizing them would give layer-less scales that break the scan
+        if _quantizable(leaf) and not (axes and axes[0] == "layers"
+                                       and len(leaf.shape) < 3):
+            keep_first = len(leaf.shape) >= 3
+            sshape = ((leaf.shape[0],) if keep_first else (1,)) \
+                + tuple(1 for _ in leaf.shape[1:-1]) + (leaf.shape[-1],)
+            return {"__q": jax.ShapeDtypeStruct(leaf.shape, jnp.int8),
+                    "__s": jax.ShapeDtypeStruct(sshape, jnp.float32)}
+        return leaf
+
+    def qspec(leaf, axes):
+        if _quantizable(leaf) and not (axes and axes[0] == "layers"
+                                       and len(leaf.shape) < 3):
+            return {"__q": tuple(axes), "__s": tuple(axes)}
+        return tuple(axes)
+
+    return map_with_spec(q, params, specs), map_with_spec(qspec, params, specs)

@@ -1,0 +1,107 @@
+"""Parameter-tree utilities.
+
+The model substrate uses plain nested dicts of jnp arrays as parameter trees.
+Each parameter carries a parallel *logical axis spec*: a tuple of logical dim
+names (e.g. ``("layers", "d_model", "d_ff")``).  ``sharding/rules.py`` maps
+logical names to mesh axes; keeping specs out of the arrays keeps everything a
+vanilla pytree (checkpointable, donate-able, scannable).
+
+``ParamBuilder`` builds the two trees (params + specs) in lock-step so they can
+never drift.  Builders compose: ``pb.child("attn")`` namespaces a sub-module.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _normal_init(scale: float) -> Callable:
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+    return init
+
+
+def fan_in_init(fan_in: int) -> Callable:
+    return _normal_init(1.0 / math.sqrt(max(fan_in, 1)))
+
+
+class ParamBuilder:
+    """Accumulates (params, specs) trees with a split PRNG key per leaf.
+
+    In ``abstract`` mode no arrays are materialized — leaves are
+    ``jax.ShapeDtypeStruct``.  This is what the 512-device dry-run uses: we can
+    build the full 104B-parameter tree without allocating a byte.
+    """
+
+    def __init__(self, key, dtype=jnp.float32, abstract: bool = False):
+        self._key = key
+        self.dtype = dtype
+        self.abstract = abstract
+        self.params: dict = {}
+        self.specs: dict = {}
+
+    def _next_key(self):
+        if self.abstract:
+            return None
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(self, name: str, shape, axes, init: Callable | None = None,
+              dtype=None, scale: float | None = None):
+        """Create one parameter; ``axes`` is a tuple of logical dim names."""
+        shape = tuple(int(s) for s in shape)
+        assert len(shape) == len(axes), (name, shape, axes)
+        assert name not in self.params, f"duplicate param {name}"
+        dtype = dtype or self.dtype
+        if self.abstract:
+            leaf = jax.ShapeDtypeStruct(shape, dtype)
+        else:
+            if init is None:
+                init = _normal_init(scale if scale is not None else 0.02)
+            leaf = init(self._next_key(), shape, dtype)
+        self.params[name] = leaf
+        self.specs[name] = tuple(axes)
+        return leaf
+
+    def child(self, name: str) -> "ParamBuilder":
+        sub = ParamBuilder(None, dtype=self.dtype, abstract=self.abstract)
+        sub._next_key = self._next_key  # share the parent's key stream
+        assert name not in self.params, f"duplicate child {name}"
+        self.params[name] = sub.params
+        self.specs[name] = sub.specs
+        return sub
+
+    def build(self):
+        return self.params, self.specs
+
+
+def tree_count(tree) -> int:
+    """Total number of scalar parameters (works on abstract trees too)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(np.prod(l.shape)) for l in leaves)
+
+
+def tree_bytes(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize for l in leaves)
+
+
+def map_with_spec(fn, params, specs):
+    """tree_map over (param_leaf, spec_tuple) pairs.
+
+    ``specs`` has tuples where ``params`` has array leaves; treat tuples as
+    leaves of the spec tree.
+    """
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_s = treedef.flatten_up_to(specs)
+    return treedef.unflatten([fn(p, s) for p, s in zip(flat_p, flat_s)])
+
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if hasattr(x, "astype") else x, tree)

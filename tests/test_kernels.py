@@ -1,0 +1,112 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rglru.ops import linear_scan
+from repro.kernels.rglru.ref import linear_scan_ref
+from repro.kernels.rwkv6.ops import wkv6
+from repro.kernels.rwkv6.ref import wkv6_ref
+
+
+# ---------------------------------------------------------------- flash
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,win,bq,bkv,dtype", [
+    (2, 64, 4, 2, 16, None, 16, 16, "float32"),
+    (1, 100, 6, 2, 32, None, 32, 16, "float32"),
+    (2, 128, 4, 1, 16, 32, 32, 32, "float32"),
+    (1, 64, 4, 4, 16, None, 16, 16, "bfloat16"),
+    (1, 48, 8, 2, 8, 16, 16, 8, "bfloat16"),
+])
+def test_flash_kernel(B, S, Hq, Hkv, D, win, bq, bkv, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), dtype=dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype=dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype=dtype)
+    o1 = flash_attention(q, k, v, causal=True, window=win, block_q=bq,
+                         block_kv=bkv, interpret=True)
+    o2 = attention_ref(q, k, v, causal=True, window=win)
+    tol = 5e-6 if dtype == "float32" else 2e-2
+    assert float(jnp.max(jnp.abs(o1.astype(jnp.float32)
+                                 - o2.astype(jnp.float32)))) < tol
+
+
+# ---------------------------------------------------------------- wkv6
+
+@pytest.mark.parametrize("B,H,S,N,chunk,nonzero_s0", [
+    (2, 3, 37, 16, 16, False),
+    (1, 2, 64, 32, 32, True),
+    (2, 2, 100, 8, 64, True),
+    (1, 1, 16, 64, 64, True),
+])
+def test_wkv6_kernel(B, H, S, N, chunk, nonzero_s0):
+    ks = jax.random.split(jax.random.PRNGKey(2), 6)
+    r = jax.random.normal(ks[0], (B, H, S, N)) * 0.5
+    k = jax.random.normal(ks[1], (B, H, S, N)) * 0.5
+    v = jax.random.normal(ks[2], (B, H, S, N))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, H, S, N)) * 0.5)
+    u = jax.random.normal(ks[4], (H, N)) * 0.3
+    s0 = (jax.random.normal(ks[5], (B, H, N, N)) * 0.2 if nonzero_s0
+          else jnp.zeros((B, H, N, N)))
+    y1, st1 = wkv6(r, k, v, logw, u, s0, chunk=chunk, interpret=True)
+    y2, st2 = wkv6_ref(r, k, v, logw, u, s0)
+    assert float(jnp.max(jnp.abs(y1 - y2))) < 5e-5
+    assert float(jnp.max(jnp.abs(st1 - st2))) < 5e-5
+
+
+@settings(max_examples=8, deadline=None)
+@given(S=st.integers(5, 80), chunk=st.sampled_from([8, 16, 64]),
+       N=st.sampled_from([8, 16]))
+def test_wkv6_hypothesis(S, chunk, N):
+    ks = jax.random.split(jax.random.PRNGKey(S * 31 + N), 6)
+    B, H = 1, 2
+    r = jax.random.normal(ks[0], (B, H, S, N)) * 0.5
+    k = jax.random.normal(ks[1], (B, H, S, N)) * 0.5
+    v = jax.random.normal(ks[2], (B, H, S, N))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, H, S, N)) * 0.5)
+    u = jax.random.normal(ks[4], (H, N)) * 0.3
+    s0 = jax.random.normal(ks[5], (B, H, N, N)) * 0.2
+    y1, st1 = wkv6(r, k, v, logw, u, s0, chunk=chunk, interpret=True)
+    y2, st2 = wkv6_ref(r, k, v, logw, u, s0)
+    assert float(jnp.max(jnp.abs(y1 - y2))) < 5e-5
+    assert float(jnp.max(jnp.abs(st1 - st2))) < 5e-5
+
+
+# ---------------------------------------------------------------- rglru
+
+@pytest.mark.parametrize("B,S,D,bs,bd", [
+    (2, 37, 16, 8, 8),
+    (1, 64, 40, 16, 16),
+    (2, 100, 24, 128, 128),
+    (1, 17, 8, 4, 8),
+])
+def test_rglru_kernel(B, S, D, bs, bd):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, D)))
+    b = jax.random.normal(ks[1], (B, S, D))
+    h0 = jax.random.normal(ks[2], (B, D))
+    y1, h1 = linear_scan(a, b, h0, block_s=bs, block_d=bd, interpret=True)
+    y2, h2 = linear_scan_ref(a, b, h0)
+    assert float(jnp.max(jnp.abs(y1 - y2))) < 1e-5
+    assert float(jnp.max(jnp.abs(h1 - h2))) < 1e-5
+
+
+# ------------------------------------------------- model-path equivalence
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "mixtral-8x22b", "rwkv6-3b",
+                                  "recurrentgemma-2b"])
+def test_model_pallas_path_matches_pure(arch, run32, key):
+    import dataclasses
+    from repro import configs
+    from repro.models import LM
+    cfg = configs.get_smoke_config(arch)
+    run_pl = dataclasses.replace(run32, use_pallas=True)
+    params, _ = LM.init(cfg, run32, key)
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (2, 24), 0,
+                                cfg.vocab_size)
+    l_ref = LM.logits(params, cfg, run32, tokens)
+    l_pl = LM.logits(params, cfg, run_pl, tokens)
+    assert float(jnp.max(jnp.abs(l_ref - l_pl))) < 5e-4

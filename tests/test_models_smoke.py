@@ -1,0 +1,92 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step on CPU, asserting output shapes and finiteness (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import LM
+from repro.train.optim import adamw_init
+from repro.train.train_step import make_train_step
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_forward_and_loss(arch, run32, key):
+    cfg = configs.get_smoke_config(arch)
+    params, specs = LM.init(cfg, run32, key)
+    # specs mirror params
+    assert jax.tree_util.tree_structure(
+        jax.tree_util.tree_map(lambda *_: 0, params)) is not None
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                                cfg.vocab_size)
+    labels = jnp.roll(tokens, -1, axis=1)
+    logits = LM.logits(params, cfg, run32, tokens)
+    assert logits.shape == (2, 24, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss, metrics = LM.loss(params, cfg, run32, tokens, labels)
+    assert bool(jnp.isfinite(loss))
+    # at init, loss should be near ln(vocab)
+    import math
+    assert abs(float(metrics["ce"]) - math.log(cfg.vocab_size)) < 1.5
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_one_train_step(arch, run32, key):
+    cfg = configs.get_smoke_config(arch)
+    params, _ = LM.init(cfg, run32, key)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, run32))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                cfg.vocab_size)
+    labels = jnp.roll(tokens, -1, axis=1)
+    new_params, new_opt, metrics = step(params, opt, tokens, labels)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # parameters actually moved
+    diffs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, new_params)
+    assert max(jax.tree_util.tree_leaves(diffs)) > 0.0
+    assert int(new_opt["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_full_config_exact_numbers(arch):
+    """The full configs carry the exact published hyperparameters."""
+    cfg = configs.get_config(arch)
+    published = {
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+        "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "chameleon-34b": (48, 8192, 64, 8, 22016, 65536),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == published
+
+
+def test_param_counts_plausible():
+    """Sanity: abstract tree param counts are in the advertised ballpark."""
+    from repro.configs.base import RunConfig
+    run = RunConfig()
+    expected_b = {"command-r-plus-104b": (95, 115), "qwen3-32b": (30, 36),
+                  "chameleon-34b": (30, 38), "granite-8b": (7.5, 9),
+                  "mixtral-8x22b": (130, 150), "smollm-360m": (0.3, 0.45),
+                  "rwkv6-3b": (2.6, 3.6), "recurrentgemma-2b": (2.4, 3.4),
+                  "qwen2-moe-a2.7b": (13, 16),
+                  "musicgen-large": (2.2, 3.4)}
+    for arch, (lo, hi) in expected_b.items():
+        n = LM.param_count(configs.get_config(arch), run) / 1e9
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_active_params():
+    cfg = configs.get_config("mixtral-8x22b")
+    assert cfg.active_param_count() < 0.35 * cfg.param_count()

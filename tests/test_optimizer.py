@@ -1,0 +1,77 @@
+"""MISO partition optimizer (Algorithm 1): the DP assignment must equal the
+literal brute-force enumeration; OOM/QoS zeros must steer the choice."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.optimizer import (optimize_partition,
+                                  optimize_partition_bruteforce)
+from repro.core.partitions import a100_mig_space
+
+SPACE = a100_mig_space()
+
+
+def _random_speeds(rng, m):
+    out = []
+    for _ in range(m):
+        base = rng.uniform(0.2, 1.0)
+        sv = {7: 1.0}
+        for s, frac in ((4, 4 / 7), (3, 3 / 7), (2, 2 / 7), (1, 1 / 7)):
+            sv[s] = min(1.0, base * frac / base * rng.uniform(0.6, 1.4))
+        if rng.random() < 0.3:
+            sv[1] = 0.0       # OOM on 1g
+        if rng.random() < 0.15:
+            sv[2] = 0.0
+        out.append(sv)
+    return out
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=st.integers(1, 6), seed=st.integers(0, 10_000))
+def test_dp_equals_bruteforce(m, seed):
+    rng = random.Random(seed)
+    speeds = _random_speeds(rng, m)
+    a = optimize_partition(SPACE, speeds)
+    b = optimize_partition_bruteforce(SPACE, speeds)
+    assert a is not None and b is not None
+    assert abs(a.objective - b.objective) < 1e-9
+    assert SPACE.is_valid(a.partition)
+
+
+def test_single_job_gets_full_gpu():
+    choice = optimize_partition(SPACE, [{7: 1.0, 4: 0.6, 3: 0.5, 2: 0.3,
+                                         1: 0.2}])
+    assert choice.partition == (7,)
+
+
+def test_oom_jobs_avoid_small_slices():
+    # job 0 OOMs below 3g; job 1 and 2 are tiny
+    speeds = [
+        {7: 1.0, 4: 0.99, 3: 0.98, 2: 0.0, 1: 0.0},
+        {7: 1.0, 4: 1.0, 3: 1.0, 2: 1.0, 1: 0.95},
+        {7: 1.0, 4: 1.0, 3: 1.0, 2: 1.0, 1: 0.95},
+    ]
+    choice = optimize_partition(SPACE, speeds, require_feasible=True)
+    assert choice.feasible
+    assert choice.partition[0] >= 3
+
+
+def test_objective_is_predicted_stp():
+    speeds = [{7: 1.0, 4: 0.9, 3: 0.8, 2: 0.5, 1: 0.25},
+              {7: 1.0, 4: 1.0, 3: 1.0, 2: 0.9, 1: 0.6}]
+    choice = optimize_partition(SPACE, speeds)
+    manual = sum(speeds[i][choice.partition[i]] for i in range(2))
+    assert abs(choice.objective - manual) < 1e-12
+
+
+def test_optimizer_latency_smallish():
+    """Paper: <= 0.5 ms/GPU at max co-location; allow slack on this CPU."""
+    import time
+    rng = random.Random(0)
+    speeds = _random_speeds(rng, 7)
+    t0 = time.time()
+    for _ in range(20):
+        optimize_partition(SPACE, speeds)
+    dt = (time.time() - t0) / 20
+    assert dt < 0.05, f"optimizer took {dt*1e3:.1f} ms"

@@ -1,0 +1,73 @@
+"""Partition-space invariants (paper Table 1 / appendix semantics)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partitions import a100_mig_space, tpu_pod_space
+
+SPACE = a100_mig_space()
+TPU = tpu_pod_space()
+
+
+def test_table1_profiles():
+    assert SPACE.slices[7].memory_gb == 40.0
+    assert SPACE.slices[4].memory_gb == 20.0
+    assert SPACE.slices[3].memory_gb == 20.0     # the 3g/4-memory-slot quirk
+    assert SPACE.slices[2].memory_gb == 10.0
+    assert SPACE.slices[1].memory_gb == 5.0
+    assert SPACE.slices[3].mem_slots == 4
+    assert SPACE.max_jobs == 7
+
+
+def test_paper_exclusion_4g_3g():
+    assert not SPACE.is_valid((4, 3))
+    assert SPACE.is_valid((4, 2, 1))
+    assert SPACE.is_valid((3, 3))
+    assert SPACE.is_valid((2, 2, 3))
+    assert SPACE.is_valid((7,))
+
+
+def test_full_gpu_configs_present():
+    """All of the paper's named configurations must be enumerated."""
+    for p in [(7,), (4, 2, 1), (3, 3), (3, 2, 2), (4, 1, 1, 1),
+              (1, 1, 1, 1, 1, 1, 1)]:
+        assert SPACE.is_valid(p), p
+
+
+def test_maximal_partitions_cannot_extend():
+    for p in SPACE.maximal_partitions:
+        compute = sum(SPACE.slices[s].compute_slots for s in p)
+        mem = sum(SPACE.slices[s].mem_slots for s in p)
+        for size, sl in SPACE.slices.items():
+            extended = tuple(sorted(list(p) + [size], reverse=True))
+            if (compute + sl.compute_slots <= 7 and mem + sl.mem_slots <= 8
+                    and list(p).count(size) < sl.max_count
+                    and not (4 in extended and 3 in extended)):
+                pytest.fail(f"{p} can be extended by {size}g")
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from([1, 2, 3, 4, 7]), min_size=1, max_size=8))
+def test_validity_is_arithmetic(sizes):
+    """is_valid <=> compute/mem/caps/exclusion constraints hold."""
+    p = tuple(sorted(sizes, reverse=True))
+    compute = sum(SPACE.slices[s].compute_slots for s in p)
+    mem = sum(SPACE.slices[s].mem_slots for s in p)
+    caps_ok = all(p.count(s) <= SPACE.slices[s].max_count for s in set(p))
+    excl_ok = not (4 in p and 3 in p)
+    expected = compute <= 7 and mem <= 8 and caps_ok and excl_ok
+    assert SPACE.is_valid(p) == expected
+
+
+def test_partitions_of_len_cover_scheduling():
+    """Eq.4: for every m <= 7 there must be at least one valid partition."""
+    for m in range(1, 8):
+        assert len(SPACE.partitions_of_len(m)) >= 1
+
+
+def test_tpu_space_shapes():
+    assert TPU.max_jobs == 8
+    assert TPU.is_valid((4, 4))
+    assert TPU.is_valid((4, 3, 1))       # no MIG exclusion on TPU
+    full = TPU.slices[TPU.full_size]
+    assert full.chips == 256 and full.mesh_shape == (16, 16)
+    assert TPU.slices[1].chips == 32 and TPU.slices[1].mesh_shape == (2, 16)

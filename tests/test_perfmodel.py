@@ -1,0 +1,72 @@
+"""Ground-truth performance model invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.jobs import WORKLOADS
+from repro.core.perfmodel import MPS_LEVELS, A100, PerfModel
+from repro.core.partitions import a100_mig_space
+
+SPACE = a100_mig_space()
+PM = PerfModel(SPACE)
+
+
+@pytest.mark.parametrize("prof", WORKLOADS, ids=lambda p: p.name)
+def test_slice_speed_monotone(prof):
+    """More compute+memory never hurts (full >= 4g >= 3g >= 2g >= 1g),
+    modulo OOM zeros."""
+    sv = PM.speed_vector(prof)
+    assert sv[7] == pytest.approx(1.0)
+    order = [sv[7], sv[4], sv[3], sv[2], sv[1]]
+    nonzero = [v for v in order if v > 0]
+    assert all(a >= b - 1e-9 for a, b in zip(nonzero, nonzero[1:]))
+    assert all(0.0 <= v <= 1.0 + 1e-9 for v in order)
+
+
+@pytest.mark.parametrize("prof", WORKLOADS[::4], ids=lambda p: p.name)
+def test_oom_matches_slice_memory(prof):
+    sv = PM.speed_vector(prof)
+    for s in SPACE.sizes:
+        if prof.mem_gb > SPACE.slice_mem_gb(s):
+            assert sv[s] == 0.0
+        else:
+            assert sv[s] > 0.0
+
+
+def test_mps_speeds_bounded():
+    profs = [WORKLOADS[0], WORKLOADS[10], WORKLOADS[20]]
+    for lv in MPS_LEVELS:
+        speeds = PM.mps_speeds(profs, lv)
+        assert all(0.0 < s <= 1.0 + 1e-6 for s in speeds)
+
+
+def test_mps_solo_at_full_level_near_one():
+    """A job alone in MPS at 100% should run at ~solo speed (small mux tax)."""
+    for prof in WORKLOADS[::6]:
+        s = PM.mps_speeds([prof], 1.0)[0]
+        assert s > 0.9
+
+
+def test_colocation_stp_exceeds_one_for_small_jobs():
+    """Takeaway 1/2: co-locating low-occupancy jobs yields STP > 1 on MIG."""
+    small = sorted(WORKLOADS, key=lambda p: p.sm_util)[:3]
+    from repro.core.optimizer import optimize_partition
+    est = [{s: PM.slice_speed(p, s) for s in SPACE.sizes} for p in small]
+    choice = optimize_partition(SPACE, est)
+    assert choice.objective > 1.2
+
+
+def test_mig_beats_mps_usually():
+    """Paper: 'MIG is expected to outperform MPS in most cases'."""
+    import itertools as it
+    import random
+    rng = random.Random(0)
+    from repro.core.optimizer import optimize_partition
+    wins = trials = 0
+    for _ in range(30):
+        profs = rng.sample(list(WORKLOADS), 3)
+        est = [{s: PM.slice_speed(p, s) for s in SPACE.sizes} for p in profs]
+        mig = optimize_partition(SPACE, est).objective
+        mps = max(sum(PM.mps_speeds(profs, lv)) for lv in MPS_LEVELS)
+        wins += mig >= mps
+        trials += 1
+    assert wins / trials > 0.5

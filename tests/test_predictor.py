@@ -1,0 +1,86 @@
+"""U-Net predictor: shapes, learnability, permutation augmentation, and the
+trained-artifact accuracy band (paper: val MAE ~= 0.017)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.partitions import a100_mig_space
+from repro.core.perfmodel import PerfModel
+from repro.core.predictor import dataset as ds
+from repro.core.predictor import linreg, unet
+from repro.core.predictor.train import fit_heads, train_predictor
+
+PM = PerfModel(a100_mig_space())
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "predictor.npz")
+
+
+def test_unet_shapes():
+    net = unet.UNet.create(jax.random.PRNGKey(0))
+    x = jnp.ones((5, 3, 7))
+    y = net(x)
+    assert y.shape == (5, 3, 7)
+    assert bool(jnp.all((y > 0) & (y <= 1)))
+    single = net(jnp.ones((3, 7)))
+    assert single.shape == (3, 7)
+
+
+def test_dataset_shapes_and_normalization():
+    data = ds.generate_dataset(PM, mixes_per_count=3, seed=0)
+    x = data["train_x"]
+    y = data["train_y"]
+    assert x.shape[1:] == (3, 7) and y.shape[1:] == (3, 7)
+    # per-column max normalization -> column max == 1
+    assert np.allclose(x.max(axis=1), 1.0, atol=1e-5)
+    assert np.allclose(y.max(axis=1), 1.0, atol=1e-5)
+    # paper counts: mixes * 5 permutation variants
+    total = len(data["train_x"]) + len(data["val_x"])
+    assert total == 3 * 7 * 5
+
+
+def test_permutation_augmentation_consistency():
+    """Permuting job columns permutes predictions accordingly (approximately
+    — conv padding breaks exact equivariance, the augmentation teaches it)."""
+    profs = [PM and w for w in []]  # noqa
+    from repro.core.jobs import WORKLOADS
+    mps, mig, lin, m = ds.mix_to_matrices(PM, list(WORKLOADS[:4]))
+    perm = np.array([3, 1, 0, 2, 4, 5, 6])
+    mps_p, mig_p, lin_p, _ = ds.mix_to_matrices(PM, [WORKLOADS[i] for i in
+                                                     [3, 1, 0, 2]])
+    assert np.allclose(mps[:, perm][:, :4], mps_p[:, :4], atol=1e-5)
+    assert np.allclose(mig[:, perm][:, :4], mig_p[:, :4], atol=1e-5)
+
+
+def test_training_beats_mean_predictor():
+    data = ds.generate_dataset(PM, mixes_per_count=25, seed=1)
+    baseline = float(np.abs(data["val_y"] - data["train_y"].mean(0,
+                     keepdims=True)).mean())
+    params, hist = train_predictor(data, epochs=30, lr=8e-4, verbose=False)
+    assert hist["val_mae"][-1] < 0.9 * baseline
+
+
+def test_linreg_heads_fit():
+    data = ds.generate_dataset(PM, mixes_per_count=40, seed=2)
+    heads = fit_heads(data)
+    assert heads["r2"].min() > 0.5
+    pred = linreg.apply_linreg(heads, data["val_y"].transpose(0, 2, 1)
+                               .reshape(-1, 3))
+    assert pred.shape[-1] == 2
+    assert pred.min() >= 0.0 and pred.max() <= 1.0
+
+
+@pytest.mark.skipif(not os.path.exists(ARTIFACT),
+                    reason="trained artifact not present")
+def test_trained_artifact_accuracy():
+    """The shipped predictor must be within 2x of the paper's 1.7% MAE."""
+    from repro.core.predictor.train import load_artifact
+    params, heads, hist = load_artifact(ARTIFACT)
+    assert hist["val_mae"][-1] < 0.035
+    net = unet.UNet(params)
+    data = ds.generate_dataset(PM, mixes_per_count=10, seed=123)  # fresh mixes
+    pred = np.asarray(net(jnp.asarray(data["val_x"])))
+    mae = float(np.abs(pred - data["val_y"]).mean())
+    assert mae < 0.05

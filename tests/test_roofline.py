@@ -1,0 +1,131 @@
+"""Roofline machinery: loop-aware HLO walk (flops under scan), analytic cost
+model invariants, and dry-run artifact well-formedness."""
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import lax
+
+from repro import configs
+from repro.roofline.costs import model_flops, step_costs
+from repro.roofline.hlo_analysis import analyze_hlo
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def test_scan_trip_count_multiplied():
+    def scanned(x):
+        def body(c, _):
+            return c @ c, None
+        y, _ = lax.scan(body, x, None, length=10)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    txt = jax.jit(scanned).lower(x).compile().as_text()
+    r = analyze_hlo(txt)
+    expect = 10 * 2 * 64 ** 3
+    assert abs(r["flops"] - expect) / expect < 0.01
+
+
+def test_single_dot_flops():
+    def mm(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    txt = jax.jit(mm).lower(a, b).compile().as_text()
+    r = analyze_hlo(txt)
+    assert abs(r["flops"] - 2 * 128 * 256 * 64) / (2 * 128 * 256 * 64) < 0.01
+
+
+def test_nested_scan_multiplies():
+    def nested(x):
+        def outer(c, _):
+            def inner(d, _):
+                return d @ d, None
+            d, _ = lax.scan(inner, c, None, length=3)
+            return d, None
+        y, _ = lax.scan(outer, x, None, length=5)
+        return y
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    txt = jax.jit(nested).lower(x).compile().as_text()
+    r = analyze_hlo(txt)
+    expect = 15 * 2 * 32 ** 3
+    assert abs(r["flops"] - expect) / expect < 0.01
+
+
+# ------------------------------------------------------------ cost model
+
+def test_model_flops_scaling():
+    cfg = configs.get_config("granite-8b")
+    f1 = model_flops(cfg, 4096, 256, "train")
+    f2 = model_flops(cfg, 4096, 512, "train")
+    assert abs(f2 / f1 - 2.0) < 0.05
+    # train ~= 3x prefill at same tokens
+    ftrain = model_flops(cfg, 4096, 256, "train")
+    fpre = model_flops(cfg, 4096, 256, "prefill")
+    assert 2.5 < ftrain / fpre < 3.5
+
+
+def test_decode_costs_weight_bound():
+    cfg = configs.get_config("command-r-plus-104b")
+    c = step_costs(cfg, 32768, 128, "decode")
+    assert c.hbm_bytes > cfg.param_count() * 2 * 0.9  # reads all weights
+    assert c.flops < model_flops(cfg, 4096, 256, "train") / 100
+
+
+def test_window_reduces_attention_flops():
+    full = configs.get_config("mixtral-8x22b").replace(sliding_window=None)
+    swa = configs.get_config("mixtral-8x22b")
+    f_full = model_flops(full, 32768, 32, "prefill")
+    f_swa = model_flops(swa, 32768, 32, "prefill")
+    assert f_swa < f_full
+
+
+# --------------------------------------------------- dry-run artifacts
+
+@pytest.mark.skipif(not glob.glob(os.path.join(ART, "*.json")),
+                    reason="dry-run artifacts not generated")
+def test_dryrun_artifacts_wellformed():
+    recs = [json.load(open(p)) for p in glob.glob(os.path.join(ART, "*.json"))]
+    ran = [r for r in recs if not r.get("skipped")]
+    skipped = [r for r in recs if r.get("skipped")]
+    assert len(ran) + len(skipped) == len(recs)
+    for r in ran:
+        assert r["roofline"]["dominant"] in ("compute", "memory", "collective")
+        assert r["flops_per_device"] > 0
+        assert r["compile_s"] > 0
+    # every skip is a long_500k on a full-attention arch
+    for r in skipped:
+        assert r["shape"] == "long_500k"
+
+
+@pytest.mark.skipif(not glob.glob(os.path.join(ART, "*__multipod.json")),
+                    reason="multi-pod artifacts not generated")
+def test_multipod_cells_present():
+    pods = glob.glob(os.path.join(ART, "*__pod.json"))
+    multis = glob.glob(os.path.join(ART, "*__multipod.json"))
+    assert len(multis) == len(pods)
+    for p in multis:
+        r = json.load(open(p))
+        if not r.get("skipped"):
+            assert r["chips"] == 512
+            assert r["mesh_axes"] == ["pod", "data", "model"]
+
+
+@pytest.mark.slow
+def test_dryrun_cell_fresh_compile():
+    """Actually lower+compile one cell in a subprocess (512 fake devices)."""
+    import subprocess, sys
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "smollm-360m",
+         "--shape", "decode_32k"],
+        capture_output=True, text=True, timeout=900,
+        env={**env, "PYTHONPATH": "src"},
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert "FAIL" not in out.stdout, out.stdout + out.stderr
+    assert "decode_32k" in out.stdout

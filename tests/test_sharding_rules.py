@@ -1,0 +1,65 @@
+"""Divisibility-aware sharding rules: the same table serves every arch."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import logical_to_pspec, make_rules
+
+
+@pytest.fixture(scope="module")
+def rules16():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # fake 16x16 table without needing 256 devices
+    from repro.sharding.rules import ShardingRules
+    base = make_rules(mesh)
+    return ShardingRules(table=base.table,
+                         mesh_axes={"data": 16, "model": 16})
+
+
+def test_head_tp_when_divisible(rules16):
+    spec = logical_to_pspec(("d_model", "heads", "head_dim"),
+                            (4096, 32, 128), rules16)
+    assert spec == P("data", "model")
+
+
+def test_head_tp_fallback_smollm(rules16):
+    """15 heads don't divide 16 -> heads unsharded, d_model takes FSDP."""
+    spec = logical_to_pspec(("d_model", "heads", "head_dim"),
+                            (960, 15, 64), rules16)
+    assert spec == P("data")
+
+
+def test_vocab_sharding(rules16):
+    spec = logical_to_pspec(("vocab", "d_model"), (151936, 5120), rules16)
+    assert spec == P("model", "data")
+
+
+def test_batch_over_pod_and_data():
+    from repro.sharding.rules import ShardingRules
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    base = make_rules(mesh)
+    rules = ShardingRules(table=base.table,
+                          mesh_axes={"pod": 2, "data": 16, "model": 16})
+    spec = logical_to_pspec(("batch", "seq"), (256, 4096), rules)
+    assert spec == P(("pod", "data"))
+    # batch=1 (long_500k): no divisor -> replicated
+    spec = logical_to_pspec(("batch", "seq"), (1, 524288), rules)
+    assert spec == P()
+
+
+def test_no_axis_reuse(rules16):
+    """One tensor can't use 'model' twice (heads + d_ff)."""
+    spec = logical_to_pspec(("heads", "d_ff"), (32, 4096), rules16)
+    assert spec == P("model")       # d_ff candidate blocked by used axis
+
+
+def test_experts_ep_when_divisible(rules16):
+    spec = logical_to_pspec(("experts", "d_model", "d_ff_expert"),
+                            (16, 2048, 1408), rules16)
+    assert spec == P("model", "data", None) or spec == P("model", "data")
+    # 60 experts don't divide 16 -> d_ff_expert takes TP
+    spec = logical_to_pspec(("experts", "d_model", "d_ff_expert"),
+                            (60, 2048, 1408), rules16)
+    assert spec == P(None, "data", "model")

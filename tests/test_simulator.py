@@ -1,0 +1,122 @@
+"""Cluster simulator: policy ordering, accounting invariants, constraints,
+fault injection, and the MISO feature set of paper §4.3."""
+import numpy as np
+import pytest
+
+from repro.core.estimators import NoisyEstimator, OracleEstimator
+from repro.core.jobs import WORKLOADS, Job
+from repro.core.partitions import a100_mig_space
+from repro.core.perfmodel import PerfModel
+from repro.core.simulator import SimConfig, simulate
+from repro.core.traces import expand_multi_instance, generate_trace
+
+SPACE = a100_mig_space()
+PM = PerfModel(SPACE)
+EST = OracleEstimator(PM)
+
+
+def _run(policy, jobs, **kw):
+    cfg = SimConfig(n_gpus=4, policy=policy, **kw)
+    return simulate(jobs, cfg, SPACE, PM, EST)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return generate_trace(40, lam_s=45.0, seed=7, max_duration_s=1200)
+
+
+def test_policy_ordering(trace):
+    """Oracle <= MISO < NoPart on JCT (paper Fig 10)."""
+    jct = {p: _run(p, trace).avg_jct
+           for p in ("nopart", "oracle", "miso", "optsta")}
+    assert jct["oracle"] <= jct["miso"] * 1.001
+    assert jct["miso"] < jct["nopart"]
+    assert jct["oracle"] < jct["optsta"]
+
+
+def test_all_jobs_complete(trace):
+    m = _run("miso", trace)
+    assert len(m.jcts) == len(trace)
+
+
+def test_breakdown_accounts_jct(trace):
+    """queue+mps+ckpt+run must equal JCT on average (paper Fig 12)."""
+    m = _run("miso", trace)
+    total = sum(m.breakdown.values())
+    assert abs(total - m.avg_jct) / m.avg_jct < 0.02
+
+
+def test_nopart_runs_exclusively(trace):
+    m = _run("nopart", trace)
+    # exclusive execution: run time == work exactly
+    works = sorted(j.work for j in trace)
+    runs = sorted(m.breakdown["run"] * len(m.jcts) for _ in [0])
+    assert abs(np.mean([j.work for j in trace]) - m.breakdown["run"]) < 1e-6
+
+
+def test_relative_jct_lower_bound(trace):
+    """No job can finish faster than its exclusive-GPU time."""
+    for pol in ("nopart", "miso", "oracle", "optsta", "mpsonly"):
+        m = _run(pol, trace)
+        assert min(m.relative_jcts) >= 1.0 - 1e-9, pol
+
+
+def test_mem_constraint_respected():
+    """Jobs with declared min memory only land where a big slice exists."""
+    jobs = generate_trace(12, lam_s=5.0, seed=3, max_duration_s=600,
+                          mem_constraint_frac=1.0)
+    m = _run("miso", jobs)
+    assert len(m.jcts) == len(jobs)
+
+
+def test_qos_constraint():
+    big = [j for j in generate_trace(10, lam_s=10.0, seed=4,
+                                     max_duration_s=600, qos_frac=1.0)]
+    m = _run("miso", big)
+    assert len(m.jcts) == len(big)
+
+
+def test_multi_instance_profiled_once():
+    prof = WORKLOADS[0]
+    jobs = [Job(jid=0, profile=prof, arrival=0.0, work=300.0, n_instances=3)]
+    jobs = expand_multi_instance(jobs)
+    assert len(jobs) == 3
+    assert all(j.mi_group == 0 for j in jobs)
+    m = _run("miso", jobs)
+    assert len(m.jcts) == 3
+    # clones skip the MPS phase: at most one job paid profiling time
+    paid = [j for j in jobs if j.t_mps > 0]
+    assert len(paid) <= 1
+
+
+def test_failure_injection_requeues():
+    jobs = generate_trace(10, lam_s=20.0, seed=5, max_duration_s=900)
+    cfg = SimConfig(n_gpus=2, policy="miso", gpu_mtbf_s=600.0, repair_s=120.0,
+                    seed=11)
+    m = simulate(jobs, cfg, SPACE, PM, EST)
+    assert len(m.jcts) == len(jobs)          # everything still completes
+    base = simulate(jobs, SimConfig(n_gpus=2, policy="miso"), SPACE, PM, EST)
+    assert m.avg_jct >= base.avg_jct          # failures cannot help
+
+
+def test_noisy_estimator_degrades_gracefully():
+    """Paper Fig 18: large prediction error should not break MISO."""
+    jobs = generate_trace(30, lam_s=30.0, seed=6, max_duration_s=900)
+    clean = simulate(jobs, SimConfig(n_gpus=4, policy="miso"), SPACE, PM,
+                     OracleEstimator(PM))
+    noisy = simulate(jobs, SimConfig(n_gpus=4, policy="miso"), SPACE, PM,
+                     NoisyEstimator(PM, sigma=0.09, seed=0))
+    nopart = simulate(jobs, SimConfig(n_gpus=4, policy="nopart"), SPACE, PM,
+                      OracleEstimator(PM))
+    assert noisy.avg_jct < nopart.avg_jct          # still clearly better
+    assert noisy.avg_jct < clean.avg_jct * 1.5
+
+
+def test_phase_change_reprofiles():
+    from repro.core.jobs import job_profile
+    p1 = job_profile("smollm-360m", 8)
+    p2 = job_profile("granite-dense-700m", 32)
+    j = Job(jid=0, profile=p1, arrival=0.0, work=600.0,
+            phases=((0.5, p2),))
+    assert j.profile_at(0.0).name == p1.name
+    assert j.profile_at(0.6).name == p2.name
