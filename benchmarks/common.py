@@ -33,11 +33,15 @@ def testbed_trace(n_jobs=100, lam=60.0, seed=1, **kw):
     return generate_trace(n_jobs, lam_s=lam, seed=seed, **kw)
 
 
+_BASELINES = ("nopart", "optsta", "mpsonly", "oracle")  # never use the
+# learned estimator: baselines don't profile, oracle is ground truth
+
+
 def run_policies(jobs, policies, n_gpus=8, estimator=None, **simkw):
     out = {}
     for pol in policies:
-        est = estimator if (estimator is not None and pol == "miso") \
-            else ORACLE_EST
+        est = estimator if (estimator is not None
+                            and pol not in _BASELINES) else ORACLE_EST
         cfg = SimConfig(n_gpus=n_gpus, policy=pol, **simkw)
         t0 = time.time()
         m = simulate(jobs, cfg, SPACE, PM, est)

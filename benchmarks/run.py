@@ -25,6 +25,7 @@ def main() -> None:
         paper_figs.fig5_heuristics_suboptimal,
         components.predictor_accuracy,
         components.optimizer_latency,
+        components.scheduling_policies,
         paper_figs.fig10_testbed,
         paper_figs.fig11_cdf,
         paper_figs.fig12_breakdown,

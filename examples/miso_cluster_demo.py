@@ -30,8 +30,9 @@ def main():
     print(f"{'policy':10s} {'avgJCT(s)':>10s} {'makespan(s)':>12s} "
           f"{'STP':>6s}  queue/mps/ckpt/run (s)")
     base = None
-    for pol in ("nopart", "optsta", "mpsonly", "miso", "oracle"):
-        est = miso_est if pol == "miso" else oracle
+    for pol in ("nopart", "optsta", "mpsonly", "miso", "miso-frag", "srpt",
+                "oracle"):
+        est = miso_est if pol in ("miso", "miso-frag", "srpt") else oracle
         m = simulate(jobs, SimConfig(n_gpus=8, policy=pol), space, pm, est)
         if pol == "nopart":
             base = m

@@ -9,6 +9,12 @@ Assignments within a slice multiset are solved exactly by bitmask DP over
 jobs (O(2^m * m) per multiset) instead of m! permutations — same optimum,
 ~50x fewer evaluations; ``optimize_partition_bruteforce`` keeps the literal
 Algorithm 1 enumeration as the test oracle.
+
+Repeated repartition calls in long traces mostly carry the exact same speed
+vectors (a job's profile — and hence its estimate — is piecewise constant in
+progress), so results are memoized on ``(space, m, rounded speed-vector
+signature)``.  ``benchmarks/components.optimizer_latency`` measures the
+speedup; pass ``memo=False`` to bypass.
 """
 from __future__ import annotations
 
@@ -17,6 +23,28 @@ from dataclasses import dataclass
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.partitions import PartitionSpace
+
+_MEMO: Dict[tuple, Optional["PartitionChoice"]] = {}
+_MEMO_STATS = {"hits": 0, "misses": 0}
+_MEMO_ROUND = 6      # decimals: well below any speed difference that matters
+_MEMO_MAX = 65536    # FIFO-bounded: noisy estimators never repeat a key, so
+                     # an unbounded dict would be a slow leak across long runs
+
+
+def _memo_key(space: PartitionSpace, speeds, require_feasible: bool) -> tuple:
+    sig = tuple(tuple(sorted((s, round(v, _MEMO_ROUND)) for s, v in sv.items()))
+                for sv in speeds)
+    return (space.name, space.sizes, space.total_compute, space.total_mem,
+            require_feasible, sig)
+
+
+def clear_memo() -> None:
+    _MEMO.clear()
+    _MEMO_STATS["hits"] = _MEMO_STATS["misses"] = 0
+
+
+def memo_stats() -> Dict[str, int]:
+    return dict(_MEMO_STATS, size=len(_MEMO))
 
 
 @dataclass(frozen=True)
@@ -60,11 +88,19 @@ def _assign_dp(sizes: Tuple[int, ...], speeds: Sequence[Dict[int, float]]):
 
 def optimize_partition(space: PartitionSpace,
                        speeds: Sequence[Dict[int, float]],
-                       require_feasible: bool = False) -> Optional[PartitionChoice]:
+                       require_feasible: bool = False,
+                       memo: bool = True) -> Optional[PartitionChoice]:
     """Algorithm 1 with exact assignment.  speeds[i][size] -> f_i(size)."""
     m = len(speeds)
     if m == 0:
         return None
+    if memo:
+        key = _memo_key(space, speeds, require_feasible)
+        cached = _MEMO.get(key, _MEMO)        # sentinel: None is a valid value
+        if cached is not _MEMO:
+            _MEMO_STATS["hits"] += 1
+            return cached
+        _MEMO_STATS["misses"] += 1
     best: Optional[PartitionChoice] = None
     for part in space.partitions_of_len(m):
         obj, perm = _assign_dp(part, speeds)
@@ -73,6 +109,10 @@ def optimize_partition(space: PartitionSpace,
             continue
         if best is None or obj > best.objective:
             best = PartitionChoice(perm, obj, feasible)
+    if memo:
+        if len(_MEMO) >= _MEMO_MAX:
+            _MEMO.pop(next(iter(_MEMO)))       # evict oldest insertion
+        _MEMO[key] = best
     return best
 
 

@@ -88,21 +88,25 @@ class PartitionSpace:
     def maximal_partitions(self) -> Tuple[Tuple[int, ...], ...]:
         """Partitions to which no further slice can be added (the appendix
         figure's rows, multiset-level)."""
-        out = []
-        for p in self.partitions:
-            compute = sum(self.slices[s].compute_slots for s in p)
-            mem = sum(self.slices[s].mem_slots for s in p)
-            can_extend = False
-            for size, st in self.slices.items():
-                if (compute + st.compute_slots <= self.total_compute
-                        and mem + st.mem_slots <= self.total_mem
-                        and list(p).count(size) < st.max_count
-                        and not any(e <= set(p) | {size} for e in self.exclusions)):
-                    can_extend = True
-                    break
-            if not can_extend:
-                out.append(p)
-        return tuple(out)
+        return tuple(p for p in self.partitions
+                     if self.largest_free_slice(p) == 0)
+
+    def largest_free_slice(self, partition: Sequence[int]) -> int:
+        """Largest slice size still addable next to ``partition`` (0 if the
+        accelerator is fully packed) — the fragmentation score used by
+        space-aware policies."""
+        compute = sum(self.slices[s].compute_slots for s in partition)
+        mem = sum(self.slices[s].mem_slots for s in partition)
+        best = 0
+        for size, st in self.slices.items():
+            if (compute + st.compute_slots <= self.total_compute
+                    and mem + st.mem_slots <= self.total_mem
+                    and list(partition).count(size) < st.max_count
+                    and not any(e <= set(partition) | {size}
+                                for e in self.exclusions)
+                    and size > best):
+                best = size
+        return best
 
     def slice_mem_gb(self, size: int) -> float:
         return self.slices[size].memory_gb

@@ -1,0 +1,233 @@
+"""Event-driven cluster simulation engine.
+
+The engine owns time: the event heap, the simulation clock, GPU failure /
+repair injection, job accounting and metric collection.  Every *scheduling*
+decision — queue discipline, placement, phase transitions after a timer,
+reaction to completions — is delegated to the :class:`~repro.core.sim
+.policies.Policy` named by ``SimConfig.policy`` (see
+``repro/core/sim/policies/`` for the built-ins and how to add one).
+
+Fault tolerance: optional Poisson GPU failures re-queue affected jobs with
+progress rolled back to the last periodic checkpoint; the failed GPU is out
+for ``repair_s``.  The policy's normal arrival path handles re-admission —
+job-level fault tolerance is the scheduler itself.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.estimators import OracleEstimator
+from repro.core.jobs import Job
+from repro.core.metrics import TraceMetrics, compute_metrics
+from repro.core.partitions import PartitionSpace
+from repro.core.perfmodel import PerfModel
+from repro.core.sim.gpu import CKPT, GPU, IDLE, MIG_RUN, MPS_PROF, RJob
+from repro.core.sim.policies import get_policy
+
+
+@dataclass
+class SimConfig:
+    n_gpus: int = 8
+    policy: str = "miso"             # any name in policies.available_policies()
+    static_partition: Tuple[int, ...] = (4, 2, 1)   # optsta only
+    mps_level_time_s: float = 10.0   # per MPS level (paper: 10s x 3 levels)
+    mig_reconfig_s: float = 4.0      # GPU reset (paper §3)
+    ckpt_base_s: float = 2.0
+    ckpt_bw_gbps: float = 4.0        # job state of mem_gb -> save+restore time
+    overhead_scale: float = 1.0      # Fig 17 sensitivity knob
+    mps_only_level: float = 0.33
+    mps_only_max_jobs: int = 3
+    max_sim_s: float = 10_000_000.0
+    # fault injection
+    gpu_mtbf_s: float = 0.0          # 0 = no failures
+    repair_s: float = 600.0
+    ckpt_interval_s: float = 600.0   # periodic checkpoint for fault rollback
+    seed: int = 0
+
+
+class ClusterSim:
+    def __init__(self, jobs: Sequence[Job], cfg: SimConfig,
+                 space: PartitionSpace, pm: PerfModel, estimator=None):
+        self.cfg = cfg
+        self.space = space
+        self.pm = pm
+        self.estimator = estimator or OracleEstimator(pm)
+        self.jobs = {j.jid: j for j in jobs}
+        self.queue: List[int] = []
+        self.gpus = [GPU(i, self) for i in range(cfg.n_gpus)]
+        self.events: List[tuple] = []
+        self.t = 0.0
+        self.rng = np.random.default_rng(cfg.seed)
+        self.profile_cache: Dict[str, Dict[int, float]] = {}  # multi-instance
+        self.completed: List[int] = []
+        self._counter = itertools.count()
+        self.policy = get_policy(cfg.policy)(self)
+
+        for j in jobs:
+            self._push(j.arrival, "arrival", j.jid)
+        if cfg.gpu_mtbf_s > 0:
+            for g in self.gpus:
+                self._push(float(self.rng.exponential(cfg.gpu_mtbf_s)),
+                           "failure", g.gid)
+
+    # ---------------------------------------------------------- event glue
+
+    def _push(self, t, kind, payload, stamp=0):
+        heapq.heappush(self.events, (t, next(self._counter), kind, payload, stamp))
+
+    def _schedule_gpu_events(self, g: GPU):
+        g.stamp += 1
+        if g.phase in (CKPT, MPS_PROF):
+            self._push(g.phase_end, "gpu_timer", g.gid, g.stamp)
+        nc = g.next_completion()
+        if nc:
+            self._push(nc[0], "completion", (g.gid, nc[1]), g.stamp)
+
+    # ---------------------------------------------------------- run loop
+
+    def run(self) -> TraceMetrics:
+        n_target = len(self.jobs)
+        while self.events and len(self.completed) < n_target:
+            t, _, kind, payload, stamp = heapq.heappop(self.events)
+            if t > self.cfg.max_sim_s:
+                break
+            self.t = t
+            if kind == "arrival":
+                self._on_arrival(self.jobs[payload])
+            elif kind == "gpu_timer":
+                g = self.gpus[payload]
+                if stamp != g.stamp or t < g.phase_end - 1e-9:
+                    continue
+                self.end_phase(g)
+            elif kind == "completion":
+                gid, jid = payload
+                g = self.gpus[gid]
+                if stamp != g.stamp:
+                    continue
+                g.advance(t)
+                rj = g.jobs.get(jid)
+                if rj is None or rj.job.remaining > 1e-6:
+                    self._schedule_gpu_events(g)
+                    continue
+                self._on_completion(g, rj.job)
+            elif kind == "failure":
+                self._on_failure(self.gpus[payload])
+            elif kind == "repair":
+                self.policy.admit()
+        return compute_metrics([self.jobs[i] for i in self.completed],
+                               self.cfg.n_gpus)
+
+    # ----------------------------------------------- placement constraints
+    # Shared feasibility checks usable by any policy's pick_gpu.
+
+    def up_gpus(self):
+        """GPUs currently in service (not failed / under repair)."""
+        return [g for g in self.gpus if self.t >= g.down_until]
+
+    def mem_ok(self, g: GPU, job: Job, exclude: Optional[int] = None) -> bool:
+        total = sum(rj.job.profile.mem_gb for jid, rj in g.jobs.items()
+                    if jid != exclude)
+        return total + job.profile.mem_gb <= self.pm.hw.mem_gb
+
+    def spare_slice_ok(self, g: GPU, job: Job,
+                       exclude: Optional[int] = None) -> bool:
+        """'Maximum spare slice' check (paper §4.3): after adding the job,
+        some valid partition must give every job a memory-feasible slice.
+        ``exclude`` ignores one resident jid (what-if for preemption)."""
+        resident = [rj for jid, rj in g.jobs.items() if jid != exclude]
+        mems = [max(rj.job.profile.mem_gb, rj.job.min_mem_gb)
+                for rj in resident]
+        qoss = [rj.job.qos_min_slice for rj in resident]
+        mems.append(max(job.profile.mem_gb, job.min_mem_gb))
+        qoss.append(job.qos_min_slice)
+        m = len(mems)
+        order = sorted(range(m), key=lambda i: -mems[i])
+        for part in self.space.partitions_of_len(m):
+            sizes = sorted(part, reverse=True)
+            ok = all(
+                self.space.slice_mem_gb(sizes[r]) >= mems[i]
+                and sizes[r] >= qoss[i]
+                for r, i in enumerate(order))
+            if ok:
+                return True
+        return False
+
+    # ------------------------------------------------------ job lifecycle
+
+    def _on_arrival(self, job: Job):
+        # multi-instance clones are expanded by traces.expand_multi_instance;
+        # clones share an mi_group so the MPS profile is measured only once.
+        job.queue_since = self.t
+        self.queue.append(job.jid)
+        self.policy.admit()
+
+    def place(self, g: GPU, job: Job):
+        """Land ``job`` on ``g`` (accounting + policy phase setup)."""
+        g.advance(self.t)
+        if job.start_time is None:
+            job.start_time = self.t
+        job.t_queue += max(0.0, self.t - job.queue_since)
+        g.jobs[job.jid] = RJob(job)
+        self.policy.on_place(g, job)
+        self.finalize(g)
+
+    def end_phase(self, g: GPU, schedule: bool = True):
+        """A phase window on ``g`` expired; let the policy transition the
+        state machine.  ``schedule=False`` suppresses event scheduling for
+        callers that finalize the GPU themselves right after (e.g. the
+        zero-dead-time checkpoint in MISO's ``begin_profiling``)."""
+        g.advance(self.t)
+        self.policy.on_phase_end(g)
+        self.finalize(g, schedule=schedule)
+
+    def _on_completion(self, g: GPU, job: Job):
+        job.finish_time = self.t
+        job.remaining = 0.0
+        del g.jobs[job.jid]
+        g.estimates.pop(job.jid, None)
+        self.completed.append(job.jid)
+        self.policy.on_completion(g, job)
+        self.finalize(g)
+        self.policy.admit()
+
+    # ---------------------------------------------------------- failures
+
+    def _on_failure(self, g: GPU):
+        g.advance(self.t)
+        if g.jobs:
+            rollback = self.cfg.ckpt_interval_s
+            for rj in list(g.jobs.values()):
+                job = rj.job
+                job.remaining = min(job.work,
+                                    job.remaining + min(rollback, job.t_run))
+                job.queue_since = self.t
+                self.queue.insert(0, job.jid)
+            g.jobs.clear()
+            g.estimates.clear()
+        g.phase = IDLE
+        g.partition = ()
+        g.down_until = self.t + self.cfg.repair_s
+        g.stamp += 1
+        self._push(g.down_until, "repair", g.gid, g.stamp)
+        if self.cfg.gpu_mtbf_s > 0:
+            self._push(self.t + float(self.rng.exponential(self.cfg.gpu_mtbf_s)),
+                       "failure", g.gid)
+
+    # ---------------------------------------------------------- common
+
+    def finalize(self, g: GPU, schedule: bool = True):
+        g.refresh_speeds()
+        if schedule:
+            self._schedule_gpu_events(g)
+
+
+def simulate(jobs, cfg: SimConfig, space: PartitionSpace, pm: PerfModel,
+             estimator=None) -> TraceMetrics:
+    import copy
+    jobs = copy.deepcopy(list(jobs))
+    return ClusterSim(jobs, cfg, space, pm, estimator).run()

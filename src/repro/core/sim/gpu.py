@@ -1,0 +1,106 @@
+"""Per-accelerator phase state machine and job accounting.
+
+Each GPU is a small state machine over phases:
+
+  IDLE -> (jobs placed) -> CKPT (checkpoint + GPU reset dead time)
+       -> MPS_PROF (jobs progress at interference-prone MPS speeds; the
+          measurement happens here)                                [MISO only]
+       -> CKPT (reconfigure to the optimizer's MIG partition)
+       -> MIG_RUN (jobs progress at interference-free slice speeds)
+
+Job accounting (paper Fig 12): every second of a job's life lands in exactly
+one of {queue, ckpt, mps, run} — ``advance`` charges elapsed time to the
+bucket matching the current phase.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Dict, Optional, Tuple
+
+from repro.core.jobs import Job
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from repro.core.sim.engine import ClusterSim
+
+IDLE, CKPT, MPS_PROF, MIG_RUN = "idle", "ckpt", "mps", "mig"
+
+
+@dataclass
+class RJob:
+    """A job resident on a GPU: its current slice and instantaneous speed."""
+    job: Job
+    slice_size: Optional[int] = None
+    speed: float = 0.0               # work-seconds per second, right now
+
+
+class GPU:
+    def __init__(self, gid: int, sim: "ClusterSim"):
+        self.gid = gid
+        self.sim = sim
+        self.phase = IDLE
+        self.phase_end = 0.0
+        self.jobs: Dict[int, RJob] = {}
+        self.partition: Tuple[int, ...] = ()
+        self.estimates: Dict[int, Dict[int, float]] = {}
+        self.last_update = 0.0
+        self.stamp = 0               # event invalidation
+        self.needs_profile = False
+        self.down_until = 0.0
+
+    # ------------------------------------------------------------ progress
+
+    def advance(self, t: float):
+        dt = t - self.last_update
+        if dt <= 0:
+            self.last_update = t
+            return
+        for rj in self.jobs.values():
+            if self.phase == MIG_RUN:
+                rj.job.remaining -= rj.speed * dt
+                rj.job.t_run += dt
+            elif self.phase == MPS_PROF:
+                rj.job.remaining -= rj.speed * dt
+                rj.job.t_mps += dt
+            elif self.phase == CKPT:
+                rj.job.t_ckpt += dt
+            else:
+                rj.job.t_queue += dt
+        self.last_update = t
+
+    def refresh_speeds(self):
+        sim = self.sim
+        rjs = list(self.jobs.values())
+        if self.phase == MIG_RUN:
+            for rj in rjs:
+                prof = rj.job.profile_at(1.0 - rj.job.remaining / rj.job.work)
+                rj.speed = (sim.pm.slice_speed(prof, rj.slice_size)
+                            if rj.slice_size else 0.0)
+        elif self.phase == MPS_PROF:
+            if rjs:
+                profs = [rj.job.profile_at(1.0 - rj.job.remaining / rj.job.work)
+                         for rj in rjs]
+                speeds = sim.policy.mps_phase_speeds(profs)
+                for rj, s in zip(rjs, speeds):
+                    rj.speed = float(s)
+        else:
+            for rj in rjs:
+                rj.speed = 0.0
+
+    def next_completion(self) -> Optional[Tuple[float, int]]:
+        best = None
+        for jid, rj in self.jobs.items():
+            if rj.speed > 1e-12 and self.phase in (MIG_RUN, MPS_PROF):
+                tf = self.last_update + max(rj.job.remaining, 0.0) / rj.speed
+                if best is None or tf < best[0]:
+                    best = (tf, jid)
+        return best
+
+    # --------------------------------------------------------- transitions
+
+    def ckpt_duration(self) -> float:
+        if not self.jobs:
+            return self.sim.cfg.mig_reconfig_s * self.sim.cfg.overhead_scale
+        per_job = max(
+            self.sim.cfg.ckpt_base_s + rj.job.profile.mem_gb / self.sim.cfg.ckpt_bw_gbps
+            for rj in self.jobs.values())
+        return (self.sim.cfg.mig_reconfig_s + per_job) * self.sim.cfg.overhead_scale

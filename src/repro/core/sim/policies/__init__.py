@@ -1,0 +1,31 @@
+"""Pluggable scheduling policies for the cluster simulator.
+
+Importing this package registers every built-in policy; external code can
+add more with::
+
+    from repro.core.sim.policies import Policy, register_policy
+
+    @register_policy
+    class MyPolicy(Policy):
+        name = "mine"
+        ...
+"""
+from repro.core.sim.policies.base import (Policy, available_policies,
+                                          get_policy, register_policy)
+
+# importing the modules registers the built-ins
+from repro.core.sim.policies import (miso, miso_frag, mpsonly, nopart,  # noqa: F401
+                                     optsta, oracle, srpt)
+from repro.core.sim.policies.miso import MisoPolicy
+from repro.core.sim.policies.miso_frag import MisoFragPolicy
+from repro.core.sim.policies.mpsonly import MpsOnlyPolicy
+from repro.core.sim.policies.nopart import NoPartPolicy
+from repro.core.sim.policies.optsta import OptStaPolicy
+from repro.core.sim.policies.oracle import OraclePolicy
+from repro.core.sim.policies.srpt import SrptPolicy
+
+__all__ = [
+    "Policy", "register_policy", "get_policy", "available_policies",
+    "MisoPolicy", "MisoFragPolicy", "MpsOnlyPolicy", "NoPartPolicy",
+    "OptStaPolicy", "OraclePolicy", "SrptPolicy",
+]

@@ -1,0 +1,152 @@
+"""Scheduling-policy plugin layer.
+
+A :class:`Policy` owns every scheduling decision the cluster makes; the
+engine (``repro.core.sim.engine``) owns time, events and accounting.  The
+hooks mirror the lifecycle of a job:
+
+* ``admit``          — queue discipline (default FCFS; override for e.g. SRPT)
+* ``pick_gpu``       — placement: choose a GPU for a queued job (or None)
+* ``on_place``       — set the GPU's phase/partition after a job lands
+* ``on_phase_end``   — a CKPT/MPS_PROF timer expired; advance the state machine
+* ``on_completion``  — a job finished; reshape what is left on the GPU
+* ``mps_phase_speeds`` — how co-located jobs progress during an MPS phase
+
+New policies subclass :class:`Policy`, set ``name``, and decorate with
+:func:`register_policy`; they are then reachable from ``SimConfig.policy``,
+``repro.launch.cluster --policy`` and the benchmark harness with no engine
+changes.  See ``miso_frag.py`` / ``srpt.py`` for ~30-line examples.
+"""
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Type
+
+import numpy as np
+
+from repro.core.jobs import Job, JobProfile
+from repro.core.optimizer import optimize_partition
+from repro.core.perfmodel import MPS_LEVELS
+from repro.core.sim.gpu import CKPT, GPU, IDLE, MIG_RUN
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from repro.core.sim.engine import ClusterSim
+
+_REGISTRY: Dict[str, Type["Policy"]] = {}
+
+
+def register_policy(cls: Type["Policy"]) -> Type["Policy"]:
+    """Class decorator: make ``cls`` reachable as ``SimConfig.policy=name``."""
+    if not getattr(cls, "name", None):
+        raise ValueError(f"{cls.__name__} must define a non-empty `name`")
+    if cls.name in _REGISTRY:
+        raise ValueError(f"duplicate policy name {cls.name!r} "
+                         f"({_REGISTRY[cls.name].__name__} vs {cls.__name__})")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def get_policy(name: str) -> Type["Policy"]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduling policy {name!r}; "
+            f"available: {', '.join(available_policies())}") from None
+
+
+def available_policies() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+class Policy(ABC):
+    """Base class for scheduling policies (one instance per simulation)."""
+
+    name: str = ""
+
+    def __init__(self, sim: "ClusterSim"):
+        self.sim = sim
+
+    # ------------------------------------------------------ queue discipline
+
+    def admit(self):
+        """FCFS: place queue-head jobs until the head does not fit."""
+        sim = self.sim
+        while sim.queue:
+            job = sim.jobs[sim.queue[0]]
+            g = self.pick_gpu(job)
+            if g is None:
+                return
+            sim.queue.pop(0)
+            sim.place(g, job)
+
+    # ---------------------------------------------------------- placement
+
+    @abstractmethod
+    def pick_gpu(self, job: Job) -> Optional[GPU]:
+        """Choose a GPU for ``job`` or return None to leave it queued."""
+
+    def least_loaded(self, gpus: Sequence[GPU]) -> Optional[GPU]:
+        """Fewest resident jobs, GPU id as tie-break (paper §4: least-loaded
+        placement)."""
+        if not gpus:
+            return None
+        return min(gpus, key=lambda g: (len(g.jobs), g.gid))
+
+    # ------------------------------------------------------------ lifecycle
+
+    @abstractmethod
+    def on_place(self, g: GPU, job: Job):
+        """``job`` was just added to ``g.jobs``; set phase / slices."""
+
+    def on_phase_end(self, g: GPU):
+        """A CKPT or MPS_PROF window on ``g`` ended (no-op by default —
+        only profiling policies drive multi-step phase chains)."""
+
+    @abstractmethod
+    def on_completion(self, g: GPU, job: Job):
+        """``job`` finished and was removed from ``g.jobs``."""
+
+    # ------------------------------------------------------------ MPS model
+
+    def mps_phase_speeds(self, profs: Sequence[JobProfile]):
+        """Per-job progress rates while the GPU is in an MPS phase.  The
+        profiling sweep runs 3 levels back-to-back, so use the mean."""
+        mats = [self.sim.pm.mps_speeds(profs, lv) for lv in MPS_LEVELS]
+        return np.mean(np.asarray(mats), axis=0)
+
+    # -------------------------------------------------- partition machinery
+    # Shared by every MIG-partitioning policy (miso / oracle / variants).
+
+    def partition_speeds(self, g: GPU, jids: Sequence[int]) -> List[Dict[int, float]]:
+        """Per-job slice-speed estimates used by the optimizer; the default
+        reads the estimates cached on the GPU at profiling time."""
+        return [g.estimates.get(j, {self.sim.space.full_size: 1.0})
+                for j in jids]
+
+    def choose_partition(self, speeds: Sequence[Dict[int, float]]):
+        """Algorithm 1: feasible-first, fall back to best-effort."""
+        space = self.sim.space
+        return optimize_partition(space, speeds, require_feasible=True) \
+            or optimize_partition(space, speeds)
+
+    def repartition(self, g: GPU, overhead: bool = False):
+        """Run the optimizer with current estimates and apply the partition;
+        ``overhead=True`` charges a checkpoint+reconfigure window when the
+        partition actually changes."""
+        sim = self.sim
+        jids = list(g.jobs)
+        if not jids:
+            g.phase = IDLE
+            g.partition = ()
+            return
+        choice = self.choose_partition(self.partition_speeds(g, jids))
+        old = tuple(rj.slice_size for rj in g.jobs.values())
+        for jid, size in zip(jids, choice.partition):
+            g.jobs[jid].slice_size = size
+        g.partition = tuple(sorted(choice.partition, reverse=True))
+        if overhead and old != tuple(choice.partition):
+            g.phase = CKPT
+            g.phase_end = sim.t + g.ckpt_duration()
+            g.needs_profile = False
+        else:
+            g.phase = MIG_RUN

@@ -1,0 +1,34 @@
+"""MPS-only: co-locate jobs under CUDA MPS at a fixed active-thread level,
+never partition (paper §5 / Fig 15 baseline).  Jobs progress at
+interference-prone MPS speeds for their whole life.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.core.jobs import Job, JobProfile
+from repro.core.sim.gpu import GPU, IDLE, MPS_PROF
+from repro.core.sim.policies.base import Policy, register_policy
+
+
+@register_policy
+class MpsOnlyPolicy(Policy):
+    name = "mpsonly"
+
+    def pick_gpu(self, job: Job) -> Optional[GPU]:
+        sim = self.sim
+        return self.least_loaded(
+            [g for g in sim.up_gpus()
+             if len(g.jobs) < sim.cfg.mps_only_max_jobs
+             and sim.mem_ok(g, job)])
+
+    def on_place(self, g: GPU, job: Job):
+        g.phase = MPS_PROF               # progresses at MPS speeds forever
+        g.phase_end = float("inf")
+
+    def on_completion(self, g: GPU, job: Job):
+        if not g.jobs:
+            g.phase = IDLE
+
+    def mps_phase_speeds(self, profs: Sequence[JobProfile]):
+        return self.sim.pm.mps_speeds(profs, self.sim.cfg.mps_only_level)

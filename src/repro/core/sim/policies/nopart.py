@@ -1,0 +1,29 @@
+"""NoPart: exclusive whole-GPU execution, no partitioning (paper §5 baseline).
+
+One job per GPU on the full slice; everything else waits in the FCFS queue.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.jobs import Job
+from repro.core.sim.gpu import GPU, IDLE, MIG_RUN
+from repro.core.sim.policies.base import Policy, register_policy
+
+
+@register_policy
+class NoPartPolicy(Policy):
+    name = "nopart"
+
+    def pick_gpu(self, job: Job) -> Optional[GPU]:
+        return self.least_loaded(
+            [g for g in self.sim.up_gpus() if not g.jobs])
+
+    def on_place(self, g: GPU, job: Job):
+        g.phase = MIG_RUN
+        g.partition = (self.sim.space.full_size,)
+        g.jobs[job.jid].slice_size = self.sim.space.full_size
+
+    def on_completion(self, g: GPU, job: Job):
+        g.phase = IDLE
+        g.partition = ()

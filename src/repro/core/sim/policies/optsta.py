@@ -1,0 +1,75 @@
+"""OptSta: the best *static* MIG partition, fixed for the whole trace
+(paper §5).  Jobs are matched to the fixed slice multiset best-first and
+migrate to larger slices as they free up; the partition itself never changes,
+so there is no reconfigure overhead — and no adaptation either.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import List, Optional
+
+from repro.core.jobs import Job
+from repro.core.optimizer import _assign_dp
+from repro.core.sim.gpu import GPU, IDLE, MIG_RUN
+from repro.core.sim.policies.base import Policy, register_policy
+
+
+@register_policy
+class OptStaPolicy(Policy):
+    name = "optsta"
+
+    def pick_gpu(self, job: Job) -> Optional[GPU]:
+        space = self.sim.space
+        cands = []
+        for g in self.sim.up_gpus():
+            fits = [s for s in self._free_slices(g)
+                    if space.slice_mem_gb(s) >= max(job.profile.mem_gb,
+                                                    job.min_mem_gb)
+                    and s >= job.qos_min_slice]
+            if fits:
+                cands.append(g)
+        return self.least_loaded(cands)
+
+    def on_place(self, g: GPU, job: Job):
+        self._assign(g)
+        g.phase = MIG_RUN
+
+    def on_completion(self, g: GPU, job: Job):
+        self._assign(g)
+        g.phase = MIG_RUN if g.jobs else IDLE
+
+    # ------------------------------------------------------------ internals
+
+    def _free_slices(self, g: GPU) -> List[int]:
+        used = [rj.slice_size for rj in g.jobs.values() if rj.slice_size]
+        free = list(self.sim.cfg.static_partition)
+        for s in used:
+            if s in free:
+                free.remove(s)
+        return free
+
+    def _assign(self, g: GPU):
+        """(Re)assign this GPU's jobs to its fixed slices, best-first
+        (paper: OptSta migrates jobs to larger slices on availability)."""
+        sim = self.sim
+        jids = list(g.jobs)
+        if not jids:
+            return
+        speeds = []
+        for j in jids:
+            job = sim.jobs[j]
+            prof = job.profile_at(1.0 - job.remaining / job.work)
+            sv = sim.pm.speed_vector(prof)
+            speeds.append({s: (sv.get(s, 0.0)
+                               if sim.space.slice_mem_gb(s) >= prof.mem_gb
+                               and s >= job.qos_min_slice else 0.0)
+                           for s in sim.cfg.static_partition})
+        # best assignment of m jobs to the fixed multiset's best m slices
+        part = tuple(sorted(sim.cfg.static_partition, reverse=True))
+        best_obj, best_perm = -1.0, None
+        for sub in set(itertools.combinations(part, len(jids))):
+            obj, perm = _assign_dp(sub, speeds)
+            if obj > best_obj:
+                best_obj, best_perm = obj, perm
+        for jid, size in zip(jids, best_perm):
+            g.jobs[jid].slice_size = size

@@ -1,0 +1,37 @@
+"""Oracle: perfect slice-speed knowledge, zero profiling/reconfigure cost
+(paper §5: "does not suffer from profiling overhead or prediction
+inaccuracies").  Upper bound for MISO.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.jobs import Job
+from repro.core.sim.gpu import GPU
+from repro.core.sim.policies.base import Policy, register_policy
+
+
+@register_policy
+class OraclePolicy(Policy):
+    name = "oracle"
+
+    def pick_gpu(self, job: Job) -> Optional[GPU]:
+        sim = self.sim
+        return self.least_loaded(
+            [g for g in sim.up_gpus()
+             if len(g.jobs) < sim.space.max_jobs and sim.mem_ok(g, job)
+             and sim.spare_slice_ok(g, job)])
+
+    def on_place(self, g: GPU, job: Job):
+        self.repartition(g)              # no overhead: instant, free
+
+    def on_completion(self, g: GPU, job: Job):
+        self.repartition(g)
+
+    def partition_speeds(self, g: GPU, jids: Sequence[int]) -> List[Dict[int, float]]:
+        """Ground truth straight from the estimator, fresh every time."""
+        sim = self.sim
+        return sim.estimator.estimate(
+            [sim.jobs[j].profile_at(1.0 - sim.jobs[j].remaining /
+                                    sim.jobs[j].work) for j in jids],
+            qos=[sim.jobs[j].qos_min_slice for j in jids])

@@ -1,0 +1,118 @@
+"""SRPT: preemptive shortest-remaining-work queue discipline on top of the
+MISO pipeline.
+
+The FCFS ``admit`` suffers head-of-line blocking: a queued giant that fits
+nowhere stalls every small job behind it.  This policy (a) scans the whole
+queue shortest-remaining-first, and (b) when nothing fits, preempts the
+running job with the most remaining work — provided it has more than
+``preempt_factor`` times the candidate's remaining work, so long jobs cannot
+be starved by a stream of short ones.  Preempted jobs keep their progress
+(they are checkpointed on eviction) and their measured MPS profile, so
+re-admission skips the profiling sweep.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.core.jobs import Job
+from repro.core.sim.gpu import GPU, IDLE, MIG_RUN
+from repro.core.sim.policies.base import register_policy
+from repro.core.sim.policies.miso import MisoPolicy
+
+
+@register_policy
+class SrptPolicy(MisoPolicy):
+    name = "srpt"
+
+    preempt_factor = 2.0       # victim must have > factor x candidate's work
+    max_preemptions = 3        # per victim job, to bound churn
+
+    def __init__(self, sim):
+        super().__init__(sim)
+        self._evicted: Dict[int, int] = {}       # jid -> times preempted
+        self._known_profiles: Dict[int, Dict[int, float]] = {}
+
+    # ------------------------------------------------------ queue discipline
+
+    def admit(self):
+        sim = self.sim
+        while sim.queue:
+            order = sorted(sim.queue,
+                           key=lambda j: (sim.jobs[j].remaining, j))
+            for jid in order:
+                g = self.pick_gpu(sim.jobs[jid])
+                if g is not None:
+                    sim.queue.remove(jid)
+                    sim.place(g, sim.jobs[jid])
+                    break
+            else:
+                if not self._try_preempt(sim.jobs[order[0]]):
+                    return
+
+    def _try_preempt(self, job: Job) -> bool:
+        """Evict the largest-remaining running job whose departure actually
+        makes room for ``job``; returns True if an eviction was made
+        (admit() then retries)."""
+        sim = self.sim
+        victim, vg = None, None
+        for g in sim.up_gpus():
+            if g.phase != MIG_RUN:
+                continue
+            g.advance(sim.t)             # remaining-work must not be stale
+            for rj in g.jobs.values():
+                if ((victim is None or rj.job.remaining > victim.remaining)
+                        and self._fits_after_evict(g, rj.job, job)):
+                    victim, vg = rj.job, g
+        if (victim is None
+                or victim.remaining <= self.preempt_factor * job.remaining
+                or self._evicted.get(victim.jid, 0) >= self.max_preemptions):
+            return False
+        self._evicted[victim.jid] = self._evicted.get(victim.jid, 0) + 1
+        self._evict(vg, victim)
+        return True
+
+    def _fits_after_evict(self, g: GPU, victim: Job, job: Job) -> bool:
+        """Would ``job`` be placeable on ``g`` once ``victim`` leaves?
+        Evicting a job that does not unblock the candidate only charges
+        checkpoint windows to bystanders."""
+        sim = self.sim
+        return (len(g.jobs) - 1 < sim.space.max_jobs
+                and sim.mem_ok(g, job, exclude=victim.jid)
+                and sim.spare_slice_ok(g, job, exclude=victim.jid))
+
+    def _evict(self, g: GPU, victim: Job):
+        sim = self.sim
+        g.advance(sim.t)
+        del g.jobs[victim.jid]
+        est = g.estimates.pop(victim.jid, None)
+        if est is not None:
+            self._known_profiles[victim.jid] = est
+        victim.queue_since = sim.t
+        sim.queue.append(victim.jid)
+        if g.jobs:
+            self.repartition(g, overhead=True)   # ckpt covers the eviction
+        else:
+            g.phase = IDLE
+            g.partition = ()
+        sim.finalize(g)
+
+    # ------------------------------------------------------------ placement
+
+    def on_place(self, g: GPU, job: Job):
+        known = self._known_profiles.get(job.jid)
+        if known is not None:
+            # re-admission after preemption: profile already measured
+            g.estimates[job.jid] = known
+            self.repartition(g, overhead=True)
+        else:
+            super().on_place(g, job)
+
+    def measure_and_partition(self, g: GPU):
+        super().measure_and_partition(g)
+        for jid, est in g.estimates.items():
+            self._known_profiles[jid] = est
+
+    def on_completion(self, g: GPU, job: Job):
+        self._known_profiles.pop(job.jid, None)
+        self._evicted.pop(job.jid, None)
+        super().on_completion(g, job)

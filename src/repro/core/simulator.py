@@ -1,499 +1,18 @@
-"""Event-driven cluster simulator for MISO and the competing policies
-(paper §5-6): NoPart / OptSta / MPS-only / MISO / Oracle.
+"""Compatibility shim — the simulator now lives in :mod:`repro.core.sim`.
 
-Time model
-----------
-Each GPU is a small state machine over phases:
+The event loop is in ``repro/core/sim/engine.py``, the per-GPU state machine
+in ``repro/core/sim/gpu.py`` and the scheduling policies (NoPart / OptSta /
+MPS-only / MISO / Oracle / MISO-frag / SRPT) under
+``repro/core/sim/policies/``.  Existing callers keep working::
 
-  IDLE -> (jobs placed) -> CKPT (checkpoint + GPU reset dead time)
-       -> MPS_PROF (jobs progress at interference-prone MPS speeds; the
-          measurement happens here)                                [MISO only]
-       -> CKPT (reconfigure to the optimizer's MIG partition)
-       -> MIG_RUN (jobs progress at interference-free slice speeds)
-
-Oracle skips CKPT/MPS phases entirely (paper: "does not suffer from profiling
-overhead or prediction inaccuracies"); OptSta/NoPart/MPS-only never profile.
-MISO pays every overhead (conservative reporting, §5 "Competing Techniques").
-
-Job accounting (Fig 12): every second of a job's life lands in exactly one of
-{queue, ckpt, mps, run}.
-
-Fault tolerance: optional Poisson GPU failures re-queue affected jobs with
-progress rolled back to the last periodic checkpoint; the failed GPU is out
-for ``repair_s``.  MISO's normal arrival path handles re-admission — job-level
-fault tolerance is the scheduler itself.
+    from repro.core.simulator import SimConfig, ClusterSim, simulate
 """
-from __future__ import annotations
+from repro.core.sim import (CKPT, IDLE, MIG_RUN, MPS_PROF, ClusterSim, GPU,
+                            Policy, RJob, SimConfig, available_policies,
+                            get_policy, register_policy, simulate)
 
-import heapq
-import itertools
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
-
-from repro.core.estimators import OracleEstimator
-from repro.core.jobs import Job
-from repro.core.metrics import TraceMetrics, compute_metrics
-from repro.core.optimizer import optimize_partition
-from repro.core.partitions import PartitionSpace
-from repro.core.perfmodel import MPS_LEVELS, PerfModel
-
-IDLE, CKPT, MPS_PROF, MIG_RUN = "idle", "ckpt", "mps", "mig"
-
-
-@dataclass
-class SimConfig:
-    n_gpus: int = 8
-    policy: str = "miso"             # nopart | optsta | mpsonly | miso | oracle
-    static_partition: Tuple[int, ...] = (4, 2, 1)   # optsta only
-    mps_level_time_s: float = 10.0   # per MPS level (paper: 10s x 3 levels)
-    mig_reconfig_s: float = 4.0      # GPU reset (paper §3)
-    ckpt_base_s: float = 2.0
-    ckpt_bw_gbps: float = 4.0        # job state of mem_gb -> save+restore time
-    overhead_scale: float = 1.0      # Fig 17 sensitivity knob
-    mps_only_level: float = 0.33
-    mps_only_max_jobs: int = 3
-    max_sim_s: float = 10_000_000.0
-    # fault injection
-    gpu_mtbf_s: float = 0.0          # 0 = no failures
-    repair_s: float = 600.0
-    ckpt_interval_s: float = 600.0   # periodic checkpoint for fault rollback
-    seed: int = 0
-
-
-@dataclass
-class _RJob:
-    job: Job
-    slice_size: Optional[int] = None
-    speed: float = 0.0               # work-seconds per second, right now
-
-
-class _GPU:
-    def __init__(self, gid: int, sim: "ClusterSim"):
-        self.gid = gid
-        self.sim = sim
-        self.phase = IDLE
-        self.phase_end = 0.0
-        self.jobs: Dict[int, _RJob] = {}
-        self.partition: Tuple[int, ...] = ()
-        self.estimates: Dict[int, Dict[int, float]] = {}
-        self.last_update = 0.0
-        self.stamp = 0               # event invalidation
-        self.needs_profile = False
-        self.down_until = 0.0
-
-    # ------------------------------------------------------------ progress
-
-    def advance(self, t: float):
-        dt = t - self.last_update
-        if dt <= 0:
-            self.last_update = t
-            return
-        for rj in self.jobs.values():
-            if self.phase == MIG_RUN:
-                rj.job.remaining -= rj.speed * dt
-                rj.job.t_run += dt
-            elif self.phase == MPS_PROF:
-                rj.job.remaining -= rj.speed * dt
-                rj.job.t_mps += dt
-            elif self.phase == CKPT:
-                rj.job.t_ckpt += dt
-            else:
-                rj.job.t_queue += dt
-        self.last_update = t
-
-    def refresh_speeds(self):
-        sim = self.sim
-        profs = [rj.job.profile_at(1.0 - rj.job.remaining / rj.job.work)
-                 for rj in self.jobs.values()]
-        rjs = list(self.jobs.values())
-        if self.phase == MIG_RUN:
-            for rj in rjs:
-                prof = rj.job.profile_at(1.0 - rj.job.remaining / rj.job.work)
-                rj.speed = (sim.pm.slice_speed(prof, rj.slice_size)
-                            if rj.slice_size else 0.0)
-        elif self.phase == MPS_PROF:
-            if rjs:
-                if sim.cfg.policy == "mpsonly":
-                    speeds = sim.pm.mps_speeds(profs, sim.cfg.mps_only_level)
-                else:
-                    # profiling sweeps 3 levels back-to-back; use the mean
-                    mats = [sim.pm.mps_speeds(profs, lv) for lv in MPS_LEVELS]
-                    speeds = np.mean(np.asarray(mats), axis=0)
-                for rj, s in zip(rjs, speeds):
-                    rj.speed = float(s)
-        else:
-            for rj in rjs:
-                rj.speed = 0.0
-
-    def next_completion(self) -> Optional[Tuple[float, int]]:
-        best = None
-        for jid, rj in self.jobs.items():
-            if rj.speed > 1e-12 and self.phase in (MIG_RUN, MPS_PROF):
-                tf = self.last_update + max(rj.job.remaining, 0.0) / rj.speed
-                if best is None or tf < best[0]:
-                    best = (tf, jid)
-        return best
-
-    # --------------------------------------------------------- transitions
-
-    def ckpt_duration(self) -> float:
-        if not self.jobs:
-            return self.sim.cfg.mig_reconfig_s * self.sim.cfg.overhead_scale
-        per_job = max(
-            self.sim.cfg.ckpt_base_s + rj.job.profile.mem_gb / self.sim.cfg.ckpt_bw_gbps
-            for rj in self.jobs.values())
-        return (self.sim.cfg.mig_reconfig_s + per_job) * self.sim.cfg.overhead_scale
-
-
-class ClusterSim:
-    def __init__(self, jobs: Sequence[Job], cfg: SimConfig,
-                 space: PartitionSpace, pm: PerfModel, estimator=None):
-        self.cfg = cfg
-        self.space = space
-        self.pm = pm
-        self.estimator = estimator or OracleEstimator(pm)
-        self.jobs = {j.jid: j for j in jobs}
-        self.queue: List[int] = []
-        self.gpus = [_GPU(i, self) for i in range(cfg.n_gpus)]
-        self.events: List[tuple] = []
-        self.t = 0.0
-        self.rng = np.random.default_rng(cfg.seed)
-        self.profile_cache: Dict[str, Dict[int, float]] = {}  # multi-instance
-        self.completed: List[int] = []
-        self._counter = itertools.count()
-
-        for j in jobs:
-            self._push(j.arrival, "arrival", j.jid)
-        if cfg.gpu_mtbf_s > 0:
-            for g in self.gpus:
-                self._push(float(self.rng.exponential(cfg.gpu_mtbf_s)),
-                           "failure", g.gid)
-
-    # ---------------------------------------------------------- event glue
-
-    def _push(self, t, kind, payload, stamp=0):
-        heapq.heappush(self.events, (t, next(self._counter), kind, payload, stamp))
-
-    def _schedule_gpu_events(self, g: _GPU):
-        g.stamp += 1
-        if g.phase in (CKPT, MPS_PROF):
-            self._push(g.phase_end, "gpu_timer", g.gid, g.stamp)
-        nc = g.next_completion()
-        if nc:
-            self._push(nc[0], "completion", (g.gid, nc[1]), g.stamp)
-
-    # ---------------------------------------------------------- run loop
-
-    def run(self) -> TraceMetrics:
-        n_target = len(self.jobs)
-        while self.events and len(self.completed) < n_target:
-            t, _, kind, payload, stamp = heapq.heappop(self.events)
-            if t > self.cfg.max_sim_s:
-                break
-            self.t = t
-            if kind == "arrival":
-                self._on_arrival(self.jobs[payload])
-            elif kind == "gpu_timer":
-                g = self.gpus[payload]
-                if stamp != g.stamp or t < g.phase_end - 1e-9:
-                    continue
-                self._on_phase_end(g)
-            elif kind == "completion":
-                gid, jid = payload
-                g = self.gpus[gid]
-                if stamp != g.stamp:
-                    continue
-                g.advance(t)
-                rj = g.jobs.get(jid)
-                if rj is None or rj.job.remaining > 1e-6:
-                    self._schedule_gpu_events(g)
-                    continue
-                self._on_completion(g, rj.job)
-            elif kind == "failure":
-                self._on_failure(self.gpus[payload])
-            elif kind == "repair":
-                self._admit()
-        return compute_metrics([self.jobs[i] for i in self.completed],
-                               self.cfg.n_gpus)
-
-    # ---------------------------------------------------------- policies
-
-    def _on_arrival(self, job: Job):
-        # multi-instance clones are expanded by traces.expand_multi_instance;
-        # clones share an mi_group so the MPS profile is measured only once.
-        job.queue_since = self.t
-        self.queue.append(job.jid)
-        self._admit()
-
-    def _admit(self):
-        """FCFS: try to place queue-head jobs."""
-        progressed = True
-        while progressed and self.queue:
-            progressed = False
-            jid = self.queue[0]
-            job = self.jobs[jid]
-            g = self._pick_gpu(job)
-            if g is None:
-                return
-            self.queue.pop(0)
-            self._place(g, job)
-            progressed = True
-
-    def _pick_gpu(self, job: Job) -> Optional[_GPU]:
-        pol = self.cfg.policy
-        cands = []
-        for g in self.gpus:
-            if self.t < g.down_until:
-                continue
-            m = len(g.jobs)
-            if pol == "nopart":
-                if m == 0:
-                    cands.append((0, g.gid, g))
-            elif pol == "optsta":
-                free = self._optsta_free_slices(g)
-                fits = [s for s in free
-                        if self.space.slice_mem_gb(s) >= max(job.profile.mem_gb,
-                                                             job.min_mem_gb)
-                        and s >= job.qos_min_slice]
-                if fits:
-                    cands.append((m, g.gid, g))
-            elif pol == "mpsonly":
-                if m < self.cfg.mps_only_max_jobs and self._mem_ok(g, job):
-                    cands.append((m, g.gid, g))
-            else:  # miso / oracle
-                if m < self.space.max_jobs and self._mem_ok(g, job) \
-                        and self._spare_slice_ok(g, job):
-                    cands.append((m, g.gid, g))
-        if not cands:
-            return None
-        cands.sort()
-        return cands[0][2]
-
-    def _mem_ok(self, g: _GPU, job: Job) -> bool:
-        total = sum(rj.job.profile.mem_gb for rj in g.jobs.values())
-        return total + job.profile.mem_gb <= self.pm.hw.mem_gb
-
-    def _spare_slice_ok(self, g: _GPU, job: Job) -> bool:
-        """'Maximum spare slice' check (paper §4.3): after adding the job,
-        some valid partition must give every job a memory-feasible slice."""
-        mems = [max(rj.job.profile.mem_gb, rj.job.min_mem_gb)
-                for rj in g.jobs.values()]
-        qoss = [rj.job.qos_min_slice for rj in g.jobs.values()]
-        mems.append(max(job.profile.mem_gb, job.min_mem_gb))
-        qoss.append(job.qos_min_slice)
-        m = len(mems)
-        order = sorted(range(m), key=lambda i: -mems[i])
-        for part in self.space.partitions_of_len(m):
-            sizes = sorted(part, reverse=True)
-            ok = all(
-                self.space.slice_mem_gb(sizes[r]) >= mems[i]
-                and sizes[r] >= qoss[i]
-                for r, i in enumerate(order))
-            if ok:
-                return True
-        return False
-
-    # ------------------------------------------------------- place / phases
-
-    def _place(self, g: _GPU, job: Job):
-        g.advance(self.t)
-        if job.start_time is None:
-            job.start_time = self.t
-        job.t_queue += max(0.0, self.t - job.queue_since)
-        g.jobs[job.jid] = _RJob(job)
-        pol = self.cfg.policy
-        if pol == "nopart":
-            g.phase = MIG_RUN
-            g.partition = (self.space.full_size,)
-            g.jobs[job.jid].slice_size = self.space.full_size
-        elif pol == "optsta":
-            self._optsta_assign(g)
-            g.phase = MIG_RUN
-        elif pol == "mpsonly":
-            g.phase = MPS_PROF          # progresses at MPS speeds forever
-            g.phase_end = float("inf")
-        elif pol == "oracle":
-            self._repartition(g, profile=False)
-        else:  # miso
-            cached = (self.profile_cache.get(job.mi_group)
-                      if job.mi_group is not None else None)
-            if cached is not None:
-                # multi-instance clone: skip MPS, straight to optimizer
-                # (paper §4.3: spawned instances are not re-profiled)
-                g.estimates[job.jid] = cached
-                self._repartition(g, profile=False, overhead=True)
-            else:
-                self._begin_profiling(g)
-        self._finalize(g)
-
-    def _begin_profiling(self, g: _GPU):
-        g.advance(self.t)
-        dead = g.ckpt_duration() if any(
-            rj.slice_size for rj in g.jobs.values()) else 0.0
-        g.phase = CKPT
-        g.phase_end = self.t + dead
-        g.needs_profile = True
-        for rj in g.jobs.values():
-            rj.slice_size = None
-        if dead == 0.0:
-            self._on_phase_end(g, schedule=False)
-
-    def _on_phase_end(self, g: _GPU, schedule=True):
-        g.advance(self.t)
-        if g.phase == CKPT and g.needs_profile:
-            g.phase = MPS_PROF
-            g.phase_end = self.t + 3 * self.cfg.mps_level_time_s \
-                * self.cfg.overhead_scale
-            g.needs_profile = False
-        elif g.phase == MPS_PROF and self.cfg.policy == "miso":
-            self._measure_and_partition(g)
-        elif g.phase == CKPT:
-            g.phase = MIG_RUN if g.jobs else IDLE
-        self._finalize(g)
-        if not schedule:
-            return
-
-    def _measure_and_partition(self, g: _GPU):
-        profs = [rj.job.profile_at(1.0 - rj.job.remaining / rj.job.work)
-                 for rj in g.jobs.values()]
-        jids = list(g.jobs)
-        qos = [self.jobs[j].qos_min_slice for j in jids]
-        mps_mat = None
-        if getattr(self.estimator, "needs_mps", False):
-            mps_mat = self.estimator.measure_mps(profs)
-        ests = self.estimator.estimate(profs, mps_mat, qos=qos)
-        for jid, est in zip(jids, ests):
-            g.estimates[jid] = est
-            grp = self.jobs[jid].mi_group
-            if grp is not None:
-                self.profile_cache[grp] = est
-        self._repartition(g, profile=False, overhead=True)
-
-    def _repartition(self, g: _GPU, profile: bool, overhead: bool = False):
-        """Run Algorithm 1 with current estimates; apply the partition."""
-        jids = list(g.jobs)
-        if not jids:
-            g.phase = IDLE
-            g.partition = ()
-            return
-        if self.cfg.policy == "oracle":
-            speeds = self.estimator.estimate(
-                [self.jobs[j].profile_at(1.0 - self.jobs[j].remaining /
-                                         self.jobs[j].work) for j in jids],
-                qos=[self.jobs[j].qos_min_slice for j in jids])
-        else:
-            speeds = [g.estimates.get(j, {self.space.full_size: 1.0})
-                      for j in jids]
-        choice = optimize_partition(self.space, speeds, require_feasible=True) \
-            or optimize_partition(self.space, speeds)
-        old = tuple(rj.slice_size for rj in g.jobs.values())
-        for jid, size in zip(jids, choice.partition):
-            g.jobs[jid].slice_size = size
-        g.partition = tuple(sorted(choice.partition, reverse=True))
-        if overhead and old != tuple(choice.partition):
-            g.phase = CKPT
-            g.phase_end = self.t + g.ckpt_duration()
-            g.needs_profile = False
-        else:
-            g.phase = MIG_RUN
-
-    # ---------------------------------------------------------- optsta
-
-    def _optsta_free_slices(self, g: _GPU) -> List[int]:
-        used = [rj.slice_size for rj in g.jobs.values() if rj.slice_size]
-        free = list(self.cfg.static_partition)
-        for s in used:
-            if s in free:
-                free.remove(s)
-        return free
-
-    def _optsta_assign(self, g: _GPU):
-        """(Re)assign this GPU's jobs to its fixed slices, best-first
-        (paper: OptSta migrates jobs to larger slices on availability)."""
-        jids = list(g.jobs)
-        speeds = []
-        for j in jids:
-            job = self.jobs[j]
-            prof = job.profile_at(1.0 - job.remaining / job.work)
-            sv = self.pm.speed_vector(prof)
-            speeds.append({s: (sv.get(s, 0.0)
-                               if self.space.slice_mem_gb(s) >= prof.mem_gb
-                               and s >= job.qos_min_slice else 0.0)
-                           for s in self.cfg.static_partition})
-        # best assignment of m jobs to the fixed multiset's best m slices
-        from repro.core.optimizer import _assign_dp
-        part = tuple(sorted(self.cfg.static_partition, reverse=True))
-        best_obj, best_perm = -1.0, None
-        for sub in set(itertools.combinations(part, len(jids))):
-            obj, perm = _assign_dp(sub, speeds)
-            if obj > best_obj:
-                best_obj, best_perm = obj, perm
-        for jid, size in zip(jids, best_perm):
-            g.jobs[jid].slice_size = size
-
-    # ---------------------------------------------------------- completion
-
-    def _on_completion(self, g: _GPU, job: Job):
-        job.finish_time = self.t
-        job.remaining = 0.0
-        del g.jobs[job.jid]
-        g.estimates.pop(job.jid, None)
-        self.completed.append(job.jid)
-        pol = self.cfg.policy
-        if pol == "nopart":
-            g.phase = IDLE
-            g.partition = ()
-        elif pol == "optsta":
-            self._optsta_assign(g)
-            g.phase = MIG_RUN if g.jobs else IDLE
-        elif pol == "mpsonly":
-            if not g.jobs:
-                g.phase = IDLE
-        elif pol == "oracle":
-            self._repartition(g, profile=False)
-        else:  # miso: re-optimize with known profiles (no new MPS needed)
-            if g.jobs and g.phase == MIG_RUN:
-                self._repartition(g, profile=False, overhead=True)
-            elif not g.jobs:
-                g.phase = IDLE
-                g.partition = ()
-        self._finalize(g)
-        self._admit()
-
-    # ---------------------------------------------------------- failures
-
-    def _on_failure(self, g: _GPU):
-        g.advance(self.t)
-        if g.jobs:
-            rollback = self.cfg.ckpt_interval_s
-            for rj in list(g.jobs.values()):
-                job = rj.job
-                job.remaining = min(job.work,
-                                    job.remaining + min(rollback, job.t_run))
-                job.queue_since = self.t
-                self.queue.insert(0, job.jid)
-            g.jobs.clear()
-            g.estimates.clear()
-        g.phase = IDLE
-        g.partition = ()
-        g.down_until = self.t + self.cfg.repair_s
-        g.stamp += 1
-        self._push(g.down_until, "repair", g.gid, g.stamp)
-        if self.cfg.gpu_mtbf_s > 0:
-            self._push(self.t + float(self.rng.exponential(self.cfg.gpu_mtbf_s)),
-                       "failure", g.gid)
-
-    # ---------------------------------------------------------- common
-
-    def _finalize(self, g: _GPU):
-        g.refresh_speeds()
-        self._schedule_gpu_events(g)
-
-
-def simulate(jobs, cfg: SimConfig, space: PartitionSpace, pm: PerfModel,
-             estimator=None) -> TraceMetrics:
-    import copy
-    jobs = copy.deepcopy(list(jobs))
-    return ClusterSim(jobs, cfg, space, pm, estimator).run()
+__all__ = [
+    "ClusterSim", "SimConfig", "simulate",
+    "GPU", "RJob", "IDLE", "CKPT", "MPS_PROF", "MIG_RUN",
+    "Policy", "register_policy", "get_policy", "available_policies",
+]

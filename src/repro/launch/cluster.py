@@ -9,7 +9,20 @@ partitioned into contiguous sub-mesh slices and each slice maps onto a
 ``launch.mesh.make_slice_mesh`` JAX mesh (printed per scheduling decision
 with ``--show-meshes``).
 
+``--policy`` accepts any registered scheduling policy
+(``repro/core/sim/policies/``):
+
+* ``nopart``    — exclusive whole-GPU execution (paper baseline)
+* ``optsta``    — best static MIG partition, never reconfigured
+* ``mpsonly``   — MPS co-location at a fixed level, no partitioning
+* ``miso``      — the paper's policy: MPS probe -> predict -> repartition
+* ``oracle``    — perfect knowledge, zero overhead (upper bound)
+* ``miso-frag`` — MISO preferring partitions that keep large contiguous
+                  slices free (fragmentation-aware)
+* ``srpt``      — MISO with a preemptive shortest-remaining-work queue
+
   PYTHONPATH=src python -m repro.launch.cluster --policy miso --jobs 60
+  PYTHONPATH=src python -m repro.launch.cluster --policy srpt --lam 20
   PYTHONPATH=src python -m repro.launch.cluster --space tpu --show-meshes
 """
 from __future__ import annotations
@@ -26,18 +39,17 @@ if "--show-meshes" in sys.argv:
 from repro.core.estimators import NoisyEstimator, OracleEstimator, UNetEstimator
 from repro.core.partitions import a100_mig_space, tpu_pod_space
 from repro.core.perfmodel import A100, TPU_V5E_POD, PerfModel
-from repro.core.simulator import SimConfig, simulate
+from repro.core.simulator import SimConfig, available_policies, simulate
 from repro.core.traces import generate_trace
 
 ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                         "artifacts", "predictor.npz")
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--space", choices=["a100", "tpu"], default="a100")
-    ap.add_argument("--policy", default="miso",
-                    choices=["nopart", "optsta", "mpsonly", "miso", "oracle"])
+    ap.add_argument("--policy", default="miso", choices=available_policies())
     ap.add_argument("--estimator", default="auto",
                     choices=["auto", "unet", "oracle", "noisy"])
     ap.add_argument("--sigma", type=float, default=0.05)
@@ -48,7 +60,11 @@ def main(argv=None):
     ap.add_argument("--mtbf", type=float, default=0.0,
                     help="accelerator MTBF seconds (fault injection)")
     ap.add_argument("--show-meshes", action="store_true")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     if args.space == "tpu":
         space, hw = tpu_pod_space(), TPU_V5E_POD

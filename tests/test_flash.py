@@ -3,6 +3,8 @@ naive reference over shape/window sweeps + hypothesis-generated cases."""
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.models import flash, modules

@@ -2,6 +2,8 @@
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention.ops import flash_attention

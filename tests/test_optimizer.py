@@ -3,6 +3,8 @@ literal brute-force enumeration; OOM/QoS zeros must steer the choice."""
 import random
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.optimizer import (optimize_partition,

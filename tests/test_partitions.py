@@ -1,5 +1,7 @@
 """Partition-space invariants (paper Table 1 / appendix semantics)."""
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.partitions import a100_mig_space, tpu_pod_space

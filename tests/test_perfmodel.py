@@ -1,5 +1,7 @@
 """Ground-truth performance model invariants."""
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.jobs import WORKLOADS

@@ -1,0 +1,214 @@
+"""Policy layer: golden-trace equivalence with the seed simulator, the
+registry, the optimizer memo cache, the zero-dead-time profiling path, and
+the two post-refactor policies (miso-frag / srpt)."""
+import json
+import os
+
+import pytest
+
+from repro.core.estimators import OracleEstimator
+from repro.core.jobs import WORKLOADS, Job
+from repro.core.optimizer import (clear_memo, memo_stats, optimize_partition)
+from repro.core.partitions import a100_mig_space
+from repro.core.perfmodel import PerfModel
+from repro.core.simulator import (ClusterSim, MPS_PROF, Policy, SimConfig,
+                                  available_policies, get_policy,
+                                  register_policy, simulate)
+from repro.core.traces import generate_trace
+
+SPACE = a100_mig_space()
+PM = PerfModel(SPACE)
+EST = OracleEstimator(PM)
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "simulator_golden.json")
+
+LEGACY = ("nopart", "optsta", "mpsonly", "miso", "oracle")
+NEW = ("miso-frag", "srpt")
+
+
+# ---------------------------------------------------------------- golden
+
+with open(GOLDEN) as f:
+    _GOLD = json.load(f)
+_GCFG = _GOLD["config"]
+
+
+@pytest.mark.parametrize("policy", LEGACY)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_golden_trace_equivalence(policy, seed):
+    """Every legacy policy reproduces the seed (pre-refactor) simulator's
+    metrics bit-for-bit on the recorded traces."""
+    jobs = generate_trace(_GCFG["n_jobs"], lam_s=_GCFG["lam_s"], seed=seed,
+                          max_duration_s=_GCFG["max_duration_s"])
+    m = simulate(jobs, SimConfig(n_gpus=_GCFG["n_gpus"], policy=policy),
+                 SPACE, PM, EST)
+    g = _GOLD[f"{policy}/seed{seed}"]
+    assert m.avg_jct == g["avg_jct"]
+    assert m.makespan == g["makespan"]
+    assert m.stp == g["stp"]
+    assert m.p50_jct == g["p50_jct"]
+    assert m.p90_jct == g["p90_jct"]
+    assert list(m.jcts) == g["jcts"]
+    assert m.breakdown == g["breakdown"]
+
+
+# --------------------------------------------------------------- registry
+
+def test_all_policies_registered():
+    for name in LEGACY + NEW:
+        assert name in available_policies()
+        assert get_policy(name).name == name
+
+
+def test_unknown_policy_raises():
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        get_policy("does-not-exist")
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        ClusterSim([], SimConfig(policy="does-not-exist"), SPACE, PM, EST)
+
+
+def test_duplicate_registration_raises():
+    with pytest.raises(ValueError, match="duplicate"):
+        @register_policy
+        class Clash(Policy):                       # noqa: F811
+            name = "miso"
+
+            def pick_gpu(self, job):
+                return None
+
+            def on_place(self, g, job):
+                pass
+
+            def on_completion(self, g, job):
+                pass
+    assert get_policy("miso").__name__ == "MisoPolicy"   # unchanged
+
+
+def test_cluster_cli_lists_all_policies():
+    """`--policy` choices (and therefore --help) include the new policies."""
+    from repro.launch.cluster import build_parser
+    action = next(a for a in build_parser()._actions
+                  if "--policy" in a.option_strings)
+    assert set(LEGACY + NEW) <= set(action.choices)
+
+
+# ----------------------------------------------------------- memo cache
+
+def test_optimizer_memo_identical_and_hits():
+    speeds = [{7: 1.0, 4: 0.7, 3: 0.6, 2: 0.4, 1: 0.2},
+              {7: 1.0, 4: 0.5, 3: 0.45, 2: 0.3, 1: 0.15}]
+    clear_memo()
+    cold = optimize_partition(SPACE, speeds)
+    warm = optimize_partition(SPACE, speeds)
+    plain = optimize_partition(SPACE, speeds, memo=False)
+    assert cold == warm == plain
+    stats = memo_stats()
+    assert stats["hits"] == 1 and stats["misses"] == 1
+
+
+# --------------------------------------------- zero-dead-time regression
+
+def _single_job_sim(policy="miso", n_jobs=1, **jobkw):
+    jobs = [Job(jid=i, profile=WORKLOADS[0], arrival=0.0, work=300.0, **jobkw)
+            for i in range(n_jobs)]
+    return ClusterSim(jobs, SimConfig(n_gpus=1, policy=policy), SPACE, PM,
+                      OracleEstimator(PM))
+
+
+def test_first_placement_has_zero_ckpt_dead_time():
+    """A job landing on a fresh GPU goes straight to MPS profiling: the
+    initial checkpoint window has zero duration and charges no ckpt time."""
+    sim = _single_job_sim()
+    sim._on_arrival(sim.jobs[0])
+    g = sim.gpus[0]
+    assert g.phase == MPS_PROF
+    assert g.phase_end == pytest.approx(3 * sim.cfg.mps_level_time_s)
+    assert sim.jobs[0].t_ckpt == 0.0
+
+
+def test_end_phase_schedule_flag_suppresses_events():
+    """`end_phase(schedule=False)` must not push GPU events — the caller
+    finalizes once afterwards (the seed simulator's `schedule=False` flag
+    was dead code that re-scheduled anyway)."""
+    sim = _single_job_sim()
+    sim._on_arrival(sim.jobs[0])
+    g = sim.gpus[0]
+    sim.t = g.phase_end                     # MPS window expires
+    stamp, nev = g.stamp, len(sim.events)
+    sim.end_phase(g, schedule=False)
+    assert g.stamp == stamp
+    assert len(sim.events) == nev
+    # default path does schedule (stamp bump invalidates stale events)
+    sim.t = g.phase_end
+    sim.end_phase(g)
+    assert g.stamp == stamp + 1
+
+
+# ------------------------------------------------------- new policies
+
+def test_largest_free_slice():
+    assert SPACE.largest_free_slice(()) == 7
+    assert SPACE.largest_free_slice((7,)) == 0
+    assert SPACE.largest_free_slice((4,)) == 2     # 4g excludes 3g
+    assert SPACE.largest_free_slice((3, 3)) == 0   # 3g's 4 mem slots fill it
+    assert SPACE.largest_free_slice((4, 2)) == 1
+
+
+def test_miso_frag_prefers_spare_contiguous_slices():
+    """Within the throughput tolerance, miso-frag trades a hair of STP for a
+    partition that keeps a slice free; plain MISO takes the raw optimum."""
+    speeds = [{7: 1.0, 4: 0.6, 3: 0.6, 2: 0.57, 1: 0.2},
+              {7: 1.0, 4: 0.6, 3: 0.6, 2: 0.57, 1: 0.2}]
+    plain = _single_job_sim("miso").policy.choose_partition(speeds)
+    frag = _single_job_sim("miso-frag").policy.choose_partition(speeds)
+    assert sorted(plain.partition, reverse=True) == [3, 3]      # obj 1.20
+    # (3,3) packs the GPU solid; every near-optimal alternative keeps room
+    assert SPACE.largest_free_slice(plain.partition) == 0
+    assert SPACE.largest_free_slice(frag.partition) > 0
+    assert frag.objective >= (1 - 0.05) * plain.objective
+
+
+@pytest.mark.parametrize("policy", NEW)
+def test_new_policies_complete_all_jobs(policy):
+    jobs = generate_trace(25, lam_s=30.0, seed=8, max_duration_s=1200)
+    m = simulate(jobs, SimConfig(n_gpus=2, policy=policy), SPACE, PM, EST)
+    assert len(m.jcts) == len(jobs)
+    assert min(m.relative_jcts) >= 1.0 - 1e-9
+
+
+def _run_direct(policy, jobs):
+    """Run without the deepcopy in simulate() so per-jid times are readable."""
+    sim = ClusterSim(jobs, SimConfig(n_gpus=1, policy=policy), SPACE, PM,
+                     OracleEstimator(PM))
+    sim.run()
+    return sim
+
+
+def test_srpt_avoids_head_of_line_blocking():
+    """A queue-head job that needs the full GPU must not stall a short job
+    behind it.  FCFS MISO blocks; SRPT lets the short one jump."""
+    prof = WORKLOADS[0]
+    def mk():
+        return [Job(jid=0, profile=prof, arrival=0.0, work=2000.0),
+                Job(jid=1, profile=prof, arrival=1.0, work=2000.0,
+                    qos_min_slice=7),                # full GPU only
+                Job(jid=2, profile=prof, arrival=2.0, work=100.0)]
+    fcfs = _run_direct("miso", mk())
+    srpt = _run_direct("srpt", mk())
+    jct = lambda sim, jid: sim.jobs[jid].finish_time - sim.jobs[jid].arrival
+    assert len(srpt.completed) == 3
+    assert jct(srpt, 2) < jct(fcfs, 2) * 0.5         # jid 2 jumped the queue
+
+
+def test_srpt_preempts_long_running_job():
+    """A short full-GPU job evicts a freshly-started giant instead of
+    waiting behind it; everything still completes."""
+    prof = WORKLOADS[0]
+    jobs = [Job(jid=0, profile=prof, arrival=0.0, work=20000.0),
+            Job(jid=1, profile=prof, arrival=500.0, work=100.0,
+                qos_min_slice=7)]
+    sim = _run_direct("srpt", jobs)
+    assert len(sim.completed) == 2
+    # the short job finished long before the giant's exclusive time was up
+    assert sim.jobs[1].finish_time - sim.jobs[1].arrival < 2000.0
+    assert sim.jobs[1].finish_time < sim.jobs[0].finish_time
