@@ -16,7 +16,7 @@ def main() -> None:
     fast = not args.full
 
     from benchmarks import components, paper_figs, roofline_table, \
-        simulation_figs
+        simulation_figs, sweeps
 
     benches = [
         paper_figs.fig2_takeaway1,
@@ -37,6 +37,7 @@ def main() -> None:
         simulation_figs.fig18_pred_error,
         simulation_figs.fig19_arrival_rate,
         simulation_figs.fault_tolerance,
+        sweeps.scenario_sweep,
         components.tpu_cluster,
         components.kernel_bench,
         roofline_table.roofline_table,

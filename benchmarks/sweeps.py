@@ -1,0 +1,41 @@
+"""Scenario-sweep trajectory rows: drive the parallel sweep engine over the
+heterogeneous-fleet scenario suite and reduce its JSON report to CSV rows.
+
+This is the consumer of the ``repro.launch.sweep`` schema — if the schema
+version moves, this file is the first thing that should notice.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import row
+from repro.launch.sweep import SCHEMA_VERSION, run_sweep
+
+
+def scenario_sweep(fast=True):
+    """Policy x scenario grid on the default mixed a100+h100 fleet."""
+    policies = ("miso", "srpt")
+    scenarios = ("bursty", "heavy_tail") if fast else (
+        "bursty", "diurnal", "heavy_tail", "flash_crowd", "mixed_qos")
+    seeds = list(range(1 if fast else 3))
+    n_jobs = 30 if fast else None
+
+    t0 = time.time()
+    report = run_sweep(policies, scenarios, seeds=seeds, n_jobs=n_jobs)
+    assert report["schema_version"] == SCHEMA_VERSION
+    dt = time.time() - t0
+
+    rows = []
+    n_cells = max(1, len(report["results"]))
+    for sc, by_policy in report["summary"].items():
+        for pol, agg in by_policy.items():
+            rows.append(row(
+                f"sweep_{sc}_{pol}", dt / n_cells,
+                f"avg_jct={agg['avg_jct_s_mean']:.0f}s;"
+                f"p90={agg['p90_jct_s_mean']:.0f}s;"
+                f"stp={agg['stp_mean']:.3f};"
+                f"fleet={report['results'][0]['fleet']}"))
+    rows.append(row("sweep_wallclock", dt,
+                    f"runs={len(report['results'])};"
+                    f"workers={report['config']['workers']}"))
+    return rows

@@ -73,11 +73,16 @@ class UNetEstimator:
     """MPS-profile -> U-Net -> linreg heads -> memory-constrained speeds."""
     needs_mps = True
 
-    def __init__(self, pm: PerfModel, params, heads, jobs: int = 7):
+    def __init__(self, pm: PerfModel, params, heads, jobs: int = 7,
+                 seed: int = 0):
         self.pm = pm
         self.net = unet_mod.UNet(params, jobs=jobs)
         self.heads = heads
         self.jobs = jobs
+        # fallback noise stream: advances across calls so every profiling
+        # window draws fresh measurement noise (callers normally thread the
+        # simulator's RNG through instead)
+        self._rng = np.random.default_rng(seed)
 
     @classmethod
     def from_artifact(cls, pm: PerfModel, path: str, jobs: int = 7):
@@ -93,11 +98,19 @@ class UNetEstimator:
         ``noise_sigma`` models measurement noise from a finite profiling
         window: speeds are averaged over ~10s per level, so shorter windows
         give noisier estimates (paper Fig 14 sensitivity: sigma ~ 1/sqrt(T)).
+        Pass the simulator's ``rng`` so successive windows draw independent
+        noise; without one, an instance-local stream is used (it advances
+        across calls — noise is never identical between windows).
         """
+        if len(profs) > self.jobs:
+            raise ValueError(
+                f"cannot profile {len(profs)} co-located jobs: this predictor "
+                f"was trained on matrices of at most {self.jobs} columns")
         padded = list(profs) + [DUMMY_PROFILE] * (self.jobs - len(profs))
         m = np.asarray(self.pm.mps_matrix(padded), dtype=np.float32)
         if noise_sigma > 0:
-            rng = rng or np.random.default_rng(0)
+            if rng is None:
+                rng = self._rng
             m = m * (1.0 + rng.normal(0.0, noise_sigma, size=m.shape)
                      ).astype(np.float32)
             m = np.maximum(m, 1e-6)

@@ -1,0 +1,121 @@
+"""Heterogeneous accelerator fleets.
+
+A fleet is a list of :class:`GPUSpec`, one per accelerator in the cluster:
+each carries its own partition space (slice menu), performance model,
+slice-speed estimator and a ``speed_scale`` converting that accelerator's
+normalized speeds into reference work-seconds (``Job.work`` is denominated
+in exclusive *A100* seconds, so an h100 with ``speed_scale=2.0`` burns two
+work-seconds per wall-second on its full slice).
+
+The engine, GPU state machine and every policy route all space/perf lookups
+through the resident GPU's spec — ``sim.space`` / ``sim.pm`` remain only as
+the homogeneous-compat default (the first spec).
+
+Fleet spec strings compose kinds with counts::
+
+    parse_fleet("a100:4+h100:4")   # 8 accelerators, two slice menus
+    parse_fleet("h100:2")
+    parse_fleet("a100:2+h100:2+tpu:1")
+
+All GPUs of one kind share a single spec object, so partition enumeration
+caches and the optimizer memo (whose key is already space-aware) are shared
+across the kind.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Sequence
+
+from repro.core.estimators import OracleEstimator
+from repro.core.partitions import (PartitionSpace, a100_mig_space,
+                                   h100_mig_space, tpu_pod_space)
+from repro.core.perfmodel import A100, H100, TPU_V5E_POD, PerfModel
+
+
+@dataclass
+class GPUSpec:
+    """Everything accelerator-type-specific about one cluster slot."""
+    kind: str
+    space: PartitionSpace
+    pm: PerfModel
+    estimator: object = None          # slice-speed estimator (None -> oracle)
+    speed_scale: float = 1.0          # full-slice speed vs. the reference GPU
+
+    def __post_init__(self):
+        if self.estimator is None:
+            self.estimator = OracleEstimator(self.pm)
+
+
+def _a100_spec() -> GPUSpec:
+    space = a100_mig_space()
+    return GPUSpec("a100", space, PerfModel(space, A100), speed_scale=1.0)
+
+
+def _h100_spec() -> GPUSpec:
+    space = h100_mig_space()
+    # ~2x achievable training throughput vs. A100 (memory-bound jobs track
+    # the ~2.2x HBM-bandwidth ratio, compute-bound ones land higher)
+    return GPUSpec("h100", space, PerfModel(space, H100), speed_scale=2.0)
+
+
+def _tpu_spec() -> GPUSpec:
+    space = tpu_pod_space()
+    # one v5e pod counts as one "accelerator"; its full slice dwarfs a GPU
+    return GPUSpec("tpu", space, PerfModel(space, TPU_V5E_POD),
+                   speed_scale=32.0)
+
+
+FLEET_KINDS: Dict[str, Callable[[], GPUSpec]] = {
+    "a100": _a100_spec,
+    "h100": _h100_spec,
+    "tpu": _tpu_spec,
+}
+
+
+def available_kinds() -> List[str]:
+    return sorted(FLEET_KINDS)
+
+
+def parse_fleet(spec: str) -> List[GPUSpec]:
+    """``"a100:4+h100:4"`` -> list of 8 GPUSpecs (one shared spec per kind)."""
+    out: List[GPUSpec] = []
+    cache: Dict[str, GPUSpec] = {}
+    for part in str(spec).replace(",", "+").split("+"):
+        part = part.strip()
+        if not part:
+            continue
+        kind, _, count = part.partition(":")
+        kind = kind.strip().lower()
+        if kind not in FLEET_KINDS:
+            raise ValueError(f"unknown accelerator kind {kind!r}; "
+                             f"available: {', '.join(available_kinds())}")
+        try:
+            n = int(count) if count else 1
+        except ValueError:
+            raise ValueError(f"bad count in fleet spec segment {part!r}") from None
+        if n <= 0:
+            raise ValueError(f"fleet spec segment {part!r} must have count >= 1")
+        if kind not in cache:
+            cache[kind] = FLEET_KINDS[kind]()
+        out.extend([cache[kind]] * n)
+    if not out:
+        raise ValueError(f"empty fleet spec {spec!r}")
+    return out
+
+
+def homogeneous_fleet(space: PartitionSpace, pm: PerfModel, estimator,
+                      n: int) -> List[GPUSpec]:
+    """The legacy single-space cluster as a fleet (shared spec, scale 1)."""
+    spec = GPUSpec(space.name, space, pm, estimator)
+    return [spec] * n
+
+
+def describe_fleet(fleet: Sequence[GPUSpec]) -> str:
+    """Stable compact rendering, e.g. ``"a100:4+h100:4"`` (insertion order)."""
+    runs: List[List] = []
+    for s in fleet:
+        if runs and runs[-1][0] == s.kind:
+            runs[-1][1] += 1
+        else:
+            runs.append([s.kind, 1])
+    return "+".join(f"{k}:{n}" for k, n in runs)

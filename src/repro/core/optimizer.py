@@ -118,9 +118,14 @@ def optimize_partition(space: PartitionSpace,
 
 def optimize_partition_bruteforce(space: PartitionSpace,
                                   speeds: Sequence[Dict[int, float]]):
-    """Literal Algorithm 1: enumerate every ordered x (partition x assignment)."""
+    """Literal Algorithm 1: enumerate every ordered x (partition x assignment).
+
+    Like the DP path, an all-zero speed vector still yields a (infeasible)
+    choice with objective 0.0 rather than ``None`` — the two are test oracles
+    for each other, so they must agree on all-OOM job mixes.
+    """
     m = len(speeds)
-    best_obj, best_config = 0.0, None
+    best_obj, best_config = -1.0, None
     for part in space.partitions_of_len(m):
         for perm in set(itertools.permutations(part)):
             obj = sum(speeds[j].get(perm[j], 0.0) for j in range(m))

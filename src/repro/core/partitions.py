@@ -134,6 +134,22 @@ def a100_mig_space() -> PartitionSpace:
                           exclusions=[frozenset({4, 3})], name="a100-mig")
 
 
+def h100_mig_space() -> PartitionSpace:
+    """H100-80GB MIG menu: same GPC topology and 4g/3g exclusion as the A100
+    (7 compute slots over 8 memory slots), but every slice carries twice the
+    memory — the heterogeneity that makes a mixed fleet interesting, since a
+    job OOM-ing on a100 1g.5gb fits h100 1g.10gb."""
+    slices = [
+        SliceType(7, "7g.80gb", 7, 8, 80.0, 1, 1.0),
+        SliceType(4, "4g.40gb", 4, 4, 40.0, 1, 0.5),
+        SliceType(3, "3g.40gb", 3, 4, 40.0, 2, 0.5),
+        SliceType(2, "2g.20gb", 2, 2, 20.0, 3, 0.25),
+        SliceType(1, "1g.10gb", 1, 1, 10.0, 7, 0.125),
+    ]
+    return PartitionSpace(slices, total_compute=7, total_mem=8,
+                          exclusions=[frozenset({4, 3})], name="h100-mig")
+
+
 def tpu_pod_space(rows: int = 16, cols: int = 16,
                   hbm_per_chip_gb: float = 16.0) -> PartitionSpace:
     """16x16 v5e pod sliced into contiguous row ranges, 2 rows per unit."""

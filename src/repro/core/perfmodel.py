@@ -42,6 +42,8 @@ class Hardware:
 
 
 A100 = Hardware("a100-40gb", peak_flops=312e12, hbm_bw=1.555e12, mem_gb=40.0)
+H100 = Hardware("h100-80gb", peak_flops=989e12, hbm_bw=3.35e12, mem_gb=80.0,
+                mps_bw_loss=0.12)
 # one v5e pod as "one accelerator": 256 chips
 TPU_V5E_POD = Hardware("tpu-v5e-pod", peak_flops=256 * 197e12,
                        hbm_bw=256 * 819e9, mem_gb=256 * 16.0,

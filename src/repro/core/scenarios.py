@@ -1,0 +1,193 @@
+"""Scenario layer: named (arrival process x workload mix x fleet) bundles.
+
+The paper evaluates on Poisson arrivals over one homogeneous cluster; real
+multi-tenant fleets (Flex-MIG; online fragmentation-aware MIG scheduling)
+see bursty, diurnal and heavy-tailed demand over mixed hardware.  A
+:class:`Scenario` packages one such setting so every policy PR is evaluated
+on the same grid: it names an arrival process, job-mix knobs (QoS /
+multi-instance / memory-constraint fractions, duration tail) and a default
+fleet spec string (see :mod:`repro.core.fleet`).
+
+Arrival processes (all seeded, all returning sorted times):
+
+* ``poisson``      — the paper's baseline (exponential inter-arrivals)
+* ``bursty``       — ON/OFF bursts: batches of tightly-spaced arrivals
+* ``diurnal``      — sinusoidal-rate nonhomogeneous Poisson (thinning)
+* ``heavy_tail``   — Pareto inter-arrivals + heavier lognormal work tail
+* ``flash_crowd``  — Poisson background + a near-instant mid-trace spike
+* ``mixed_qos``    — Poisson with QoS / multi-instance / mem-constrained mix
+* ``smoke``        — tiny fast trace for CI
+
+Usage::
+
+    sc = get_scenario("bursty")
+    jobs = sc.make_jobs(seed=0)
+    fleet = parse_fleet(sc.fleet)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.jobs import Job
+from repro.core.traces import generate_trace
+
+DEFAULT_FLEET = "a100:2+h100:2"
+
+
+# --------------------------------------------------------------- arrivals
+
+def poisson_arrivals(rng: np.random.Generator, n: int,
+                     mean_iat: float) -> np.ndarray:
+    return np.cumsum(rng.exponential(mean_iat, size=n))
+
+
+def bursty_arrivals(rng: np.random.Generator, n: int, mean_iat: float,
+                    burst_factor: float = 10.0, p_burst: float = 0.3,
+                    burst_len: tuple = (4, 12)) -> np.ndarray:
+    """ON/OFF process: with probability ``p_burst`` a batch of ``burst_len``
+    jobs arrives ``burst_factor``x faster than the background rate."""
+    out: List[float] = []
+    t = 0.0
+    while len(out) < n:
+        if rng.random() < p_burst:
+            k = int(rng.integers(burst_len[0], burst_len[1] + 1))
+            for _ in range(min(k, n - len(out))):
+                t += float(rng.exponential(mean_iat / burst_factor))
+                out.append(t)
+        else:
+            t += float(rng.exponential(mean_iat))
+            out.append(t)
+    return np.asarray(out)
+
+
+def diurnal_arrivals(rng: np.random.Generator, n: int, mean_iat: float,
+                     period_s: float = 4 * 3600.0,
+                     amplitude: float = 0.8) -> np.ndarray:
+    """Nonhomogeneous Poisson with rate (1 + A sin(2πt/T)) / mean_iat, drawn
+    by Lewis-Shedler thinning."""
+    lam_max = (1.0 + amplitude) / mean_iat
+    out: List[float] = []
+    t = 0.0
+    while len(out) < n:
+        t += float(rng.exponential(1.0 / lam_max))
+        lam_t = (1.0 + amplitude * math.sin(2 * math.pi * t / period_s)) / mean_iat
+        if rng.random() < lam_t / lam_max:
+            out.append(t)
+    return np.asarray(out)
+
+
+def heavy_tail_arrivals(rng: np.random.Generator, n: int, mean_iat: float,
+                        alpha: float = 1.5) -> np.ndarray:
+    """Pareto(α) inter-arrivals scaled to mean ``mean_iat`` (α<=2 gives the
+    infinite-variance burst-and-lull pattern of production traces)."""
+    iats = mean_iat * (alpha - 1.0) * rng.pareto(alpha, size=n)
+    return np.cumsum(iats)
+
+
+def flash_crowd_arrivals(rng: np.random.Generator, n: int, mean_iat: float,
+                         crowd_frac: float = 0.35,
+                         crowd_speedup: float = 50.0) -> np.ndarray:
+    """Poisson background with ``crowd_frac`` of all jobs slamming in near
+    the middle of the trace inside a window ``crowd_speedup``x denser."""
+    n_crowd = max(1, int(n * crowd_frac))
+    n_base = n - n_crowd
+    base = np.cumsum(rng.exponential(mean_iat, size=max(n_base, 1)))
+    t_spike = float(base[len(base) // 2])
+    crowd = t_spike + np.cumsum(
+        rng.exponential(mean_iat / crowd_speedup, size=n_crowd))
+    out = np.sort(np.concatenate([base[:n_base], crowd]))
+    return out
+
+
+# --------------------------------------------------------------- scenarios
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str
+    make: Callable[..., List[Job]]       # (seed, n_jobs) -> jobs
+    fleet: str = DEFAULT_FLEET           # default fleet spec string
+    n_jobs: int = 60                     # default trace length
+
+    def make_jobs(self, seed: int, n_jobs: Optional[int] = None) -> List[Job]:
+        return self.make(seed, n_jobs or self.n_jobs)
+
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register_scenario(sc: Scenario) -> Scenario:
+    if sc.name in _REGISTRY:
+        raise ValueError(f"duplicate scenario name {sc.name!r}")
+    _REGISTRY[sc.name] = sc
+    return sc
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario {name!r}; "
+            f"available: {', '.join(available_scenarios())}") from None
+
+
+def available_scenarios() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def _with_arrivals(arrival_fn, mean_iat: float, seed_salt: int, **trace_kw):
+    """Build a make() that draws arrivals from ``arrival_fn`` and composes
+    jobs via generate_trace.  Separate RNG streams for arrivals vs. job
+    attributes, so the same seed yields the same workload mix across
+    scenarios (only the timing differs)."""
+    def make(seed: int, n_jobs: int) -> List[Job]:
+        rng = np.random.default_rng((seed_salt, seed))
+        arrivals = arrival_fn(rng, n_jobs, mean_iat)
+        return generate_trace(n_jobs, seed=seed, arrival_times=arrivals,
+                              **trace_kw)
+    return make
+
+
+register_scenario(Scenario(
+    "smoke", "tiny Poisson trace for CI smoke runs",
+    lambda seed, n: generate_trace(n, lam_s=20.0, seed=seed,
+                                   max_duration_s=600.0),
+    fleet="a100:2", n_jobs=10))
+
+register_scenario(Scenario(
+    "poisson", "the paper's baseline arrival process",
+    lambda seed, n: generate_trace(n, lam_s=45.0, seed=seed,
+                                   max_duration_s=2400.0)))
+
+register_scenario(Scenario(
+    "bursty", "ON/OFF bursts of tightly-spaced arrivals",
+    _with_arrivals(bursty_arrivals, 60.0, seed_salt=101,
+                   max_duration_s=2400.0)))
+
+register_scenario(Scenario(
+    "diurnal", "sinusoidal-rate day/night demand cycle",
+    _with_arrivals(diurnal_arrivals, 45.0, seed_salt=202,
+                   max_duration_s=2400.0)))
+
+register_scenario(Scenario(
+    "heavy_tail", "Pareto arrivals + heavy-tailed job durations",
+    _with_arrivals(heavy_tail_arrivals, 60.0, seed_salt=303,
+                   max_duration_s=4800.0, duration_sigma=1.6)))
+
+register_scenario(Scenario(
+    "flash_crowd", "steady background plus a mid-trace arrival spike",
+    _with_arrivals(flash_crowd_arrivals, 45.0, seed_salt=404,
+                   max_duration_s=2400.0)))
+
+register_scenario(Scenario(
+    "mixed_qos", "Poisson with QoS floors, multi-instance and declared-"
+                 "memory jobs in the mix",
+    lambda seed, n: generate_trace(n, lam_s=45.0, seed=seed,
+                                   max_duration_s=2400.0, qos_frac=0.3,
+                                   multi_instance_frac=0.15,
+                                   mem_constraint_frac=0.3)))

@@ -7,13 +7,25 @@ reaction to completions — is delegated to the :class:`~repro.core.sim
 .policies.Policy` named by ``SimConfig.policy`` (see
 ``repro/core/sim/policies/`` for the built-ins and how to add one).
 
+Fleets may be heterogeneous: pass ``fleet=`` (a list of
+:class:`~repro.core.fleet.GPUSpec`, e.g. from ``fleet.parse_fleet
+("a100:4+h100:4")``) and every GPU carries its own partition space,
+performance model and estimator.  The legacy ``(space, pm, estimator)``
+arguments build a homogeneous fleet and stay bit-identical to the
+pre-fleet simulator; ``sim.space`` / ``sim.pm`` / ``sim.estimator`` remain
+as the first spec's objects for homogeneous callers.
+
 Fault tolerance: optional Poisson GPU failures re-queue affected jobs with
-progress rolled back to the last periodic checkpoint; the failed GPU is out
-for ``repair_s``.  The policy's normal arrival path handles re-admission —
-job-level fault tolerance is the scheduler itself.
+progress rolled back to the last checkpoint *of the current placement*
+(periodic ones every ``ckpt_interval_s`` of progressing time, plus any CKPT
+phase the GPU actually executed); the destroyed work is speed-weighted, not
+wall-clock.  The failed GPU is out for ``repair_s``.  The policy's normal
+arrival path handles re-admission — job-level fault tolerance is the
+scheduler itself.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import itertools
 from dataclasses import dataclass
@@ -22,6 +34,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.estimators import OracleEstimator
+from repro.core.fleet import GPUSpec, homogeneous_fleet
 from repro.core.jobs import Job
 from repro.core.metrics import TraceMetrics, compute_metrics
 from repro.core.partitions import PartitionSpace
@@ -48,22 +61,46 @@ class SimConfig:
     repair_s: float = 600.0
     ckpt_interval_s: float = 600.0   # periodic checkpoint for fault rollback
     seed: int = 0
+    # profiling measurement noise (paper Fig 14): sigma of the relative error
+    # on each MPS-matrix entry; drawn from the simulator RNG per window
+    mps_noise_sigma: float = 0.0
 
 
 class ClusterSim:
     def __init__(self, jobs: Sequence[Job], cfg: SimConfig,
-                 space: PartitionSpace, pm: PerfModel, estimator=None):
+                 space: Optional[PartitionSpace] = None,
+                 pm: Optional[PerfModel] = None, estimator=None,
+                 fleet: Optional[Sequence[GPUSpec]] = None):
+        if fleet is None:
+            if space is None or pm is None:
+                raise TypeError("ClusterSim needs either (space, pm) or fleet=")
+            fleet = homogeneous_fleet(space, pm,
+                                      estimator or OracleEstimator(pm),
+                                      cfg.n_gpus)
+        else:
+            fleet = list(fleet)
+            if cfg.n_gpus != len(fleet):
+                # the fleet defines the cluster size; keep the caller's
+                # config object untouched
+                cfg = dataclasses.replace(cfg, n_gpus=len(fleet))
         self.cfg = cfg
-        self.space = space
-        self.pm = pm
-        self.estimator = estimator or OracleEstimator(pm)
+        self.fleet: List[GPUSpec] = list(fleet)
+        # homogeneous-compat defaults (first spec); per-GPU code must use
+        # g.space / g.pm / g.estimator
+        self.space = self.fleet[0].space
+        self.pm = self.fleet[0].pm
+        self.estimator = self.fleet[0].estimator
         self.jobs = {j.jid: j for j in jobs}
         self.queue: List[int] = []
-        self.gpus = [GPU(i, self) for i in range(cfg.n_gpus)]
+        self.gpus = [GPU(i, self, spec) for i, spec in enumerate(self.fleet)]
         self.events: List[tuple] = []
         self.t = 0.0
         self.rng = np.random.default_rng(cfg.seed)
-        self.profile_cache: Dict[str, Dict[int, float]] = {}  # multi-instance
+        # separate stream for profiling measurement noise: common random
+        # numbers across sensitivity arms — varying mps_noise_sigma must not
+        # perturb the failure-injection schedule drawn from self.rng
+        self.noise_rng = np.random.default_rng((cfg.seed, 0xA100))
+        self.profile_cache: Dict[tuple, Dict[int, float]] = {}  # (mi_group, space)
         self.completed: List[int] = []
         self._counter = itertools.count()
         self.policy = get_policy(cfg.policy)(self)
@@ -123,7 +160,8 @@ class ClusterSim:
                                self.cfg.n_gpus)
 
     # ----------------------------------------------- placement constraints
-    # Shared feasibility checks usable by any policy's pick_gpu.
+    # Shared feasibility checks usable by any policy's pick_gpu; all are
+    # evaluated against the candidate GPU's own space / perf model.
 
     def up_gpus(self):
         """GPUs currently in service (not failed / under repair)."""
@@ -132,7 +170,7 @@ class ClusterSim:
     def mem_ok(self, g: GPU, job: Job, exclude: Optional[int] = None) -> bool:
         total = sum(rj.job.profile.mem_gb for jid, rj in g.jobs.items()
                     if jid != exclude)
-        return total + job.profile.mem_gb <= self.pm.hw.mem_gb
+        return total + job.profile.mem_gb <= g.pm.hw.mem_gb
 
     def spare_slice_ok(self, g: GPU, job: Job,
                        exclude: Optional[int] = None) -> bool:
@@ -147,10 +185,10 @@ class ClusterSim:
         qoss.append(job.qos_min_slice)
         m = len(mems)
         order = sorted(range(m), key=lambda i: -mems[i])
-        for part in self.space.partitions_of_len(m):
+        for part in g.space.partitions_of_len(m):
             sizes = sorted(part, reverse=True)
             ok = all(
-                self.space.slice_mem_gb(sizes[r]) >= mems[i]
+                g.space.slice_mem_gb(sizes[r]) >= mems[i]
                 and sizes[r] >= qoss[i]
                 for r, i in enumerate(order))
             if ok:
@@ -182,6 +220,12 @@ class ClusterSim:
         callers that finalize the GPU themselves right after (e.g. the
         zero-dead-time checkpoint in MISO's ``begin_profiling``)."""
         g.advance(self.t)
+        if g.phase == CKPT:
+            # the checkpoint window ran to completion: the save is durable,
+            # so resident jobs have nothing left at risk
+            for rj in g.jobs.values():
+                rj.since_ckpt_t = 0.0
+                rj.since_ckpt_work = 0.0
         self.policy.on_phase_end(g)
         self.finalize(g, schedule=schedule)
 
@@ -200,13 +244,20 @@ class ClusterSim:
     def _on_failure(self, g: GPU):
         g.advance(self.t)
         if g.jobs:
-            rollback = self.cfg.ckpt_interval_s
-            for rj in list(g.jobs.values()):
+            requeued = []
+            for rj in g.jobs.values():
                 job = rj.job
+                # roll back to the last checkpoint of THIS placement: the
+                # destroyed progress is the speed-weighted work accrued since
+                # then (RJob.since_ckpt_work), never wall-clock seconds and
+                # never cumulative t_run across earlier placements
                 job.remaining = min(job.work,
-                                    job.remaining + min(rollback, job.t_run))
+                                    job.remaining + rj.since_ckpt_work)
                 job.queue_since = self.t
-                self.queue.insert(0, job.jid)
+                requeued.append(job.jid)
+            # victims go to the queue head without reversing their relative
+            # (placement) order
+            self.queue[:0] = requeued
             g.jobs.clear()
             g.estimates.clear()
         g.phase = IDLE
@@ -226,8 +277,9 @@ class ClusterSim:
             self._schedule_gpu_events(g)
 
 
-def simulate(jobs, cfg: SimConfig, space: PartitionSpace, pm: PerfModel,
-             estimator=None) -> TraceMetrics:
+def simulate(jobs, cfg: SimConfig, space: Optional[PartitionSpace] = None,
+             pm: Optional[PerfModel] = None, estimator=None,
+             fleet: Optional[Sequence[GPUSpec]] = None) -> TraceMetrics:
     import copy
     jobs = copy.deepcopy(list(jobs))
-    return ClusterSim(jobs, cfg, space, pm, estimator).run()
+    return ClusterSim(jobs, cfg, space, pm, estimator, fleet=fleet).run()

@@ -11,6 +11,18 @@ Each GPU is a small state machine over phases:
 Job accounting (paper Fig 12): every second of a job's life lands in exactly
 one of {queue, ckpt, mps, run} — ``advance`` charges elapsed time to the
 bucket matching the current phase.
+
+Heterogeneous fleets: every GPU carries its own :class:`~repro.core.fleet
+.GPUSpec` — partition space, performance model, estimator and speed scale —
+so a mixed a100/h100/tpu cluster needs no global ``sim.space``/``sim.pm``.
+
+Fault-rollback bookkeeping: periodic checkpoints (every
+``cfg.ckpt_interval_s`` of *progressing* wall time, taken asynchronously at
+zero cost) bound how much work a GPU failure destroys.  ``advance`` tracks
+each resident job's un-checkpointed work (``RJob.since_ckpt_work``,
+speed-weighted, reset whenever the GPU actually sits in a CKPT phase or a
+periodic boundary passes), which is exactly what the engine re-adds to
+``job.remaining`` on failure.
 """
 from __future__ import annotations
 
@@ -20,6 +32,7 @@ from typing import TYPE_CHECKING, Dict, Optional, Tuple
 from repro.core.jobs import Job
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from repro.core.fleet import GPUSpec
     from repro.core.sim.engine import ClusterSim
 
 IDLE, CKPT, MPS_PROF, MIG_RUN = "idle", "ckpt", "mps", "mig"
@@ -31,12 +44,19 @@ class RJob:
     job: Job
     slice_size: Optional[int] = None
     speed: float = 0.0               # work-seconds per second, right now
+    since_ckpt_t: float = 0.0        # progressing seconds since last ckpt
+    since_ckpt_work: float = 0.0     # un-checkpointed work-seconds (at risk)
 
 
 class GPU:
-    def __init__(self, gid: int, sim: "ClusterSim"):
+    def __init__(self, gid: int, sim: "ClusterSim", spec: "GPUSpec"):
         self.gid = gid
         self.sim = sim
+        self.spec = spec
+        self.space = spec.space
+        self.pm = spec.pm
+        self.estimator = spec.estimator
+        self.speed_scale = spec.speed_scale
         self.phase = IDLE
         self.phase_end = 0.0
         self.jobs: Dict[int, RJob] = {}
@@ -54,14 +74,30 @@ class GPU:
         if dt <= 0:
             self.last_update = t
             return
+        interval = self.sim.cfg.ckpt_interval_s
         for rj in self.jobs.values():
-            if self.phase == MIG_RUN:
-                rj.job.remaining -= rj.speed * dt
-                rj.job.t_run += dt
-            elif self.phase == MPS_PROF:
-                rj.job.remaining -= rj.speed * dt
-                rj.job.t_mps += dt
+            if self.phase in (MIG_RUN, MPS_PROF):
+                done = rj.speed * dt
+                rj.job.remaining -= done
+                if self.phase == MIG_RUN:
+                    rj.job.t_run += dt
+                else:
+                    rj.job.t_mps += dt
+                if interval > 0:
+                    rj.since_ckpt_t += dt
+                    rj.since_ckpt_work += done
+                    while rj.since_ckpt_t >= interval:
+                        # a periodic checkpoint boundary fell inside this
+                        # window; the boundary lies within the current dt
+                        # (the pre-add remainder was < interval), so the
+                        # still-at-risk tail ran at the current speed
+                        rj.since_ckpt_t -= interval
+                        rj.since_ckpt_work = rj.speed * rj.since_ckpt_t
             elif self.phase == CKPT:
+                # the save is in flight, not durable: only a CKPT window that
+                # runs to completion commits (engine.end_phase resets the
+                # since_ckpt counters); a failure mid-save loses everything
+                # back to the last *completed* checkpoint
                 rj.job.t_ckpt += dt
             else:
                 rj.job.t_queue += dt
@@ -73,15 +109,15 @@ class GPU:
         if self.phase == MIG_RUN:
             for rj in rjs:
                 prof = rj.job.profile_at(1.0 - rj.job.remaining / rj.job.work)
-                rj.speed = (sim.pm.slice_speed(prof, rj.slice_size)
+                rj.speed = (self.speed_scale * self.pm.slice_speed(prof, rj.slice_size)
                             if rj.slice_size else 0.0)
         elif self.phase == MPS_PROF:
             if rjs:
                 profs = [rj.job.profile_at(1.0 - rj.job.remaining / rj.job.work)
                          for rj in rjs]
-                speeds = sim.policy.mps_phase_speeds(profs)
+                speeds = sim.policy.mps_phase_speeds(profs, g=self)
                 for rj, s in zip(rjs, speeds):
-                    rj.speed = float(s)
+                    rj.speed = self.speed_scale * float(s)
         else:
             for rj in rjs:
                 rj.speed = 0.0

@@ -108,10 +108,13 @@ class Policy(ABC):
 
     # ------------------------------------------------------------ MPS model
 
-    def mps_phase_speeds(self, profs: Sequence[JobProfile]):
-        """Per-job progress rates while the GPU is in an MPS phase.  The
-        profiling sweep runs 3 levels back-to-back, so use the mean."""
-        mats = [self.sim.pm.mps_speeds(profs, lv) for lv in MPS_LEVELS]
+    def mps_phase_speeds(self, profs: Sequence[JobProfile],
+                         g: Optional[GPU] = None):
+        """Per-job progress rates while ``g`` is in an MPS phase.  The
+        profiling sweep runs 3 levels back-to-back, so use the mean.
+        ``g=None`` falls back to the homogeneous default perf model."""
+        pm = g.pm if g is not None else self.sim.pm
+        mats = [pm.mps_speeds(profs, lv) for lv in MPS_LEVELS]
         return np.mean(np.asarray(mats), axis=0)
 
     # -------------------------------------------------- partition machinery
@@ -120,12 +123,15 @@ class Policy(ABC):
     def partition_speeds(self, g: GPU, jids: Sequence[int]) -> List[Dict[int, float]]:
         """Per-job slice-speed estimates used by the optimizer; the default
         reads the estimates cached on the GPU at profiling time."""
-        return [g.estimates.get(j, {self.sim.space.full_size: 1.0})
+        return [g.estimates.get(j, {g.space.full_size: 1.0})
                 for j in jids]
 
-    def choose_partition(self, speeds: Sequence[Dict[int, float]]):
-        """Algorithm 1: feasible-first, fall back to best-effort."""
-        space = self.sim.space
+    def choose_partition(self, speeds: Sequence[Dict[int, float]],
+                         space=None):
+        """Algorithm 1: feasible-first, fall back to best-effort.  ``space``
+        is the target GPU's partition space (defaults to the homogeneous
+        one)."""
+        space = space if space is not None else self.sim.space
         return optimize_partition(space, speeds, require_feasible=True) \
             or optimize_partition(space, speeds)
 
@@ -139,7 +145,8 @@ class Policy(ABC):
             g.phase = IDLE
             g.partition = ()
             return
-        choice = self.choose_partition(self.partition_speeds(g, jids))
+        choice = self.choose_partition(self.partition_speeds(g, jids),
+                                       space=g.space)
         old = tuple(rj.slice_size for rj in g.jobs.values())
         for jid, size in zip(jids, choice.partition):
             g.jobs[jid].slice_size = size

@@ -26,11 +26,13 @@ class MisoPolicy(Policy):
         sim = self.sim
         return self.least_loaded(
             [g for g in sim.up_gpus()
-             if len(g.jobs) < sim.space.max_jobs and sim.mem_ok(g, job)
+             if len(g.jobs) < g.space.max_jobs and sim.mem_ok(g, job)
              and sim.spare_slice_ok(g, job)])
 
     def on_place(self, g: GPU, job: Job):
-        cached = (self.sim.profile_cache.get(job.mi_group)
+        # profiles are space-specific: a clone landing on a different
+        # accelerator kind must not reuse another kind's slice estimates
+        cached = (self.sim.profile_cache.get((job.mi_group, g.space.name))
                   if job.mi_group is not None else None)
         if cached is not None:
             # multi-instance clone: skip MPS, straight to optimizer
@@ -86,12 +88,16 @@ class MisoPolicy(Policy):
         jids = list(g.jobs)
         qos = [sim.jobs[j].qos_min_slice for j in jids]
         mps_mat = None
-        if getattr(sim.estimator, "needs_mps", False):
-            mps_mat = sim.estimator.measure_mps(profs)
-        ests = sim.estimator.estimate(profs, mps_mat, qos=qos)
+        if getattr(g.estimator, "needs_mps", False):
+            # thread the simulator's noise stream so every profiling window
+            # draws fresh measurement noise (Fig 14 sensitivity) without
+            # disturbing the main RNG's failure-injection schedule
+            mps_mat = g.estimator.measure_mps(
+                profs, noise_sigma=sim.cfg.mps_noise_sigma, rng=sim.noise_rng)
+        ests = g.estimator.estimate(profs, mps_mat, qos=qos)
         for jid, est in zip(jids, ests):
             g.estimates[jid] = est
             grp = sim.jobs[jid].mi_group
             if grp is not None:
-                sim.profile_cache[grp] = est
+                sim.profile_cache[(grp, g.space.name)] = est
         self.repartition(g, overhead=True)

@@ -29,8 +29,9 @@ class MisoFragPolicy(MisoPolicy):
 
     frag_tolerance = 0.05      # accept up to 5% predicted-STP loss for space
 
-    def choose_partition(self, speeds: Sequence[Dict[int, float]]):
-        space = self.sim.space
+    def choose_partition(self, speeds: Sequence[Dict[int, float]],
+                         space=None):
+        space = space if space is not None else self.sim.space
         m = len(speeds)
         cands = []                       # (obj, feasible, spare, perm, part)
         for part in space.partitions_of_len(m):

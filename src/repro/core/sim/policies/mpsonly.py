@@ -30,5 +30,6 @@ class MpsOnlyPolicy(Policy):
         if not g.jobs:
             g.phase = IDLE
 
-    def mps_phase_speeds(self, profs: Sequence[JobProfile]):
-        return self.sim.pm.mps_speeds(profs, self.sim.cfg.mps_only_level)
+    def mps_phase_speeds(self, profs: Sequence[JobProfile], g=None):
+        pm = g.pm if g is not None else self.sim.pm
+        return pm.mps_speeds(profs, self.sim.cfg.mps_only_level)

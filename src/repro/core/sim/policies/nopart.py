@@ -21,8 +21,8 @@ class NoPartPolicy(Policy):
 
     def on_place(self, g: GPU, job: Job):
         g.phase = MIG_RUN
-        g.partition = (self.sim.space.full_size,)
-        g.jobs[job.jid].slice_size = self.sim.space.full_size
+        g.partition = (g.space.full_size,)
+        g.jobs[job.jid].slice_size = g.space.full_size
 
     def on_completion(self, g: GPU, job: Job):
         g.phase = IDLE

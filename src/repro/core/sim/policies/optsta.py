@@ -19,12 +19,11 @@ class OptStaPolicy(Policy):
     name = "optsta"
 
     def pick_gpu(self, job: Job) -> Optional[GPU]:
-        space = self.sim.space
         cands = []
         for g in self.sim.up_gpus():
             fits = [s for s in self._free_slices(g)
-                    if space.slice_mem_gb(s) >= max(job.profile.mem_gb,
-                                                    job.min_mem_gb)
+                    if g.space.slice_mem_gb(s) >= max(job.profile.mem_gb,
+                                                      job.min_mem_gb)
                     and s >= job.qos_min_slice]
             if fits:
                 cands.append(g)
@@ -40,9 +39,14 @@ class OptStaPolicy(Policy):
 
     # ------------------------------------------------------------ internals
 
+    def _menu_sizes(self, g: GPU) -> List[int]:
+        """The static partition restricted to sizes this GPU's slice menu
+        actually offers."""
+        return [s for s in self.sim.cfg.static_partition if s in g.space.slices]
+
     def _free_slices(self, g: GPU) -> List[int]:
         used = [rj.slice_size for rj in g.jobs.values() if rj.slice_size]
-        free = list(self.sim.cfg.static_partition)
+        free = self._menu_sizes(g)
         for s in used:
             if s in free:
                 free.remove(s)
@@ -55,17 +59,18 @@ class OptStaPolicy(Policy):
         jids = list(g.jobs)
         if not jids:
             return
+        sizes = self._menu_sizes(g)
         speeds = []
         for j in jids:
             job = sim.jobs[j]
             prof = job.profile_at(1.0 - job.remaining / job.work)
-            sv = sim.pm.speed_vector(prof)
+            sv = g.pm.speed_vector(prof)
             speeds.append({s: (sv.get(s, 0.0)
-                               if sim.space.slice_mem_gb(s) >= prof.mem_gb
+                               if g.space.slice_mem_gb(s) >= prof.mem_gb
                                and s >= job.qos_min_slice else 0.0)
-                           for s in sim.cfg.static_partition})
+                           for s in sizes})
         # best assignment of m jobs to the fixed multiset's best m slices
-        part = tuple(sorted(sim.cfg.static_partition, reverse=True))
+        part = tuple(sorted(sizes, reverse=True))
         best_obj, best_perm = -1.0, None
         for sub in set(itertools.combinations(part, len(jids))):
             obj, perm = _assign_dp(sub, speeds)

@@ -19,7 +19,7 @@ class OraclePolicy(Policy):
         sim = self.sim
         return self.least_loaded(
             [g for g in sim.up_gpus()
-             if len(g.jobs) < sim.space.max_jobs and sim.mem_ok(g, job)
+             if len(g.jobs) < g.space.max_jobs and sim.mem_ok(g, job)
              and sim.spare_slice_ok(g, job)])
 
     def on_place(self, g: GPU, job: Job):
@@ -29,9 +29,9 @@ class OraclePolicy(Policy):
         self.repartition(g)
 
     def partition_speeds(self, g: GPU, jids: Sequence[int]) -> List[Dict[int, float]]:
-        """Ground truth straight from the estimator, fresh every time."""
+        """Ground truth straight from the GPU's estimator, fresh every time."""
         sim = self.sim
-        return sim.estimator.estimate(
+        return g.estimator.estimate(
             [sim.jobs[j].profile_at(1.0 - sim.jobs[j].remaining /
                                     sim.jobs[j].work) for j in jids],
             qos=[sim.jobs[j].qos_min_slice for j in jids])

@@ -30,7 +30,8 @@ class SrptPolicy(MisoPolicy):
     def __init__(self, sim):
         super().__init__(sim)
         self._evicted: Dict[int, int] = {}       # jid -> times preempted
-        self._known_profiles: Dict[int, Dict[int, float]] = {}
+        # keyed (jid, space name): estimates only transfer within a kind
+        self._known_profiles: Dict[tuple, Dict[int, float]] = {}
 
     # ------------------------------------------------------ queue discipline
 
@@ -76,7 +77,7 @@ class SrptPolicy(MisoPolicy):
         Evicting a job that does not unblock the candidate only charges
         checkpoint windows to bystanders."""
         sim = self.sim
-        return (len(g.jobs) - 1 < sim.space.max_jobs
+        return (len(g.jobs) - 1 < g.space.max_jobs
                 and sim.mem_ok(g, job, exclude=victim.jid)
                 and sim.spare_slice_ok(g, job, exclude=victim.jid))
 
@@ -86,7 +87,7 @@ class SrptPolicy(MisoPolicy):
         del g.jobs[victim.jid]
         est = g.estimates.pop(victim.jid, None)
         if est is not None:
-            self._known_profiles[victim.jid] = est
+            self._known_profiles[(victim.jid, g.space.name)] = est
         victim.queue_since = sim.t
         sim.queue.append(victim.jid)
         if g.jobs:
@@ -99,9 +100,10 @@ class SrptPolicy(MisoPolicy):
     # ------------------------------------------------------------ placement
 
     def on_place(self, g: GPU, job: Job):
-        known = self._known_profiles.get(job.jid)
+        known = self._known_profiles.get((job.jid, g.space.name))
         if known is not None:
-            # re-admission after preemption: profile already measured
+            # re-admission after preemption on the same accelerator kind:
+            # profile already measured
             g.estimates[job.jid] = known
             self.repartition(g, overhead=True)
         else:
@@ -110,9 +112,10 @@ class SrptPolicy(MisoPolicy):
     def measure_and_partition(self, g: GPU):
         super().measure_and_partition(g)
         for jid, est in g.estimates.items():
-            self._known_profiles[jid] = est
+            self._known_profiles[(jid, g.space.name)] = est
 
     def on_completion(self, g: GPU, job: Job):
-        self._known_profiles.pop(job.jid, None)
+        for key in [k for k in self._known_profiles if k[0] == job.jid]:
+            del self._known_profiles[key]
         self._evicted.pop(job.jid, None)
         super().on_completion(g, job)

@@ -1,7 +1,9 @@
 """Job-trace generation modeled after the paper's methodology (§5):
 Helios-like execution-time distribution capped at 2h (~p90 of the original
-trace), Poisson arrivals with configurable lambda, jobs uniformly sampled
-from the workload pool (model x batch size).
+trace), Poisson arrivals with configurable mean inter-arrival time (``lam_s``
+is seconds between arrivals, not a rate), jobs uniformly sampled from the
+workload pool (model x batch size).  Non-Poisson arrival processes live in
+:mod:`repro.core.scenarios` and are injected via ``arrival_times``.
 """
 from __future__ import annotations
 
@@ -16,16 +18,34 @@ def generate_trace(n_jobs: int, *, lam_s: float = 60.0, seed: int = 0,
                    max_duration_s: float = 7200.0, min_duration_s: float = 60.0,
                    pool: Optional[Sequence[JobProfile]] = None,
                    qos_frac: float = 0.0, multi_instance_frac: float = 0.0,
-                   mem_constraint_frac: float = 0.0) -> List[Job]:
-    """Returns jobs sorted by arrival time."""
+                   mem_constraint_frac: float = 0.0,
+                   arrival_times: Optional[Sequence[float]] = None,
+                   duration_sigma: float = 1.1) -> List[Job]:
+    """Returns jobs sorted by arrival time.
+
+    ``lam_s`` is the **mean inter-arrival time in seconds** (i.e. the scale
+    ``1/λ`` of the exponential, *not* the Poisson rate λ itself) — smaller
+    values mean heavier load.  Pass ``arrival_times`` (sorted, one per job)
+    to replace the default Poisson process with an arbitrary arrival pattern
+    (see :mod:`repro.core.scenarios` for bursty / diurnal / heavy-tail /
+    flash-crowd generators); ``lam_s`` is then ignored.  ``duration_sigma``
+    is the lognormal shape of the work distribution (raise it for
+    heavier-tailed job sizes).
+    """
     rng = np.random.default_rng(seed)
     pool = list(pool or WORKLOADS)
-    arrivals = np.cumsum(rng.exponential(lam_s, size=n_jobs))
+    if arrival_times is None:
+        arrivals = np.cumsum(rng.exponential(lam_s, size=n_jobs))
+    else:
+        arrivals = np.asarray(list(arrival_times), dtype=float)
+        if len(arrivals) != n_jobs:
+            raise ValueError(f"arrival_times has {len(arrivals)} entries "
+                             f"for n_jobs={n_jobs}")
     jobs = []
     for i in range(n_jobs):
         prof = pool[rng.integers(0, len(pool))]
         # lognormal work duration (median ~12 min), clipped like the paper
-        work = float(np.clip(rng.lognormal(mean=6.6, sigma=1.1),
+        work = float(np.clip(rng.lognormal(mean=6.6, sigma=duration_sigma),
                              min_duration_s, max_duration_s))
         qos = 0
         if qos_frac and rng.random() < qos_frac:

@@ -24,6 +24,11 @@ with ``--show-meshes``).
   PYTHONPATH=src python -m repro.launch.cluster --policy miso --jobs 60
   PYTHONPATH=src python -m repro.launch.cluster --policy srpt --lam 20
   PYTHONPATH=src python -m repro.launch.cluster --space tpu --show-meshes
+  PYTHONPATH=src python -m repro.launch.cluster --fleet a100:4+h100:4
+
+``--fleet`` runs a heterogeneous cluster (per-GPU slice menus / perf models,
+see ``repro.core.fleet``); scenario x policy grids over fleets are driven in
+parallel by ``python -m repro.launch.sweep``.
 """
 from __future__ import annotations
 
@@ -49,13 +54,18 @@ ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--space", choices=["a100", "tpu"], default="a100")
+    ap.add_argument("--fleet", default=None,
+                    help="heterogeneous fleet spec, e.g. a100:4+h100:4 "
+                         "(overrides --space/--accelerators/--estimator)")
     ap.add_argument("--policy", default="miso", choices=available_policies())
     ap.add_argument("--estimator", default="auto",
                     choices=["auto", "unet", "oracle", "noisy"])
     ap.add_argument("--sigma", type=float, default=0.05)
     ap.add_argument("--accelerators", type=int, default=8)
     ap.add_argument("--jobs", type=int, default=100)
-    ap.add_argument("--lam", type=float, default=60.0)
+    ap.add_argument("--lam", type=float, default=60.0,
+                    help="mean inter-arrival time in seconds (1/rate, "
+                         "not the Poisson rate itself)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mtbf", type=float, default=0.0,
                     help="accelerator MTBF seconds (fault injection)")
@@ -65,6 +75,24 @@ def build_parser() -> argparse.ArgumentParser:
 
 def main(argv=None):
     args = build_parser().parse_args(argv)
+
+    if args.fleet:
+        from repro.core.fleet import describe_fleet, parse_fleet
+        fleet = parse_fleet(args.fleet)
+        jobs = generate_trace(args.jobs, lam_s=args.lam, seed=args.seed)
+        cfg = SimConfig(n_gpus=len(fleet), policy=args.policy,
+                        gpu_mtbf_s=args.mtbf, seed=args.seed)
+        metrics = simulate(jobs, cfg, fleet=fleet)
+        b = metrics.breakdown
+        print(f"[cluster] {args.policy} on fleet {describe_fleet(fleet)}: "
+              f"{len(metrics.jcts)} jobs (per-kind estimators: oracle)")
+        print(f"  avg JCT   : {metrics.avg_jct:,.0f} s "
+              f"(p50 {metrics.p50_jct:,.0f}, p90 {metrics.p90_jct:,.0f})")
+        print(f"  makespan  : {metrics.makespan:,.0f} s")
+        print(f"  STP       : {metrics.stp:.3f} work-seconds/s/accelerator")
+        print(f"  breakdown : queue {b['queue']:,.0f}s | mps {b['mps']:,.0f}s"
+              f" | ckpt {b['ckpt']:,.0f}s | run {b['run']:,.0f}s")
+        return 0
 
     if args.space == "tpu":
         space, hw = tpu_pod_space(), TPU_V5E_POD

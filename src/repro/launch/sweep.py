@@ -1,0 +1,184 @@
+"""Parallel policy x scenario x seed sweep engine.
+
+Fans a grid of cluster simulations across worker *processes* (each cell is
+an independent event-driven run, so the sweep is embarrassingly parallel)
+and emits one schema-stable JSON report consumed by ``benchmarks/`` for
+trajectory tracking (``BENCH_*.json``).
+
+  PYTHONPATH=src python -m repro.launch.sweep \\
+      --policies miso,srpt --scenarios bursty,diurnal,heavy_tail --seeds 3
+  PYTHONPATH=src python -m repro.launch.sweep --scenarios smoke --seeds 2
+  PYTHONPATH=src python -m repro.launch.sweep --fleet a100:8 --serial
+
+Scenarios come from :mod:`repro.core.scenarios` (each carries a default
+heterogeneous fleet spec, override with ``--fleet``); policies are any
+registered scheduling policy.  The JSON schema is versioned: bump
+``SCHEMA_VERSION`` on any breaking change to the result shape.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from concurrent.futures import ProcessPoolExecutor
+from typing import Dict, List, Optional, Sequence
+
+SCHEMA_VERSION = 1
+
+
+def run_task(task: Dict) -> Dict:
+    """One sweep cell: simulate (policy, scenario, seed) on a fleet.
+
+    Module-level and dict-in/dict-out so it pickles cleanly into worker
+    processes.
+    """
+    from repro.core.fleet import describe_fleet, parse_fleet
+    from repro.core.scenarios import get_scenario
+    from repro.core.simulator import SimConfig, simulate
+
+    t0 = time.time()
+    sc = get_scenario(task["scenario"])
+    jobs = sc.make_jobs(task["seed"], task.get("n_jobs"))
+    fleet = parse_fleet(task.get("fleet") or sc.fleet)
+    cfg = SimConfig(n_gpus=len(fleet), policy=task["policy"],
+                    seed=task["seed"],
+                    gpu_mtbf_s=task.get("mtbf", 0.0))
+    m = simulate(jobs, cfg, fleet=fleet)
+    return {
+        "policy": task["policy"],
+        "scenario": task["scenario"],
+        "seed": task["seed"],
+        "fleet": describe_fleet(fleet),
+        "n_jobs": len(jobs),
+        "n_completed": len(m.jcts),
+        "metrics": {
+            "avg_jct_s": m.avg_jct,
+            "p50_jct_s": m.p50_jct,
+            "p90_jct_s": m.p90_jct,
+            "makespan_s": m.makespan,
+            "stp": m.stp,
+            "breakdown_s": dict(m.breakdown),
+        },
+        "wall_s": time.time() - t0,
+    }
+
+
+def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
+              seeds: Sequence[int], fleet: Optional[str] = None,
+              n_jobs: Optional[int] = None, mtbf: float = 0.0,
+              workers: Optional[int] = None, serial: bool = False) -> Dict:
+    """Run the full grid and return the JSON-ready report dict."""
+    tasks = [{"policy": p, "scenario": sc, "seed": s, "fleet": fleet,
+              "n_jobs": n_jobs, "mtbf": mtbf}
+             for sc in scenarios for p in policies for s in seeds]
+    t0 = time.time()
+    if serial or len(tasks) == 1:
+        results = [run_task(t) for t in tasks]
+        workers_used = 1
+    else:
+        workers_used = workers or min(len(tasks), os.cpu_count() or 1)
+        with ProcessPoolExecutor(max_workers=workers_used) as pool:
+            results = list(pool.map(run_task, tasks))
+    results.sort(key=lambda r: (r["scenario"], r["policy"], r["seed"]))
+
+    summary: Dict[str, Dict[str, Dict[str, float]]] = {}
+    for sc in scenarios:
+        summary[sc] = {}
+        for p in policies:
+            cell = [r for r in results
+                    if r["scenario"] == sc and r["policy"] == p]
+            if not cell:
+                continue
+            mean = lambda key: (sum(r["metrics"][key] for r in cell)
+                                / len(cell))
+            summary[sc][p] = {
+                "avg_jct_s_mean": mean("avg_jct_s"),
+                "p90_jct_s_mean": mean("p90_jct_s"),
+                "stp_mean": mean("stp"),
+                "makespan_s_mean": mean("makespan_s"),
+            }
+
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "kind": "miso-sweep",
+        "config": {
+            "policies": list(policies),
+            "scenarios": list(scenarios),
+            "seeds": list(seeds),
+            "fleet": fleet,          # null = each scenario's default fleet
+            "n_jobs": n_jobs,        # null = each scenario's default length
+            "mtbf_s": mtbf,
+            "workers": workers_used,
+            "serial": bool(serial or len(tasks) == 1),
+        },
+        "wall_s_total": time.time() - t0,
+        "results": results,
+        "summary": summary,
+    }
+
+
+def _print_summary(report: Dict) -> None:
+    print(f"[sweep] {len(report['results'])} runs on "
+          f"{report['config']['workers']} worker(s) in "
+          f"{report['wall_s_total']:.1f}s")
+    w = max((len(s) for s in report["summary"]), default=8)
+    for sc, by_policy in report["summary"].items():
+        for p, agg in by_policy.items():
+            print(f"  {sc:<{w}}  {p:<10} avg_jct {agg['avg_jct_s_mean']:>9,.0f}s"
+                  f"  p90 {agg['p90_jct_s_mean']:>9,.0f}s"
+                  f"  stp {agg['stp_mean']:.3f}")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description="parallel policy x scenario x seed simulation sweep")
+    ap.add_argument("--policies", default="miso,srpt",
+                    help="comma-separated policy names")
+    ap.add_argument("--scenarios", default="bursty,diurnal,heavy_tail",
+                    help="comma-separated scenario names "
+                         "(see repro.core.scenarios)")
+    ap.add_argument("--seeds", type=int, default=3,
+                    help="number of seeds (0..N-1) per cell")
+    ap.add_argument("--fleet", default=None,
+                    help="fleet spec like a100:4+h100:4 "
+                         "(default: each scenario's own fleet)")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="override each scenario's trace length")
+    ap.add_argument("--mtbf", type=float, default=0.0,
+                    help="accelerator MTBF seconds (fault injection)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="worker processes (default: min(cells, cpus))")
+    ap.add_argument("--serial", action="store_true",
+                    help="run in-process, no worker pool")
+    ap.add_argument("--out", default="BENCH_sweep.json",
+                    help="JSON report path")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    from repro.core.scenarios import available_scenarios, get_scenario
+    from repro.core.sim.policies import available_policies, get_policy
+
+    policies = [p.strip() for p in args.policies.split(",") if p.strip()]
+    scenarios = [s.strip() for s in args.scenarios.split(",") if s.strip()]
+    for p in policies:
+        get_policy(p)                    # fail fast with the full list
+    for s in scenarios:
+        get_scenario(s)
+
+    report = run_sweep(policies, scenarios, seeds=list(range(args.seeds)),
+                       fleet=args.fleet, n_jobs=args.jobs, mtbf=args.mtbf,
+                       workers=args.workers, serial=args.serial)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=False)
+        f.write("\n")
+    _print_summary(report)
+    print(f"[sweep] report -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

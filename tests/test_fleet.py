@@ -1,0 +1,124 @@
+"""Heterogeneous fleets: spec parsing, per-GPU space/perf routing, and the
+golden guarantee that homogeneous runs are bit-identical through the fleet
+code path."""
+import copy
+from dataclasses import replace
+
+import pytest
+
+from repro.core.estimators import OracleEstimator
+from repro.core.fleet import (available_kinds, describe_fleet,
+                              homogeneous_fleet, parse_fleet)
+from repro.core.jobs import WORKLOADS, Job
+from repro.core.partitions import a100_mig_space, h100_mig_space
+from repro.core.perfmodel import PerfModel
+from repro.core.simulator import ClusterSim, SimConfig, simulate
+from repro.core.traces import generate_trace
+
+SPACE = a100_mig_space()
+PM = PerfModel(SPACE)
+EST = OracleEstimator(PM)
+
+
+# ------------------------------------------------------------- fleet specs
+
+def test_parse_fleet():
+    fleet = parse_fleet("a100:2+h100:3")
+    assert [s.kind for s in fleet] == ["a100"] * 2 + ["h100"] * 3
+    assert fleet[0] is fleet[1]              # one shared spec per kind
+    assert fleet[2] is fleet[4]
+    assert describe_fleet(fleet) == "a100:2+h100:3"
+    assert parse_fleet("h100")[0].kind == "h100"
+    assert len(parse_fleet("a100:1,h100:1")) == 2   # comma also accepted
+    assert set(available_kinds()) >= {"a100", "h100", "tpu"}
+
+
+def test_parse_fleet_rejects_garbage():
+    with pytest.raises(ValueError, match="unknown accelerator kind"):
+        parse_fleet("b200:4")
+    with pytest.raises(ValueError, match="count"):
+        parse_fleet("a100:0")
+    with pytest.raises(ValueError, match="count"):
+        parse_fleet("a100:x")
+    with pytest.raises(ValueError, match="empty"):
+        parse_fleet("")
+
+
+def test_h100_space_doubles_memory():
+    h = h100_mig_space()
+    assert h.sizes == SPACE.sizes            # same GPC slice menu
+    assert h.name != SPACE.name              # distinct optimizer memo key
+    for s in h.sizes:
+        assert h.slice_mem_gb(s) == 2 * SPACE.slice_mem_gb(s)
+    assert len(h.partitions) == len(SPACE.partitions)   # same 4g/3g exclusion
+
+
+def test_gpu_carries_own_spec():
+    fleet = parse_fleet("a100:1+h100:1")
+    cfg = SimConfig(policy="miso")          # default n_gpus=8
+    sim = ClusterSim([], cfg, fleet=fleet)
+    assert sim.cfg.n_gpus == 2
+    assert cfg.n_gpus == 8                  # caller's config not mutated
+    a, h = sim.gpus
+    assert a.space.name == "a100-mig" and h.space.name == "h100-mig"
+    assert a.pm.hw.mem_gb == 40.0 and h.pm.hw.mem_gb == 80.0
+    assert a.estimator is not h.estimator
+    assert h.speed_scale > a.speed_scale == 1.0
+
+
+# --------------------------------------------------- homogeneous identity
+
+@pytest.mark.parametrize("policy",
+                         ["miso", "oracle", "mpsonly", "nopart", "optsta",
+                          "miso-frag", "srpt"])
+def test_homogeneous_fleet_bit_identical(policy):
+    """The fleet code path reproduces the legacy (space, pm) call exactly."""
+    jobs = generate_trace(20, lam_s=30.0, seed=3, max_duration_s=900)
+    legacy = simulate(jobs, SimConfig(n_gpus=3, policy=policy), SPACE, PM, EST)
+    via_fleet = simulate(jobs, SimConfig(n_gpus=3, policy=policy),
+                         fleet=homogeneous_fleet(SPACE, PM, EST, 3))
+    assert legacy.avg_jct == via_fleet.avg_jct
+    assert legacy.makespan == via_fleet.makespan
+    assert list(legacy.jcts) == list(via_fleet.jcts)
+    assert legacy.breakdown == via_fleet.breakdown
+
+
+# --------------------------------------------------------- mixed fleets
+
+@pytest.mark.parametrize("policy",
+                         ["miso", "oracle", "mpsonly", "nopart", "optsta",
+                          "miso-frag", "srpt"])
+def test_mixed_fleet_completes_all_jobs(policy):
+    jobs = generate_trace(25, lam_s=25.0, seed=5, max_duration_s=1200)
+    m = simulate(jobs, SimConfig(policy=policy),
+                 fleet=parse_fleet("a100:2+h100:2"))
+    assert len(m.jcts) == len(jobs)
+
+
+def test_h100_fleet_faster_than_a100():
+    """speed_scale routes into job progress: the same trace finishes faster
+    on an h100-only fleet than on an a100-only one."""
+    jobs = generate_trace(20, lam_s=20.0, seed=6, max_duration_s=900)
+    a = simulate(jobs, SimConfig(policy="oracle"), fleet=parse_fleet("a100:2"))
+    h = simulate(jobs, SimConfig(policy="oracle"), fleet=parse_fleet("h100:2"))
+    assert h.avg_jct < a.avg_jct
+
+
+def test_memory_constraint_routes_to_h100():
+    """A 45GB job overflows every a100 slice (40GB max) but fits h100
+    7g.80gb — per-GPU mem_ok / spare_slice_ok must see the right capacity."""
+    big = replace(WORKLOADS[0], name="big45", mem_gb=45.0)
+    jobs = [Job(jid=0, profile=big, arrival=0.0, work=300.0)]
+    m = simulate(jobs, SimConfig(policy="miso"),
+                 fleet=parse_fleet("a100:1+h100:1"))
+    assert len(m.jcts) == 1
+    with pytest.raises(ValueError, match="no completed jobs"):
+        simulate(jobs, SimConfig(policy="miso"), fleet=parse_fleet("a100:2"))
+
+
+def test_mixed_fleet_with_failures_completes():
+    jobs = generate_trace(15, lam_s=25.0, seed=7, max_duration_s=900)
+    m = simulate(jobs, SimConfig(policy="miso", gpu_mtbf_s=1200.0,
+                                 repair_s=150.0, seed=1),
+                 fleet=parse_fleet("a100:2+h100:2"))
+    assert len(m.jcts) == len(jobs)

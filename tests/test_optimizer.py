@@ -25,6 +25,8 @@ def _random_speeds(rng, m):
             sv[1] = 0.0       # OOM on 1g
         if rng.random() < 0.15:
             sv[2] = 0.0
+        if rng.random() < 0.08:
+            sv = {s: 0.0 for s in sv}   # fully infeasible job (OOM everywhere)
         out.append(sv)
     return out
 
@@ -39,6 +41,20 @@ def test_dp_equals_bruteforce(m, seed):
     assert a is not None and b is not None
     assert abs(a.objective - b.objective) < 1e-9
     assert SPACE.is_valid(a.partition)
+
+
+def test_all_zero_speeds_dp_and_bruteforce_agree():
+    """All-OOM job mixes: both paths must return the same (infeasible,
+    objective-0) choice — the brute-force oracle used to return None while
+    the DP path returned a choice."""
+    for m in (1, 2, 3):
+        speeds = [{7: 0.0, 4: 0.0, 3: 0.0, 2: 0.0, 1: 0.0}] * m
+        a = optimize_partition(SPACE, speeds, memo=False)
+        b = optimize_partition_bruteforce(SPACE, speeds)
+        assert a is not None and b is not None
+        assert a.objective == b.objective == 0.0
+        assert not a.feasible and not b.feasible
+        assert SPACE.is_valid(a.partition) and SPACE.is_valid(b.partition)
 
 
 def test_single_job_gets_full_gpu():

@@ -1,0 +1,78 @@
+"""Scenario layer: every registered scenario yields valid, deterministic
+traces, and each arrival process has its advertised shape."""
+import numpy as np
+import pytest
+
+from repro.core import scenarios as sc
+
+
+def test_registry_has_the_suite():
+    names = sc.available_scenarios()
+    for n in ("smoke", "poisson", "bursty", "diurnal", "heavy_tail",
+              "flash_crowd", "mixed_qos"):
+        assert n in names
+    with pytest.raises(ValueError, match="unknown scenario"):
+        sc.get_scenario("nope")
+    with pytest.raises(ValueError, match="duplicate"):
+        sc.register_scenario(sc.get_scenario("smoke"))
+
+
+@pytest.mark.parametrize("name", sorted(sc.available_scenarios()))
+def test_scenarios_generate_valid_deterministic_traces(name):
+    s = sc.get_scenario(name)
+    jobs = s.make_jobs(seed=0)
+    assert len(jobs) >= s.n_jobs             # multi-instance may expand
+    assert all(j.arrival >= 0 for j in jobs)
+    assert all(j.work > 0 for j in jobs)
+    key = lambda js: [(j.jid, j.arrival, j.work, j.profile.name) for j in js]
+    assert key(jobs) == key(s.make_jobs(seed=0))          # deterministic
+    assert key(jobs) != key(s.make_jobs(seed=1))          # seed-sensitive
+    short = s.make_jobs(seed=0, n_jobs=5)
+    assert len(short) >= 5
+
+
+def test_bursty_has_higher_variability_than_poisson():
+    b = sc.bursty_arrivals(np.random.default_rng(0), 400, 60.0)
+    p = sc.poisson_arrivals(np.random.default_rng(0), 400, 60.0)
+    cv = lambda a: (np.std(np.diff(np.r_[0.0, a]))
+                    / np.mean(np.diff(np.r_[0.0, a])))
+    assert cv(p) == pytest.approx(1.0, abs=0.25)   # Poisson CV ~ 1
+    assert cv(b) > 1.2 * cv(p)
+
+
+def test_diurnal_modulates_rate():
+    period = 14400.0
+    a = sc.diurnal_arrivals(np.random.default_rng(0), 400, 45.0,
+                            period_s=period, amplitude=0.8)
+    peak = np.sum((a % period) < period / 2)       # sin > 0 half
+    trough = np.sum((a % period) >= period / 2)
+    assert peak > 1.3 * trough
+
+
+def test_heavy_tail_has_extreme_gaps():
+    a = sc.heavy_tail_arrivals(np.random.default_rng(0), 500, 60.0)
+    iat = np.diff(np.r_[0.0, a])
+    assert np.max(iat) > 20 * np.median(iat)
+
+
+def test_flash_crowd_spike_is_dense():
+    a = sc.flash_crowd_arrivals(np.random.default_rng(0), 200, 45.0)
+    assert len(a) == 200 and np.all(np.diff(a) >= 0)
+    # somewhere, 60 consecutive arrivals land within a tiny window — far
+    # denser than Poisson at 45s mean (which would need ~2700s)
+    win = min(a[i + 60] - a[i] for i in range(len(a) - 60))
+    assert win < 300.0
+
+
+def test_mixed_qos_populates_constraints():
+    jobs = sc.get_scenario("mixed_qos").make_jobs(seed=0)
+    assert any(j.qos_min_slice > 0 for j in jobs)
+    assert any(j.min_mem_gb > 0 for j in jobs)
+    assert any(j.mi_group is not None for j in jobs)
+
+
+def test_scenarios_carry_fleet_specs():
+    from repro.core.fleet import parse_fleet
+    for name in sc.available_scenarios():
+        fleet = parse_fleet(sc.get_scenario(name).fleet)
+        assert len(fleet) >= 1

@@ -99,6 +99,108 @@ def test_failure_injection_requeues():
     assert m.avg_jct >= base.avg_jct          # failures cannot help
 
 
+def test_failure_rollback_is_speed_weighted_and_placement_local():
+    """Lost work on a GPU failure is the speed-weighted work done since the
+    last checkpoint of the CURRENT placement — not wall-clock seconds, and
+    not ``min(ckpt_interval, cumulative t_run)`` across earlier requeues."""
+    from repro.core.simulator import ClusterSim
+    job = Job(jid=0, profile=WORKLOADS[0], arrival=0.0, work=5000.0)
+    cfg = SimConfig(n_gpus=1, policy="nopart", ckpt_interval_s=50.0,
+                    repair_s=100.0)
+    sim = ClusterSim([job], cfg, SPACE, PM, EST)
+    sim._on_arrival(sim.jobs[0])
+    g = sim.gpus[0]
+    assert g.jobs[0].speed == 1.0            # full slice: exactly 1 work-s/s
+    sim.t = 130.0
+    sim._on_failure(g)
+    # periodic checkpoints passed at t=50 and t=100 -> exactly 30 work-s lost
+    assert sim.jobs[0].remaining == pytest.approx(5000.0 - 100.0)
+    assert sim.queue == [0]
+    # second placement: rollback restarts from THIS placement's checkpoints
+    sim.t = g.down_until
+    sim.policy.admit()
+    assert 0 in g.jobs
+    sim.t = g.down_until + 10.0              # 10s < interval: no ckpt yet
+    sim._on_failure(g)
+    # all 10 fresh work-seconds lost; nothing more (old bug: min(50, t_run
+    # =140) would have destroyed 50)
+    assert sim.jobs[0].remaining == pytest.approx(5000.0 - 100.0)
+
+
+def test_failure_mid_checkpoint_discards_unfinished_save():
+    """A checkpoint is durable only once its window completes: a failure
+    mid-save rolls back to the last *completed* checkpoint, losing all the
+    MPS-phase progress the in-flight save was trying to commit."""
+    from repro.core.simulator import CKPT, MIG_RUN, MPS_PROF, ClusterSim
+    job = Job(jid=0, profile=WORKLOADS[0], arrival=0.0, work=5000.0)
+    cfg = SimConfig(n_gpus=1, policy="miso", ckpt_interval_s=100000.0)
+    sim = ClusterSim([job], cfg, SPACE, PM, EST)
+    sim._on_arrival(sim.jobs[0])
+    g = sim.gpus[0]
+    assert g.phase == MPS_PROF
+    sim.t = g.phase_end                      # MPS sweep ends -> reconfigure
+    sim.end_phase(g)
+    assert g.phase == CKPT
+    done = 5000.0 - sim.jobs[0].remaining
+    assert done > 0                          # job progressed during MPS
+    assert g.jobs[0].since_ckpt_work == pytest.approx(done)
+    sim.t += g.ckpt_duration() / 2           # fail while the save is in flight
+    sim._on_failure(g)
+    assert sim.jobs[0].remaining == pytest.approx(5000.0)
+
+    # ... whereas a checkpoint that runs to completion commits the progress
+    sim2 = ClusterSim([Job(jid=0, profile=WORKLOADS[0], arrival=0.0,
+                           work=5000.0)], cfg, SPACE, PM, EST)
+    sim2._on_arrival(sim2.jobs[0])
+    g2 = sim2.gpus[0]
+    sim2.t = g2.phase_end
+    sim2.end_phase(g2)                       # MPS -> CKPT
+    done2 = 5000.0 - sim2.jobs[0].remaining
+    sim2.t = g2.phase_end
+    sim2.end_phase(g2)                       # CKPT completes -> MIG_RUN
+    assert g2.phase == MIG_RUN
+    assert g2.jobs[0].since_ckpt_work == 0.0
+    sim2._on_failure(g2)
+    assert sim2.jobs[0].remaining == pytest.approx(5000.0 - done2)
+
+
+def test_failure_requeue_preserves_relative_order():
+    """Multiple jobs requeued by one failure keep their placement order at
+    the queue head (the old repeated ``insert(0, ...)`` reversed them)."""
+    from repro.core.simulator import ClusterSim
+    jobs = [Job(jid=i, profile=WORKLOADS[0], arrival=float(i), work=600.0)
+            for i in range(3)]
+    cfg = SimConfig(n_gpus=1, policy="mpsonly", mps_only_max_jobs=2)
+    sim = ClusterSim(jobs, cfg, SPACE, PM, EST)
+    for i, t in enumerate((0.0, 1.0, 2.0)):
+        sim.t = t
+        sim._on_arrival(sim.jobs[i])
+    g = sim.gpus[0]
+    assert list(g.jobs) == [0, 1] and sim.queue == [2]
+    sim.t = 10.0
+    sim._on_failure(g)
+    assert sim.queue == [0, 1, 2]            # victims first, order preserved
+
+
+def test_failure_work_conservation():
+    """Paper Fig 12 invariant under faults: every second of a completed
+    job's life lands in exactly one of {queue, mps, ckpt, run}, across
+    failure/repair/requeue cycles."""
+    import copy
+    from repro.core.simulator import ClusterSim
+    jobs = generate_trace(12, lam_s=20.0, seed=9, max_duration_s=900)
+    cfg = SimConfig(n_gpus=2, policy="miso", gpu_mtbf_s=700.0, repair_s=150.0,
+                    ckpt_interval_s=120.0, seed=4)
+    sim = ClusterSim(copy.deepcopy(jobs), cfg, SPACE, PM, EST)
+    m = sim.run()
+    assert len(m.jcts) == len(jobs)
+    assert any(g.down_until > 0 for g in sim.gpus)       # faults did fire
+    for j in sim.jobs.values():
+        total = j.t_queue + j.t_mps + j.t_ckpt + j.t_run
+        assert total == pytest.approx(j.finish_time - j.arrival,
+                                      rel=1e-9, abs=1e-6)
+
+
 def test_noisy_estimator_degrades_gracefully():
     """Paper Fig 18: large prediction error should not break MISO."""
     jobs = generate_trace(30, lam_s=30.0, seed=6, max_duration_s=900)

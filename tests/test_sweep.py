@@ -1,0 +1,74 @@
+"""Parallel sweep engine: schema stability, deterministic serial/parallel
+equivalence, fleet override, and the CLI entry point."""
+import json
+
+import pytest
+
+from repro.launch.sweep import SCHEMA_VERSION, run_sweep, run_task
+
+RESULT_KEYS = {"policy", "scenario", "seed", "fleet", "n_jobs",
+               "n_completed", "metrics", "wall_s"}
+METRIC_KEYS = {"avg_jct_s", "p50_jct_s", "p90_jct_s", "makespan_s", "stp",
+               "breakdown_s"}
+
+
+def test_run_task_schema():
+    r = run_task({"policy": "miso", "scenario": "smoke", "seed": 0})
+    assert set(r) == RESULT_KEYS
+    assert set(r["metrics"]) == METRIC_KEYS
+    assert r["n_completed"] == r["n_jobs"] > 0
+    assert r["fleet"] == "a100:2"            # smoke's default fleet
+    json.dumps(r)                            # JSON-serializable end to end
+
+
+def test_run_sweep_serial_grid():
+    rep = run_sweep(["miso", "srpt"], ["smoke"], seeds=[0, 1], serial=True)
+    assert rep["schema_version"] == SCHEMA_VERSION
+    assert rep["kind"] == "miso-sweep"
+    assert len(rep["results"]) == 4
+    keys = [(r["scenario"], r["policy"], r["seed"]) for r in rep["results"]]
+    assert keys == sorted(keys)              # stable result ordering
+    assert set(rep["summary"]["smoke"]) == {"miso", "srpt"}
+    for agg in rep["summary"]["smoke"].values():
+        assert set(agg) == {"avg_jct_s_mean", "p90_jct_s_mean", "stp_mean",
+                            "makespan_s_mean"}
+
+
+def test_parallel_matches_serial():
+    strip = lambda rep: [(r["policy"], r["scenario"], r["seed"], r["metrics"])
+                         for r in rep["results"]]
+    a = run_sweep(["miso"], ["smoke"], seeds=[0, 1], serial=True)
+    b = run_sweep(["miso"], ["smoke"], seeds=[0, 1], workers=2)
+    assert strip(a) == strip(b)
+    assert b["config"]["workers"] == 2 and not b["config"]["serial"]
+
+
+def test_fleet_and_jobs_override():
+    rep = run_sweep(["miso"], ["smoke"], seeds=[0], fleet="a100:1+h100:1",
+                    n_jobs=6, serial=True)
+    (r,) = rep["results"]
+    assert r["fleet"] == "a100:1+h100:1"
+    assert r["n_jobs"] == 6
+    assert rep["config"]["fleet"] == "a100:1+h100:1"
+
+
+@pytest.mark.slow
+def test_sweep_cli_writes_report(tmp_path):
+    from repro.launch import sweep
+    out = tmp_path / "report.json"
+    rc = sweep.main(["--scenarios", "smoke", "--seeds", "1",
+                     "--policies", "miso", "--serial", "--out", str(out)])
+    assert rc == 0
+    rep = json.loads(out.read_text())
+    assert rep["schema_version"] == SCHEMA_VERSION
+    assert rep["results"]
+
+
+def test_cli_rejects_unknown_names():
+    from repro.launch import sweep
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        sweep.main(["--policies", "nope", "--scenarios", "smoke",
+                    "--seeds", "1"])
+    with pytest.raises(ValueError, match="unknown scenario"):
+        sweep.main(["--policies", "miso", "--scenarios", "nope",
+                    "--seeds", "1"])
