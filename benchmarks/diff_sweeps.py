@@ -1,0 +1,104 @@
+"""Diff two sweep reports (``BENCH_sweep_*.json``) and flag regressions.
+
+Compares per-(scenario, policy) summary metrics between a baseline report
+and a candidate report, and exits non-zero when any scenario regresses by
+more than ``--threshold`` (default 2%):
+
+* ``avg_jct_s_mean`` / ``p90_jct_s_mean`` / ``makespan_s_mean`` — higher is
+  worse (a JCT regression);
+* ``stp_mean`` — lower is worse (a throughput regression).
+
+Timing fields (``wall_s``, ``wall_s_total``) and execution details
+(``config.workers``, ``config.serial``) are ignored: how a sweep was
+scheduled is not a scheduling result.  This is the ROADMAP's "sweep
+trajectory tracking" tool; CI runs it against the committed baseline in
+``benchmarks/baselines/``.
+
+  PYTHONPATH=src python benchmarks/diff_sweeps.py \\
+      benchmarks/baselines/BENCH_sweep_smoke.json BENCH_sweep_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+# metric key -> direction: +1 means "higher is a regression"
+METRICS = {
+    "avg_jct_s_mean": +1,
+    "p90_jct_s_mean": +1,
+    "makespan_s_mean": +1,
+    "stp_mean": -1,
+}
+
+
+def load_summary(path: str) -> Dict[Tuple[str, str], Dict[str, float]]:
+    with open(path) as f:
+        rep = json.load(f)
+    if rep.get("kind") != "miso-sweep":
+        raise ValueError(f"{path}: not a miso-sweep report "
+                         f"(kind={rep.get('kind')!r})")
+    out = {}
+    for scenario, by_policy in rep.get("summary", {}).items():
+        for policy, agg in by_policy.items():
+            out[(scenario, policy)] = agg
+    return out
+
+
+def diff_reports(base_path: str, new_path: str,
+                 threshold: float) -> Tuple[List[str], List[str]]:
+    """Returns (regressions, notes): human-readable per-cell findings."""
+    base = load_summary(base_path)
+    new = load_summary(new_path)
+    regressions, notes = [], []
+    for cell in sorted(set(base) | set(new)):
+        scenario, policy = cell
+        if cell not in new:
+            # a baseline cell that stopped being measured is itself a
+            # regression — the gate must not pass on vanishing coverage
+            regressions.append(f"{scenario}/{policy}: missing from candidate")
+            continue
+        if cell not in base:
+            notes.append(f"{scenario}/{policy}: new cell (no baseline)")
+            continue
+        for metric, direction in METRICS.items():
+            b = base[cell].get(metric)
+            n = new[cell].get(metric)
+            if b is None or n is None or b == 0:
+                continue
+            rel = (n - b) / abs(b) * direction
+            line = (f"{scenario}/{policy} {metric}: "
+                    f"{b:.4g} -> {n:.4g} ({rel:+.2%})")
+            if rel > threshold:
+                regressions.append(line)
+            elif rel != 0:
+                notes.append(line)
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_sweep_*.json reports, flag regressions")
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--threshold", type=float, default=0.02,
+                    help="relative regression to flag (default 2%%)")
+    args = ap.parse_args(argv)
+    regressions, notes = diff_reports(args.baseline, args.candidate,
+                                      args.threshold)
+    for line in notes:
+        print(f"[diff-sweeps] note: {line}")
+    if regressions:
+        for line in regressions:
+            print(f"[diff-sweeps] REGRESSION: {line}")
+        print(f"[diff-sweeps] {len(regressions)} regression(s) over "
+              f"{args.threshold:.0%} vs {args.baseline}")
+        return 1
+    print(f"[diff-sweeps] OK: no regression over {args.threshold:.0%} "
+          f"vs {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

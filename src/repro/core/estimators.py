@@ -7,10 +7,28 @@
 * UNetEstimator    — the full MISO path: the job mix's measured MPS matrix ->
   U-Net -> (7g,4g,3g), then the linear-regression heads -> (2g,1g), then the
   memory monitor zeroes OOM slices (paper §4.1 + §4.3).
+
+Batched contract
+----------------
+``estimate_batch(requests)`` takes a list of ``(profs, mps_matrix, qos)``
+tuples — one per co-location group / profiling window — and returns one
+``estimate``-shaped result per request, in order.  Semantics:
+
+* results are identical to calling ``estimate`` once per request in the
+  same order (estimators that consume RNG draw it in request order);
+* ``mps_matrix`` may be None per request; estimators that need one measure
+  it themselves (as ``estimate`` does);
+* the U-Net estimator stacks every request's matrix into a single
+  ``(B, levels, jobs)`` jitted forward (padded to a power-of-two batch
+  bucket) instead of B separate ``(1, levels, jobs)`` dispatches — the
+  engine's same-tick window coalescing is the main caller.  A batched
+  forward is numerically equal to per-request forwards up to XLA batch
+  reassociation (float32 last-ulp); single-request batches go through the
+  exact same compiled shape as ``estimate`` and are bit-identical to it.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -20,6 +38,10 @@ from repro.core.perfmodel import PerfModel
 from repro.core.predictor import linreg as linreg_mod
 from repro.core.predictor import unet as unet_mod
 from repro.core.predictor.dataset import LIN_SLICES, OUT_SLICES
+
+#: one estimate_batch request: (profiles, optional MPS matrix, optional QoS)
+EstimateRequest = Tuple[Sequence[JobProfile], Optional[np.ndarray],
+                        Optional[Sequence[int]]]
 
 
 def _apply_mem_constraints(space: PartitionSpace, prof: JobProfile,
@@ -48,9 +70,21 @@ class OracleEstimator:
             _apply_mem_constraints(self.pm.space, p, self.pm.speed_vector(p), q)
             for p, q in zip(profs, qos)]
 
+    def estimate_batch(self, requests: Sequence[EstimateRequest]
+                       ) -> List[List[Dict[int, float]]]:
+        """Default batched path: per-request ``estimate`` in request order
+        (exact for any estimator whose estimate is per-request; overridden
+        where a fused pass exists)."""
+        return [self.estimate(profs, mat, qos)
+                for profs, mat, qos in requests]
+
 
 class NoisyEstimator(OracleEstimator):
-    """Ground truth with relative error ~ N(0, sigma) (paper Fig 18)."""
+    """Ground truth with relative error ~ N(0, sigma) (paper Fig 18).
+
+    The inherited ``estimate_batch`` loops requests in order, so the noise
+    stream is consumed exactly as back-to-back ``estimate`` calls would.
+    """
     needs_mps = False
 
     def __init__(self, pm: PerfModel, sigma: float, seed: int = 0):
@@ -118,10 +152,31 @@ class UNetEstimator:
 
     def estimate(self, profs, mps_matrix: Optional[np.ndarray] = None,
                  qos=None) -> List[Dict[int, float]]:
-        qos = qos or [0] * len(profs)
         if mps_matrix is None:
             mps_matrix = self.measure_mps(profs)
         pred = np.asarray(self.net(mps_matrix))            # (3, J)
+        return self._postprocess(profs, pred, qos)
+
+    def estimate_batch(self, requests: Sequence[EstimateRequest]
+                       ) -> List[List[Dict[int, float]]]:
+        """Fused path: all B requests' matrices go through one stacked
+        ``(B, levels, jobs)`` jitted forward (see module docstring for the
+        numerical contract); measurement (and thus any RNG use) happens in
+        request order before the forward."""
+        if not requests:
+            return []
+        mats = [np.asarray(mat if mat is not None else self.measure_mps(profs),
+                           dtype=np.float32)
+                for profs, mat, _ in requests]
+        preds = np.asarray(self.net(np.stack(mats)))       # (B, 3, J)
+        return [self._postprocess(profs, pred, qos)
+                for (profs, _, qos), pred in zip(requests, preds)]
+
+    def _postprocess(self, profs, pred: np.ndarray,
+                     qos=None) -> List[Dict[int, float]]:
+        """(3, J) U-Net output -> per-job speed dicts: linreg heads for the
+        small slices, full-slice anchor, then the memory/QoS monitor."""
+        qos = qos or [0] * len(profs)
         lin = linreg_mod.apply_linreg(self.heads, pred.T)  # (J, 2)
         out = []
         for j, (p, q) in enumerate(zip(profs, qos)):

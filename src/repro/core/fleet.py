@@ -17,12 +17,15 @@ Fleet spec strings compose kinds with counts::
     parse_fleet("h100:2")
     parse_fleet("a100:2+h100:2+tpu:1")
 
-All GPUs of one kind share a single spec object, so partition enumeration
-caches and the optimizer memo (whose key is already space-aware) are shared
-across the kind.
+All GPUs of one kind share a single spec object — across ``parse_fleet``
+calls too (the per-kind factories are memoized): specs are read-only and
+their default estimator is stateless, so partition-space precomputation,
+the perf-model caches and the optimizer memo stay warm across every
+simulation in the process instead of being rebuilt per sweep cell.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Sequence
 
@@ -46,11 +49,13 @@ class GPUSpec:
             self.estimator = OracleEstimator(self.pm)
 
 
+@functools.lru_cache(maxsize=None)
 def _a100_spec() -> GPUSpec:
     space = a100_mig_space()
     return GPUSpec("a100", space, PerfModel(space, A100), speed_scale=1.0)
 
 
+@functools.lru_cache(maxsize=None)
 def _h100_spec() -> GPUSpec:
     space = h100_mig_space()
     # ~2x achievable training throughput vs. A100 (memory-bound jobs track
@@ -58,6 +63,7 @@ def _h100_spec() -> GPUSpec:
     return GPUSpec("h100", space, PerfModel(space, H100), speed_scale=2.0)
 
 
+@functools.lru_cache(maxsize=None)
 def _tpu_spec() -> GPUSpec:
     space = tpu_pod_space()
     # one v5e pod counts as one "accelerator"; its full slice dwarfs a GPU

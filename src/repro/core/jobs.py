@@ -101,6 +101,15 @@ class JobProfile:
     def intensity(self) -> float:
         return self.flops_per_step / max(self.bytes_per_step, 1.0)
 
+    # profiles are immutable value objects: copying a Job (the simulator
+    # deep-copies its trace) must not clone them, both for speed and so the
+    # perf-model's identity-keyed caches stay warm across simulations
+    def __deepcopy__(self, memo) -> "JobProfile":
+        return self
+
+    def __copy__(self) -> "JobProfile":
+        return self
+
 
 # effective-byte multipliers by family: element-wise-heavy recurrent models
 # and embedding-table-heavy models move far more HBM bytes per useful FLOP

@@ -1,26 +1,40 @@
-"""MISO partition optimizer (paper Algorithm 1).
+"""MISO partition optimizer (paper Algorithm 1), vectorized.
 
 Given per-job speed functions f_i: slice-size -> normalized speed (0..1, with
 0 meaning OOM/QoS-infeasible), scan every valid partition of length m and
 every job->slice assignment, and return the configuration maximizing
 sum_i f_i(x_i)  (system throughput, Eq. 2-4).
 
-Assignments within a slice multiset are solved exactly by bitmask DP over
-jobs (O(2^m * m) per multiset) instead of m! permutations — same optimum,
-~50x fewer evaluations; ``optimize_partition_bruteforce`` keeps the literal
-Algorithm 1 enumeration as the test oracle.
+The scan is one numpy pass over *all* length-m multisets at once: the job
+speeds are gathered into a ``(P, m, m)`` partition x slot x job tensor
+(``space.part_cols(m)`` precomputed at :class:`PartitionSpace` construction)
+and the exact assignment is solved by a bitmask DP over flat numpy arrays —
+level t of the DP fills slot t for every partition and every popcount-t mask
+simultaneously.  The DP visit order and first-strict-max tie-breaking
+replicate the historical per-partition dict DP *exactly* (see
+``_dp_schedule``), so results — objective, chosen multiset AND the job->slice
+permutation — are bit-identical to the scalar implementation; the golden
+traces prove it end-to-end.  ``_assign_dp`` keeps that scalar dict DP as the
+single-multiset reference (and the benchmark's un-memoized comparison
+point), and ``optimize_partition_bruteforce`` keeps the literal Algorithm 1
+enumeration as the test oracle.
 
 Repeated repartition calls in long traces mostly carry the exact same speed
 vectors (a job's profile — and hence its estimate — is piecewise constant in
-progress), so results are memoized on ``(space, m, rounded speed-vector
-signature)``.  ``benchmarks/components.optimizer_latency`` measures the
-speedup; pass ``memo=False`` to bypass.
+progress), so results are memoized on ``(space.uid, rounded speed-vector
+signature)`` — the per-space id is interned at construction instead of
+re-hashing the space's name/sizes/capacity tuple per call.
+``benchmarks/components.optimizer_latency`` measures both the vectorized
+speedup and the memo speedup; pass ``memo=False`` to bypass.
 """
 from __future__ import annotations
 
+import functools
 import itertools
 from dataclasses import dataclass
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.partitions import PartitionSpace
 
@@ -32,10 +46,12 @@ _MEMO_MAX = 65536    # FIFO-bounded: noisy estimators never repeat a key, so
 
 
 def _memo_key(space: PartitionSpace, speeds, require_feasible: bool) -> tuple:
-    sig = tuple(tuple(sorted((s, round(v, _MEMO_ROUND)) for s, v in sv.items()))
+    # a missing size and an explicit 0.0 produce identical results in every
+    # solver path (``.get(size, 0.0)``), so the signature may collapse them
+    sizes = space.sizes
+    sig = tuple(tuple(round(sv.get(s, 0.0), _MEMO_ROUND) for s in sizes)
                 for sv in speeds)
-    return (space.name, space.sizes, space.total_compute, space.total_mem,
-            require_feasible, sig)
+    return (space.uid, require_feasible, sig)
 
 
 def clear_memo() -> None:
@@ -54,11 +70,18 @@ class PartitionChoice:
     feasible: bool                 # every job got a non-zero-speed slice
 
 
+# --------------------------------------------------------------------------
+# the scalar reference DP (kept verbatim: tie-break oracle + benchmark base)
+# --------------------------------------------------------------------------
+
+
 def _assign_dp(sizes: Tuple[int, ...], speeds: Sequence[Dict[int, float]]):
     """Best assignment of m jobs to the multiset ``sizes`` (len m).
 
     Returns (best_obj, perm) where perm[i] = slice size of job i.
-    DP over (position in sizes, bitmask of assigned jobs).
+    DP over (position in sizes, bitmask of assigned jobs).  This is the
+    historical scalar implementation; ``assign_batch`` must match it
+    bit-for-bit, tie-breaks included.
     """
     m = len(sizes)
     full = (1 << m) - 1
@@ -86,6 +109,300 @@ def _assign_dp(sizes: Tuple[int, ...], speeds: Sequence[Dict[int, float]]):
     return best_obj, tuple(perm)
 
 
+# --------------------------------------------------------------------------
+# vectorized assignment: one DP over (partitions x masks) numpy arrays
+# --------------------------------------------------------------------------
+
+
+class _Level:
+    """One DP level's static index structure (popcount-t masks)."""
+    __slots__ = ("t", "n", "prev2d", "jobs2d", "prev_flat", "jobs_flat",
+                 "prev_list", "jobs_list", "off")
+
+    def __init__(self, t, prev2d, jobs2d, off):
+        self.t = t
+        self.n = prev2d.shape[0]
+        self.prev2d = prev2d
+        self.jobs2d = jobs2d
+        self.prev_flat = np.ascontiguousarray(prev2d.ravel())
+        self.jobs_flat = np.ascontiguousarray(jobs2d.ravel())
+        self.prev_list = self.prev_flat.tolist()
+        self.jobs_list = self.jobs_flat.tolist()
+        self.off = off                 # flat offset into the WG weight row
+
+
+@functools.lru_cache(maxsize=None)
+def _dp_schedule(m: int):
+    """Static DP index schedule for job count ``m``, replicating the dict
+    DP's enumeration order exactly.
+
+    Level t (1-based) holds every bitmask of popcount t, in the order the
+    dict DP first inserts it; each such mask has exactly t candidate
+    transitions (one per set bit j, predecessor mask ^ (1<<j)), in the order
+    the dict DP enumerates them (predecessors in their own insertion order,
+    then j ascending).  ``prev2d`` indexes into level t-1's mask order.
+    Because replacement in the dict DP is strictly-greater, its winner is
+    the *first* maximal candidate — precisely np.argmax's (and a
+    first-strict-max Python scan's) tie rule over these candidate axes.
+
+    Returns ``(levels, total)`` where ``total`` is the candidate count
+    summed over levels (the WG weight-row width).
+    """
+    dp_keys = [0]                      # dict insertion order across levels
+    index_in_level = {0: 0}
+    levels = []
+    off = 0
+    for pos in range(m):
+        new_masks: List[int] = []      # first-occurrence order = insertion
+        cands: Dict[int, List[Tuple[int, int]]] = {}
+        for mask in dp_keys:
+            if bin(mask).count("1") != pos:
+                continue
+            for j in range(m):
+                if mask & (1 << j):
+                    continue
+                nm = mask | (1 << j)
+                if nm not in cands:
+                    cands[nm] = []
+                    new_masks.append(nm)
+                cands[nm].append((index_in_level[mask], j))
+        dp_keys.extend(new_masks)
+        index_in_level = {nm: i for i, nm in enumerate(new_masks)}
+        prev = np.asarray([[c[0] for c in cands[nm]] for nm in new_masks],
+                          dtype=np.int64)
+        jobs = np.asarray([[c[1] for c in cands[nm]] for nm in new_masks],
+                          dtype=np.int64)
+        levels.append(_Level(pos + 1, prev, jobs, off))
+        off += prev.size
+    return tuple(levels), off
+
+
+# flat gather indices per (space uid, multiset rows): CIDX[p, k] points into
+# S.ravel() at (candidate k's job, slot column of candidate k's level), so
+# the whole DP's weights are fetched with a single np.take per call
+_CIDX_CACHE: Dict[tuple, np.ndarray] = {}
+_CIDX_MAX = 4096
+
+
+def _cidx_for(key: Optional[tuple], cols: np.ndarray,
+              n_sizes: int) -> np.ndarray:
+    cidx = _CIDX_CACHE.get(key) if key is not None else None
+    if cidx is None:
+        m = cols.shape[1]
+        levels, _ = _dp_schedule(m)
+        blocks = [lv.jobs_flat[None, :] * n_sizes + cols[:, lv.t - 1][:, None]
+                  for lv in levels]
+        cidx = np.concatenate(blocks, axis=1)
+        if key is not None:
+            if len(_CIDX_CACHE) >= _CIDX_MAX:
+                _CIDX_CACHE.pop(next(iter(_CIDX_CACHE)))
+            _CIDX_CACHE[key] = cidx
+    return cidx
+
+
+_maximum_reduce = np.maximum.reduce
+
+
+def _forward_max(P: int, m: int, S: np.ndarray, cidx: np.ndarray, levels):
+    """Max-only batched DP forward pass: per level t, fill slot t for every
+    partition row and every popcount-t mask at once (4 numpy ops a level; no
+    argmax tracking — the winning path is re-derived from the level values
+    by :func:`_backtrack_row`).  Returns ``(dps, WG)`` where ``dps[t]`` is
+    the (P, n_t) value table after level t and ``WG`` the (P, total)
+    candidate-weight gather."""
+    WG = S.take(cidx)
+    dp = WG[:, :m]                     # level 1: one candidate per mask
+    dps = [None, dp]
+    for lv in levels[1:]:
+        t = lv.t
+        cand = dp.take(lv.prev_flat, axis=1, mode="clip")
+        cand += WG[:, lv.off:lv.off + lv.n * t]
+        dp = _maximum_reduce(cand.reshape(P, lv.n, t), axis=2)
+        dps.append(dp)
+    return dps, WG
+
+
+def _backtrack_row(m: int, levels, dps, WG, cols_row, r: int):
+    """Re-derive one partition row's winning path from the level value
+    tables: at each mask pick the first candidate attaining the stored max
+    (the dict DP's strictly-greater replacement rule).  Pure Python on
+    ``.tolist()`` rows — a handful of microseconds, paid only for winners.
+    Returns ``(perm_cols list, feasible)``; a candidate's WG weight *is*
+    S[job, col], so feasibility needs no extra gather."""
+    wrow = WG[r].tolist()
+    perm_cols = [0] * m
+    feasible = True
+    cur = 0
+    for t in range(m, 1, -1):
+        lv = levels[t - 1]
+        dprev = dps[t - 1][r].tolist()
+        pl, jl = lv.prev_list, lv.jobs_list
+        base = cur * t
+        base_w = lv.off + base
+        best = None
+        bi = 0
+        for c in range(t):
+            v = dprev[pl[base + c]] + wrow[base_w + c]
+            if best is None or v > best:
+                best, bi = v, c
+        perm_cols[jl[base + bi]] = cols_row[t - 1]
+        if wrow[base_w + bi] <= 0.0:
+            feasible = False
+        cur = pl[base + bi]
+    j = levels[0].jobs_list[cur]       # level 1: single candidate
+    perm_cols[j] = cols_row[0]
+    if wrow[cur] <= 0.0:
+        feasible = False
+    return perm_cols, feasible
+
+
+def _forward_full(cols: np.ndarray, S: np.ndarray, cidx: np.ndarray):
+    """Forward pass with per-level argmax tracking, for consumers that need
+    every row's winning assignment (fragmentation-aware scans, tests)."""
+    P, m = cols.shape
+    levels, _ = _dp_schedule(m)
+    WG = S.take(cidx)
+    dp = np.zeros((P, 1))
+    cis = []
+    for lv in levels:
+        t = lv.t
+        cand = dp.take(lv.prev_flat, axis=1, mode="clip")
+        cand += WG[:, lv.off:lv.off + lv.n * t]
+        cand = cand.reshape(P, lv.n, t)
+        cis.append(cand.argmax(axis=2))
+        dp = _maximum_reduce(cand, axis=2)
+    return dp[:, 0], cis, WG
+
+
+def _backtrack_all(cols: np.ndarray, WG: np.ndarray, cis, rows=None):
+    """Walk winning paths at once: (perm_cols (R, m), feas (R,)).
+    A chosen candidate's WG weight *is* its S[job, col] speed, so
+    feasibility comes straight from the gathered weights — this also makes
+    the walk independent of how rows were stacked across mixes.  ``rows``
+    restricts the walk to a subset of rows (e.g. per-mix winners); default
+    is every row."""
+    m = cols.shape[1]
+    levels, _ = _dp_schedule(m)
+    if rows is None:
+        rows = np.arange(cols.shape[0])
+        cols_sel = cols
+    else:
+        cols_sel = cols[rows]
+    R = rows.shape[0]
+    out_rows = np.arange(R)
+    cur = np.zeros(R, dtype=np.int64)
+    perm_cols = np.zeros((R, m), dtype=np.int64)
+    feas = np.ones(R, dtype=bool)
+    for t in range(m, 0, -1):
+        lv = levels[t - 1]
+        ci = cis[t - 1][rows, cur]
+        j = lv.jobs2d[cur, ci]
+        perm_cols[out_rows, j] = cols_sel[:, t - 1]
+        feas &= WG[rows, lv.off + cur * t + ci] > 0.0
+        cur = lv.prev2d[cur, ci]
+    return perm_cols, feas
+
+
+def assign_batch(cols: np.ndarray, S: np.ndarray):
+    """Exact assignment of m jobs to each of P slice multisets, batched.
+
+    ``cols``: (P, m) — slot t's size as a column index into the size menu.
+    ``S``:    (m, n_sizes) — S[j, k] = f_j(size of column k).
+
+    Returns ``(objs (P,), perm_cols (P, m), feas (P,))``: per multiset the
+    best achievable objective, the winning job->column assignment
+    (perm_cols[p, j] = column of the slice job j gets) and whether every job
+    in that winning assignment got a non-zero speed.  Bit-identical to
+    running ``_assign_dp`` on every row, tie-breaks included.
+    """
+    objs, cis, WG = _forward_full(cols, S, _cidx_for(None, cols, S.shape[1]))
+    perm_cols, feas = _backtrack_all(cols, WG, cis)
+    return objs, perm_cols, feas
+
+
+def _speed_matrix(space: PartitionSpace, speeds) -> np.ndarray:
+    """(m, n_sizes) dense speed matrix in ``space.sizes`` column order."""
+    sizes = space.sizes
+    flat = [sv.get(s, 0.0) for sv in speeds for s in sizes]
+    return np.asarray(flat, dtype=np.float64).reshape(len(speeds), len(sizes))
+
+
+def solve_all_partitions(space: PartitionSpace, speeds):
+    """Run the batched Algorithm-1 kernel over every valid length-m multiset.
+
+    Returns ``(objs, perms, feas)`` with ``perms`` (P, m) in slice *sizes*
+    (perm[p, j] = size job j gets under partition row p), rows in
+    ``space.partitions_of_len(m)`` order — the raw material for both
+    :func:`optimize_partition` and fragmentation-aware policy variants.
+    """
+    m = len(speeds)
+    cols = space.part_cols(m)
+    if cols.shape[0] == 0:
+        return (np.empty(0), np.empty((0, m), dtype=np.int64),
+                np.empty(0, dtype=bool))
+    S = _speed_matrix(space, speeds)
+    objs, cis, WG = _forward_full(
+        cols, S, _cidx_for((space.uid, m), cols, len(space.sizes)))
+    perm_cols, feas = _backtrack_all(cols, WG, cis)
+    sizes_arr = np.asarray(space.sizes, dtype=np.int64)
+    return objs, sizes_arr[perm_cols], feas
+
+
+def assign_multisets(space: PartitionSpace, rows, speeds):
+    """Batched exact assignment over arbitrary slice multisets ``rows``
+    (each a length-m tuple of sizes from ``space``; all rows same length).
+    Used by policies that scan sub-multisets (e.g. OptSta's fixed menu).
+    Returns ``(objs, perms, feas)`` as :func:`solve_all_partitions` does,
+    rows in the given order."""
+    m = len(speeds)
+    col = space.size_col
+    cols = np.asarray([[col[s] for s in r] for r in rows],
+                      dtype=np.int64).reshape(len(rows), m)
+    S = _speed_matrix(space, speeds)
+    objs, cis, WG = _forward_full(
+        cols, S, _cidx_for((space.uid, tuple(rows)), cols, len(space.sizes)))
+    perm_cols, feas = _backtrack_all(cols, WG, cis)
+    sizes_arr = np.asarray(space.sizes, dtype=np.int64)
+    return objs, sizes_arr[perm_cols], feas
+
+
+def _optimize_batch(space: PartitionSpace, speeds,
+                    require_feasible: bool) -> Optional[PartitionChoice]:
+    """First-strict-max selection over partition rows (the historical scan
+    order: rows ascend in ``partitions_of_len`` order, replacement only on
+    strictly greater objective).  Feasibility is resolved lazily: only the
+    winning row's path is backtracked unless the winner turns out
+    infeasible under ``require_feasible`` (then the full mask is needed —
+    the global first-max is also the feasible first-max whenever it is
+    itself feasible)."""
+    m = len(speeds)
+    cols = space.part_cols(m)
+    P = cols.shape[0]
+    if P == 0:
+        return None
+    S = _speed_matrix(space, speeds)
+    cidx = _cidx_for((space.uid, m), cols, len(space.sizes))
+    levels, _ = _dp_schedule(m)
+    dps, WG = _forward_max(P, m, S, cidx, levels)
+    objs = dps[m][:, 0]
+    idx = int(objs.argmax())
+    perm_cols, feasible = _backtrack_row(m, levels, dps, WG,
+                                         cols[idx].tolist(), idx)
+    if require_feasible and not feasible:
+        # rare: the global winner's own assignment is infeasible — fall back
+        # to the full argmax-tracked pass to mask per-row feasibility
+        _, cis, WG2 = _forward_full(cols, S, cidx)
+        _, feas = _backtrack_all(cols, WG2, cis)
+        if not feas.any():
+            return None
+        idx = int(np.argmax(np.where(feas, objs, -np.inf)))
+        perm_cols, feasible = _backtrack_row(m, levels, dps, WG,
+                                             cols[idx].tolist(), idx)
+    sizes = space.sizes
+    return PartitionChoice(tuple(sizes[c] for c in perm_cols),
+                           float(objs[idx]), feasible)
+
+
 def optimize_partition(space: PartitionSpace,
                        speeds: Sequence[Dict[int, float]],
                        require_feasible: bool = False,
@@ -101,19 +418,145 @@ def optimize_partition(space: PartitionSpace,
             _MEMO_STATS["hits"] += 1
             return cached
         _MEMO_STATS["misses"] += 1
-    best: Optional[PartitionChoice] = None
-    for part in space.partitions_of_len(m):
-        obj, perm = _assign_dp(part, speeds)
-        feasible = all(speeds[j].get(perm[j], 0.0) > 0.0 for j in range(m))
-        if require_feasible and not feasible:
-            continue
-        if best is None or obj > best.objective:
-            best = PartitionChoice(perm, obj, feasible)
+    if m == 1:
+        best = _optimize_single(space, speeds[0], require_feasible)
+    else:
+        best = _optimize_batch(space, speeds, require_feasible)
     if memo:
         if len(_MEMO) >= _MEMO_MAX:
             _MEMO.pop(next(iter(_MEMO)))       # evict oldest insertion
         _MEMO[key] = best
     return best
+
+
+def optimize_partition_batch(space: PartitionSpace,
+                             mixes: Sequence[Sequence[Dict[int, float]]],
+                             require_feasible: bool = False,
+                             memo: bool = True
+                             ) -> List[Optional[PartitionChoice]]:
+    """Solve many repartition decisions against one space in one pass.
+
+    ``mixes[i]`` is the per-job speed-dict list of decision i (job counts may
+    differ between mixes).  Same-length mixes are stacked into a single
+    ``(B*P, m)`` DP — the per-call fixed cost (speed-matrix build, weight
+    gather, per-level numpy dispatch) amortizes over the batch, which is
+    where the >=10x over the scalar scan comes from (see
+    ``benchmarks/components.optimizer_latency``).  The engine's same-tick
+    coalescing routes concurrent repartitions here.
+
+    Element i equals ``optimize_partition(space, mixes[i], ...)`` exactly
+    (bit-identical choice and objective, same memo interaction).
+    """
+    out: List[Optional[PartitionChoice]] = [None] * len(mixes)
+    pending: Dict[int, List[int]] = {}
+    keys: Dict[int, tuple] = {}
+    key_first: Dict[tuple, int] = {}
+    alias: Dict[int, int] = {}
+    for i, speeds in enumerate(mixes):
+        m = len(speeds)
+        if m == 0:
+            continue
+        if memo:
+            key = _memo_key(space, speeds, require_feasible)
+            cached = _MEMO.get(key, _MEMO)
+            if cached is not _MEMO:
+                _MEMO_STATS["hits"] += 1
+                out[i] = cached
+                continue
+            first = key_first.get(key)
+            if first is not None:
+                # duplicate mix within this batch: sequential singles would
+                # hit the memo here, so count (and solve) it as one
+                _MEMO_STATS["hits"] += 1
+                alias[i] = first
+                continue
+            _MEMO_STATS["misses"] += 1
+            keys[i] = key
+            key_first[key] = i
+        if m == 1:
+            out[i] = _optimize_single(space, speeds[0], require_feasible)
+        else:
+            pending.setdefault(m, []).append(i)
+    for m, idxs in pending.items():
+        solved = _optimize_group(space, [mixes[i] for i in idxs],
+                                 require_feasible)
+        for i, choice in zip(idxs, solved):
+            out[i] = choice
+    for i, first in alias.items():
+        out[i] = out[first]
+    if memo:
+        for i, key in keys.items():
+            if len(_MEMO) >= _MEMO_MAX:
+                _MEMO.pop(next(iter(_MEMO)))
+            _MEMO[key] = out[i]
+    return out
+
+
+def _optimize_group(space: PartitionSpace, group,
+                    require_feasible: bool) -> List[Optional[PartitionChoice]]:
+    """Stacked solve of B same-length mixes: rows (B*P, m), one forward."""
+    B = len(group)
+    m = len(group[0])
+    cols = space.part_cols(m)
+    P = cols.shape[0]
+    if P == 0:
+        return [None] * B
+    sizes = space.sizes
+    n = len(sizes)
+    flat = [sv.get(s, 0.0) for speeds in group for sv in speeds
+            for s in sizes]
+    S = np.asarray(flat, dtype=np.float64)
+    base = _cidx_for((space.uid, m), cols, n)
+    # shift each mix's gather block into its slab of S.ravel()
+    cidx = (base[None, :, :]
+            + (np.arange(B) * (m * n))[:, None, None]).reshape(B * P, -1)
+    cols_tiled = np.broadcast_to(cols, (B,) + cols.shape).reshape(B * P, m)
+    objs, cis, WG = _forward_full(cols_tiled, S, cidx)
+    objs2 = objs.reshape(B, P)
+    # lazily backtrack the B winner rows only; the full per-row feasibility
+    # mask is needed just for mixes whose winner turns out infeasible under
+    # require_feasible (the global first-max is also the feasible first-max
+    # whenever it is itself feasible)
+    idx = objs2.argmax(axis=1)
+    rows = np.arange(B) * P + idx
+    perm_sel, feas_sel = _backtrack_all(cols_tiled, WG, cis, rows=rows)
+    ok = np.ones(B, dtype=bool)
+    if require_feasible and not feas_sel.all():
+        _, feas = _backtrack_all(cols_tiled, WG, cis)
+        feas2 = feas.reshape(B, P)
+        ok = feas2.any(axis=1)
+        idx = np.argmax(np.where(feas2, objs2, -np.inf), axis=1)
+        rows = np.arange(B) * P + idx
+        perm_sel, feas_sel = _backtrack_all(cols_tiled, WG, cis, rows=rows)
+    win_perms = perm_sel.tolist()
+    win_objs = objs[rows].tolist()
+    win_feas = feas_sel.tolist()
+    results: List[Optional[PartitionChoice]] = []
+    for b in range(B):
+        if not ok[b]:
+            results.append(None)
+            continue
+        results.append(PartitionChoice(
+            tuple(sizes[c] for c in win_perms[b]),
+            win_objs[b], win_feas[b]))
+    return results
+
+
+def _optimize_single(space: PartitionSpace, sv: Dict[int, float],
+                     require_feasible: bool) -> Optional[PartitionChoice]:
+    """m == 1 fast path (a lone job on a GPU is the most common decision):
+    scan the length-1 partitions in row order, first strict max — identical
+    selection to the batched kernel, no numpy round-trip."""
+    best_size, best_v = None, -np.inf
+    for (size,) in space.partitions_of_len(1):
+        v = sv.get(size, 0.0)
+        if require_feasible and v <= 0.0:
+            continue
+        if v > best_v:
+            best_size, best_v = size, v
+    if best_size is None:
+        return None
+    return PartitionChoice((best_size,), float(best_v), best_v > 0.0)
 
 
 def optimize_partition_bruteforce(space: PartitionSpace,

@@ -14,6 +14,25 @@ reproduces the appendix-figure semantics.
 sliced into contiguous row-range sub-meshes in units of 2 rows (32 chips).
 Memory is per-chip, so memory slots == compute units and there is no 4+3
 exclusion; up to 8 co-located jobs per pod.
+
+Everything the scheduler's hot path needs per decision is precomputed at
+construction time (partition spaces are tiny and immutable):
+
+* dense per-length arrays — ``part_sizes(m)`` is the ``(P, m)`` slice-size
+  matrix of every valid length-``m`` multiset (rows sorted descending) and
+  ``part_cols(m)`` maps each slot to its column in ``self.sizes``; both feed
+  the vectorized Algorithm-1 kernel in :mod:`repro.core.optimizer`;
+* fragmentation scores — ``part_spare(m)`` carries ``largest_free_slice``
+  for every row, and per-tuple lookups are cached;
+* admission feasibility — slice memory is non-decreasing in slice size on
+  every menu we model, so "does some partition give every job a slice with
+  enough memory *and* above its QoS floor" collapses to one scalar
+  requirement per job (``min_required_slice``) and one vectorized
+  comparison against the sorted size matrix (``placeable``).  This is the
+  per-space precomputation the fragmentation-aware MIG scheduling line of
+  work (PAPERS.md) argues for, and it is *exact* — unlike the former
+  biggest-memory-first greedy, which missed feasible placements when QoS
+  floors conflicted with the memory order.
 """
 from __future__ import annotations
 
@@ -21,6 +40,10 @@ import functools
 import itertools
 from dataclasses import dataclass
 from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+_SPACE_UIDS = itertools.count()
 
 
 @dataclass(frozen=True)
@@ -51,6 +74,21 @@ class PartitionSpace:
         self.partitions = self._enumerate()
         self.max_jobs = max(len(p) for p in self.partitions)
         self.full_size = max(self.sizes)
+        # process-unique id: memo keys intern this instead of re-hashing
+        # (name, sizes, total_compute, total_mem) on every optimizer call
+        self.uid = next(_SPACE_UIDS)
+        self._partition_set = frozenset(self.partitions)
+        self.size_col = {s: k for k, s in enumerate(self.sizes)}
+        self._spare_cache: Dict[Tuple[int, ...], int] = {}
+        self._by_len = self._build_dense()
+        # memory per slice must be non-decreasing in slice size for the
+        # scalar-requirement feasibility collapse; every menu we model
+        # satisfies this (A100/H100 MIG tables, per-chip TPU memory)
+        asc = sorted(self.sizes)
+        self._mem_by_size_asc = [(s, self.slices[s].memory_gb) for s in asc]
+        self._mem_monotone = all(
+            a[1] <= b[1] for a, b in zip(self._mem_by_size_asc,
+                                         self._mem_by_size_asc[1:]))
 
     # -------------------------------------------------------- enumeration
 
@@ -77,8 +115,57 @@ class PartitionSpace:
         rec(0, [], 0, 0)
         return tuple(sorted(found, key=lambda p: (len(p), [-x for x in p])))
 
+    def _build_dense(self):
+        """Per length m: (sizes (P,m), col-index (P,m), spare (P,),
+        compute-slots-used (P,)) over all valid length-m multisets, rows in
+        ``partitions`` order (selection tie-breaks depend on it)."""
+        by_len = {}
+        self._pareto_by_len: Dict[int, Tuple[Tuple[int, ...], ...]] = {}
+        for m in range(1, self.max_jobs + 1):
+            rows = [p for p in self.partitions if len(p) == m]
+            sizes = np.asarray(rows, dtype=np.int64).reshape(len(rows), m)
+            cols = np.asarray([[self.size_col[s] for s in p] for p in rows],
+                              dtype=np.int64).reshape(len(rows), m)
+            spare = np.asarray([self._largest_free(p) for p in rows],
+                               dtype=np.int64)
+            used = np.asarray([sum(self.slices[s].compute_slots for s in p)
+                               for p in rows], dtype=np.int64)
+            by_len[m] = (sizes, cols, spare, used)
+            # Pareto-maximal rows (sorted descending): a row dominated
+            # elementwise by another can never be the only feasible
+            # placement, so admission checks scan just the frontier
+            frontier = [p for p in rows
+                        if not any(q != p and all(a >= b for a, b
+                                                  in zip(q, p))
+                                   for q in rows)]
+            self._pareto_by_len[m] = tuple(frontier)
+        return by_len
+
+    # ----------------------------------------------------- dense accessors
+
+    def part_sizes(self, m: int) -> np.ndarray:
+        """(P, m) slice sizes of every valid length-m partition (rows sorted
+        descending, ``partitions`` order)."""
+        return self._by_len[m][0] if m in self._by_len else \
+            np.empty((0, max(m, 1)), dtype=np.int64)
+
+    def part_cols(self, m: int) -> np.ndarray:
+        """(P, m) column index of each slot's size in ``self.sizes``."""
+        return self._by_len[m][1] if m in self._by_len else \
+            np.empty((0, max(m, 1)), dtype=np.int64)
+
+    def part_spare(self, m: int) -> np.ndarray:
+        """(P,) ``largest_free_slice`` of every length-m partition."""
+        return self._by_len[m][2] if m in self._by_len else \
+            np.empty((0,), dtype=np.int64)
+
+    def part_compute(self, m: int) -> np.ndarray:
+        """(P,) compute slots used by every length-m partition."""
+        return self._by_len[m][3] if m in self._by_len else \
+            np.empty((0,), dtype=np.int64)
+
     def is_valid(self, partition: Sequence[int]) -> bool:
-        return tuple(sorted(partition, reverse=True)) in set(self.partitions)
+        return tuple(sorted(partition, reverse=True)) in self._partition_set
 
     @functools.lru_cache(maxsize=None)
     def partitions_of_len(self, m: int) -> Tuple[Tuple[int, ...], ...]:
@@ -94,7 +181,14 @@ class PartitionSpace:
     def largest_free_slice(self, partition: Sequence[int]) -> int:
         """Largest slice size still addable next to ``partition`` (0 if the
         accelerator is fully packed) — the fragmentation score used by
-        space-aware policies."""
+        space-aware policies.  Cached per multiset."""
+        key = tuple(partition)
+        best = self._spare_cache.get(key)
+        if best is None:
+            best = self._spare_cache[key] = self._largest_free(key)
+        return best
+
+    def _largest_free(self, partition: Tuple[int, ...]) -> int:
         compute = sum(self.slices[s].compute_slots for s in partition)
         mem = sum(self.slices[s].mem_slots for s in partition)
         best = 0
@@ -107,6 +201,88 @@ class PartitionSpace:
                     and size > best):
                 best = size
         return best
+
+    # --------------------------------------------- admission feasibility
+
+    def min_required_slice(self, mem_gb: float,
+                           qos_min_slice: int = 0) -> Optional[int]:
+        """Smallest slice size satisfying both the memory footprint and the
+        QoS floor, or None when no slice on the menu does.  Because slice
+        memory is non-decreasing in slice size, a slice satisfies a job iff
+        ``size >= min_required_slice(job)`` — the whole 2-D (memory, QoS)
+        constraint collapses to this one scalar."""
+        for size, sz_mem in self._mem_by_size_asc:
+            if sz_mem >= mem_gb and size >= qos_min_slice:
+                return size
+        return None
+
+    def placeable(self, required_sizes: Sequence[int]) -> bool:
+        """Exact feasibility: does *some* valid partition of length
+        ``len(required_sizes)`` give every job a slice of at least its
+        required size?  Requirements and rows are both sorted descending, so
+        slot r must cover the r-th most demanding job — exact for scalar
+        requirements by an exchange argument — and only the precomputed
+        Pareto-maximal rows need scanning."""
+        m = len(required_sizes)
+        if m not in self._pareto_by_len:
+            return False
+        req = sorted(required_sizes, reverse=True)
+        for row in self._pareto_by_len[m]:
+            ok = True
+            for a, b in zip(row, req):
+                if a < b:
+                    ok = False
+                    break
+            if ok:
+                return True
+        return False
+
+    def feasible_exact(self, mems: Sequence[float],
+                       qoss: Sequence[int]) -> bool:
+        """Exact admission check for arbitrary (memory, QoS) pairs.  Uses the
+        scalar-requirement fast path when slice memory is monotone in size
+        (all shipped menus); falls back to per-partition bitmask matching
+        otherwise, so correctness never depends on the menu shape."""
+        if self._mem_monotone:
+            reqs = []
+            for mem, q in zip(mems, qoss):
+                r = self.min_required_slice(mem, q)
+                if r is None:
+                    return False
+                reqs.append(r)
+            return self.placeable(reqs)
+        return self._feasible_matching(list(mems), list(qoss))
+
+    def _feasible_matching(self, mems, qoss) -> bool:
+        """Bitmask-DP perfect matching over every partition (non-monotone
+        menus only; exponential in m but m <= max_jobs <= 8)."""
+        m = len(mems)
+        for part in self.partitions_of_len(m):
+            ok_mask = []
+            for size in part:
+                st = self.slices[size]
+                bits = 0
+                for j in range(m):
+                    if st.memory_gb >= mems[j] and size >= qoss[j]:
+                        bits |= 1 << j
+                ok_mask.append(bits)
+            reach = {0}
+            for bits in ok_mask:
+                nxt = set()
+                for mask in reach:
+                    free = bits & ~mask
+                    while free:
+                        low = free & -free
+                        nxt.add(mask | low)
+                        free ^= low
+                reach = nxt
+                if not reach:
+                    break
+            if (1 << m) - 1 in reach:
+                return True
+        return False
+
+    # ------------------------------------------------------------- misc
 
     def slice_mem_gb(self, size: int) -> float:
         return self.slices[size].memory_gb

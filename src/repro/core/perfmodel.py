@@ -50,15 +50,46 @@ TPU_V5E_POD = Hardware("tpu-v5e-pod", peak_flops=256 * 197e12,
                        cache_mps_kappa=0.15, cache_mig_kappa=0.0)
 
 
+_CACHE_MAX = 65536   # FIFO bound: profiles are deepcopied per job, so keys
+                     # accumulate across long sweeps without one
+
+
 class PerfModel:
+    """Ground-truth speeds.  All entry points are memoized on the profile
+    *object* — a job's profile is piecewise constant in progress (and, since
+    :class:`JobProfile` is an immutable value object that survives trace
+    deep-copies, shared across simulations in one process), so the same
+    vectors are asked for over and over.  Keys are ``id(profile)`` with the
+    profile held in the cache entry, which pins the id for the entry's
+    lifetime; this skips re-hashing nine dataclass fields per lookup.  The
+    cached dicts are shared objects: callers must treat them as read-only
+    (every in-repo consumer copies before mutating)."""
+
     def __init__(self, space: PartitionSpace, hw: Hardware = A100):
         self.space = space
         self.hw = hw
+        self._time_cache: dict = {}
+        self._vec_cache: dict = {}
+        self._mps_cache: dict = {}
+
+    def _bound(self, cache: dict) -> None:
+        if len(cache) >= _CACHE_MAX:
+            cache.pop(next(iter(cache)))
 
     # ----------------------------------------------------------- MIG side
 
     def slice_time(self, prof: JobProfile, size: int) -> float:
         """Seconds per step on slice ``size`` (inf if OOM)."""
+        key = (id(prof), size)
+        hit = self._time_cache.get(key)
+        if hit is not None:
+            return hit[1]
+        self._bound(self._time_cache)
+        t = self._slice_time(prof, size)
+        self._time_cache[key] = (prof, t)
+        return t
+
+    def _slice_time(self, prof: JobProfile, size: int) -> float:
         st = self.space.slices[size]
         if prof.mem_gb > st.memory_gb:
             return float("inf")
@@ -83,17 +114,31 @@ class PerfModel:
         return t_full / t
 
     def speed_vector(self, prof: JobProfile) -> dict:
-        return {s: self.slice_speed(prof, s) for s in self.space.sizes}
+        hit = self._vec_cache.get(id(prof))
+        if hit is not None:
+            return hit[1]
+        self._bound(self._vec_cache)
+        sv = {s: self.slice_speed(prof, s) for s in self.space.sizes}
+        self._vec_cache[id(prof)] = (prof, sv)
+        return sv
 
     # ----------------------------------------------------------- MPS side
 
     def mps_speeds(self, profs: Sequence[JobProfile], level: float,
                    iters: int = 12) -> list:
         """Normalized speeds (vs. solo full-GPU) for jobs co-located in MPS at
-        ``level`` active-thread fraction each."""
+        ``level`` active-thread fraction each.  The fixed point is memoized
+        on the (profiles, level) mix — a GPU's MPS window asks for the same
+        mix at every event inside it — and loop-invariant terms are hoisted
+        out of the iteration; the arithmetic (and therefore every float bit)
+        is unchanged from the historical per-call loop."""
         m = len(profs)
         if m == 0:
             return []
+        key = (tuple(id(p) for p in profs), level, iters)
+        hit = self._mps_cache.get(key)
+        if hit is not None:
+            return list(hit[1])
         # cache pressure from co-runners (shared L2 in MPS)
         pressures = []
         for i, p in enumerate(profs):
@@ -111,26 +156,33 @@ class PerfModel:
 
         # contended DRAM loses efficiency (row-buffer conflicts etc.)
         bw_total = self.hw.hbm_bw * max(0.4, 1.0 - self.hw.mps_bw_loss * (m - 1))
-        rates = [1.0 / self.slice_time(p, self.space.full_size) for p in profs]
+        solo = [1.0 / self.slice_time(p, self.space.full_size) for p in profs]
+        # per-job compute time and the multiplexing factor are invariant
+        # across fixed-point iterations
+        t_comps = [p.flops_per_step / (self.hw.peak_flops * shares[i]
+                                       * p.compute_eff)
+                   for i, p in enumerate(profs)]
+        mux = 1.0 + self.hw.mps_mux_overhead * (m - 1)
+        overhead = self.hw.sched_overhead_s
+        rates = list(solo)
         for _ in range(iters):
             demand = [r * b for r, b in zip(rates, bytes_eff)]
             total_d = sum(demand)
             new_rates = []
-            for i, p in enumerate(profs):
-                t_comp = p.flops_per_step / (
-                    self.hw.peak_flops * shares[i] * p.compute_eff)
+            for i in range(m):
                 if total_d > bw_total and total_d > 0:
                     bw_i = bw_total * demand[i] / total_d
                 else:
                     bw_i = bw_total
                 t_mem = bytes_eff[i] / max(bw_i, 1e-6)
-                mux = 1.0 + self.hw.mps_mux_overhead * (m - 1)
-                new_rates.append(1.0 / (max(t_comp, t_mem) * mux
-                                        + self.hw.sched_overhead_s))
+                new_rates.append(1.0 / (max(t_comps[i], t_mem) * mux
+                                        + overhead))
             rates = [0.5 * a + 0.5 * b for a, b in zip(rates, new_rates)]
 
-        solo = [1.0 / self.slice_time(p, self.space.full_size) for p in profs]
-        return [r / s for r, s in zip(rates, solo)]
+        out = [r / s for r, s in zip(rates, solo)]
+        self._bound(self._mps_cache)
+        self._mps_cache[key] = (tuple(profs), out)
+        return list(out)
 
     def mps_matrix(self, profs: Sequence[JobProfile]) -> list:
         """3 x m matrix of MPS speeds (rows = MPS_LEVELS)."""

@@ -13,8 +13,16 @@ Architecture per the paper: two encoder blocks with 32 and 64 filters into a
 stride-2 convs divide evenly (the paper does not specify its padding; we
 avoid zero padding for the reason the paper cites — large zero regions hurt
 training), and the output is cropped back.
+Inference goes through one module-level jitted apply shared by every
+:class:`UNet` instance (keyed on parameter shapes + input shape, so all
+estimators in a process — and all sweep workers forked from it — reuse one
+compiled executable per shape instead of recompiling per instance), and
+batches are padded to power-of-two buckets so a handful of compilations
+serve any batch size.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -93,15 +101,43 @@ def apply(params, mps_matrix, levels: int = 3, jobs: int = 7):
     return out[:, :3, :jobs]
 
 
+@functools.partial(jax.jit, static_argnames=("levels", "jobs"))
+def _apply_jit(params, mps_matrix, levels: int, jobs: int):
+    return apply(params, mps_matrix, levels=levels, jobs=jobs)
+
+
+def _bucket(b: int) -> int:
+    """Next power-of-two batch bucket, so B estimator instances x arbitrary
+    window batch sizes compile O(log B) executables instead of O(B)."""
+    n = 1
+    while n < b:
+        n *= 2
+    return n
+
+
+def warm_jit_cache(levels: int = 3, jobs: int = 7,
+                   batch_buckets=(1, 2, 4, 8)) -> None:
+    """Compile the shared apply for the standard shapes ahead of time.
+
+    Call this in a process that will fork workers (e.g. the sweep engine):
+    the forked children inherit the parent's XLA compilation cache, so each
+    worker skips its own multi-hundred-ms compile.  Compilation is keyed on
+    parameter *shapes*, so warming with freshly-initialized params also
+    covers artifact-loaded ones.
+    """
+    params, _ = init(jax.random.PRNGKey(0), levels, jobs)
+    for b in batch_buckets:
+        m = jnp.zeros((b, levels, jobs), jnp.float32)
+        _apply_jit(params, m, levels, jobs).block_until_ready()
+
+
 class UNet:
-    """Convenience wrapper holding params + jitted apply."""
+    """Convenience wrapper holding params; apply is the shared jitted one."""
 
     def __init__(self, params, levels: int = 3, jobs: int = 7):
         self.params = params
         self.levels = levels
         self.jobs = jobs
-        self._apply = jax.jit(
-            lambda p, m: apply(p, m, levels=levels, jobs=jobs))
 
     @classmethod
     def create(cls, key, levels: int = 3, jobs: int = 7):
@@ -109,7 +145,17 @@ class UNet:
         return cls(params, levels, jobs)
 
     def __call__(self, mps_matrix):
+        """(levels, jobs) or (batch, levels, jobs) -> predictions of the same
+        leading shape.  Batches are zero-padded up to the next power-of-two
+        bucket (batch elements are independent through every conv, so padding
+        rows never change real rows) and cropped back."""
         single = mps_matrix.ndim == 2
         m = mps_matrix[None] if single else mps_matrix
-        out = self._apply(self.params, jnp.asarray(m, jnp.float32))
+        b = m.shape[0]
+        nb = _bucket(b)
+        m = jnp.asarray(m, jnp.float32)
+        if nb != b:
+            m = jnp.concatenate(
+                [m, jnp.zeros((nb - b,) + m.shape[1:], jnp.float32)], axis=0)
+        out = _apply_jit(self.params, m, self.levels, self.jobs)[:b]
         return out[0] if single else out

@@ -140,7 +140,11 @@ class ClusterSim:
                 g = self.gpus[payload]
                 if stamp != g.stamp or t < g.phase_end - 1e-9:
                     continue
-                self.end_phase(g)
+                batch = self._drain_same_tick_timers(t, g)
+                if batch is None:
+                    self.end_phase(g)
+                else:
+                    self.end_phase_batch(batch)
             elif kind == "completion":
                 gid, jid = payload
                 g = self.gpus[gid]
@@ -175,25 +179,25 @@ class ClusterSim:
     def spare_slice_ok(self, g: GPU, job: Job,
                        exclude: Optional[int] = None) -> bool:
         """'Maximum spare slice' check (paper §4.3): after adding the job,
-        some valid partition must give every job a memory-feasible slice.
-        ``exclude`` ignores one resident jid (what-if for preemption)."""
-        resident = [rj for jid, rj in g.jobs.items() if jid != exclude]
-        mems = [max(rj.job.profile.mem_gb, rj.job.min_mem_gb)
-                for rj in resident]
-        qoss = [rj.job.qos_min_slice for rj in resident]
-        mems.append(max(job.profile.mem_gb, job.min_mem_gb))
-        qoss.append(job.qos_min_slice)
-        m = len(mems)
-        order = sorted(range(m), key=lambda i: -mems[i])
-        for part in g.space.partitions_of_len(m):
-            sizes = sorted(part, reverse=True)
-            ok = all(
-                g.space.slice_mem_gb(sizes[r]) >= mems[i]
-                and sizes[r] >= qoss[i]
-                for r, i in enumerate(order))
-            if ok:
-                return True
-        return False
+        some valid partition must give every job a memory- AND QoS-feasible
+        slice.  ``exclude`` ignores one resident jid (what-if for
+        preemption).
+
+        The check is *exact* and vectorized: each job's (memory, QoS) pair
+        collapses to one scalar slice requirement
+        (:meth:`PartitionSpace.min_required_slice`), compared in one pass
+        against the space's precomputed per-length sorted-size matrix.  The
+        historical biggest-memory-first greedy missed feasible placements
+        when a small-memory job carried a large QoS floor (e.g. mem=1 GB
+        qos_min_slice=4 next to mem=10 GB qos=0 on partition (4, 2))."""
+        space = g.space
+        mems = [max(job.profile.mem_gb, job.min_mem_gb)]
+        qoss = [job.qos_min_slice]
+        for jid, rj in g.jobs.items():
+            if jid != exclude:
+                mems.append(max(rj.job.profile.mem_gb, rj.job.min_mem_gb))
+                qoss.append(rj.job.qos_min_slice)
+        return space.feasible_exact(mems, qoss)
 
     # ------------------------------------------------------ job lifecycle
 
@@ -214,11 +218,49 @@ class ClusterSim:
         self.policy.on_place(g, job)
         self.finalize(g)
 
+    def _drain_same_tick_timers(self, t: float, first: GPU):
+        """Pop every further *valid* gpu_timer event stamped exactly ``t``
+        off the heap so their phase ends process as one batch (the fused
+        estimator service feeds all same-tick MPS windows through a single
+        predictor forward).  Safe because a GPU's phase end never touches
+        another GPU's state: validity checked at drain time equals validity
+        checked after processing the earlier timers, and at most one timer
+        per GPU can carry its current stamp.  Returns None when ``first`` is
+        alone at this tick."""
+        batch = None
+        events = self.events
+        while events and events[0][0] == t and events[0][2] == "gpu_timer":
+            _, _, _, payload, stamp = heapq.heappop(events)
+            g2 = self.gpus[payload]
+            if stamp != g2.stamp or t < g2.phase_end - 1e-9:
+                continue
+            if batch is None:
+                batch = [first]
+            batch.append(g2)
+        return batch
+
     def end_phase(self, g: GPU, schedule: bool = True):
         """A phase window on ``g`` expired; let the policy transition the
         state machine.  ``schedule=False`` suppresses event scheduling for
         callers that finalize the GPU themselves right after (e.g. the
         zero-dead-time checkpoint in MISO's ``begin_profiling``)."""
+        self._pre_phase_end(g)
+        self.policy.on_phase_end(g)
+        self.finalize(g, schedule=schedule)
+
+    def end_phase_batch(self, gs: Sequence[GPU]):
+        """Process several same-tick phase ends as one policy batch.  The
+        accounting before and the finalize after bracket the policy hook per
+        GPU exactly as back-to-back :meth:`end_phase` calls would (phase
+        ends are cross-GPU independent; event counters are consumed only by
+        the finalize loop, in the same order)."""
+        for g in gs:
+            self._pre_phase_end(g)
+        self.policy.on_phase_end_batch(gs)
+        for g in gs:
+            self.finalize(g)
+
+    def _pre_phase_end(self, g: GPU):
         g.advance(self.t)
         if g.phase == CKPT:
             # the checkpoint window ran to completion: the save is durable,
@@ -226,8 +268,6 @@ class ClusterSim:
             for rj in g.jobs.values():
                 rj.since_ckpt_t = 0.0
                 rj.since_ckpt_work = 0.0
-        self.policy.on_phase_end(g)
-        self.finalize(g, schedule=schedule)
 
     def _on_completion(self, g: GPU, job: Job):
         job.finish_time = self.t

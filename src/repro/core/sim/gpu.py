@@ -10,7 +10,10 @@ Each GPU is a small state machine over phases:
 
 Job accounting (paper Fig 12): every second of a job's life lands in exactly
 one of {queue, ckpt, mps, run} — ``advance`` charges elapsed time to the
-bucket matching the current phase.
+bucket matching the current phase.  Phase ends are cross-GPU independent,
+which is what lets the engine coalesce same-tick windows into one batched
+policy call (``Policy.on_phase_end_batch``) and the MISO policies fuse the
+per-GPU estimator forwards.
 
 Heterogeneous fleets: every GPU carries its own :class:`~repro.core.fleet
 .GPUSpec` — partition space, performance model, estimator and speed scale —
@@ -123,9 +126,13 @@ class GPU:
                 rj.speed = 0.0
 
     def next_completion(self) -> Optional[Tuple[float, int]]:
+        # called after every event on this GPU: hoist the phase check out of
+        # the per-job loop (jobs only progress in MIG_RUN / MPS_PROF)
+        if self.phase != MIG_RUN and self.phase != MPS_PROF:
+            return None
         best = None
         for jid, rj in self.jobs.items():
-            if rj.speed > 1e-12 and self.phase in (MIG_RUN, MPS_PROF):
+            if rj.speed > 1e-12:
                 tf = self.last_update + max(rj.job.remaining, 0.0) / rj.speed
                 if best is None or tf < best[0]:
                     best = (tf, jid)

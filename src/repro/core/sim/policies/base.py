@@ -8,6 +8,8 @@ hooks mirror the lifecycle of a job:
 * ``pick_gpu``       — placement: choose a GPU for a queued job (or None)
 * ``on_place``       — set the GPU's phase/partition after a job lands
 * ``on_phase_end``   — a CKPT/MPS_PROF timer expired; advance the state machine
+* ``on_phase_end_batch`` — several timers expired at one tick (the engine
+  coalesces them); default replays ``on_phase_end`` sequentially
 * ``on_completion``  — a job finished; reshape what is left on the GPU
 * ``mps_phase_speeds`` — how co-located jobs progress during an MPS phase
 
@@ -21,10 +23,8 @@ from __future__ import annotations
 from abc import ABC, abstractmethod
 from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Type
 
-import numpy as np
-
 from repro.core.jobs import Job, JobProfile
-from repro.core.optimizer import optimize_partition
+from repro.core.optimizer import optimize_partition, optimize_partition_batch
 from repro.core.perfmodel import MPS_LEVELS
 from repro.core.sim.gpu import CKPT, GPU, IDLE, MIG_RUN
 
@@ -102,6 +102,15 @@ class Policy(ABC):
         """A CKPT or MPS_PROF window on ``g`` ended (no-op by default —
         only profiling policies drive multi-step phase chains)."""
 
+    def on_phase_end_batch(self, gs: Sequence[GPU]):
+        """Several GPUs' windows ended at the same simulation tick (the
+        engine drains the heap for same-tick timers).  Default: process
+        sequentially in event order — results are identical because phase
+        ends are cross-GPU independent.  Profiling policies override this to
+        fuse the per-GPU estimator forwards into one batched inference."""
+        for g in gs:
+            self.on_phase_end(g)
+
     @abstractmethod
     def on_completion(self, g: GPU, job: Job):
         """``job`` finished and was removed from ``g.jobs``."""
@@ -111,11 +120,13 @@ class Policy(ABC):
     def mps_phase_speeds(self, profs: Sequence[JobProfile],
                          g: Optional[GPU] = None):
         """Per-job progress rates while ``g`` is in an MPS phase.  The
-        profiling sweep runs 3 levels back-to-back, so use the mean.
-        ``g=None`` falls back to the homogeneous default perf model."""
+        profiling sweep runs 3 levels back-to-back, so use the mean
+        (accumulated in level order, matching np.mean's axis-0 reduction
+        bit-for-bit).  ``g=None`` falls back to the homogeneous default
+        perf model."""
         pm = g.pm if g is not None else self.sim.pm
-        mats = [pm.mps_speeds(profs, lv) for lv in MPS_LEVELS]
-        return np.mean(np.asarray(mats), axis=0)
+        m0, m1, m2 = (pm.mps_speeds(profs, lv) for lv in MPS_LEVELS)
+        return [((a + b) + c) / 3.0 for a, b, c in zip(m0, m1, m2)]
 
     # -------------------------------------------------- partition machinery
     # Shared by every MIG-partitioning policy (miso / oracle / variants).
@@ -135,11 +146,25 @@ class Policy(ABC):
         return optimize_partition(space, speeds, require_feasible=True) \
             or optimize_partition(space, speeds)
 
+    def choose_partition_batch(self, speeds_list, space=None):
+        """Algorithm 1 for several decisions against one space at once,
+        via the stacked DP (``optimize_partition_batch``) — element i equals
+        ``choose_partition(speeds_list[i], space)`` exactly.  Policies that
+        override ``choose_partition`` fall back to their per-decision logic
+        automatically."""
+        space = space if space is not None else self.sim.space
+        if type(self).choose_partition is not Policy.choose_partition:
+            return [self.choose_partition(sp, space=space)
+                    for sp in speeds_list]
+        first = optimize_partition_batch(space, speeds_list,
+                                         require_feasible=True)
+        return [c if c is not None else optimize_partition(space, sp)
+                for c, sp in zip(first, speeds_list)]
+
     def repartition(self, g: GPU, overhead: bool = False):
         """Run the optimizer with current estimates and apply the partition;
         ``overhead=True`` charges a checkpoint+reconfigure window when the
         partition actually changes."""
-        sim = self.sim
         jids = list(g.jobs)
         if not jids:
             g.phase = IDLE
@@ -147,13 +172,36 @@ class Policy(ABC):
             return
         choice = self.choose_partition(self.partition_speeds(g, jids),
                                        space=g.space)
+        self._apply_choice(g, jids, choice, overhead)
+
+    def repartition_many(self, gs: Sequence[GPU], overhead: bool = False):
+        """Repartition several GPUs in one batched Algorithm-1 pass (grouped
+        by partition space).  Equivalent to calling :meth:`repartition` per
+        GPU in order — used by the same-tick phase-end batch."""
+        per_space: Dict[int, List] = {}
+        for g in gs:
+            jids = list(g.jobs)
+            if not jids:
+                g.phase = IDLE
+                g.partition = ()
+                continue
+            per_space.setdefault(id(g.space), []).append((g, jids))
+        for items in per_space.values():
+            space = items[0][0].space
+            choices = self.choose_partition_batch(
+                [self.partition_speeds(g, jids) for g, jids in items],
+                space=space)
+            for (g, jids), choice in zip(items, choices):
+                self._apply_choice(g, jids, choice, overhead)
+
+    def _apply_choice(self, g: GPU, jids, choice, overhead: bool):
         old = tuple(rj.slice_size for rj in g.jobs.values())
         for jid, size in zip(jids, choice.partition):
             g.jobs[jid].slice_size = size
         g.partition = tuple(sorted(choice.partition, reverse=True))
         if overhead and old != tuple(choice.partition):
             g.phase = CKPT
-            g.phase_end = sim.t + g.ckpt_duration()
+            g.phase_end = self.sim.t + g.ckpt_duration()
             g.needs_profile = False
         else:
             g.phase = MIG_RUN

@@ -53,6 +53,37 @@ class MisoPolicy(Policy):
         elif g.phase == CKPT:
             g.phase = MIG_RUN if g.jobs else IDLE
 
+    def on_phase_end_batch(self, gs):
+        """Fused estimator service: every MPS window ending at this tick is
+        measured in event order (one noise draw each, same stream as
+        sequential processing), estimated through a single batched predictor
+        forward per estimator, and repartitioned through one batched
+        Algorithm-1 pass per space.  Non-profiling phase ends in the batch
+        keep their sequential semantics."""
+        prof_gs = [g for g in gs if g.phase == MPS_PROF]
+        if len(prof_gs) < 2:
+            for g in gs:
+                self.on_phase_end(g)
+            return
+        mixes = {g.gid: self._mix(g) for g in prof_gs}
+        mats = {g.gid: self._measure(g, mixes[g.gid][1]) for g in prof_gs}
+        by_est = {}
+        for g in prof_gs:
+            by_est.setdefault(id(g.estimator), []).append(g)
+        ests = {}
+        for group in by_est.values():
+            requests = [(mixes[g.gid][1], mats[g.gid], mixes[g.gid][2])
+                        for g in group]
+            for g, est in zip(group,
+                              group[0].estimator.estimate_batch(requests)):
+                ests[g.gid] = est
+        for g in gs:
+            if g.phase == MPS_PROF:
+                self._store_estimates(g, mixes[g.gid][0], ests[g.gid])
+            else:
+                self.on_phase_end(g)
+        self.repartition_many(prof_gs, overhead=True)
+
     def on_completion(self, g: GPU, job: Job):
         # re-optimize with known profiles (no new MPS sweep needed)
         if g.jobs and g.phase == MIG_RUN:
@@ -82,22 +113,41 @@ class MisoPolicy(Policy):
             sim.end_phase(g, schedule=False)
 
     def measure_and_partition(self, g: GPU):
+        jids, profs, qos = self._mix(g)
+        mps_mat = self._measure(g, profs)
+        ests = g.estimator.estimate(profs, mps_mat, qos=qos)
+        self._store_estimates(g, jids, ests)
+        self.repartition(g, overhead=True)
+
+    def _mix(self, g: GPU):
+        """The co-location group on ``g``: (jids, progress profiles, QoS)."""
         sim = self.sim
+        jids = list(g.jobs)
         profs = [rj.job.profile_at(1.0 - rj.job.remaining / rj.job.work)
                  for rj in g.jobs.values()]
-        jids = list(g.jobs)
         qos = [sim.jobs[j].qos_min_slice for j in jids]
-        mps_mat = None
-        if getattr(g.estimator, "needs_mps", False):
-            # thread the simulator's noise stream so every profiling window
-            # draws fresh measurement noise (Fig 14 sensitivity) without
-            # disturbing the main RNG's failure-injection schedule
-            mps_mat = g.estimator.measure_mps(
-                profs, noise_sigma=sim.cfg.mps_noise_sigma, rng=sim.noise_rng)
-        ests = g.estimator.estimate(profs, mps_mat, qos=qos)
+        return jids, profs, qos
+
+    def _measure(self, g: GPU, profs):
+        """The MPS measurement for ``g``'s window (None for estimators that
+        do not consume one).  Draws measurement noise from the simulator's
+        dedicated stream — call in event order."""
+        sim = self.sim
+        if not getattr(g.estimator, "needs_mps", False):
+            return None
+        # thread the simulator's noise stream so every profiling window
+        # draws fresh measurement noise (Fig 14 sensitivity) without
+        # disturbing the main RNG's failure-injection schedule
+        return g.estimator.measure_mps(
+            profs, noise_sigma=sim.cfg.mps_noise_sigma, rng=sim.noise_rng)
+
+    def _store_estimates(self, g: GPU, jids, ests):
+        """Record the estimator's output on the GPU (and the shared
+        multi-instance profile cache).  Subclasses hook here to keep their
+        own profile bookkeeping, so the fused batch path sees it too."""
+        sim = self.sim
         for jid, est in zip(jids, ests):
             g.estimates[jid] = est
             grp = sim.jobs[jid].mi_group
             if grp is not None:
                 sim.profile_cache[(grp, g.space.name)] = est
-        self.repartition(g, overhead=True)

@@ -10,15 +10,19 @@ predicted throughput is within ``frag_tolerance`` of the optimum, prefer the
 one that keeps the largest contiguous slice free (then higher throughput,
 then fewer compute slots used).
 
-This is exactly the kind of drop-in the policy layer exists for: ~30 lines,
-zero engine changes.
+The per-partition objectives come from the same batched Algorithm-1 kernel
+the base policy uses (one numpy pass over every multiset); the fragmentation
+scores and compute-slot counts are precomputed per length at
+:class:`~repro.core.partitions.PartitionSpace` construction, so this policy
+adds no per-decision Python loops beyond the final (tiny) tolerance scan.
 """
 from __future__ import annotations
 
 from typing import Dict, Sequence
 
-from repro.core.optimizer import _assign_dp
-from repro.core.optimizer import PartitionChoice
+import numpy as np
+
+from repro.core.optimizer import PartitionChoice, solve_all_partitions
 from repro.core.sim.policies.base import register_policy
 from repro.core.sim.policies.miso import MisoPolicy
 
@@ -33,16 +37,18 @@ class MisoFragPolicy(MisoPolicy):
                          space=None):
         space = space if space is not None else self.sim.space
         m = len(speeds)
-        cands = []                       # (obj, feasible, spare, perm, part)
-        for part in space.partitions_of_len(m):
-            obj, perm = _assign_dp(part, speeds)
-            feasible = all(speeds[j].get(perm[j], 0.0) > 0.0 for j in range(m))
-            cands.append((obj, feasible, space.largest_free_slice(part),
-                          perm, part))
-        pool = [c for c in cands if c[1]] or cands
-        best_obj = max(c[0] for c in pool)
-        near = [c for c in pool if c[0] >= (1.0 - self.frag_tolerance) * best_obj]
-        used = lambda part: sum(space.slices[s].compute_slots for s in part)
-        obj, feasible, _, perm, part = max(
-            near, key=lambda c: (c[2], c[0], -used(c[4])))
-        return PartitionChoice(perm, obj, feasible)
+        objs, perms, feas = solve_all_partitions(space, speeds)
+        spare = space.part_spare(m)
+        used = space.part_compute(m)
+        pool = np.nonzero(feas)[0] if feas.any() else np.arange(objs.shape[0])
+        best_obj = float(objs[pool].max())
+        near = pool[objs[pool] >= (1.0 - self.frag_tolerance) * best_obj]
+        # first strict max of (spare, objective, -compute slots used) — the
+        # same tie-breaking as a Python max() over rows in partition order
+        win = near[0]
+        for i in near[1:]:
+            if (spare[i], objs[i], -used[i]) > (spare[win], objs[win],
+                                                -used[win]):
+                win = i
+        return PartitionChoice(tuple(int(s) for s in perms[win]),
+                               float(objs[win]), bool(feas[win]))

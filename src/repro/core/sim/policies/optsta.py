@@ -2,14 +2,20 @@
 (paper §5).  Jobs are matched to the fixed slice multiset best-first and
 migrate to larger slices as they free up; the partition itself never changes,
 so there is no reconfigure overhead — and no adaptation either.
+
+The job->slice matching solves one batched assignment over every distinct
+size-subset of the fixed multiset (the same vectorized bitmask-DP kernel
+Algorithm 1 uses), replacing the historical per-subset dict DP.
 """
 from __future__ import annotations
 
 import itertools
 from typing import List, Optional
 
+import numpy as np
+
 from repro.core.jobs import Job
-from repro.core.optimizer import _assign_dp
+from repro.core.optimizer import assign_multisets
 from repro.core.sim.gpu import GPU, IDLE, MIG_RUN
 from repro.core.sim.policies.base import Policy, register_policy
 
@@ -54,7 +60,10 @@ class OptStaPolicy(Policy):
 
     def _assign(self, g: GPU):
         """(Re)assign this GPU's jobs to its fixed slices, best-first
-        (paper: OptSta migrates jobs to larger slices on availability)."""
+        (paper: OptSta migrates jobs to larger slices on availability).
+        All distinct size-subsets are solved in one batched DP; the winner
+        is the first strict maximum in subset-enumeration order, exactly as
+        the historical per-subset scan chose it."""
         sim = self.sim
         jids = list(g.jobs)
         if not jids:
@@ -71,10 +80,8 @@ class OptStaPolicy(Policy):
                            for s in sizes})
         # best assignment of m jobs to the fixed multiset's best m slices
         part = tuple(sorted(sizes, reverse=True))
-        best_obj, best_perm = -1.0, None
-        for sub in set(itertools.combinations(part, len(jids))):
-            obj, perm = _assign_dp(sub, speeds)
-            if obj > best_obj:
-                best_obj, best_perm = obj, perm
+        subs = list(set(itertools.combinations(part, len(jids))))
+        objs, perms, _ = assign_multisets(g.space, subs, speeds)
+        best_perm = perms[int(np.argmax(objs))]
         for jid, size in zip(jids, best_perm):
-            g.jobs[jid].slice_size = size
+            g.jobs[jid].slice_size = int(size)

@@ -109,8 +109,10 @@ class SrptPolicy(MisoPolicy):
         else:
             super().on_place(g, job)
 
-    def measure_and_partition(self, g: GPU):
-        super().measure_and_partition(g)
+    def _store_estimates(self, g: GPU, jids, ests):
+        # hook below measure_and_partition so the fused same-tick batch path
+        # records known profiles exactly like the sequential one
+        super()._store_estimates(g, jids, ests)
         for jid, est in g.estimates.items():
             self._known_profiles[(jid, g.space.name)] = est
 

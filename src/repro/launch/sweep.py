@@ -27,6 +27,26 @@ from typing import Dict, List, Optional, Sequence
 
 SCHEMA_VERSION = 1
 
+# grids whose total simulated jobs fall under this run in-process: worker
+# startup (fork + pool plumbing, ~hundreds of ms) dwarfs such cells
+_AUTO_SERIAL_JOBS = 64
+
+
+def _warm_runtime() -> None:
+    """Pay one-time lazy costs in the parent before forking workers, so
+    every worker inherits them instead of re-paying: numpy's random-module
+    machinery (~40 ms on first Generator construction) and — when the MISO
+    predictor artifact exists, i.e. sweeps will run U-Net estimators — the
+    shared jitted U-Net apply for the standard shapes."""
+    import numpy as np
+    np.random.default_rng(0)
+    import os
+    artifact = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "predictor.npz")
+    if os.path.exists(artifact):
+        from repro.core.predictor.unet import warm_jit_cache
+        warm_jit_cache()
+
 
 def run_task(task: Dict) -> Dict:
     """One sweep cell: simulate (policy, scenario, seed) on a fleet.
@@ -73,6 +93,14 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
     tasks = [{"policy": p, "scenario": sc, "seed": s, "fleet": fleet,
               "n_jobs": n_jobs, "mtbf": mtbf}
              for sc in scenarios for p in policies for s in seeds]
+    if workers is None and not serial:
+        # tiny grids (e.g. the CI smoke sweep) finish faster in-process than
+        # a pool takes to start; an explicit --workers always gets the pool
+        from repro.core.scenarios import get_scenario
+        total_jobs = sum(t["n_jobs"] or get_scenario(t["scenario"]).n_jobs
+                         for t in tasks)
+        serial = total_jobs <= _AUTO_SERIAL_JOBS
+    _warm_runtime()
     t0 = time.time()
     if serial or len(tasks) == 1:
         results = [run_task(t) for t in tasks]

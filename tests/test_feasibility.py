@@ -1,0 +1,151 @@
+"""Precomputed admission feasibility: exactness of the scalar-requirement
+collapse, the Pareto-frontier scan, and the spare_slice_ok QoS/memory
+regression the greedy check used to miss."""
+import itertools
+import random
+
+import pytest
+
+from repro.core.estimators import OracleEstimator
+from repro.core.jobs import WORKLOADS, Job
+from repro.core.partitions import (a100_mig_space, h100_mig_space,
+                                   tpu_pod_space)
+from repro.core.perfmodel import PerfModel
+from repro.core.simulator import ClusterSim, SimConfig
+
+SPACES = {
+    "a100": a100_mig_space(),
+    "h100": h100_mig_space(),
+    "tpu": tpu_pod_space(),
+}
+
+
+def brute_force_feasible(space, mems, qoss):
+    """Ground truth: try every partition x every job->slot assignment."""
+    m = len(mems)
+    for part in space.partitions_of_len(m):
+        for perm in set(itertools.permutations(part)):
+            if all(space.slice_mem_gb(perm[i]) >= mems[i]
+                   and perm[i] >= qoss[i] for i in range(m)):
+                return True
+    return False
+
+
+@pytest.mark.parametrize("space_name", sorted(SPACES))
+def test_feasible_exact_matches_bruteforce(space_name):
+    space = SPACES[space_name]
+    mem_menu = sorted({st.memory_gb for st in space.slices.values()})
+    rng = random.Random(42)
+    for trial in range(400):
+        m = rng.randint(1, min(5, space.max_jobs))
+        mems, qoss = [], []
+        for _ in range(m):
+            # memory around slice boundaries, including infeasible overshoot
+            base = rng.choice(mem_menu)
+            mems.append(max(0.1, base * rng.choice((0.3, 0.9, 1.0, 1.1))))
+            qoss.append(rng.choice((0, 0) + space.sizes))
+        assert space.feasible_exact(mems, qoss) == \
+            brute_force_feasible(space, mems, qoss), (trial, mems, qoss)
+
+
+@pytest.mark.parametrize("space_name", sorted(SPACES))
+def test_min_required_slice_threshold_semantics(space_name):
+    """A slice satisfies (mem, qos) iff its size >= min_required_slice —
+    the collapse is valid because slice memory is monotone in size."""
+    space = SPACES[space_name]
+    assert space._mem_monotone
+    for mem in (0.1, 4.9, 5.0, 5.1, 19.0, 21.0, 39.0, 41.0, 100.0, 1e5):
+        for qos in (0,) + space.sizes:
+            req = space.min_required_slice(mem, qos)
+            for size in space.sizes:
+                ok = (space.slice_mem_gb(size) >= mem and size >= qos)
+                if req is None:
+                    assert not ok
+                else:
+                    assert ok == (size >= req)
+
+
+def test_placeable_pareto_frontier_is_exact():
+    for space in SPACES.values():
+        rng = random.Random(5)
+        for _ in range(300):
+            m = rng.randint(1, space.max_jobs)
+            reqs = [rng.choice(space.sizes + (space.full_size + 1,))
+                    for _ in range(m)]
+            expected = any(
+                all(a >= b for a, b in
+                    zip(p, sorted(reqs, reverse=True)))
+                for p in space.partitions_of_len(m))
+            assert space.placeable(reqs) == expected
+
+
+def test_largest_free_slice_cached_consistent():
+    space = a100_mig_space()
+    for p in space.partitions:
+        assert space.largest_free_slice(p) == space._largest_free(p)
+    # non-canonical orderings go through the same cache keyed per tuple
+    assert space.largest_free_slice((2, 4)) == space.largest_free_slice((4, 2))
+
+
+def test_is_valid_uses_precomputed_set():
+    space = a100_mig_space()
+    assert space.is_valid((4, 2, 1))
+    assert space.is_valid((1, 2, 4))          # any order
+    assert not space.is_valid((4, 3))
+    assert isinstance(space._partition_set, frozenset)    # built once
+    assert space._partition_set == frozenset(space.partitions)
+
+
+# ------------------------------------------------- spare_slice_ok regression
+
+
+def _sim(n_gpus=1):
+    space = a100_mig_space()
+    pm = PerfModel(space)
+    return ClusterSim([], SimConfig(n_gpus=n_gpus, policy="miso"), space, pm,
+                      OracleEstimator(pm))
+
+
+def test_spare_slice_ok_qos_vs_memory_conflict():
+    """The satellite regression: job A (mem=1 GB, qos_min_slice=4) + job B
+    (mem=10 GB, qos=0) fit on partition (4, 2) — A on the 4g (QoS), B on the
+    2g (10 GB).  The historical biggest-memory-first greedy gave the 4g to
+    B and then failed A's QoS floor, rejecting a feasible admission."""
+    sim = _sim()
+    g = sim.gpus[0]
+    small = [p for p in WORKLOADS if p.mem_gb <= 5.0]
+    big = [p for p in WORKLOADS if 5.0 < p.mem_gb <= 10.0]
+    assert small and big, "workload pool no longer spans the menu"
+    resident = Job(jid=0, profile=small[0], arrival=0.0, work=100.0,
+                   qos_min_slice=4)
+    sim.place(g, resident)
+    incoming = Job(jid=1, profile=big[0], arrival=0.0, work=100.0)
+    assert sim.spare_slice_ok(g, incoming), \
+        "exact assignment must admit (A->4g for QoS, B->2g for memory)"
+
+
+def test_spare_slice_ok_still_rejects_infeasible():
+    sim = _sim()
+    g = sim.gpus[0]
+    small = [p for p in WORKLOADS if p.mem_gb <= 5.0]
+    # seven QoS-7 jobs can never share one GPU
+    sim.place(g, Job(jid=0, profile=small[0], arrival=0.0, work=100.0,
+                     qos_min_slice=7))
+    assert not sim.spare_slice_ok(
+        g, Job(jid=1, profile=small[0], arrival=0.0, work=100.0,
+               qos_min_slice=7))
+    # memory above every slice is infeasible outright
+    assert not sim.spare_slice_ok(
+        g, Job(jid=2, profile=small[0], arrival=0.0, work=100.0,
+               min_mem_gb=64.0))
+
+
+def test_spare_slice_ok_exclude_what_if():
+    sim = _sim()
+    g = sim.gpus[0]
+    small = [p for p in WORKLOADS if p.mem_gb <= 5.0]
+    a = Job(jid=0, profile=small[0], arrival=0.0, work=100.0, qos_min_slice=7)
+    sim.place(g, a)
+    b = Job(jid=1, profile=small[0], arrival=0.0, work=100.0, qos_min_slice=7)
+    assert not sim.spare_slice_ok(g, b)
+    assert sim.spare_slice_ok(g, b, exclude=0)   # if A were evicted

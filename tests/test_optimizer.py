@@ -9,9 +9,11 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.optimizer import (optimize_partition,
                                   optimize_partition_bruteforce)
-from repro.core.partitions import a100_mig_space
+from repro.core.partitions import (a100_mig_space, h100_mig_space,
+                                   tpu_pod_space)
 
 SPACE = a100_mig_space()
+ALL_SPACES = (SPACE, h100_mig_space(), tpu_pod_space())
 
 
 def _random_speeds(rng, m):
@@ -41,6 +43,47 @@ def test_dp_equals_bruteforce(m, seed):
     assert a is not None and b is not None
     assert abs(a.objective - b.objective) < 1e-9
     assert SPACE.is_valid(a.partition)
+
+
+def _space_speeds(rng, space, m):
+    out = []
+    for _ in range(m):
+        sv = {}
+        for s in space.sizes:
+            r = rng.random()
+            if r < 0.2:
+                sv[s] = 0.0
+            elif r < 0.3:
+                continue                   # missing key == OOM == 0.0
+            else:
+                sv[s] = rng.uniform(0.05, 1.0)
+        if rng.random() < 0.15 and out:
+            sv = dict(out[-1])             # identical clone job: forces ties
+        out.append(sv)
+    return out
+
+
+@settings(max_examples=60, deadline=None)
+@given(space_idx=st.integers(0, 2), m=st.integers(1, 5),
+       seed=st.integers(0, 10_000))
+def test_vectorized_equals_bruteforce_all_spaces(space_idx, m, seed):
+    """Property test for the vectorized Algorithm 1: on random speed
+    vectors (zeros, missing keys, cloned jobs) across all three partition
+    spaces, the numpy kernel matches the literal-enumeration oracle's
+    objective and returns a valid multiset."""
+    space = ALL_SPACES[space_idx]
+    rng = random.Random(seed)
+    speeds = _space_speeds(rng, space, min(m, space.max_jobs))
+    a = optimize_partition(space, speeds, memo=False)
+    b = optimize_partition_bruteforce(space, speeds)
+    assert a is not None and b is not None
+    assert abs(a.objective - b.objective) < 1e-9
+    assert space.is_valid(a.partition)
+    # objective consistency: the reported objective is the sum of the
+    # chosen assignment's speeds
+    manual = sum(speeds[j].get(a.partition[j], 0.0)
+                 for j in range(len(speeds)))
+    assert a.objective == pytest.approx(manual, abs=1e-12)
 
 
 def test_all_zero_speeds_dp_and_bruteforce_agree():

@@ -1,0 +1,163 @@
+"""Vectorized Algorithm-1 kernel: bit-identity with the scalar reference.
+
+The batched numpy DP must reproduce the historical per-partition dict DP
+(``_assign_dp``) *exactly* — objective bits, chosen multiset, job->slice
+permutation and feasibility flag, tie-breaks included — across all three
+partition spaces.  These tests are seeded-random (no hypothesis dependency);
+``test_optimizer.py`` carries the hypothesis property-test variant.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.optimizer import (_assign_dp, assign_multisets, clear_memo,
+                                  memo_stats, optimize_partition,
+                                  optimize_partition_batch,
+                                  optimize_partition_bruteforce,
+                                  solve_all_partitions)
+from repro.core.partitions import (a100_mig_space, h100_mig_space,
+                                   tpu_pod_space)
+
+SPACES = {
+    "a100": a100_mig_space(),
+    "h100": h100_mig_space(),
+    "tpu": tpu_pod_space(),
+}
+
+
+def random_speeds(rng, space, m):
+    """Speed dicts with zeros, missing keys and exact duplicates (clone
+    jobs) — the tie-heavy cases where replication could break."""
+    out = []
+    for _ in range(m):
+        sv = {}
+        for s in space.sizes:
+            r = rng.random()
+            if r < 0.15:
+                sv[s] = 0.0
+            elif r < 0.25:
+                pass                      # missing key == 0.0
+            else:
+                sv[s] = rng.uniform(0.05, 1.0)
+        if rng.random() < 0.15 and out:
+            sv = dict(out[-1])            # identical clone job
+        out.append(sv)
+    return out
+
+
+def reference_scan(space, speeds, require_feasible):
+    """The pre-vectorization optimize_partition: dict DP per multiset,
+    first-strict-max scan in partition order."""
+    m = len(speeds)
+    best = None
+    for part in space.partitions_of_len(m):
+        obj, perm = _assign_dp(part, speeds)
+        feasible = all(speeds[j].get(perm[j], 0.0) > 0.0 for j in range(m))
+        if require_feasible and not feasible:
+            continue
+        if best is None or obj > best[0]:
+            best = (obj, perm, feasible)
+    return best
+
+
+@pytest.mark.parametrize("space_name", sorted(SPACES))
+def test_vectorized_equals_scalar_reference(space_name):
+    space = SPACES[space_name]
+    rng = random.Random(hash(space_name) & 0xFFFF)
+    for trial in range(300):
+        m = rng.randint(1, space.max_jobs)
+        speeds = random_speeds(rng, space, m)
+        for rf in (False, True):
+            ref = reference_scan(space, speeds, rf)
+            got = optimize_partition(space, speeds, require_feasible=rf,
+                                     memo=False)
+            if ref is None:
+                assert got is None
+            else:
+                assert (got.objective, got.partition, got.feasible) == ref
+
+
+@pytest.mark.parametrize("space_name", sorted(SPACES))
+def test_solve_all_partitions_rows_match_dict_dp(space_name):
+    space = SPACES[space_name]
+    rng = random.Random(99)
+    for trial in range(60):
+        m = rng.randint(2, space.max_jobs)
+        speeds = random_speeds(rng, space, m)
+        objs, perms, feas = solve_all_partitions(space, speeds)
+        for i, part in enumerate(space.partitions_of_len(m)):
+            obj, perm = _assign_dp(part, speeds)
+            fe = all(speeds[j].get(perm[j], 0.0) > 0.0 for j in range(m))
+            assert objs[i] == obj
+            assert tuple(int(x) for x in perms[i]) == perm
+            assert bool(feas[i]) == fe
+
+
+@pytest.mark.parametrize("space_name", sorted(SPACES))
+def test_vectorized_equals_bruteforce(space_name):
+    """The literal Algorithm-1 oracle agrees on objective and validity."""
+    space = SPACES[space_name]
+    rng = random.Random(7)
+    for trial in range(40):
+        m = rng.randint(1, min(5, space.max_jobs))   # m! enumeration cost
+        speeds = random_speeds(rng, space, m)
+        a = optimize_partition(space, speeds, memo=False)
+        b = optimize_partition_bruteforce(space, speeds)
+        assert a is not None and b is not None
+        assert abs(a.objective - b.objective) < 1e-9
+        assert space.is_valid(a.partition)
+
+
+def test_batch_equals_singles_mixed_lengths():
+    rng = random.Random(11)
+    for space in SPACES.values():
+        for rf in (False, True):
+            mixes = [random_speeds(rng, space, rng.randint(1, space.max_jobs))
+                     for _ in range(40)]
+            got = optimize_partition_batch(space, mixes, require_feasible=rf,
+                                           memo=False)
+            for i, sp in enumerate(mixes):
+                assert got[i] == optimize_partition(space, sp,
+                                                    require_feasible=rf,
+                                                    memo=False)
+
+
+def test_batch_fills_and_reads_memo_like_singles():
+    space = SPACES["a100"]
+    rng = random.Random(13)
+    mixes = [random_speeds(rng, space, 4) for _ in range(6)]
+    clear_memo()
+    a = optimize_partition_batch(space, mixes + mixes)    # second half hits
+    assert memo_stats()["hits"] == 6 and memo_stats()["misses"] == 6
+    b = [optimize_partition(space, sp) for sp in mixes]
+    assert a[:6] == b and a[6:] == b
+
+
+def test_assign_multisets_matches_dict_dp():
+    import itertools
+    space = SPACES["a100"]
+    rng = random.Random(17)
+    for _ in range(50):
+        part = space.partitions[rng.randrange(len(space.partitions))]
+        k = rng.randint(1, len(part))
+        subs = list(set(itertools.combinations(part, k)))
+        speeds = random_speeds(rng, space, k)
+        objs, perms, feas = assign_multisets(space, subs, speeds)
+        for i, sub in enumerate(subs):
+            obj, perm = _assign_dp(sub, speeds)
+            fe = all(speeds[j].get(perm[j], 0.0) > 0.0 for j in range(k))
+            assert objs[i] == obj
+            assert tuple(int(x) for x in perms[i]) == perm
+            assert bool(feas[i]) == fe
+
+
+def test_all_zero_speeds_still_agree():
+    for space in SPACES.values():
+        for m in (1, 2, 3):
+            speeds = [{s: 0.0 for s in space.sizes}] * m
+            a = optimize_partition(space, speeds, memo=False)
+            b = optimize_partition_bruteforce(space, speeds)
+            assert a.objective == b.objective == 0.0
+            assert not a.feasible and not b.feasible
+            assert space.is_valid(a.partition) and space.is_valid(b.partition)

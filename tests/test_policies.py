@@ -33,11 +33,13 @@ with open(GOLDEN) as f:
 _GCFG = _GOLD["config"]
 
 
-@pytest.mark.parametrize("policy", LEGACY)
+@pytest.mark.parametrize("policy", LEGACY + NEW)
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_golden_trace_equivalence(policy, seed):
-    """Every legacy policy reproduces the seed (pre-refactor) simulator's
-    metrics bit-for-bit on the recorded traces."""
+    """All seven policies reproduce the recorded (pre-vectorization)
+    simulator's metrics bit-for-bit: the legacy five against the original
+    seed goldens, miso-frag and srpt against goldens recorded just before
+    the scheduler hot paths were vectorized."""
     jobs = generate_trace(_GCFG["n_jobs"], lam_s=_GCFG["lam_s"], seed=seed,
                           max_duration_s=_GCFG["max_duration_s"])
     m = simulate(jobs, SimConfig(n_gpus=_GCFG["n_gpus"], policy=policy),
