@@ -1,8 +1,8 @@
 """Diff two sweep reports (``BENCH_sweep_*.json``) and flag regressions.
 
-Compares per-(scenario, policy) summary metrics between a baseline report
-and a candidate report, and exits non-zero when any scenario regresses by
-more than ``--threshold`` (default 2%):
+Compares per-(scenario, policy, placer) summary metrics between a baseline
+report and a candidate report, and exits non-zero when any scenario
+regresses by more than ``--threshold`` (default 2%):
 
 * ``avg_jct_s_mean`` / ``p90_jct_s_mean`` / ``makespan_s_mean`` — higher is
   worse (a JCT regression);
@@ -33,16 +33,25 @@ METRICS = {
 }
 
 
-def load_summary(path: str) -> Dict[Tuple[str, str], Dict[str, float]]:
+def load_summary(path: str) -> Dict[Tuple[str, str, str], Dict[str, float]]:
+    """Cells keyed (scenario, policy, placer).  Schema v1 reports predate
+    the placer axis; every v1 cell ran the then-hardwired least-loaded
+    placement, so they normalize to placer="least-loaded" and stay
+    comparable against v2 candidates."""
     with open(path) as f:
         rep = json.load(f)
     if rep.get("kind") != "miso-sweep":
         raise ValueError(f"{path}: not a miso-sweep report "
                          f"(kind={rep.get('kind')!r})")
+    v2 = rep.get("schema_version", 1) >= 2
     out = {}
     for scenario, by_policy in rep.get("summary", {}).items():
-        for policy, agg in by_policy.items():
-            out[(scenario, policy)] = agg
+        for policy, v in by_policy.items():
+            if v2:
+                for placer, agg in v.items():
+                    out[(scenario, policy, placer)] = agg
+            else:
+                out[(scenario, policy, "least-loaded")] = v
     return out
 
 
@@ -53,14 +62,15 @@ def diff_reports(base_path: str, new_path: str,
     new = load_summary(new_path)
     regressions, notes = [], []
     for cell in sorted(set(base) | set(new)):
-        scenario, policy = cell
+        scenario, policy, placer = cell
+        label = f"{scenario}/{policy}/{placer}"
         if cell not in new:
             # a baseline cell that stopped being measured is itself a
             # regression — the gate must not pass on vanishing coverage
-            regressions.append(f"{scenario}/{policy}: missing from candidate")
+            regressions.append(f"{label}: missing from candidate")
             continue
         if cell not in base:
-            notes.append(f"{scenario}/{policy}: new cell (no baseline)")
+            notes.append(f"{label}: new cell (no baseline)")
             continue
         for metric, direction in METRICS.items():
             b = base[cell].get(metric)
@@ -68,7 +78,7 @@ def diff_reports(base_path: str, new_path: str,
             if b is None or n is None or b == 0:
                 continue
             rel = (n - b) / abs(b) * direction
-            line = (f"{scenario}/{policy} {metric}: "
+            line = (f"{label} {metric}: "
                     f"{b:.4g} -> {n:.4g} ({rel:+.2%})")
             if rel > threshold:
                 regressions.append(line)

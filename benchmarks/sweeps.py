@@ -13,28 +13,35 @@ from repro.launch.sweep import SCHEMA_VERSION, run_sweep
 
 
 def scenario_sweep(fast=True):
-    """Policy x scenario grid on the default mixed a100+h100 fleet."""
+    """Policy x placer x scenario grid on the default mixed a100+h100 fleet.
+
+    The fast pass keeps the paper's least-loaded placement; the full pass
+    crosses in the fleet-aware ``hetero-speed`` placer so the trajectory
+    rows track both layers."""
     policies = ("miso", "srpt")
     scenarios = ("bursty", "heavy_tail") if fast else (
         "bursty", "diurnal", "heavy_tail", "flash_crowd", "mixed_qos")
+    placers = ("least-loaded",) if fast else ("least-loaded", "hetero-speed")
     seeds = list(range(1 if fast else 3))
     n_jobs = 30 if fast else None
 
     t0 = time.time()
-    report = run_sweep(policies, scenarios, seeds=seeds, n_jobs=n_jobs)
+    report = run_sweep(policies, scenarios, seeds=seeds, placers=placers,
+                       n_jobs=n_jobs)
     assert report["schema_version"] == SCHEMA_VERSION
     dt = time.time() - t0
 
     rows = []
     n_cells = max(1, len(report["results"]))
     for sc, by_policy in report["summary"].items():
-        for pol, agg in by_policy.items():
-            rows.append(row(
-                f"sweep_{sc}_{pol}", dt / n_cells,
-                f"avg_jct={agg['avg_jct_s_mean']:.0f}s;"
-                f"p90={agg['p90_jct_s_mean']:.0f}s;"
-                f"stp={agg['stp_mean']:.3f};"
-                f"fleet={report['results'][0]['fleet']}"))
+        for pol, by_placer in by_policy.items():
+            for placer, agg in by_placer.items():
+                rows.append(row(
+                    f"sweep_{sc}_{pol}_{placer}", dt / n_cells,
+                    f"avg_jct={agg['avg_jct_s_mean']:.0f}s;"
+                    f"p90={agg['p90_jct_s_mean']:.0f}s;"
+                    f"stp={agg['stp_mean']:.3f};"
+                    f"fleet={report['results'][0]['fleet']}"))
     rows.append(row("sweep_wallclock", dt,
                     f"runs={len(report['results'])};"
                     f"workers={report['config']['workers']}"))

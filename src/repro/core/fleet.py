@@ -21,18 +21,47 @@ All GPUs of one kind share a single spec object — across ``parse_fleet``
 calls too (the per-kind factories are memoized): specs are read-only and
 their default estimator is stateless, so partition-space precomputation,
 the perf-model caches and the optimizer memo stay warm across every
-simulation in the process instead of being rebuilt per sweep cell.
+simulation in the process instead of being rebuilt per sweep cell.  (The
+memoization also means a predictor artifact dropped into ``artifacts/``
+mid-process is only picked up by the *first* factory call.)
+
+Per-kind estimators: each factory looks for a trained predictor artifact for
+its kind (``artifacts/predictor_<kind>.npz``, with the legacy un-suffixed
+``artifacts/predictor.npz`` accepted for a100) and routes it through
+``GPUSpec.estimator`` as a :class:`~repro.core.estimators.UNetEstimator`;
+without one the spec falls back to the oracle estimator.  An *explicitly*
+passed estimator always wins — ``__post_init__`` never clobbers it — and an
+explicit ``artifact=`` path that does not exist raises instead of silently
+degrading to the oracle.
 """
 from __future__ import annotations
 
 import functools
+import os
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
-from repro.core.estimators import OracleEstimator
+from repro.core.estimators import OracleEstimator, UNetEstimator
 from repro.core.partitions import (PartitionSpace, a100_mig_space,
                                    h100_mig_space, tpu_pod_space)
 from repro.core.perfmodel import A100, H100, TPU_V5E_POD, PerfModel
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts")
+
+
+def default_artifact_path(kind: str) -> Optional[str]:
+    """The trained predictor artifact shipped for ``kind``
+    (``artifacts/predictor_<kind>.npz``; a100 also accepts the legacy
+    un-suffixed ``artifacts/predictor.npz``), or None when none exists."""
+    per_kind = os.path.join(ARTIFACT_DIR, f"predictor_{kind}.npz")
+    if os.path.exists(per_kind):
+        return per_kind
+    if kind == "a100":
+        legacy = os.path.join(ARTIFACT_DIR, "predictor.npz")
+        if os.path.exists(legacy):
+            return legacy
+    return None
 
 
 @dataclass
@@ -41,18 +70,33 @@ class GPUSpec:
     kind: str
     space: PartitionSpace
     pm: PerfModel
-    estimator: object = None          # slice-speed estimator (None -> oracle)
+    estimator: object = None          # slice-speed estimator
     speed_scale: float = 1.0          # full-slice speed vs. the reference GPU
+    artifact: Optional[str] = None    # predictor artifact backing `estimator`
 
     def __post_init__(self):
-        if self.estimator is None:
+        if self.estimator is not None:
+            # an explicit estimator always wins; never clobber it with the
+            # artifact/oracle defaulting below (dataclasses.replace re-runs
+            # __post_init__, so this guard is what keeps copies intact)
+            return
+        if self.artifact is not None:
+            if not os.path.exists(self.artifact):
+                raise FileNotFoundError(
+                    f"predictor artifact for {self.kind!r} not found: "
+                    f"{self.artifact!r} (train one with "
+                    f"repro.core.predictor.train, or drop the artifact= "
+                    f"argument to fall back to the oracle estimator)")
+            self.estimator = UNetEstimator.from_artifact(self.pm, self.artifact)
+        else:
             self.estimator = OracleEstimator(self.pm)
 
 
 @functools.lru_cache(maxsize=None)
 def _a100_spec() -> GPUSpec:
     space = a100_mig_space()
-    return GPUSpec("a100", space, PerfModel(space, A100), speed_scale=1.0)
+    return GPUSpec("a100", space, PerfModel(space, A100), speed_scale=1.0,
+                   artifact=default_artifact_path("a100"))
 
 
 @functools.lru_cache(maxsize=None)
@@ -60,7 +104,8 @@ def _h100_spec() -> GPUSpec:
     space = h100_mig_space()
     # ~2x achievable training throughput vs. A100 (memory-bound jobs track
     # the ~2.2x HBM-bandwidth ratio, compute-bound ones land higher)
-    return GPUSpec("h100", space, PerfModel(space, H100), speed_scale=2.0)
+    return GPUSpec("h100", space, PerfModel(space, H100), speed_scale=2.0,
+                   artifact=default_artifact_path("h100"))
 
 
 @functools.lru_cache(maxsize=None)
@@ -68,7 +113,7 @@ def _tpu_spec() -> GPUSpec:
     space = tpu_pod_space()
     # one v5e pod counts as one "accelerator"; its full slice dwarfs a GPU
     return GPUSpec("tpu", space, PerfModel(space, TPU_V5E_POD),
-                   speed_scale=32.0)
+                   speed_scale=32.0, artifact=default_artifact_path("tpu"))
 
 
 FLEET_KINDS: Dict[str, Callable[[], GPUSpec]] = {

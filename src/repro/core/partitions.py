@@ -237,6 +237,23 @@ class PartitionSpace:
                 return True
         return False
 
+    def required_sizes(self, mems: Sequence[float],
+                       qoss: Sequence[int]) -> Optional[Sequence[int]]:
+        """Per-job scalar slice requirements for a (memory, QoS) job set, or
+        None when some job fits no slice on the menu — or when slice memory
+        is not monotone in slice size, where the scalar collapse is inexact
+        (no shipped menu; callers needing exactness there use
+        :meth:`feasible_exact`'s matching fallback)."""
+        if not self._mem_monotone:
+            return None
+        reqs = []
+        for mem, q in zip(mems, qoss):
+            r = self.min_required_slice(mem, q)
+            if r is None:
+                return None
+            reqs.append(r)
+        return reqs
+
     def feasible_exact(self, mems: Sequence[float],
                        qoss: Sequence[int]) -> bool:
         """Exact admission check for arbitrary (memory, QoS) pairs.  Uses the
@@ -244,13 +261,8 @@ class PartitionSpace:
         (all shipped menus); falls back to per-partition bitmask matching
         otherwise, so correctness never depends on the menu shape."""
         if self._mem_monotone:
-            reqs = []
-            for mem, q in zip(mems, qoss):
-                r = self.min_required_slice(mem, q)
-                if r is None:
-                    return False
-                reqs.append(r)
-            return self.placeable(reqs)
+            reqs = self.required_sizes(mems, qoss)
+            return reqs is not None and self.placeable(reqs)
         return self._feasible_matching(list(mems), list(qoss))
 
     def _feasible_matching(self, mems, qoss) -> bool:

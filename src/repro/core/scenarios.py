@@ -17,6 +17,9 @@ Arrival processes (all seeded, all returning sorted times):
 * ``flash_crowd``  — Poisson background + a near-instant mid-trace spike
 * ``mixed_qos``    — Poisson with QoS / multi-instance / mem-constrained mix
 * ``smoke``        — tiny fast trace for CI
+* ``hetero_smoke`` — small heavy-tailed trace on a mixed a100+h100 fleet;
+  the CI cell that exercises fleet-aware placement (see
+  :mod:`repro.core.sim.placement`)
 
 Usage::
 
@@ -112,6 +115,7 @@ class Scenario:
     make: Callable[..., List[Job]]       # (seed, n_jobs) -> jobs
     fleet: str = DEFAULT_FLEET           # default fleet spec string
     n_jobs: int = 60                     # default trace length
+    placer: str = "least-loaded"         # default placement layer for sweeps
 
     def make_jobs(self, seed: int, n_jobs: Optional[int] = None) -> List[Job]:
         return self.make(seed, n_jobs or self.n_jobs)
@@ -158,6 +162,13 @@ register_scenario(Scenario(
     lambda seed, n: generate_trace(n, lam_s=20.0, seed=seed,
                                    max_duration_s=600.0),
     fleet="a100:2", n_jobs=10))
+
+register_scenario(Scenario(
+    "hetero_smoke", "small heavy-tailed trace on a mixed a100+h100 fleet "
+                    "(the CI cell for fleet-aware placement)",
+    _with_arrivals(heavy_tail_arrivals, 30.0, seed_salt=505,
+                   max_duration_s=2400.0, duration_sigma=1.6),
+    fleet="a100:2+h100:2", n_jobs=16, placer="hetero-speed"))
 
 register_scenario(Scenario(
     "poisson", "the paper's baseline arrival process",

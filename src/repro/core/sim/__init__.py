@@ -3,11 +3,14 @@
 * ``engine``   — event loop, clock, failures, accounting (:class:`ClusterSim`)
 * ``gpu``      — per-GPU phase state machine ``IDLE→CKPT→MPS_PROF→MIG_RUN``
 * ``policies`` — pluggable scheduling policies (``Policy`` ABC + registry)
+* ``placement`` — pluggable placement layer (``Placer`` ABC + registry)
 
 ``from repro.core.simulator import ...`` remains a supported alias.
 """
 from repro.core.sim.engine import ClusterSim, SimConfig, simulate
 from repro.core.sim.gpu import CKPT, GPU, IDLE, MIG_RUN, MPS_PROF, RJob
+from repro.core.sim.placement import (Placer, available_placers, get_placer,
+                                      register_placer)
 from repro.core.sim.policies import (Policy, available_policies, get_policy,
                                      register_policy)
 
@@ -15,4 +18,5 @@ __all__ = [
     "ClusterSim", "SimConfig", "simulate",
     "GPU", "RJob", "IDLE", "CKPT", "MPS_PROF", "MIG_RUN",
     "Policy", "register_policy", "get_policy", "available_policies",
+    "Placer", "register_placer", "get_placer", "available_placers",
 ]

@@ -5,7 +5,10 @@ repair injection, job accounting and metric collection.  Every *scheduling*
 decision — queue discipline, placement, phase transitions after a timer,
 reaction to completions — is delegated to the :class:`~repro.core.sim
 .policies.Policy` named by ``SimConfig.policy`` (see
-``repro/core/sim/policies/`` for the built-ins and how to add one).
+``repro/core/sim/policies/`` for the built-ins and how to add one).  The
+*placement* choice within a policy's feasible GPUs is a further pluggable
+layer: the :class:`~repro.core.sim.placement.Placer` named by
+``SimConfig.placer`` (default ``least-loaded``, the paper's rule).
 
 Fleets may be heterogeneous: pass ``fleet=`` (a list of
 :class:`~repro.core.fleet.GPUSpec`, e.g. from ``fleet.parse_fleet
@@ -47,6 +50,7 @@ from repro.core.sim.policies import get_policy
 class SimConfig:
     n_gpus: int = 8
     policy: str = "miso"             # any name in policies.available_policies()
+    placer: str = "least-loaded"     # any name in placement.available_placers()
     static_partition: Tuple[int, ...] = (4, 2, 1)   # optsta only
     mps_level_time_s: float = 10.0   # per MPS level (paper: 10s x 3 levels)
     mig_reconfig_s: float = 4.0      # GPU reset (paper §3)

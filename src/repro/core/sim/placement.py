@@ -1,0 +1,231 @@
+"""Pluggable placement layer: which GPU gets the next job.
+
+The paper fixes placement to least-loaded (§4) and spends all its machinery
+on the per-GPU partition decision; fragmentation-aware MIG schedulers
+(PAPERS.md: Ting et al.; Zambianco et al.) show the *placement* decision
+dominates JCT on shared MIG clusters, and PR 2's heterogeneous fleets add a
+per-GPU ``speed_scale`` that least-loaded is blind to.  This module makes
+placement a first-class, swappable layer mirroring the policy registry:
+
+* a :class:`Placer` ranks the GPUs a policy deems feasible and picks one
+  (or ``None`` to leave the job queued).  Feasibility itself stays with the
+  policy (``Policy.placement_candidates``) — NoPart wants an empty GPU,
+  MPS-only caps co-location by job count, the MIG policies use the engine's
+  shared ``mem_ok`` / ``spare_slice_ok`` checks — so a placer composes with
+  every policy, current and future;
+* :func:`register_placer` / :func:`get_placer` mirror the policy registry;
+  any name here is reachable from ``SimConfig.placer``, ``repro.launch
+  .cluster --placer`` and the sweep grid (``repro.launch.sweep --placers``).
+
+Built-ins:
+
+* ``least-loaded``   — fewest resident jobs, GPU id tie-break.  The paper's
+  rule and the default: bit-identical to the pre-placer simulator.
+* ``hetero-speed``   — weighs ``GPUSpec.speed_scale`` against remaining
+  work: jobs with more remaining work than the in-system mean go to the
+  fastest GPUs (their wall-time win scales with length), short jobs pack on
+  the slow ones so the fast capacity stays available.  Degenerates to
+  least-loaded on homogeneous fleets.
+* ``frag-aware``     — scores the *post-placement* partition space: among
+  feasible covering partitions, how large a contiguous slice stays free
+  (``PartitionSpace.part_spare``).  Prefers the GPU that keeps the most
+  contiguous room for future arrivals.
+* ``best-fit-slice`` — classic best-fit over the precomputed feasibility
+  rows: picks the GPU whose tightest feasible partition wastes the fewest
+  compute slots, packing jobs densely so whole GPUs stay empty.
+
+All four only ever *rank* the candidate list — they never return a GPU the
+policy did not offer, so every feasibility guarantee of the policy layer is
+preserved by construction.
+"""
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Type
+
+import numpy as np
+
+from repro.core.jobs import Job
+from repro.core.sim.gpu import GPU
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from repro.core.sim.engine import ClusterSim
+
+_REGISTRY: Dict[str, Type["Placer"]] = {}
+
+DEFAULT_PLACER = "least-loaded"
+
+
+def register_placer(cls: Type["Placer"]) -> Type["Placer"]:
+    """Class decorator: make ``cls`` reachable as ``SimConfig.placer=name``."""
+    if not getattr(cls, "name", None):
+        raise ValueError(f"{cls.__name__} must define a non-empty `name`")
+    if cls.name in _REGISTRY:
+        raise ValueError(f"duplicate placer name {cls.name!r} "
+                         f"({_REGISTRY[cls.name].__name__} vs {cls.__name__})")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def get_placer(name: str) -> Type["Placer"]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown placer {name!r}; "
+            f"available: {', '.join(available_placers())}") from None
+
+
+def available_placers() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+class Placer(ABC):
+    """Ranks a policy's feasible GPUs for one queued job (one instance per
+    simulation, created by the policy as its ``placer`` collaborator)."""
+
+    name: str = ""
+
+    def __init__(self, sim: "ClusterSim"):
+        self.sim = sim
+
+    @abstractmethod
+    def pick(self, job: Job, candidates: Sequence[GPU]) -> Optional[GPU]:
+        """Choose one of ``candidates`` for ``job`` (None leaves it queued).
+        ``candidates`` is the policy's feasible set; implementations must
+        only ever return a member of it."""
+
+    # ------------------------------------------------------ shared helpers
+
+    @staticmethod
+    def least_loaded(gpus: Sequence[GPU]) -> Optional[GPU]:
+        """Fewest resident jobs, GPU id as tie-break (paper §4)."""
+        if not gpus:
+            return None
+        return min(gpus, key=lambda g: (len(g.jobs), g.gid))
+
+    def required_sizes(self, g: GPU, job: Job) -> Optional[Sequence[int]]:
+        """Post-placement scalar slice requirements on ``g`` — ``job`` plus
+        every resident — via ``PartitionSpace.required_sizes``; None when
+        some job has no feasible slice on ``g``'s menu (or the menu's memory
+        is not monotone in slice size, where the scalar collapse is inexact
+        — no shipped menu, but scoring placers must not silently mis-rank)."""
+        jobs = [job] + [rj.job for rj in g.jobs.values()]
+        return g.space.required_sizes(
+            [max(j.profile.mem_gb, j.min_mem_gb) for j in jobs],
+            [j.qos_min_slice for j in jobs])
+
+    def _covering_mask(self, g: GPU, job: Job) -> Optional[np.ndarray]:
+        """(P,) bool mask over ``g.space.part_sizes(m)`` rows that give every
+        post-placement job a big-enough slice; None when nothing covers."""
+        reqs = self.required_sizes(g, job)
+        if reqs is None:
+            return None
+        m = len(reqs)
+        sizes = g.space.part_sizes(m)
+        if sizes.shape[0] == 0:
+            return None
+        req = np.sort(np.asarray(reqs, dtype=np.int64))[::-1]
+        mask = (sizes >= req).all(axis=1)
+        return mask if mask.any() else None
+
+
+@register_placer
+class LeastLoadedPlacer(Placer):
+    """The paper's placement rule; the default (bit-identical to the
+    pre-placer simulator for every policy)."""
+
+    name = "least-loaded"
+
+    def pick(self, job: Job, candidates: Sequence[GPU]) -> Optional[GPU]:
+        return self.least_loaded(candidates)
+
+
+@register_placer
+class HeteroSpeedPlacer(Placer):
+    """Speed-aware placement for heterogeneous fleets.
+
+    A job's wall-time win from a fast GPU is proportional to its remaining
+    work, so long jobs should claim the h100s while short jobs pack on the
+    a100s and leave the fast capacity free.  "Long" is judged against the
+    mean remaining work over everything currently in the system (queue +
+    residents) — an adaptive split point with no tuning knob.  Within the
+    preferred speed class, least-loaded; on homogeneous fleets (one speed
+    class) this is exactly least-loaded.
+    """
+
+    name = "hetero-speed"
+
+    def pick(self, job: Job, candidates: Sequence[GPU]) -> Optional[GPU]:
+        gpus = list(candidates)
+        if not gpus:
+            return None
+        if len({g.speed_scale for g in gpus}) == 1:
+            return self.least_loaded(gpus)
+        prefer_fast = job.remaining >= self._split_point()
+        sign = -1.0 if prefer_fast else 1.0
+        return min(gpus, key=lambda g: (sign * g.speed_scale,
+                                        len(g.jobs), g.gid))
+
+    def _split_point(self) -> float:
+        sim = self.sim
+        rem = [sim.jobs[j].remaining for j in sim.queue]
+        for g in sim.gpus:
+            rem.extend(rj.job.remaining for rj in g.jobs.values())
+        return sum(rem) / len(rem) if rem else 0.0
+
+
+@register_placer
+class FragAwarePlacer(Placer):
+    """Keep the largest contiguous slice free after placement.
+
+    For each candidate, score the best ``largest_free_slice`` over every
+    partition that covers the post-placement job set (precomputed per space:
+    ``part_spare``), normalized by the full-slice size so mixed menus
+    compare.  Bigger spare = less fragmentation = more room for the next
+    arrival's worst-case slice demand.  Ties fall back to least-loaded."""
+
+    name = "frag-aware"
+
+    def pick(self, job: Job, candidates: Sequence[GPU]) -> Optional[GPU]:
+        gpus = list(candidates)
+        if not gpus:
+            return None
+        return min(gpus, key=lambda g: (-self._spare_frac(g, job),
+                                        len(g.jobs), g.gid))
+
+    def _spare_frac(self, g: GPU, job: Job) -> float:
+        mask = self._covering_mask(g, job)
+        if mask is None:
+            # unscoreable (policy admitted via its own rules, e.g. MPS-only
+            # without partitions): rank below every scored GPU
+            return -1.0
+        m = len(g.jobs) + 1
+        return float(g.space.part_spare(m)[mask].max()) / g.space.full_size
+
+
+@register_placer
+class BestFitSlicePlacer(Placer):
+    """Tightest feasible Pareto row wins (classic best-fit bin packing).
+
+    For each candidate, find the covering partition using the fewest compute
+    slots; the GPU where that tightest fit is *largest* relative to its
+    capacity is the most packed one — placing there keeps other GPUs empty
+    for jobs that need big contiguous slices.  Ties fall back to
+    least-loaded."""
+
+    name = "best-fit-slice"
+
+    def pick(self, job: Job, candidates: Sequence[GPU]) -> Optional[GPU]:
+        gpus = list(candidates)
+        if not gpus:
+            return None
+        return min(gpus, key=lambda g: (-self._used_frac(g, job),
+                                        len(g.jobs), g.gid))
+
+    def _used_frac(self, g: GPU, job: Job) -> float:
+        mask = self._covering_mask(g, job)
+        if mask is None:
+            return -1.0
+        m = len(g.jobs) + 1
+        return float(g.space.part_compute(m)[mask].min()) / g.space.total_compute

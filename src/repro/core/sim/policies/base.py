@@ -5,7 +5,12 @@ engine (``repro.core.sim.engine``) owns time, events and accounting.  The
 hooks mirror the lifecycle of a job:
 
 * ``admit``          — queue discipline (default FCFS; override for e.g. SRPT)
-* ``pick_gpu``       — placement: choose a GPU for a queued job (or None)
+* ``placement_candidates`` — feasibility: the GPUs a queued job *may* land on
+  under this policy's co-location rules (default: the engine's shared
+  job-count / memory / spare-slice checks)
+* ``pick_gpu``       — placement: delegates the choice among those
+  candidates to the pluggable :class:`~repro.core.sim.placement.Placer`
+  named by ``SimConfig.placer`` (``least-loaded`` by default)
 * ``on_place``       — set the GPU's phase/partition after a job lands
 * ``on_phase_end``   — a CKPT/MPS_PROF timer expired; advance the state machine
 * ``on_phase_end_batch`` — several timers expired at one tick (the engine
@@ -27,6 +32,7 @@ from repro.core.jobs import Job, JobProfile
 from repro.core.optimizer import optimize_partition, optimize_partition_batch
 from repro.core.perfmodel import MPS_LEVELS
 from repro.core.sim.gpu import CKPT, GPU, IDLE, MIG_RUN
+from repro.core.sim.placement import get_placer
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
     from repro.core.sim.engine import ClusterSim
@@ -65,6 +71,7 @@ class Policy(ABC):
 
     def __init__(self, sim: "ClusterSim"):
         self.sim = sim
+        self.placer = get_placer(sim.cfg.placer)(sim)
 
     # ------------------------------------------------------ queue discipline
 
@@ -81,16 +88,22 @@ class Policy(ABC):
 
     # ---------------------------------------------------------- placement
 
-    @abstractmethod
-    def pick_gpu(self, job: Job) -> Optional[GPU]:
-        """Choose a GPU for ``job`` or return None to leave it queued."""
+    def placement_candidates(self, job: Job) -> List[GPU]:
+        """GPUs ``job`` may land on under this policy's co-location rules.
+        Default: the shared-MIG admission every partitioning policy uses —
+        in-service, under the space's job cap, memory-feasible and passing
+        the exact spare-slice check.  Policies with different co-location
+        semantics (NoPart, MPS-only, OptSta) override *this*, not
+        ``pick_gpu``, so every placer composes with them."""
+        sim = self.sim
+        return [g for g in sim.up_gpus()
+                if len(g.jobs) < g.space.max_jobs and sim.mem_ok(g, job)
+                and sim.spare_slice_ok(g, job)]
 
-    def least_loaded(self, gpus: Sequence[GPU]) -> Optional[GPU]:
-        """Fewest resident jobs, GPU id as tie-break (paper §4: least-loaded
-        placement)."""
-        if not gpus:
-            return None
-        return min(gpus, key=lambda g: (len(g.jobs), g.gid))
+    def pick_gpu(self, job: Job) -> Optional[GPU]:
+        """Choose a GPU for ``job`` (None leaves it queued): the pluggable
+        placer ranks this policy's feasible candidates."""
+        return self.placer.pick(job, self.placement_candidates(job))
 
     # ------------------------------------------------------------ lifecycle
 

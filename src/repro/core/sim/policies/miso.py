@@ -11,8 +11,6 @@ sweep (paper §4.3: spawned instances are not re-profiled).
 """
 from __future__ import annotations
 
-from typing import Optional
-
 from repro.core.jobs import Job
 from repro.core.sim.gpu import CKPT, GPU, IDLE, MIG_RUN, MPS_PROF
 from repro.core.sim.policies.base import Policy, register_policy
@@ -22,12 +20,8 @@ from repro.core.sim.policies.base import Policy, register_policy
 class MisoPolicy(Policy):
     name = "miso"
 
-    def pick_gpu(self, job: Job) -> Optional[GPU]:
-        sim = self.sim
-        return self.least_loaded(
-            [g for g in sim.up_gpus()
-             if len(g.jobs) < g.space.max_jobs and sim.mem_ok(g, job)
-             and sim.spare_slice_ok(g, job)])
+    # placement: the inherited candidates (shared-MIG admission) ranked by
+    # the configured placer — least-loaded by default (paper §4)
 
     def on_place(self, g: GPU, job: Job):
         # profiles are space-specific: a clone landing on a different

@@ -4,7 +4,7 @@ interference-prone MPS speeds for their whole life.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import List, Sequence
 
 from repro.core.jobs import Job, JobProfile
 from repro.core.sim.gpu import GPU, IDLE, MPS_PROF
@@ -15,12 +15,11 @@ from repro.core.sim.policies.base import Policy, register_policy
 class MpsOnlyPolicy(Policy):
     name = "mpsonly"
 
-    def pick_gpu(self, job: Job) -> Optional[GPU]:
+    def placement_candidates(self, job: Job) -> List[GPU]:
         sim = self.sim
-        return self.least_loaded(
-            [g for g in sim.up_gpus()
-             if len(g.jobs) < sim.cfg.mps_only_max_jobs
-             and sim.mem_ok(g, job)])
+        return [g for g in sim.up_gpus()
+                if len(g.jobs) < sim.cfg.mps_only_max_jobs
+                and sim.mem_ok(g, job)]
 
     def on_place(self, g: GPU, job: Job):
         g.phase = MPS_PROF               # progresses at MPS speeds forever

@@ -4,7 +4,7 @@ One job per GPU on the full slice; everything else waits in the FCFS queue.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List
 
 from repro.core.jobs import Job
 from repro.core.sim.gpu import GPU, IDLE, MIG_RUN
@@ -15,9 +15,8 @@ from repro.core.sim.policies.base import Policy, register_policy
 class NoPartPolicy(Policy):
     name = "nopart"
 
-    def pick_gpu(self, job: Job) -> Optional[GPU]:
-        return self.least_loaded(
-            [g for g in self.sim.up_gpus() if not g.jobs])
+    def placement_candidates(self, job: Job) -> List[GPU]:
+        return [g for g in self.sim.up_gpus() if not g.jobs]
 
     def on_place(self, g: GPU, job: Job):
         g.phase = MIG_RUN

@@ -10,7 +10,7 @@ Algorithm 1 uses), replacing the historical per-subset dict DP.
 from __future__ import annotations
 
 import itertools
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 
@@ -24,7 +24,7 @@ from repro.core.sim.policies.base import Policy, register_policy
 class OptStaPolicy(Policy):
     name = "optsta"
 
-    def pick_gpu(self, job: Job) -> Optional[GPU]:
+    def placement_candidates(self, job: Job) -> List[GPU]:
         cands = []
         for g in self.sim.up_gpus():
             fits = [s for s in self._free_slices(g)
@@ -33,7 +33,7 @@ class OptStaPolicy(Policy):
                     and s >= job.qos_min_slice]
             if fits:
                 cands.append(g)
-        return self.least_loaded(cands)
+        return cands
 
     def on_place(self, g: GPU, job: Job):
         self._assign(g)

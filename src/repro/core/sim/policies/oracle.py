@@ -4,7 +4,7 @@ inaccuracies").  Upper bound for MISO.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Sequence
 
 from repro.core.jobs import Job
 from repro.core.sim.gpu import GPU
@@ -15,12 +15,7 @@ from repro.core.sim.policies.base import Policy, register_policy
 class OraclePolicy(Policy):
     name = "oracle"
 
-    def pick_gpu(self, job: Job) -> Optional[GPU]:
-        sim = self.sim
-        return self.least_loaded(
-            [g for g in sim.up_gpus()
-             if len(g.jobs) < g.space.max_jobs and sim.mem_ok(g, job)
-             and sim.spare_slice_ok(g, job)])
+    # placement: inherited candidates + configured placer
 
     def on_place(self, g: GPU, job: Job):
         self.repartition(g)              # no overhead: instant, free

@@ -21,10 +21,18 @@ with ``--show-meshes``).
                   slices free (fragmentation-aware)
 * ``srpt``      — MISO with a preemptive shortest-remaining-work queue
 
+``--placer`` accepts any registered placement layer
+(``repro/core/sim/placement.py``): ``least-loaded`` (paper default),
+``hetero-speed`` (long jobs to fast GPUs on mixed fleets), ``frag-aware``
+(keep large contiguous slices free), ``best-fit-slice`` (tightest feasible
+partition wins).
+
   PYTHONPATH=src python -m repro.launch.cluster --policy miso --jobs 60
   PYTHONPATH=src python -m repro.launch.cluster --policy srpt --lam 20
   PYTHONPATH=src python -m repro.launch.cluster --space tpu --show-meshes
   PYTHONPATH=src python -m repro.launch.cluster --fleet a100:4+h100:4
+  PYTHONPATH=src python -m repro.launch.cluster --fleet a100:4+h100:4 \\
+      --placer hetero-speed
 
 ``--fleet`` runs a heterogeneous cluster (per-GPU slice menus / perf models,
 see ``repro.core.fleet``); scenario x policy grids over fleets are driven in
@@ -44,7 +52,8 @@ if "--show-meshes" in sys.argv:
 from repro.core.estimators import NoisyEstimator, OracleEstimator, UNetEstimator
 from repro.core.partitions import a100_mig_space, tpu_pod_space
 from repro.core.perfmodel import A100, TPU_V5E_POD, PerfModel
-from repro.core.simulator import SimConfig, available_policies, simulate
+from repro.core.simulator import (SimConfig, available_placers,
+                                  available_policies, simulate)
 from repro.core.traces import generate_trace
 
 ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -58,6 +67,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="heterogeneous fleet spec, e.g. a100:4+h100:4 "
                          "(overrides --space/--accelerators/--estimator)")
     ap.add_argument("--policy", default="miso", choices=available_policies())
+    ap.add_argument("--placer", default="least-loaded",
+                    choices=available_placers(),
+                    help="placement layer: which feasible GPU a queued job "
+                         "lands on (least-loaded = paper default)")
     ap.add_argument("--estimator", default="auto",
                     choices=["auto", "unet", "oracle", "noisy"])
     ap.add_argument("--sigma", type=float, default=0.05)
@@ -81,11 +94,15 @@ def main(argv=None):
         fleet = parse_fleet(args.fleet)
         jobs = generate_trace(args.jobs, lam_s=args.lam, seed=args.seed)
         cfg = SimConfig(n_gpus=len(fleet), policy=args.policy,
-                        gpu_mtbf_s=args.mtbf, seed=args.seed)
+                        placer=args.placer, gpu_mtbf_s=args.mtbf,
+                        seed=args.seed)
         metrics = simulate(jobs, cfg, fleet=fleet)
         b = metrics.breakdown
-        print(f"[cluster] {args.policy} on fleet {describe_fleet(fleet)}: "
-              f"{len(metrics.jcts)} jobs (per-kind estimators: oracle)")
+        by_kind = {s.kind: type(s.estimator).__name__ for s in fleet}
+        ests = ", ".join(f"{k}={v}" for k, v in by_kind.items())
+        print(f"[cluster] {args.policy} (placer {args.placer}) on fleet "
+              f"{describe_fleet(fleet)}: {len(metrics.jcts)} jobs "
+              f"(per-kind estimators: {ests})")
         print(f"  avg JCT   : {metrics.avg_jct:,.0f} s "
               f"(p50 {metrics.p50_jct:,.0f}, p90 {metrics.p90_jct:,.0f})")
         print(f"  makespan  : {metrics.makespan:,.0f} s")
@@ -115,7 +132,7 @@ def main(argv=None):
 
     jobs = generate_trace(args.jobs, lam_s=args.lam, seed=args.seed)
     cfg = SimConfig(n_gpus=args.accelerators, policy=args.policy,
-                    gpu_mtbf_s=args.mtbf, seed=args.seed)
+                    placer=args.placer, gpu_mtbf_s=args.mtbf, seed=args.seed)
     metrics = simulate(jobs, cfg, space, pm, est)
 
     if args.show_meshes and args.space == "tpu":

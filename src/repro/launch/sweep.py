@@ -1,4 +1,4 @@
-"""Parallel policy x scenario x seed sweep engine.
+"""Parallel policy x placer x scenario x seed sweep engine.
 
 Fans a grid of cluster simulations across worker *processes* (each cell is
 an independent event-driven run, so the sweep is embarrassingly parallel)
@@ -8,12 +8,17 @@ trajectory tracking (``BENCH_*.json``).
   PYTHONPATH=src python -m repro.launch.sweep \\
       --policies miso,srpt --scenarios bursty,diurnal,heavy_tail --seeds 3
   PYTHONPATH=src python -m repro.launch.sweep --scenarios smoke --seeds 2
+  PYTHONPATH=src python -m repro.launch.sweep --scenarios hetero_smoke \\
+      --placers least-loaded,hetero-speed --seeds 2
   PYTHONPATH=src python -m repro.launch.sweep --fleet a100:8 --serial
 
 Scenarios come from :mod:`repro.core.scenarios` (each carries a default
-heterogeneous fleet spec, override with ``--fleet``); policies are any
-registered scheduling policy.  The JSON schema is versioned: bump
-``SCHEMA_VERSION`` on any breaking change to the result shape.
+heterogeneous fleet spec and placer, override with ``--fleet`` /
+``--placers``); policies are any registered scheduling policy and placers
+any registered placement layer (:mod:`repro.core.sim.placement`).  The JSON
+schema is versioned: bump ``SCHEMA_VERSION`` on any breaking change to the
+result shape (v2 added the placer axis: results carry a ``placer`` field and
+``summary`` is keyed scenario -> policy -> placer).
 """
 from __future__ import annotations
 
@@ -25,7 +30,7 @@ import time
 from concurrent.futures import ProcessPoolExecutor
 from typing import Dict, List, Optional, Sequence
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 # grids whose total simulated jobs fall under this run in-process: worker
 # startup (fork + pool plumbing, ~hundreds of ms) dwarfs such cells
@@ -49,7 +54,7 @@ def _warm_runtime() -> None:
 
 
 def run_task(task: Dict) -> Dict:
-    """One sweep cell: simulate (policy, scenario, seed) on a fleet.
+    """One sweep cell: simulate (policy, placer, scenario, seed) on a fleet.
 
     Module-level and dict-in/dict-out so it pickles cleanly into worker
     processes.
@@ -62,12 +67,14 @@ def run_task(task: Dict) -> Dict:
     sc = get_scenario(task["scenario"])
     jobs = sc.make_jobs(task["seed"], task.get("n_jobs"))
     fleet = parse_fleet(task.get("fleet") or sc.fleet)
+    placer = task.get("placer") or sc.placer
     cfg = SimConfig(n_gpus=len(fleet), policy=task["policy"],
-                    seed=task["seed"],
+                    placer=placer, seed=task["seed"],
                     gpu_mtbf_s=task.get("mtbf", 0.0))
     m = simulate(jobs, cfg, fleet=fleet)
     return {
         "policy": task["policy"],
+        "placer": placer,
         "scenario": task["scenario"],
         "seed": task["seed"],
         "fleet": describe_fleet(fleet),
@@ -86,13 +93,18 @@ def run_task(task: Dict) -> Dict:
 
 
 def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
-              seeds: Sequence[int], fleet: Optional[str] = None,
+              seeds: Sequence[int], placers: Optional[Sequence[str]] = None,
+              fleet: Optional[str] = None,
               n_jobs: Optional[int] = None, mtbf: float = 0.0,
               workers: Optional[int] = None, serial: bool = False) -> Dict:
-    """Run the full grid and return the JSON-ready report dict."""
-    tasks = [{"policy": p, "scenario": sc, "seed": s, "fleet": fleet,
-              "n_jobs": n_jobs, "mtbf": mtbf}
-             for sc in scenarios for p in policies for s in seeds]
+    """Run the full grid and return the JSON-ready report dict.
+
+    ``placers=None`` runs each scenario's own default placer; an explicit
+    list crosses it with every (policy, scenario, seed) cell."""
+    tasks = [{"policy": p, "placer": pl, "scenario": sc, "seed": s,
+              "fleet": fleet, "n_jobs": n_jobs, "mtbf": mtbf}
+             for sc in scenarios for p in policies
+             for pl in (placers or [None]) for s in seeds]
     if workers is None and not serial:
         # tiny grids (e.g. the CI smoke sweep) finish faster in-process than
         # a pool takes to start; an explicit --workers always gets the pool
@@ -109,30 +121,32 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
         workers_used = workers or min(len(tasks), os.cpu_count() or 1)
         with ProcessPoolExecutor(max_workers=workers_used) as pool:
             results = list(pool.map(run_task, tasks))
-    results.sort(key=lambda r: (r["scenario"], r["policy"], r["seed"]))
+    results.sort(key=lambda r: (r["scenario"], r["policy"], r["placer"],
+                                r["seed"]))
 
-    summary: Dict[str, Dict[str, Dict[str, float]]] = {}
-    for sc in scenarios:
-        summary[sc] = {}
-        for p in policies:
-            cell = [r for r in results
-                    if r["scenario"] == sc and r["policy"] == p]
-            if not cell:
-                continue
-            mean = lambda key: (sum(r["metrics"][key] for r in cell)
-                                / len(cell))
-            summary[sc][p] = {
-                "avg_jct_s_mean": mean("avg_jct_s"),
-                "p90_jct_s_mean": mean("p90_jct_s"),
-                "stp_mean": mean("stp"),
-                "makespan_s_mean": mean("makespan_s"),
-            }
+    # summary: scenario -> policy -> placer -> seed-mean aggregates (the
+    # placer level is what lets diff_sweeps compare placement layers)
+    cells: Dict[tuple, List[Dict]] = {}
+    for r in results:
+        cells.setdefault((r["scenario"], r["policy"], r["placer"]),
+                         []).append(r)
+    summary: Dict[str, Dict[str, Dict[str, Dict[str, float]]]] = {}
+    for (sc, p, pl), cell in cells.items():
+        mean = lambda key: (sum(r["metrics"][key] for r in cell)
+                            / len(cell))
+        summary.setdefault(sc, {}).setdefault(p, {})[pl] = {
+            "avg_jct_s_mean": mean("avg_jct_s"),
+            "p90_jct_s_mean": mean("p90_jct_s"),
+            "stp_mean": mean("stp"),
+            "makespan_s_mean": mean("makespan_s"),
+        }
 
     return {
         "schema_version": SCHEMA_VERSION,
         "kind": "miso-sweep",
         "config": {
             "policies": list(policies),
+            "placers": list(placers) if placers else None,
             "scenarios": list(scenarios),
             "seeds": list(seeds),
             "fleet": fleet,          # null = each scenario's default fleet
@@ -153,17 +167,24 @@ def _print_summary(report: Dict) -> None:
           f"{report['wall_s_total']:.1f}s")
     w = max((len(s) for s in report["summary"]), default=8)
     for sc, by_policy in report["summary"].items():
-        for p, agg in by_policy.items():
-            print(f"  {sc:<{w}}  {p:<10} avg_jct {agg['avg_jct_s_mean']:>9,.0f}s"
-                  f"  p90 {agg['p90_jct_s_mean']:>9,.0f}s"
-                  f"  stp {agg['stp_mean']:.3f}")
+        for p, by_placer in by_policy.items():
+            for pl, agg in by_placer.items():
+                print(f"  {sc:<{w}}  {p:<10} {pl:<15}"
+                      f" avg_jct {agg['avg_jct_s_mean']:>9,.0f}s"
+                      f"  p90 {agg['p90_jct_s_mean']:>9,.0f}s"
+                      f"  stp {agg['stp_mean']:.3f}")
 
 
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
-        description="parallel policy x scenario x seed simulation sweep")
+        description="parallel policy x placer x scenario x seed "
+                    "simulation sweep")
     ap.add_argument("--policies", default="miso,srpt",
                     help="comma-separated policy names")
+    ap.add_argument("--placers", default=None,
+                    help="comma-separated placer names to cross with every "
+                         "cell (see repro.core.sim.placement; default: each "
+                         "scenario's own placer)")
     ap.add_argument("--scenarios", default="bursty,diurnal,heavy_tail",
                     help="comma-separated scenario names "
                          "(see repro.core.scenarios)")
@@ -188,18 +209,24 @@ def build_parser() -> argparse.ArgumentParser:
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
     from repro.core.scenarios import available_scenarios, get_scenario
+    from repro.core.sim.placement import get_placer
     from repro.core.sim.policies import available_policies, get_policy
 
     policies = [p.strip() for p in args.policies.split(",") if p.strip()]
     scenarios = [s.strip() for s in args.scenarios.split(",") if s.strip()]
+    placers = ([p.strip() for p in args.placers.split(",") if p.strip()]
+               if args.placers else None)
     for p in policies:
         get_policy(p)                    # fail fast with the full list
     for s in scenarios:
         get_scenario(s)
+    for pl in placers or ():
+        get_placer(pl)
 
     report = run_sweep(policies, scenarios, seeds=list(range(args.seeds)),
-                       fleet=args.fleet, n_jobs=args.jobs, mtbf=args.mtbf,
-                       workers=args.workers, serial=args.serial)
+                       placers=placers, fleet=args.fleet, n_jobs=args.jobs,
+                       mtbf=args.mtbf, workers=args.workers,
+                       serial=args.serial)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1, sort_keys=False)
         f.write("\n")

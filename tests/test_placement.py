@@ -1,0 +1,277 @@
+"""Placement layer: registry, golden bit-identity of the default placer,
+the feasibility guarantee (every placer only ever returns GPUs its policy
+offered) on mixed fleets, per-placer ranking behavior, and the per-kind
+predictor-artifact routing through ``GPUSpec.estimator``."""
+import json
+import os
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+import repro.core.fleet as fleet_mod
+from repro.core.estimators import OracleEstimator
+from repro.core.fleet import (GPUSpec, default_artifact_path,
+                              homogeneous_fleet, parse_fleet)
+from repro.core.jobs import WORKLOADS, Job
+from repro.core.partitions import a100_mig_space
+from repro.core.perfmodel import PerfModel
+from repro.core.simulator import (ClusterSim, Placer, SimConfig,
+                                  available_placers, get_placer,
+                                  register_placer, simulate)
+from repro.core.traces import generate_trace
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # container image ships without it
+    HAVE_HYPOTHESIS = False
+
+SPACE = a100_mig_space()
+PM = PerfModel(SPACE)
+EST = OracleEstimator(PM)
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "simulator_golden.json")
+
+ALL_POLICIES = ("nopart", "optsta", "mpsonly", "miso", "oracle",
+                "miso-frag", "srpt")
+BUILTIN_PLACERS = ("least-loaded", "hetero-speed", "frag-aware",
+                   "best-fit-slice")
+
+
+# --------------------------------------------------------------- registry
+
+def test_builtin_placers_registered():
+    for name in BUILTIN_PLACERS:
+        assert name in available_placers()
+        assert get_placer(name).name == name
+
+
+def test_unknown_placer_raises():
+    with pytest.raises(ValueError, match="unknown placer"):
+        get_placer("does-not-exist")
+    # fails fast at construction, like an unknown policy
+    with pytest.raises(ValueError, match="unknown placer"):
+        ClusterSim([], SimConfig(placer="does-not-exist"), SPACE, PM, EST)
+
+
+def test_duplicate_placer_registration_raises():
+    with pytest.raises(ValueError, match="duplicate"):
+        @register_placer
+        class Clash(Placer):                       # noqa: F811
+            name = "least-loaded"
+
+            def pick(self, job, candidates):
+                return None
+    assert get_placer("least-loaded").__name__ == "LeastLoadedPlacer"
+
+
+# ----------------------------------------------------------------- golden
+
+with open(GOLDEN) as f:
+    _GOLD = json.load(f)
+_GCFG = _GOLD["config"]
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_default_placer_bit_identical_to_golden(policy):
+    """An *explicit* least-loaded placer reproduces the recorded
+    (pre-placement-layer) simulator bit-for-bit for all seven policies —
+    the refactor moved the paper's placement rule, it did not change it."""
+    seed = 0
+    jobs = generate_trace(_GCFG["n_jobs"], lam_s=_GCFG["lam_s"], seed=seed,
+                          max_duration_s=_GCFG["max_duration_s"])
+    m = simulate(jobs, SimConfig(n_gpus=_GCFG["n_gpus"], policy=policy,
+                                 placer="least-loaded"), SPACE, PM, EST)
+    g = _GOLD[f"{policy}/seed{seed}"]
+    assert m.avg_jct == g["avg_jct"]
+    assert m.makespan == g["makespan"]
+    assert m.stp == g["stp"]
+    assert list(m.jcts) == g["jcts"]
+    assert m.breakdown == g["breakdown"]
+
+
+# -------------------------------------------------------- ranking behavior
+
+def _sim(fleet_spec, jobs=(), policy="oracle", placer="least-loaded"):
+    return ClusterSim(list(jobs), SimConfig(policy=policy, placer=placer),
+                      fleet=parse_fleet(fleet_spec))
+
+
+def _job(jid, mem_gb, work=300.0, qos=0):
+    prof = replace(WORKLOADS[0], name=f"j{jid}", mem_gb=mem_gb)
+    return Job(jid=jid, profile=prof, arrival=0.0, work=work,
+               qos_min_slice=qos)
+
+
+def test_hetero_speed_splits_long_and_short_jobs():
+    """Long jobs (above the in-system mean remaining work) go to the fast
+    GPU, short ones pack on the slow GPU."""
+    long_j, short_j = _job(0, 5.0, work=10_000.0), _job(1, 5.0, work=10.0)
+    sim = _sim("a100:1+h100:1", [long_j, short_j], placer="hetero-speed")
+    sim.queue = [0, 1]                   # both in the system, nothing placed
+    placer = sim.policy.placer
+    cands = sim.policy.placement_candidates(long_j)
+    assert len(cands) == 2
+    assert placer.pick(long_j, cands).speed_scale == 2.0     # h100
+    assert placer.pick(short_j, cands).speed_scale == 1.0    # a100
+
+
+def test_hetero_speed_degenerates_to_least_loaded_when_homogeneous():
+    job = _job(0, 5.0)
+    sim = _sim("a100:3", [job], placer="hetero-speed")
+    sim.queue = [0]
+    cands = sim.policy.placement_candidates(job)
+    assert sim.policy.placer.pick(job, cands) is \
+        get_placer("least-loaded")(sim).pick(job, cands)
+
+
+def test_frag_aware_keeps_contiguous_slices_free():
+    """GPU0's resident forces the packed (3g,3g) partition; GPU1's covering
+    partition keeps a 2g slice free.  least-loaded ties to GPU0 (lower gid),
+    frag-aware must prefer GPU1."""
+    new = _job(2, 11.0)                          # needs a 3g.20gb slice
+    sim = _sim("a100:2", [_job(0, 20.0), _job(1, 4.0), new],
+               placer="frag-aware")
+    sim.place(sim.gpus[0], sim.jobs[0])          # req 3g resident
+    sim.place(sim.gpus[1], sim.jobs[1])          # req 1g resident
+    cands = sim.policy.placement_candidates(new)
+    assert [g.gid for g in cands] == [0, 1]
+    assert get_placer("least-loaded")(sim).pick(new, cands).gid == 0
+    assert sim.policy.placer.pick(new, cands).gid == 1
+
+
+def test_best_fit_slice_packs_tightest():
+    """A 1g job fits tightest next to the existing 1g resident; least-loaded
+    would start a fresh GPU instead."""
+    new = _job(2, 4.0)                           # needs only a 1g.5gb slice
+    sim = _sim("a100:2", [_job(1, 4.0), new], placer="best-fit-slice")
+    sim.place(sim.gpus[1], sim.jobs[1])
+    cands = sim.policy.placement_candidates(new)
+    assert [g.gid for g in cands] == [0, 1]
+    assert get_placer("least-loaded")(sim).pick(new, cands).gid == 0
+    assert sim.policy.placer.pick(new, cands).gid == 1
+
+
+# ------------------------------------------- feasibility on mixed fleets
+
+def _assert_placer_feasible(placer_name, jobs, fleet_spec="a100:2+h100:1"):
+    """Place ``jobs`` one by one: the placer must only ever return a GPU the
+    policy offered (which implies the engine's feasibility checks held)."""
+    sim = _sim(fleet_spec, jobs, policy="oracle", placer=placer_name)
+    sim.queue = [j.jid for j in jobs]
+    placed = 0
+    for job in jobs:
+        cands = sim.policy.placement_candidates(job)
+        g = sim.policy.placer.pick(job, cands)
+        assert g is None or g in cands
+        if g is not None:
+            assert sim.mem_ok(g, job) and sim.spare_slice_ok(g, job)
+            sim.queue.remove(job.jid)
+            sim.place(g, job)
+            placed += 1
+    return placed
+
+
+_QOS_SIZES = (0, 1, 2, 3, 4, 7)
+
+
+def _jobs_from_params(params):
+    return [Job(jid=i,
+                profile=replace(WORKLOADS[0], name=f"h{i}", mem_gb=mem),
+                arrival=0.0, work=work, qos_min_slice=qos)
+            for i, (mem, qos, work) in enumerate(params)]
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.parametrize("placer", BUILTIN_PLACERS)
+    @settings(max_examples=30, deadline=None)
+    @given(params=st.lists(
+        st.tuples(st.floats(0.5, 90.0, allow_nan=False),
+                  st.sampled_from(_QOS_SIZES),
+                  st.floats(10.0, 5_000.0, allow_nan=False)),
+        min_size=1, max_size=10))
+    def test_placers_only_return_feasible_gpus(placer, params):
+        """Property: on a mixed a100+h100 fleet, every registered placer
+        only ever returns feasible GPUs, whatever the (mem, QoS, work)
+        mix — including jobs no GPU can take (placer returns None)."""
+        _assert_placer_feasible(placer, _jobs_from_params(params))
+
+
+@pytest.mark.parametrize("placer", BUILTIN_PLACERS)
+def test_placers_only_return_feasible_gpus_seeded(placer):
+    """Seeded variant of the feasibility property (runs where hypothesis is
+    not installed)."""
+    rng = np.random.default_rng(0)
+    some_placed = 0
+    for _ in range(15):
+        n = int(rng.integers(1, 11))
+        params = [(float(rng.uniform(0.5, 90.0)),
+                   int(rng.choice(_QOS_SIZES)),
+                   float(rng.uniform(10.0, 5_000.0))) for _ in range(n)]
+        some_placed += _assert_placer_feasible(placer,
+                                               _jobs_from_params(params))
+    assert some_placed > 0                       # the property isn't vacuous
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@pytest.mark.parametrize("placer", BUILTIN_PLACERS)
+def test_every_policy_completes_under_every_placer(policy, placer):
+    """Full policy x placer grid on a mixed fleet: every combination drains
+    the trace (placers respect each policy's own candidate rules)."""
+    jobs = generate_trace(10, lam_s=25.0, seed=4, max_duration_s=900)
+    m = simulate(jobs, SimConfig(policy=policy, placer=placer),
+                 fleet=parse_fleet("a100:2+h100:2"))
+    assert len(m.jcts) == len(jobs)
+
+
+def test_cluster_cli_lists_all_placers():
+    from repro.launch.cluster import build_parser
+    action = next(a for a in build_parser()._actions
+                  if "--placer" in a.option_strings)
+    assert set(BUILTIN_PLACERS) <= set(action.choices)
+
+
+# ------------------------------------------------ estimator routing (fleet)
+
+def test_explicit_estimator_never_clobbered():
+    sentinel = object()
+    spec = GPUSpec("a100", SPACE, PM, estimator=sentinel)
+    assert spec.estimator is sentinel
+    fleet = homogeneous_fleet(SPACE, PM, sentinel, 3)
+    assert all(s.estimator is sentinel for s in fleet)
+    # dataclasses.replace re-runs __post_init__; the estimator must survive
+    assert replace(spec, speed_scale=2.0).estimator is sentinel
+
+
+def test_unknown_artifact_path_raises_clearly():
+    with pytest.raises(FileNotFoundError, match="h100"):
+        GPUSpec("h100", SPACE, PM, artifact="/does/not/exist.npz")
+    # ... and an explicit estimator wins over a bogus artifact path
+    sentinel = object()
+    spec = GPUSpec("h100", SPACE, PM, estimator=sentinel,
+                   artifact="/does/not/exist.npz")
+    assert spec.estimator is sentinel
+
+
+def test_default_artifact_path_per_kind(tmp_path, monkeypatch):
+    monkeypatch.setattr(fleet_mod, "ARTIFACT_DIR", str(tmp_path))
+    assert default_artifact_path("h100") is None
+    (tmp_path / "predictor_h100.npz").write_bytes(b"")
+    assert default_artifact_path("h100") == str(tmp_path / "predictor_h100.npz")
+    # a100 falls back to the legacy un-suffixed artifact
+    assert default_artifact_path("a100") is None
+    (tmp_path / "predictor.npz").write_bytes(b"")
+    assert default_artifact_path("a100") == str(tmp_path / "predictor.npz")
+    (tmp_path / "predictor_a100.npz").write_bytes(b"")
+    assert default_artifact_path("a100") == str(tmp_path / "predictor_a100.npz")
+    assert default_artifact_path("tpu") is None
+
+
+def test_fleet_kinds_default_to_oracle_without_artifacts():
+    """Without shipped artifacts the per-kind factories stay on the oracle
+    estimator (never a silent half-configured U-Net)."""
+    for spec in parse_fleet("a100:1+h100:1+tpu:1"):
+        if spec.artifact is None:
+            assert isinstance(spec.estimator, OracleEstimator)

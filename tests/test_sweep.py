@@ -1,12 +1,15 @@
-"""Parallel sweep engine: schema stability, deterministic serial/parallel
-equivalence, fleet override, and the CLI entry point."""
+"""Parallel sweep engine: schema stability (v2: the placer axis),
+deterministic serial/parallel equivalence, fleet/placer overrides, the
+report differ's v1/v2 compatibility, and the CLI entry point."""
+import importlib.util
 import json
+import os
 
 import pytest
 
 from repro.launch.sweep import SCHEMA_VERSION, run_sweep, run_task
 
-RESULT_KEYS = {"policy", "scenario", "seed", "fleet", "n_jobs",
+RESULT_KEYS = {"policy", "placer", "scenario", "seed", "fleet", "n_jobs",
                "n_completed", "metrics", "wall_s"}
 METRIC_KEYS = {"avg_jct_s", "p50_jct_s", "p90_jct_s", "makespan_s", "stp",
                "breakdown_s"}
@@ -18,6 +21,7 @@ def test_run_task_schema():
     assert set(r["metrics"]) == METRIC_KEYS
     assert r["n_completed"] == r["n_jobs"] > 0
     assert r["fleet"] == "a100:2"            # smoke's default fleet
+    assert r["placer"] == "least-loaded"     # smoke's default placer
     json.dumps(r)                            # JSON-serializable end to end
 
 
@@ -26,12 +30,30 @@ def test_run_sweep_serial_grid():
     assert rep["schema_version"] == SCHEMA_VERSION
     assert rep["kind"] == "miso-sweep"
     assert len(rep["results"]) == 4
-    keys = [(r["scenario"], r["policy"], r["seed"]) for r in rep["results"]]
+    keys = [(r["scenario"], r["policy"], r["placer"], r["seed"])
+            for r in rep["results"]]
     assert keys == sorted(keys)              # stable result ordering
     assert set(rep["summary"]["smoke"]) == {"miso", "srpt"}
-    for agg in rep["summary"]["smoke"].values():
-        assert set(agg) == {"avg_jct_s_mean", "p90_jct_s_mean", "stp_mean",
-                            "makespan_s_mean"}
+    for by_placer in rep["summary"]["smoke"].values():
+        assert set(by_placer) == {"least-loaded"}
+        for agg in by_placer.values():
+            assert set(agg) == {"avg_jct_s_mean", "p90_jct_s_mean",
+                                "stp_mean", "makespan_s_mean"}
+
+
+def test_placer_axis_crosses_grid():
+    rep = run_sweep(["miso"], ["smoke"], seeds=[0],
+                    placers=["least-loaded", "hetero-speed"], serial=True)
+    assert len(rep["results"]) == 2
+    assert {r["placer"] for r in rep["results"]} == {"least-loaded",
+                                                     "hetero-speed"}
+    assert set(rep["summary"]["smoke"]["miso"]) == {"least-loaded",
+                                                    "hetero-speed"}
+    assert rep["config"]["placers"] == ["least-loaded", "hetero-speed"]
+    # smoke's a100-only fleet has one speed class: hetero-speed degenerates
+    # to least-loaded, so both cells carry identical metrics
+    a, b = rep["results"]
+    assert a["metrics"] == b["metrics"]
 
 
 def test_parallel_matches_serial():
@@ -72,3 +94,52 @@ def test_cli_rejects_unknown_names():
     with pytest.raises(ValueError, match="unknown scenario"):
         sweep.main(["--policies", "miso", "--scenarios", "nope",
                     "--seeds", "1"])
+
+
+# ------------------------------------------------------------ diff_sweeps
+
+def _load_diff_sweeps():
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "diff_sweeps.py")
+    spec = importlib.util.spec_from_file_location("diff_sweeps", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_diff_sweeps_reads_v1_and_v2_summaries(tmp_path):
+    """v1 reports (pre-placer) normalize to placer=least-loaded and compare
+    cleanly against v2 candidates."""
+    ds = _load_diff_sweeps()
+    agg = {"avg_jct_s_mean": 100.0, "p90_jct_s_mean": 200.0,
+           "stp_mean": 1.5, "makespan_s_mean": 400.0}
+    v1 = {"schema_version": 1, "kind": "miso-sweep",
+          "summary": {"smoke": {"miso": agg}}}
+    v2 = {"schema_version": 2, "kind": "miso-sweep",
+          "summary": {"smoke": {"miso": {"least-loaded": agg}}}}
+    p1, p2 = tmp_path / "v1.json", tmp_path / "v2.json"
+    p1.write_text(json.dumps(v1))
+    p2.write_text(json.dumps(v2))
+    key = ("smoke", "miso", "least-loaded")
+    assert ds.load_summary(str(p1)) == {key: agg}
+    assert ds.load_summary(str(p2)) == {key: agg}
+    regressions, notes = ds.diff_reports(str(p1), str(p2), threshold=0.02)
+    assert regressions == [] and notes == []
+
+
+def test_diff_sweeps_flags_regressions_per_placer(tmp_path):
+    ds = _load_diff_sweeps()
+    base_agg = {"avg_jct_s_mean": 100.0, "stp_mean": 1.5}
+    bad_agg = {"avg_jct_s_mean": 150.0, "stp_mean": 1.5}
+    base = {"schema_version": 2, "kind": "miso-sweep",
+            "summary": {"smoke": {"miso": {"least-loaded": base_agg,
+                                           "hetero-speed": base_agg}}}}
+    cand = {"schema_version": 2, "kind": "miso-sweep",
+            "summary": {"smoke": {"miso": {"least-loaded": base_agg,
+                                           "hetero-speed": bad_agg}}}}
+    pb, pc = tmp_path / "base.json", tmp_path / "cand.json"
+    pb.write_text(json.dumps(base))
+    pc.write_text(json.dumps(cand))
+    regressions, _ = ds.diff_reports(str(pb), str(pc), threshold=0.02)
+    assert len(regressions) == 1
+    assert "smoke/miso/hetero-speed" in regressions[0]
