@@ -1,12 +1,15 @@
 """Diff two sweep reports (``BENCH_sweep_*.json``) and flag regressions.
 
-Compares per-(scenario, policy, placer) summary metrics between a baseline
-report and a candidate report, and exits non-zero when any scenario
-regresses by more than ``--threshold`` (default 2%):
+Compares per-(scenario, policy, placer, objective) summary metrics between
+a baseline report and a candidate report, and exits non-zero when any
+scenario regresses by more than ``--threshold`` (default 2%):
 
 * ``avg_jct_s_mean`` / ``p90_jct_s_mean`` / ``makespan_s_mean`` — higher is
   worse (a JCT regression);
-* ``stp_mean`` — lower is worse (a throughput regression).
+* ``stp_mean`` — lower is worse (a throughput regression);
+* ``energy_j_mean`` / ``energy_per_job_j_mean`` — higher is worse (an
+  energy regression; only compared when both reports carry the v3 energy
+  columns).
 
 Timing fields (``wall_s``, ``wall_s_total``) and execution details
 (``config.workers``, ``config.serial``) are ignored: how a sweep was
@@ -30,28 +33,37 @@ METRICS = {
     "p90_jct_s_mean": +1,
     "makespan_s_mean": +1,
     "stp_mean": -1,
+    "energy_j_mean": +1,
+    "energy_per_job_j_mean": +1,
 }
 
 
-def load_summary(path: str) -> Dict[Tuple[str, str, str], Dict[str, float]]:
-    """Cells keyed (scenario, policy, placer).  Schema v1 reports predate
-    the placer axis; every v1 cell ran the then-hardwired least-loaded
-    placement, so they normalize to placer="least-loaded" and stay
-    comparable against v2 candidates."""
+def load_summary(path: str
+                 ) -> Dict[Tuple[str, str, str, str], Dict[str, float]]:
+    """Cells keyed (scenario, policy, placer, objective).  Schema v1
+    reports predate the placer axis (every cell ran the then-hardwired
+    least-loaded placement) and v1/v2 predate the objective axis (every
+    cell maximized throughput), so older reports normalize to
+    placer="least-loaded" / objective="throughput" and stay comparable
+    against v3 candidates."""
     with open(path) as f:
         rep = json.load(f)
     if rep.get("kind") != "miso-sweep":
         raise ValueError(f"{path}: not a miso-sweep report "
                          f"(kind={rep.get('kind')!r})")
-    v2 = rep.get("schema_version", 1) >= 2
+    ver = rep.get("schema_version", 1)
     out = {}
     for scenario, by_policy in rep.get("summary", {}).items():
         for policy, v in by_policy.items():
-            if v2:
+            if ver >= 3:
+                for placer, by_obj in v.items():
+                    for objective, agg in by_obj.items():
+                        out[(scenario, policy, placer, objective)] = agg
+            elif ver == 2:
                 for placer, agg in v.items():
-                    out[(scenario, policy, placer)] = agg
+                    out[(scenario, policy, placer, "throughput")] = agg
             else:
-                out[(scenario, policy, "least-loaded")] = v
+                out[(scenario, policy, "least-loaded", "throughput")] = v
     return out
 
 
@@ -62,8 +74,8 @@ def diff_reports(base_path: str, new_path: str,
     new = load_summary(new_path)
     regressions, notes = [], []
     for cell in sorted(set(base) | set(new)):
-        scenario, policy, placer = cell
-        label = f"{scenario}/{policy}/{placer}"
+        scenario, policy, placer, objective = cell
+        label = f"{scenario}/{policy}/{placer}/{objective}"
         if cell not in new:
             # a baseline cell that stopped being measured is itself a
             # regression — the gate must not pass on vanishing coverage

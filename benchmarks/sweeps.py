@@ -35,13 +35,15 @@ def scenario_sweep(fast=True):
     n_cells = max(1, len(report["results"]))
     for sc, by_policy in report["summary"].items():
         for pol, by_placer in by_policy.items():
-            for placer, agg in by_placer.items():
-                rows.append(row(
-                    f"sweep_{sc}_{pol}_{placer}", dt / n_cells,
-                    f"avg_jct={agg['avg_jct_s_mean']:.0f}s;"
-                    f"p90={agg['p90_jct_s_mean']:.0f}s;"
-                    f"stp={agg['stp_mean']:.3f};"
-                    f"fleet={report['results'][0]['fleet']}"))
+            for placer, by_obj in by_placer.items():
+                for obj, agg in by_obj.items():
+                    rows.append(row(
+                        f"sweep_{sc}_{pol}_{placer}_{obj}", dt / n_cells,
+                        f"avg_jct={agg['avg_jct_s_mean']:.0f}s;"
+                        f"p90={agg['p90_jct_s_mean']:.0f}s;"
+                        f"stp={agg['stp_mean']:.3f};"
+                        f"energy_mj={agg['energy_j_mean'] / 1e6:.2f};"
+                        f"fleet={report['results'][0]['fleet']}"))
     rows.append(row("sweep_wallclock", dt,
                     f"runs={len(report['results'])};"
                     f"workers={report['config']['workers']}"))

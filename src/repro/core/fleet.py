@@ -33,6 +33,16 @@ without one the spec falls back to the oracle estimator.  An *explicitly*
 passed estimator always wins — ``__post_init__`` never clobbers it — and an
 explicit ``artifact=`` path that does not exist raises instead of silently
 degrading to the oracle.
+
+Per-kind power: every spec carries a :class:`PowerModel` (idle watts plus
+per-slice active watts), the electrical side of the accelerator that the
+energy-aware objectives (:mod:`repro.core.sim.objectives`) and the engine's
+energy accounting consume.  The shapes follow the power-partitioning
+measurements of Vamja et al. (PAPERS.md, arXiv 2501.17752): idle draw is a
+substantial fixed floor, and active draw grows *sublinearly* in the slice's
+compute fraction — a 1g slice pulls clearly more than 1/7 of the full-GPU
+active power, which is exactly why packing work onto few large slices is
+more energy-efficient than scattering it across many small ones.
 """
 from __future__ import annotations
 
@@ -64,6 +74,56 @@ def default_artifact_path(kind: str) -> Optional[str]:
     return None
 
 
+@dataclass(frozen=True)
+class PowerModel:
+    """Per-kind electrical model: wall power as a function of what runs.
+
+    ``idle_w`` is the always-on floor (HBM refresh, fans, static leakage);
+    an active slice adds ``active_w(compute_frac)`` on top.  The exponent
+    ``gamma < 1`` encodes the sublinear per-slice power the
+    power-partitioning paper measures: small MIG instances draw
+    disproportionately more watts per GPC than large ones (uncore
+    structures — L2 banks, memory controllers — power up per instance), so
+    ``active_w(1/7) > max_active_w / 7``.  ``mps_active_frac`` scales the
+    full-GPU active draw during an MPS co-run window (the whole chip is
+    powered, partitioned or not).
+    """
+    idle_w: float                     # wall draw with no active compute
+    max_active_w: float               # full-slice active draw above idle
+    gamma: float = 0.8                # sublinearity of active_w in compute frac
+    mps_active_frac: float = 1.0      # active fraction during MPS co-location
+
+    def active_w(self, compute_frac: float) -> float:
+        """Active watts of one slice spanning ``compute_frac`` of the chip."""
+        if compute_frac <= 0.0:
+            return 0.0
+        return self.max_active_w * compute_frac ** self.gamma
+
+    def partition_w(self, space: PartitionSpace, sizes) -> float:
+        """Wall watts with slices ``sizes`` (a multiset from ``space``) all
+        busy: idle floor + per-slice active draw."""
+        return self.idle_w + sum(self.active_w(space.compute_frac(s))
+                                 for s in sizes)
+
+
+# TDP splits: a100 400 W (≈62 W idle), h100 SXM 700 W (≈88 W idle); the v5e
+# pod is 256 chips at a ~170 W chip envelope with a near-linear profile
+# (per-chip power gangs, no shared uncore across the pod).
+A100_POWER = PowerModel(idle_w=62.0, max_active_w=338.0, gamma=0.80)
+H100_POWER = PowerModel(idle_w=88.0, max_active_w=612.0, gamma=0.80)
+TPU_V5E_POD_POWER = PowerModel(idle_w=256 * 45.0, max_active_w=256 * 125.0,
+                               gamma=0.97)
+
+_KIND_POWER: Dict[str, PowerModel] = {
+    "a100": A100_POWER,
+    "h100": H100_POWER,
+    "tpu": TPU_V5E_POD_POWER,
+}
+
+#: fallback for specs of unknown kind (homogeneous_fleet with a custom space)
+DEFAULT_POWER = A100_POWER
+
+
 @dataclass
 class GPUSpec:
     """Everything accelerator-type-specific about one cluster slot."""
@@ -73,8 +133,16 @@ class GPUSpec:
     estimator: object = None          # slice-speed estimator
     speed_scale: float = 1.0          # full-slice speed vs. the reference GPU
     artifact: Optional[str] = None    # predictor artifact backing `estimator`
+    power: Optional[PowerModel] = None  # per-kind electrical model
 
     def __post_init__(self):
+        if self.power is None:
+            # exact kind first; legacy homogeneous specs carry the space
+            # name as their kind ("a100-mig", "tpu-pod"), so fall back to
+            # a known-kind prefix before the generic default
+            self.power = _KIND_POWER.get(self.kind) or next(
+                (p for k, p in _KIND_POWER.items()
+                 if self.kind.startswith(k)), DEFAULT_POWER)
         if self.estimator is not None:
             # an explicit estimator always wins; never clobber it with the
             # artifact/oracle defaulting below (dataclasses.replace re-runs

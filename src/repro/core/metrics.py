@@ -1,4 +1,6 @@
-"""Figures of merit (paper §2.3): average JCT, makespan, system throughput."""
+"""Figures of merit (paper §2.3): average JCT, makespan, system throughput —
+plus the energy dimension (fleet-integrated joules and derived efficiency
+ratios) that the pluggable objective layer optimizes for."""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -19,9 +21,23 @@ class TraceMetrics:
     jcts: tuple
     relative_jcts: tuple         # JCT / exclusive-execution time (Fig 11)
     breakdown: dict              # mean seconds in queue / mps / ckpt / run
+    # energy accounting (0.0 on legacy callers that pass no energy)
+    energy_j: float = 0.0        # fleet-integrated wall energy over the run
+    avg_power_w: float = 0.0     # energy_j / the span it was integrated over
+    energy_per_job_j: float = 0.0
+    jct_per_joule: float = 0.0   # avg_jct / energy_j (s/J).  A raw ratio of
+                                 # the two headline metrics, NOT a figure of
+                                 # merit on its own (more joules at equal JCT
+                                 # *lowers* it); rank efficiency with
+                                 # energy_per_job_j / energy_j instead
 
 
-def compute_metrics(jobs: Sequence[Job], n_gpus: int) -> TraceMetrics:
+def compute_metrics(jobs: Sequence[Job], n_gpus: int,
+                    energy_j: float = 0.0,
+                    energy_span_s: float = 0.0) -> TraceMetrics:
+    """``energy_span_s`` is the wall-clock span ``energy_j`` was integrated
+    over (the engine's final clock); it defaults to the makespan, which
+    undercounts the pre-first-arrival idle window."""
     done = [j for j in jobs if j.finish_time is not None]
     if not done:
         raise ValueError("no completed jobs")
@@ -38,10 +54,16 @@ def compute_metrics(jobs: Sequence[Job], n_gpus: int) -> TraceMetrics:
         "ckpt": float(np.mean([j.t_ckpt for j in done])),
         "run": float(np.mean([j.t_run for j in done])),
     }
+    avg_jct = float(jcts.mean())
+    span = energy_span_s if energy_span_s > 0 else makespan
     return TraceMetrics(
-        avg_jct=float(jcts.mean()), makespan=float(makespan), stp=float(stp),
+        avg_jct=avg_jct, makespan=float(makespan), stp=float(stp),
         p50_jct=float(np.percentile(jcts, 50)),
         p90_jct=float(np.percentile(jcts, 90)),
         jcts=tuple(float(x) for x in jcts),
         relative_jcts=tuple(float(x) for x in rel),
-        breakdown=breakdown)
+        breakdown=breakdown,
+        energy_j=float(energy_j),
+        avg_power_w=float(energy_j / span) if span > 0 else 0.0,
+        energy_per_job_j=float(energy_j / len(done)),
+        jct_per_joule=float(avg_jct / energy_j) if energy_j > 0 else 0.0)

@@ -26,6 +26,19 @@ signature)`` — the per-space id is interned at construction instead of
 re-hashing the space's name/sizes/capacity tuple per call.
 ``benchmarks/components.optimizer_latency`` measures both the vectorized
 speedup and the memo speedup; pass ``memo=False`` to bypass.
+
+The *goal* of the search is pluggable (``objective=`` on every solver entry
+point, see :mod:`repro.core.sim.objectives`): per-slice power is constant
+across job→slice assignments, so the inner DP always solves the assignment
+by maximizing additive speeds and the objective only re-ranks partition
+rows from ``(throughput, watts)``.  ``objective=None`` (or ``"throughput"``)
+takes the historical code path unchanged — bit-identical to the
+pre-objective optimizer; non-default objectives (``"energy"``, ``"edp"``)
+run the full argmax-tracked forward and score rows with the
+:class:`~repro.core.fleet.PowerModel` passed as ``power=`` (the target
+GPU's per-kind model; ``None`` falls back to the reference a100).  Memo
+entries are keyed by objective identity and power model alongside the
+speed signature, so objectives never collide in the shared cache.
 """
 from __future__ import annotations
 
@@ -66,7 +79,9 @@ def memo_stats() -> Dict[str, int]:
 @dataclass(frozen=True)
 class PartitionChoice:
     partition: Tuple[int, ...]     # slice sizes, one per job (assignment order)
-    objective: float               # sum of assigned speeds (predicted STP)
+    objective: float               # sum of assigned speeds (predicted STP) —
+                                   # always the throughput value, whatever
+                                   # objective ranked the rows
     feasible: bool                 # every job got a non-zero-speed slice
 
 
@@ -403,22 +418,76 @@ def _optimize_batch(space: PartitionSpace, speeds,
                            float(objs[idx]), feasible)
 
 
+def _resolve_objective(objective):
+    """Objective argument (name / instance / None) -> instance, or ``None``
+    for the default throughput goal (historical bit-identical path).
+    Imported lazily: ``repro.core.sim`` eagerly imports the engine, which
+    imports this module — a top-level import would cycle."""
+    if objective is None:
+        return None
+    from repro.core.sim.objectives import resolve_objective
+    return resolve_objective(objective)
+
+
+def _optimize_objective(space: PartitionSpace, speeds, require_feasible: bool,
+                        objective, power) -> Optional[PartitionChoice]:
+    """Non-default-objective solve: full argmax-tracked forward over every
+    length-m row, per-row feasibility from the backtrack, then the
+    objective ranks rows from (throughput, watts).  The per-row assignment
+    is the throughput-optimal one — exact for any row-ranking objective
+    because a row's watts are assignment-invariant."""
+    from repro.core.sim.objectives import partition_watts, resolve_power
+    m = len(speeds)
+    cols = space.part_cols(m)
+    P = cols.shape[0]
+    if P == 0:
+        return None
+    S = _speed_matrix(space, speeds)
+    cidx = _cidx_for((space.uid, m), cols, len(space.sizes))
+    objs, cis, WG = _forward_full(cols, S, cidx)
+    perm_cols, feas = _backtrack_all(cols, WG, cis)
+    if require_feasible:
+        if not feas.any():
+            return None
+        pool = feas
+    else:
+        pool = np.ones(P, dtype=bool)
+    watts = (partition_watts(space, resolve_power(power), m)
+             if objective.needs_power else None)
+    idx = objective.select(objs, watts, pool)
+    sizes = space.sizes
+    return PartitionChoice(tuple(sizes[c] for c in perm_cols[idx]),
+                           float(objs[idx]), bool(feas[idx]))
+
+
 def optimize_partition(space: PartitionSpace,
                        speeds: Sequence[Dict[int, float]],
                        require_feasible: bool = False,
-                       memo: bool = True) -> Optional[PartitionChoice]:
-    """Algorithm 1 with exact assignment.  speeds[i][size] -> f_i(size)."""
+                       memo: bool = True,
+                       objective=None,
+                       power=None) -> Optional[PartitionChoice]:
+    """Algorithm 1 with exact assignment.  speeds[i][size] -> f_i(size).
+
+    ``objective`` names (or is) the row-ranking goal — default throughput,
+    the historical behavior; ``power`` is the per-kind
+    :class:`~repro.core.fleet.PowerModel` energy-aware objectives score
+    with (``None`` = reference a100)."""
     m = len(speeds)
     if m == 0:
         return None
+    obj = _resolve_objective(objective)
     if memo:
         key = _memo_key(space, speeds, require_feasible)
+        if obj is not None:
+            key = key + (obj.memo_key(), power)
         cached = _MEMO.get(key, _MEMO)        # sentinel: None is a valid value
         if cached is not _MEMO:
             _MEMO_STATS["hits"] += 1
             return cached
         _MEMO_STATS["misses"] += 1
-    if m == 1:
+    if obj is not None:
+        best = _optimize_objective(space, speeds, require_feasible, obj, power)
+    elif m == 1:
         best = _optimize_single(space, speeds[0], require_feasible)
     else:
         best = _optimize_batch(space, speeds, require_feasible)
@@ -432,8 +501,9 @@ def optimize_partition(space: PartitionSpace,
 def optimize_partition_batch(space: PartitionSpace,
                              mixes: Sequence[Sequence[Dict[int, float]]],
                              require_feasible: bool = False,
-                             memo: bool = True
-                             ) -> List[Optional[PartitionChoice]]:
+                             memo: bool = True,
+                             objective=None,
+                             power=None) -> List[Optional[PartitionChoice]]:
     """Solve many repartition decisions against one space in one pass.
 
     ``mixes[i]`` is the per-job speed-dict list of decision i (job counts may
@@ -445,8 +515,10 @@ def optimize_partition_batch(space: PartitionSpace,
     coalescing routes concurrent repartitions here.
 
     Element i equals ``optimize_partition(space, mixes[i], ...)`` exactly
-    (bit-identical choice and objective, same memo interaction).
+    (bit-identical choice and objective, same memo interaction) — for the
+    default throughput goal and for every registered objective.
     """
+    obj = _resolve_objective(objective)
     out: List[Optional[PartitionChoice]] = [None] * len(mixes)
     pending: Dict[int, List[int]] = {}
     keys: Dict[int, tuple] = {}
@@ -458,6 +530,8 @@ def optimize_partition_batch(space: PartitionSpace,
             continue
         if memo:
             key = _memo_key(space, speeds, require_feasible)
+            if obj is not None:
+                key = key + (obj.memo_key(), power)
             cached = _MEMO.get(key, _MEMO)
             if cached is not _MEMO:
                 _MEMO_STATS["hits"] += 1
@@ -473,13 +547,17 @@ def optimize_partition_batch(space: PartitionSpace,
             _MEMO_STATS["misses"] += 1
             keys[i] = key
             key_first[key] = i
-        if m == 1:
+        if obj is None and m == 1:
             out[i] = _optimize_single(space, speeds[0], require_feasible)
         else:
             pending.setdefault(m, []).append(i)
     for m, idxs in pending.items():
-        solved = _optimize_group(space, [mixes[i] for i in idxs],
-                                 require_feasible)
+        group = [mixes[i] for i in idxs]
+        if obj is not None:
+            solved = _optimize_group_objective(space, group, require_feasible,
+                                               obj, power)
+        else:
+            solved = _optimize_group(space, group, require_feasible)
         for i, choice in zip(idxs, solved):
             out[i] = choice
     for i, first in alias.items():
@@ -542,6 +620,53 @@ def _optimize_group(space: PartitionSpace, group,
     return results
 
 
+def _optimize_group_objective(space: PartitionSpace, group,
+                              require_feasible: bool, objective, power
+                              ) -> List[Optional[PartitionChoice]]:
+    """Stacked non-default-objective solve of B same-length mixes: one
+    forward over (B*P, m) rows, full backtrack (feasibility is an input to
+    every objective pool), then per-mix row ranking.  Element b equals
+    ``_optimize_objective(space, group[b], ...)`` exactly."""
+    from repro.core.sim.objectives import partition_watts, resolve_power
+    B = len(group)
+    m = len(group[0])
+    cols = space.part_cols(m)
+    P = cols.shape[0]
+    if P == 0:
+        return [None] * B
+    sizes = space.sizes
+    n = len(sizes)
+    flat = [sv.get(s, 0.0) for speeds in group for sv in speeds
+            for s in sizes]
+    S = np.asarray(flat, dtype=np.float64)
+    base = _cidx_for((space.uid, m), cols, n)
+    cidx = (base[None, :, :]
+            + (np.arange(B) * (m * n))[:, None, None]).reshape(B * P, -1)
+    cols_tiled = np.broadcast_to(cols, (B,) + cols.shape).reshape(B * P, m)
+    objs, cis, WG = _forward_full(cols_tiled, S, cidx)
+    perm_cols, feas = _backtrack_all(cols_tiled, WG, cis)
+    objs2 = objs.reshape(B, P)
+    feas2 = feas.reshape(B, P)
+    perms2 = perm_cols.reshape(B, P, m)
+    watts = (partition_watts(space, resolve_power(power), m)
+             if objective.needs_power else None)
+    all_rows = np.ones(P, dtype=bool)
+    results: List[Optional[PartitionChoice]] = []
+    for b in range(B):
+        if require_feasible:
+            if not feas2[b].any():
+                results.append(None)
+                continue
+            pool = feas2[b]
+        else:
+            pool = all_rows
+        idx = objective.select(objs2[b], watts, pool)
+        results.append(PartitionChoice(
+            tuple(sizes[c] for c in perms2[b, idx]),
+            float(objs2[b, idx]), bool(feas2[b, idx])))
+    return results
+
+
 def _optimize_single(space: PartitionSpace, sv: Dict[int, float],
                      require_feasible: bool) -> Optional[PartitionChoice]:
     """m == 1 fast path (a lone job on a GPU is the most common decision):
@@ -560,14 +685,23 @@ def _optimize_single(space: PartitionSpace, sv: Dict[int, float],
 
 
 def optimize_partition_bruteforce(space: PartitionSpace,
-                                  speeds: Sequence[Dict[int, float]]):
+                                  speeds: Sequence[Dict[int, float]],
+                                  objective=None, power=None):
     """Literal Algorithm 1: enumerate every ordered x (partition x assignment).
 
     Like the DP path, an all-zero speed vector still yields a (infeasible)
     choice with objective 0.0 rather than ``None`` — the two are test oracles
     for each other, so they must agree on all-OOM job mixes.
+
+    With a non-default ``objective`` this stays the independent reference:
+    per multiset the best-throughput assignment is found by enumeration, the
+    multiset's watts come straight from ``PowerModel.partition_w`` (not the
+    optimizer's cached row vectors), and the objective ranks the multisets.
     """
     m = len(speeds)
+    obj_fn = _resolve_objective(objective)
+    if obj_fn is not None:
+        return _bruteforce_objective(space, speeds, obj_fn, power)
     best_obj, best_config = -1.0, None
     for part in space.partitions_of_len(m):
         for perm in set(itertools.permutations(part)):
@@ -578,4 +712,30 @@ def optimize_partition_bruteforce(space: PartitionSpace,
         return None
     return PartitionChoice(tuple(best_config), best_obj,
                            all(speeds[j].get(best_config[j], 0.0) > 0.0
+                               for j in range(m)))
+
+
+def _bruteforce_objective(space: PartitionSpace, speeds, objective, power):
+    from repro.core.sim.objectives import resolve_power
+    m = len(speeds)
+    rows = space.partitions_of_len(m)
+    if not rows:
+        return None
+    pw = resolve_power(power)
+    objs, watts, perms = [], [], []
+    for part in rows:
+        best_t, best_perm = -1.0, None
+        for perm in set(itertools.permutations(part)):
+            t = sum(speeds[j].get(perm[j], 0.0) for j in range(m))
+            if t > best_t:
+                best_t, best_perm = t, perm
+        objs.append(best_t)
+        watts.append(pw.partition_w(space, part))
+        perms.append(best_perm)
+    objs = np.asarray(objs)
+    watts = np.asarray(watts) if objective.needs_power else None
+    idx = objective.select(objs, watts, np.ones(len(rows), dtype=bool))
+    perm = perms[idx]
+    return PartitionChoice(tuple(perm), float(objs[idx]),
+                           all(speeds[j].get(perm[j], 0.0) > 0.0
                                for j in range(m)))

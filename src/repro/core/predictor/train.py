@@ -4,9 +4,21 @@ The paper reports validation MAE ~= 0.017 over the (0,1] speedup range and
 trains in seconds per epoch; this module reproduces that loop, fits the
 2g/1g linear-regression heads on the same training split, and persists
 everything to an .npz artifact used by the simulator and the cluster driver.
+
+Heterogeneous fleets need one artifact per accelerator kind — each kind's
+(MPS matrix -> MIG matrix) mapping reflects its own roofline (h100's 2x
+memory doubles the OOM-free region; its bandwidth ratio shifts every
+memory-bound speed) — so :func:`train_and_save_kind` trains against the
+kind's own partition space and hardware and writes
+``artifacts/predictor_<kind>.npz``, exactly the path
+``repro.core.fleet.default_artifact_path`` routes through
+``GPUSpec.estimator``::
+
+    PYTHONPATH=src python -m repro.core.predictor.train --kinds a100,h100
 """
 from __future__ import annotations
 
+import argparse
 import os
 import time
 
@@ -18,8 +30,9 @@ from repro.core.predictor import dataset as ds
 from repro.core.predictor import linreg, unet
 from repro.train.optim import adam_init, adam_update
 
-DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "..", "..",
-                            "artifacts", "predictor.npz")
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "..",
+                            "artifacts")
+DEFAULT_PATH = os.path.join(ARTIFACT_DIR, "predictor.npz")
 
 
 def mae(pred, target):
@@ -126,5 +139,49 @@ def train_and_save(path=DEFAULT_PATH, *, pm=None, epochs=80,
     return params, heads, history
 
 
+def kind_perfmodel(kind: str):
+    """The ground-truth performance model a kind's predictor trains
+    against (its own slice menu + roofline hardware)."""
+    from repro.core.partitions import a100_mig_space, h100_mig_space
+    from repro.core.perfmodel import A100, H100, PerfModel
+    try:
+        space_fn, hw = {"a100": (a100_mig_space, A100),
+                        "h100": (h100_mig_space, H100)}[kind]
+    except KeyError:
+        raise ValueError(
+            f"no trainable predictor for kind {kind!r} (the U-Net's output "
+            f"rows are the 7g/4g/3g MIG slices; train a100 or h100)") \
+            from None
+    return PerfModel(space_fn(), hw)
+
+
+def train_and_save_kind(kind: str, path=None, *, epochs=80,
+                        mixes_per_count=400, seed=0, verbose=True):
+    """Train and persist ``artifacts/predictor_<kind>.npz`` — the per-kind
+    artifact ``repro.core.fleet`` auto-routes into ``GPUSpec.estimator``."""
+    path = path or os.path.join(ARTIFACT_DIR, f"predictor_{kind}.npz")
+    if verbose:
+        print(f"[predictor] training {kind} -> {os.path.abspath(path)}")
+    return train_and_save(path, pm=kind_perfmodel(kind), epochs=epochs,
+                          mixes_per_count=mixes_per_count, seed=seed,
+                          verbose=verbose)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="train per-kind MPS->MIG predictor artifacts")
+    ap.add_argument("--kinds", default="a100,h100",
+                    help="comma-separated accelerator kinds to train")
+    ap.add_argument("--epochs", type=int, default=80)
+    ap.add_argument("--mixes-per-count", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    for kind in [k.strip() for k in args.kinds.split(",") if k.strip()]:
+        train_and_save_kind(kind, epochs=args.epochs,
+                            mixes_per_count=args.mixes_per_count,
+                            seed=args.seed)
+    return 0
+
+
 if __name__ == "__main__":
-    train_and_save()
+    raise SystemExit(main())

@@ -20,6 +20,9 @@ Arrival processes (all seeded, all returning sorted times):
 * ``hetero_smoke`` — small heavy-tailed trace on a mixed a100+h100 fleet;
   the CI cell that exercises fleet-aware placement (see
   :mod:`repro.core.sim.placement`)
+* ``rack_outage``  — correlated rack-level failures: whole racks of GPUs go
+  down in one event (``SimConfig.rack_size`` / ``rack_mtbf_s``), the
+  failure-domain realism per-GPU Poisson faults cannot express
 
 Usage::
 
@@ -30,8 +33,8 @@ Usage::
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional
 
 import numpy as np
 
@@ -116,6 +119,10 @@ class Scenario:
     fleet: str = DEFAULT_FLEET           # default fleet spec string
     n_jobs: int = 60                     # default trace length
     placer: str = "least-loaded"         # default placement layer for sweeps
+    objective: str = "throughput"        # default Algorithm-1 objective
+    # extra SimConfig overrides bundled with the scenario (e.g. rack-fault
+    # knobs); the sweep's explicit flags still win over these
+    sim_kwargs: Mapping[str, float] = field(default_factory=dict)
 
     def make_jobs(self, seed: int, n_jobs: Optional[int] = None) -> List[Job]:
         return self.make(seed, n_jobs or self.n_jobs)
@@ -202,3 +209,13 @@ register_scenario(Scenario(
                                    max_duration_s=2400.0, qos_frac=0.3,
                                    multi_instance_frac=0.15,
                                    mem_constraint_frac=0.3)))
+
+register_scenario(Scenario(
+    "rack_outage", "correlated rack-level failures: racks of 2 GPUs fail "
+                   "together (power/network domain), on top of the mixed "
+                   "a100+h100 fleet",
+    _with_arrivals(poisson_arrivals, 40.0, seed_salt=606,
+                   max_duration_s=1800.0),
+    fleet="a100:2+h100:2", n_jobs=14,
+    sim_kwargs={"rack_size": 2, "rack_mtbf_s": 2400.0, "repair_s": 240.0,
+                "ckpt_interval_s": 300.0}))

@@ -4,11 +4,15 @@
 * ``gpu``      — per-GPU phase state machine ``IDLE→CKPT→MPS_PROF→MIG_RUN``
 * ``policies`` — pluggable scheduling policies (``Policy`` ABC + registry)
 * ``placement`` — pluggable placement layer (``Placer`` ABC + registry)
+* ``objectives`` — pluggable Algorithm-1 goals (``Objective`` ABC + registry:
+  ``throughput`` / ``energy`` / ``edp``)
 
 ``from repro.core.simulator import ...`` remains a supported alias.
 """
 from repro.core.sim.engine import ClusterSim, SimConfig, simulate
 from repro.core.sim.gpu import CKPT, GPU, IDLE, MIG_RUN, MPS_PROF, RJob
+from repro.core.sim.objectives import (Objective, available_objectives,
+                                       get_objective, register_objective)
 from repro.core.sim.placement import (Placer, available_placers, get_placer,
                                       register_placer)
 from repro.core.sim.policies import (Policy, available_policies, get_policy,
@@ -19,4 +23,6 @@ __all__ = [
     "GPU", "RJob", "IDLE", "CKPT", "MPS_PROF", "MIG_RUN",
     "Policy", "register_policy", "get_policy", "available_policies",
     "Placer", "register_placer", "get_placer", "available_placers",
+    "Objective", "register_objective", "get_objective",
+    "available_objectives",
 ]

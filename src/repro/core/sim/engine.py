@@ -18,13 +18,22 @@ arguments build a homogeneous fleet and stay bit-identical to the
 pre-fleet simulator; ``sim.space`` / ``sim.pm`` / ``sim.estimator`` remain
 as the first spec's objects for homogeneous callers.
 
+The *goal* of every partition decision is the third pluggable layer: the
+:class:`~repro.core.sim.objectives.Objective` named by
+``SimConfig.objective`` (``throughput`` — the paper's, bit-identical
+default — / ``energy`` / ``edp``).  Each GPU integrates its wall power
+(per-kind :class:`~repro.core.fleet.PowerModel`) into ``GPU.energy_j``;
+the run's total lands in ``TraceMetrics.energy_j``.
+
 Fault tolerance: optional Poisson GPU failures re-queue affected jobs with
 progress rolled back to the last checkpoint *of the current placement*
 (periodic ones every ``ckpt_interval_s`` of progressing time, plus any CKPT
 phase the GPU actually executed); the destroyed work is speed-weighted, not
 wall-clock.  The failed GPU is out for ``repair_s``.  The policy's normal
 arrival path handles re-admission — job-level fault tolerance is the
-scheduler itself.
+scheduler itself.  ``rack_size`` / ``rack_mtbf_s`` add *correlated*
+failures on top: whole racks of consecutive GPU ids go down in one event
+(the power/network failure domain per-GPU Poisson faults cannot express).
 """
 from __future__ import annotations
 
@@ -51,6 +60,7 @@ class SimConfig:
     n_gpus: int = 8
     policy: str = "miso"             # any name in policies.available_policies()
     placer: str = "least-loaded"     # any name in placement.available_placers()
+    objective: str = "throughput"    # any name in objectives.available_objectives()
     static_partition: Tuple[int, ...] = (4, 2, 1)   # optsta only
     mps_level_time_s: float = 10.0   # per MPS level (paper: 10s x 3 levels)
     mig_reconfig_s: float = 4.0      # GPU reset (paper §3)
@@ -64,6 +74,10 @@ class SimConfig:
     gpu_mtbf_s: float = 0.0          # 0 = no failures
     repair_s: float = 600.0
     ckpt_interval_s: float = 600.0   # periodic checkpoint for fault rollback
+    # correlated (rack-level) failures: racks of `rack_size` consecutive
+    # GPU ids fail together at Poisson rate 1/rack_mtbf_s (both must be > 0)
+    rack_size: int = 0
+    rack_mtbf_s: float = 0.0
     seed: int = 0
     # profiling measurement noise (paper Fig 14): sigma of the relative error
     # on each MPS-matrix entry; drawn from the simulator RNG per window
@@ -115,6 +129,11 @@ class ClusterSim:
             for g in self.gpus:
                 self._push(float(self.rng.exponential(cfg.gpu_mtbf_s)),
                            "failure", g.gid)
+        if cfg.rack_mtbf_s > 0 and cfg.rack_size > 0:
+            n_racks = (len(self.gpus) + cfg.rack_size - 1) // cfg.rack_size
+            for r in range(n_racks):
+                self._push(float(self.rng.exponential(cfg.rack_mtbf_s)),
+                           "rack_failure", r)
 
     # ---------------------------------------------------------- event glue
 
@@ -162,10 +181,20 @@ class ClusterSim:
                 self._on_completion(g, rj.job)
             elif kind == "failure":
                 self._on_failure(self.gpus[payload])
+            elif kind == "rack_failure":
+                self._on_rack_failure(payload)
             elif kind == "repair":
                 self.policy.admit()
+        # settle every GPU's accounting (and energy integral) to the final
+        # clock; completed-job metrics are already fixed, so this only
+        # extends idle/energy windows
+        for g in self.gpus:
+            g.advance(self.t)
         return compute_metrics([self.jobs[i] for i in self.completed],
-                               self.cfg.n_gpus)
+                               self.cfg.n_gpus,
+                               energy_j=float(sum(g.energy_j
+                                                  for g in self.gpus)),
+                               energy_span_s=self.t)
 
     # ----------------------------------------------- placement constraints
     # Shared feasibility checks usable by any policy's pick_gpu; all are
@@ -286,6 +315,27 @@ class ClusterSim:
     # ---------------------------------------------------------- failures
 
     def _on_failure(self, g: GPU):
+        self._fail_gpu(g)
+        if self.cfg.gpu_mtbf_s > 0:
+            self._push(self.t + float(self.rng.exponential(self.cfg.gpu_mtbf_s)),
+                       "failure", g.gid)
+
+    def _on_rack_failure(self, rack: int):
+        """Correlated failure: every in-service GPU of ``rack`` (a block of
+        ``cfg.rack_size`` consecutive ids) goes down at once — the
+        rack-level power/network event per-GPU Poisson faults cannot model.
+        Already-down members stay on their existing repair clock."""
+        lo = rack * self.cfg.rack_size
+        for g in self.gpus[lo:lo + self.cfg.rack_size]:
+            if self.t >= g.down_until:
+                self._fail_gpu(g)
+        self._push(self.t + float(self.rng.exponential(self.cfg.rack_mtbf_s)),
+                   "rack_failure", rack)
+
+    def _fail_gpu(self, g: GPU):
+        """Take ``g`` down now: roll resident jobs back to their last
+        placement checkpoint, requeue them at the head, schedule the
+        repair.  Shared by independent and rack-correlated failures."""
         g.advance(self.t)
         if g.jobs:
             requeued = []
@@ -309,9 +359,6 @@ class ClusterSim:
         g.down_until = self.t + self.cfg.repair_s
         g.stamp += 1
         self._push(g.down_until, "repair", g.gid, g.stamp)
-        if self.cfg.gpu_mtbf_s > 0:
-            self._push(self.t + float(self.rng.exponential(self.cfg.gpu_mtbf_s)),
-                       "failure", g.gid)
 
     # ---------------------------------------------------------- common
 

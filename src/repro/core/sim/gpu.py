@@ -19,6 +19,13 @@ Heterogeneous fleets: every GPU carries its own :class:`~repro.core.fleet
 .GPUSpec` — partition space, performance model, estimator and speed scale —
 so a mixed a100/h100/tpu cluster needs no global ``sim.space``/``sim.pm``.
 
+Energy accounting: ``advance`` integrates each GPU's wall power over the
+same windows it charges time to (``GPU.energy_j``, joules): the per-kind
+:class:`~repro.core.fleet.PowerModel`'s idle floor always draws (except
+while the GPU is down for repair — powered off), active MIG slices add
+their sublinear per-slice watts, and an MPS window powers the whole chip.
+The engine sums the per-GPU integrals into ``TraceMetrics.energy_j``.
+
 Fault-rollback bookkeeping: periodic checkpoints (every
 ``cfg.ckpt_interval_s`` of *progressing* wall time, taken asynchronously at
 zero cost) bound how much work a GPU failure destroys.  ``advance`` tracks
@@ -60,6 +67,14 @@ class GPU:
         self.pm = spec.pm
         self.estimator = spec.estimator
         self.speed_scale = spec.speed_scale
+        self.power = spec.power
+        # per-slice active watts, precomputed off the hot path
+        self._slice_w = {s: spec.power.active_w(spec.space.compute_frac(s))
+                         for s in spec.space.sizes}
+        self._idle_w = spec.power.idle_w
+        self._mps_w = spec.power.idle_w + (spec.power.max_active_w
+                                           * spec.power.mps_active_frac)
+        self.energy_j = 0.0
         self.phase = IDLE
         self.phase_end = 0.0
         self.jobs: Dict[int, RJob] = {}
@@ -77,6 +92,24 @@ class GPU:
         if dt <= 0:
             self.last_update = t
             return
+        # ---- energy: integrate wall power over [last_update, t].  A GPU
+        # under repair is powered off; the live part of the window starts
+        # at down_until (down_until only ever moves forward, so an interval
+        # straddles at most one repair boundary).
+        live = dt if self.last_update >= self.down_until \
+            else max(0.0, t - self.down_until)
+        if live > 0.0:
+            if self.phase == MIG_RUN:
+                w = self._idle_w
+                slice_w = self._slice_w
+                for rj in self.jobs.values():
+                    if rj.slice_size:
+                        w += slice_w[rj.slice_size]
+            elif self.phase == MPS_PROF and self.jobs:
+                w = self._mps_w
+            else:
+                w = self._idle_w
+            self.energy_j += w * live
         interval = self.sim.cfg.ckpt_interval_s
         for rj in self.jobs.values():
             if self.phase in (MIG_RUN, MPS_PROF):

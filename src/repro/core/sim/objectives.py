@@ -1,0 +1,245 @@
+"""Pluggable optimization objectives for Algorithm 1.
+
+MISO's Algorithm 1 historically maximized one thing: predicted aggregate
+throughput ``sum_i f_i(x_i)``.  This module makes the *goal* of the
+partition search a swappable layer mirroring the policy and placer
+registries: an :class:`Objective` scores candidate partitions from the
+batched DP's per-row throughput plus the per-row electrical power
+(:class:`~repro.core.fleet.PowerModel`), and :mod:`repro.core.optimizer`
+selects the winning row with it.
+
+The decomposition that keeps the vectorized bitmask-DP intact: per-slice
+active power depends only on the slice *kind*, never on which job runs in
+it, so a partition row's wall watts are constant across job→slice
+assignments.  The DP therefore still solves the assignment by maximizing
+additive speeds (the best-throughput assignment is also the best
+energy/EDP assignment within a row), and the objective only re-ranks the
+*rows* — ``select`` picks the first strict maximum of ``score_rows`` over
+the candidate pool, the same tie-break rule as the historical scan.
+
+Built-ins:
+
+* ``throughput`` — the paper's objective and the default.  The optimizer
+  recognizes it and takes the historical code path unchanged, so it is
+  bit-identical to the pre-objective DP (proven by the golden traces).
+* ``energy``     — minimize joules per unit of work (maximize work per
+  joule, ``T / P``) subject to a QoS floor: only rows achieving at least
+  ``qos_floor`` of the best attainable throughput are considered, so the
+  scheduler never starves jobs to shave watts — and never stretches the
+  makespan into idle-floor losses that dwarf the per-slice savings.
+* ``edp``        — energy-delay product (maximize ``T^2 / P``) within a
+  slightly looser floor: the classic balanced efficiency metric.
+
+Feasibility (memory + per-job QoS slice floors, encoded as zero speeds by
+the estimators) is orthogonal: the optimizer restricts the pool to rows
+whose winning assignment gives every job a non-zero speed exactly as the
+throughput path does, so no objective can pick a QoS-violating partition
+when a feasible one exists.
+
+Registering a new goal is ~10 lines::
+
+    @register_objective
+    class CarbonObjective(Objective):
+        name = "carbon"
+
+        def score_rows(self, objs, watts):
+            return objs / (watts * CARBON_INTENSITY)
+"""
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+from typing import Dict, List, Optional, Type, Union
+
+import numpy as np
+
+DEFAULT_OBJECTIVE = "throughput"
+
+_REGISTRY: Dict[str, Type["Objective"]] = {}
+
+
+def register_objective(cls: Type["Objective"]) -> Type["Objective"]:
+    """Class decorator: make ``cls`` reachable as ``SimConfig.objective``."""
+    if not getattr(cls, "name", None):
+        raise ValueError(f"{cls.__name__} must define a non-empty `name`")
+    if cls.name in _REGISTRY:
+        raise ValueError(f"duplicate objective name {cls.name!r} "
+                         f"({_REGISTRY[cls.name].__name__} vs {cls.__name__})")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def get_objective(name: str) -> Type["Objective"]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown objective {name!r}; "
+            f"available: {', '.join(available_objectives())}") from None
+
+
+def available_objectives() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def resolve_objective(objective: Union[str, "Objective", None]
+                      ) -> Optional["Objective"]:
+    """Normalize an objective argument to an instance — or ``None`` for the
+    default throughput goal, which callers treat as "take the historical
+    bit-identical path"."""
+    if objective is None:
+        return None
+    if isinstance(objective, str):
+        objective = get_objective(objective)()
+    if objective.name == DEFAULT_OBJECTIVE:
+        return None
+    return objective
+
+
+def resolve_power(power):
+    """The :class:`~repro.core.fleet.PowerModel` to score with; ``None``
+    falls back to the reference a100 model (import deferred — the fleet
+    module pulls in the estimator/predictor stack)."""
+    if power is not None:
+        return power
+    from repro.core.fleet import DEFAULT_POWER
+    return DEFAULT_POWER
+
+
+# per-(space, power, length) row-watts vectors; spaces and power models are
+# tiny interned value objects, so this stays small and lives process-wide
+_WATTS_CACHE: Dict[tuple, np.ndarray] = {}
+_WATTS_MAX = 4096
+
+
+def partition_watts(space, power, m: int) -> np.ndarray:
+    """(P,) wall watts of every valid length-``m`` partition of ``space``
+    under ``power`` (idle floor + per-slice active draw), rows in
+    ``space.partitions_of_len(m)`` order — the dense companion of
+    ``space.part_sizes(m)`` for objective scoring."""
+    key = (space.uid, power, m)
+    watts = _WATTS_CACHE.get(key)
+    if watts is None:
+        cols = space.part_cols(m)
+        per_col = np.asarray([power.active_w(space.compute_frac(s))
+                              for s in space.sizes], dtype=np.float64)
+        if cols.shape[0] == 0:
+            watts = np.empty((0,), dtype=np.float64)
+        else:
+            watts = power.idle_w + per_col[cols].sum(axis=1)
+        if len(_WATTS_CACHE) >= _WATTS_MAX:
+            _WATTS_CACHE.pop(next(iter(_WATTS_CACHE)))
+        _WATTS_CACHE[key] = watts
+    return watts
+
+
+def first_strict_max(scores: np.ndarray, pool: np.ndarray) -> int:
+    """Index of the first maximal score within ``pool`` — ``np.argmax``'s
+    first-occurrence rule, which replicates the historical strictly-greater
+    replacement scan over rows in partition order."""
+    return int(np.argmax(np.where(pool, scores, -np.inf)))
+
+
+class Objective(ABC):
+    """Scores candidate partition rows (one instance per simulation).
+
+    ``objs`` is the (P,) best-assignment predicted throughput per row from
+    the batched DP; ``watts`` the (P,) row wall power (``None`` when
+    ``needs_power`` is False); ``pool`` a (P,) bool mask of admissible rows
+    (feasibility under ``require_feasible``).  ``select`` must return an
+    index into the pool; the default takes the first strict maximum of
+    ``score_rows``, matching the historical tie-break.
+    """
+
+    name: str = ""
+    needs_power: bool = True
+
+    @abstractmethod
+    def score_rows(self, objs: np.ndarray,
+                   watts: Optional[np.ndarray]) -> np.ndarray:
+        """Per-row goodness (higher is better)."""
+
+    def eligible(self, objs: np.ndarray, watts: Optional[np.ndarray],
+                 pool: np.ndarray) -> np.ndarray:
+        """Restrict ``pool`` to rows this objective may pick at all (e.g.
+        a QoS floor).  Must never return an empty mask for a non-empty
+        pool.  Consumers that rank rows themselves (miso-frag's tolerance
+        scan) must restrict to this mask, or they silently void the
+        objective's guarantees."""
+        return pool
+
+    def select(self, objs: np.ndarray, watts: Optional[np.ndarray],
+               pool: np.ndarray) -> int:
+        return first_strict_max(self.score_rows(objs, watts),
+                                self.eligible(objs, watts, pool))
+
+    def memo_key(self) -> tuple:
+        """Hashable identity for the optimizer's memo (instances are
+        parameterless; subclasses with knobs must extend this)."""
+        return (self.name,)
+
+
+@register_objective
+class ThroughputObjective(Objective):
+    """The paper's Eq. 2–4 goal: maximize predicted aggregate throughput.
+    The optimizer special-cases this name onto the historical code path, so
+    it never actually scores through here during simulation — the methods
+    exist for generic consumers (miso-frag's tolerance scan, tests)."""
+
+    name = "throughput"
+    needs_power = False
+
+    def score_rows(self, objs, watts):
+        return objs
+
+
+@register_objective
+class EnergyObjective(Objective):
+    """Minimize joules per unit of work, subject to a QoS floor.
+
+    A row's energy per work-second is ``watts / throughput``; maximizing
+    ``throughput / watts`` minimizes it.  Only rows achieving at least
+    ``qos_floor`` of the pool's best throughput are eligible; the row
+    attaining the best throughput is always eligible, so the floor can
+    never empty the pool.
+
+    The floor is deliberately tight (0.95): a per-GPU decision only sees
+    its own instantaneous watts, but a throughput sacrifice is paid
+    *cluster-wide* — the queue drains slower, the makespan stretches, and
+    every GPU's idle floor (plus MISO's full-power profiling windows)
+    burns for the extra time.  Empirically on the heterogeneous sweep
+    cell, floors of 0.75–0.9 *increase* total joules through exactly that
+    idle-stretching; 0.95 harvests only the near-free watt savings (a
+    small job running at ~full speed on a cheap slice) and reduces total
+    joules at ~unchanged JCT.
+    """
+
+    name = "energy"
+    qos_floor = 0.95          # min fraction of attainable throughput
+
+    def score_rows(self, objs, watts):
+        return objs / np.maximum(watts, 1e-9)
+
+    def eligible(self, objs, watts, pool):
+        best_t = objs[pool].max()
+        return pool & (objs >= self.qos_floor * best_t - 1e-12)
+
+    def memo_key(self):
+        return (self.name, self.qos_floor)
+
+
+@register_objective
+class EdpObjective(EnergyObjective):
+    """Energy-delay product: maximize ``throughput^2 / watts`` (equivalently
+    minimize ``watts / T^2 = (energy per work) x (delay per work)``) within
+    the same QoS floor as ``energy``.  The quadratic throughput term
+    self-limits *within* the eligible pool, but a per-decision T^2 still
+    underweights the cluster-wide queueing externality of slowing down
+    (see :class:`EnergyObjective` — a looser 0.9 floor measurably
+    *increased* both JCT and joules on the heterogeneous sweep cell), so
+    the tight floor stays; within it, edp leans toward faster rows than
+    energy does."""
+
+    name = "edp"
+
+    def score_rows(self, objs, watts):
+        return objs * objs / np.maximum(watts, 1e-9)

@@ -22,6 +22,13 @@ New policies subclass :class:`Policy`, set ``name``, and decorate with
 :func:`register_policy`; they are then reachable from ``SimConfig.policy``,
 ``repro.launch.cluster --policy`` and the benchmark harness with no engine
 changes.  See ``miso_frag.py`` / ``srpt.py`` for ~30-line examples.
+
+The *goal* of the partition search is a third pluggable layer: the
+:class:`~repro.core.sim.objectives.Objective` named by
+``SimConfig.objective`` (default ``throughput``, the paper's Eq. 2–4 and
+bit-identical to the historical optimizer; ``energy`` / ``edp`` trade
+throughput for watts).  ``choose_partition`` threads it — plus the target
+GPU's per-kind power model — into every Algorithm-1 call.
 """
 from __future__ import annotations
 
@@ -32,6 +39,7 @@ from repro.core.jobs import Job, JobProfile
 from repro.core.optimizer import optimize_partition, optimize_partition_batch
 from repro.core.perfmodel import MPS_LEVELS
 from repro.core.sim.gpu import CKPT, GPU, IDLE, MIG_RUN
+from repro.core.sim.objectives import get_objective
 from repro.core.sim.placement import get_placer
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
@@ -72,6 +80,7 @@ class Policy(ABC):
     def __init__(self, sim: "ClusterSim"):
         self.sim = sim
         self.placer = get_placer(sim.cfg.placer)(sim)
+        self.objective = get_objective(sim.cfg.objective)()
 
     # ------------------------------------------------------ queue discipline
 
@@ -151,15 +160,19 @@ class Policy(ABC):
                 for j in jids]
 
     def choose_partition(self, speeds: Sequence[Dict[int, float]],
-                         space=None):
-        """Algorithm 1: feasible-first, fall back to best-effort.  ``space``
-        is the target GPU's partition space (defaults to the homogeneous
-        one)."""
+                         space=None, power=None):
+        """Algorithm 1 under the configured objective: feasible-first, fall
+        back to best-effort.  ``space`` is the target GPU's partition space
+        (defaults to the homogeneous one); ``power`` its per-kind
+        :class:`~repro.core.fleet.PowerModel`, consumed by energy-aware
+        objectives (``None`` = reference a100)."""
         space = space if space is not None else self.sim.space
-        return optimize_partition(space, speeds, require_feasible=True) \
-            or optimize_partition(space, speeds)
+        return optimize_partition(space, speeds, require_feasible=True,
+                                  objective=self.objective, power=power) \
+            or optimize_partition(space, speeds,
+                                  objective=self.objective, power=power)
 
-    def choose_partition_batch(self, speeds_list, space=None):
+    def choose_partition_batch(self, speeds_list, space=None, power=None):
         """Algorithm 1 for several decisions against one space at once,
         via the stacked DP (``optimize_partition_batch``) — element i equals
         ``choose_partition(speeds_list[i], space)`` exactly.  Policies that
@@ -167,11 +180,14 @@ class Policy(ABC):
         automatically."""
         space = space if space is not None else self.sim.space
         if type(self).choose_partition is not Policy.choose_partition:
-            return [self.choose_partition(sp, space=space)
+            return [self.choose_partition(sp, space=space, power=power)
                     for sp in speeds_list]
         first = optimize_partition_batch(space, speeds_list,
-                                         require_feasible=True)
-        return [c if c is not None else optimize_partition(space, sp)
+                                         require_feasible=True,
+                                         objective=self.objective, power=power)
+        return [c if c is not None else
+                optimize_partition(space, sp,
+                                   objective=self.objective, power=power)
                 for c, sp in zip(first, speeds_list)]
 
     def repartition(self, g: GPU, overhead: bool = False):
@@ -184,26 +200,28 @@ class Policy(ABC):
             g.partition = ()
             return
         choice = self.choose_partition(self.partition_speeds(g, jids),
-                                       space=g.space)
+                                       space=g.space, power=g.power)
         self._apply_choice(g, jids, choice, overhead)
 
     def repartition_many(self, gs: Sequence[GPU], overhead: bool = False):
         """Repartition several GPUs in one batched Algorithm-1 pass (grouped
-        by partition space).  Equivalent to calling :meth:`repartition` per
+        by partition space + power model — one shared spec per kind, so the
+        group key is stable).  Equivalent to calling :meth:`repartition` per
         GPU in order — used by the same-tick phase-end batch."""
-        per_space: Dict[int, List] = {}
+        per_space: Dict[tuple, List] = {}
         for g in gs:
             jids = list(g.jobs)
             if not jids:
                 g.phase = IDLE
                 g.partition = ()
                 continue
-            per_space.setdefault(id(g.space), []).append((g, jids))
+            per_space.setdefault((id(g.space), id(g.power)),
+                                 []).append((g, jids))
         for items in per_space.values():
-            space = items[0][0].space
+            g0 = items[0][0]
             choices = self.choose_partition_batch(
                 [self.partition_speeds(g, jids) for g, jids in items],
-                space=space)
+                space=g0.space, power=g0.power)
             for (g, jids), choice in zip(items, choices):
                 self._apply_choice(g, jids, choice, overhead)
 

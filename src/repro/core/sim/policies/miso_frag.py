@@ -23,6 +23,7 @@ from typing import Dict, Sequence
 import numpy as np
 
 from repro.core.optimizer import PartitionChoice, solve_all_partitions
+from repro.core.sim.objectives import partition_watts, resolve_power
 from repro.core.sim.policies.base import register_policy
 from repro.core.sim.policies.miso import MisoPolicy
 
@@ -31,24 +32,35 @@ from repro.core.sim.policies.miso import MisoPolicy
 class MisoFragPolicy(MisoPolicy):
     name = "miso-frag"
 
-    frag_tolerance = 0.05      # accept up to 5% predicted-STP loss for space
+    frag_tolerance = 0.05      # accept up to 5% predicted-score loss for space
 
     def choose_partition(self, speeds: Sequence[Dict[int, float]],
-                         space=None):
+                         space=None, power=None):
         space = space if space is not None else self.sim.space
         m = len(speeds)
         objs, perms, feas = solve_all_partitions(space, speeds)
         spare = space.part_spare(m)
         used = space.part_compute(m)
-        pool = np.nonzero(feas)[0] if feas.any() else np.arange(objs.shape[0])
-        best_obj = float(objs[pool].max())
-        near = pool[objs[pool] >= (1.0 - self.frag_tolerance) * best_obj]
-        # first strict max of (spare, objective, -compute slots used) — the
+        # the tolerance band is judged on the configured objective's row
+        # scores (throughput -> the raw objs array, so the default is
+        # bit-identical to the historical scan), restricted to the
+        # objective's eligible rows so its guarantees (e.g. the energy
+        # QoS floor) survive the fragmentation scan
+        if self.objective.needs_power:
+            watts = partition_watts(space, resolve_power(power), m)
+        else:
+            watts = None
+        scores = self.objective.score_rows(objs, watts)
+        mask = feas if feas.any() else np.ones(objs.shape[0], dtype=bool)
+        pool = np.nonzero(self.objective.eligible(objs, watts, mask))[0]
+        best = float(scores[pool].max())
+        near = pool[scores[pool] >= (1.0 - self.frag_tolerance) * best]
+        # first strict max of (spare, score, -compute slots used) — the
         # same tie-breaking as a Python max() over rows in partition order
         win = near[0]
         for i in near[1:]:
-            if (spare[i], objs[i], -used[i]) > (spare[win], objs[win],
-                                                -used[win]):
+            if (spare[i], scores[i], -used[i]) > (spare[win], scores[win],
+                                                  -used[win]):
                 win = i
         return PartitionChoice(tuple(int(s) for s in perms[win]),
                                float(objs[win]), bool(feas[win]))

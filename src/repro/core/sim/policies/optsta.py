@@ -78,10 +78,21 @@ class OptStaPolicy(Policy):
                                if g.space.slice_mem_gb(s) >= prof.mem_gb
                                and s >= job.qos_min_slice else 0.0)
                            for s in sizes})
-        # best assignment of m jobs to the fixed multiset's best m slices
+        # best assignment of m jobs to the fixed multiset's best m slices;
+        # the configured objective ranks the size-subsets (throughput's
+        # first-strict-max over subset order is the historical np.argmax),
+        # with each subset's watts from the GPU's own power model
         part = tuple(sorted(sizes, reverse=True))
         subs = list(set(itertools.combinations(part, len(jids))))
         objs, perms, _ = assign_multisets(g.space, subs, speeds)
-        best_perm = perms[int(np.argmax(objs))]
+        objs = np.asarray(objs)
+        if self.objective.needs_power:
+            watts = np.asarray([g.power.partition_w(g.space, sub)
+                                for sub in subs])
+        else:
+            watts = None
+        idx = self.objective.select(objs, watts,
+                                    np.ones(len(subs), dtype=bool))
+        best_perm = perms[idx]
         for jid, size in zip(jids, best_perm):
             g.jobs[jid].slice_size = int(size)

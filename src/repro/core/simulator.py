@@ -8,14 +8,17 @@ MPS-only / MISO / Oracle / MISO-frag / SRPT) under
     from repro.core.simulator import SimConfig, ClusterSim, simulate
 """
 from repro.core.sim import (CKPT, IDLE, MIG_RUN, MPS_PROF, ClusterSim, GPU,
-                            Placer, Policy, RJob, SimConfig,
-                            available_placers, available_policies, get_placer,
-                            get_policy, register_placer, register_policy,
-                            simulate)
+                            Objective, Placer, Policy, RJob, SimConfig,
+                            available_objectives, available_placers,
+                            available_policies, get_objective, get_placer,
+                            get_policy, register_objective, register_placer,
+                            register_policy, simulate)
 
 __all__ = [
     "ClusterSim", "SimConfig", "simulate",
     "GPU", "RJob", "IDLE", "CKPT", "MPS_PROF", "MIG_RUN",
     "Policy", "register_policy", "get_policy", "available_policies",
     "Placer", "register_placer", "get_placer", "available_placers",
+    "Objective", "register_objective", "get_objective",
+    "available_objectives",
 ]

@@ -27,6 +27,12 @@ with ``--show-meshes``).
 (keep large contiguous slices free), ``best-fit-slice`` (tightest feasible
 partition wins).
 
+``--objective`` accepts any registered Algorithm-1 goal
+(``repro/core/sim/objectives.py``): ``throughput`` (the paper's Eq. 2–4,
+bit-identical default), ``energy`` (min joules per unit work subject to a
+QoS floor), ``edp`` (energy-delay product).  Every run reports the
+fleet-integrated energy alongside JCT/STP.
+
   PYTHONPATH=src python -m repro.launch.cluster --policy miso --jobs 60
   PYTHONPATH=src python -m repro.launch.cluster --policy srpt --lam 20
   PYTHONPATH=src python -m repro.launch.cluster --space tpu --show-meshes
@@ -52,12 +58,16 @@ if "--show-meshes" in sys.argv:
 from repro.core.estimators import NoisyEstimator, OracleEstimator, UNetEstimator
 from repro.core.partitions import a100_mig_space, tpu_pod_space
 from repro.core.perfmodel import A100, TPU_V5E_POD, PerfModel
-from repro.core.simulator import (SimConfig, available_placers,
-                                  available_policies, simulate)
+from repro.core.simulator import (SimConfig, available_objectives,
+                                  available_placers, available_policies,
+                                  simulate)
 from repro.core.traces import generate_trace
 
-ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                        "artifacts", "predictor.npz")
+def _a100_artifact():
+    """The committed a100 predictor artifact (per-kind name, with the
+    legacy un-suffixed predictor.npz accepted), or None."""
+    from repro.core.fleet import default_artifact_path
+    return default_artifact_path("a100")
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -71,6 +81,11 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=available_placers(),
                     help="placement layer: which feasible GPU a queued job "
                          "lands on (least-loaded = paper default)")
+    ap.add_argument("--objective", default="throughput",
+                    choices=available_objectives(),
+                    help="Algorithm-1 goal: what the partition search "
+                         "optimizes (throughput = paper default; energy/edp "
+                         "trade JCT for joules)")
     ap.add_argument("--estimator", default="auto",
                     choices=["auto", "unet", "oracle", "noisy"])
     ap.add_argument("--sigma", type=float, default=0.05)
@@ -94,19 +109,22 @@ def main(argv=None):
         fleet = parse_fleet(args.fleet)
         jobs = generate_trace(args.jobs, lam_s=args.lam, seed=args.seed)
         cfg = SimConfig(n_gpus=len(fleet), policy=args.policy,
-                        placer=args.placer, gpu_mtbf_s=args.mtbf,
-                        seed=args.seed)
+                        placer=args.placer, objective=args.objective,
+                        gpu_mtbf_s=args.mtbf, seed=args.seed)
         metrics = simulate(jobs, cfg, fleet=fleet)
         b = metrics.breakdown
         by_kind = {s.kind: type(s.estimator).__name__ for s in fleet}
         ests = ", ".join(f"{k}={v}" for k, v in by_kind.items())
-        print(f"[cluster] {args.policy} (placer {args.placer}) on fleet "
-              f"{describe_fleet(fleet)}: {len(metrics.jcts)} jobs "
-              f"(per-kind estimators: {ests})")
+        print(f"[cluster] {args.policy} (placer {args.placer}, objective "
+              f"{args.objective}) on fleet {describe_fleet(fleet)}: "
+              f"{len(metrics.jcts)} jobs (per-kind estimators: {ests})")
         print(f"  avg JCT   : {metrics.avg_jct:,.0f} s "
               f"(p50 {metrics.p50_jct:,.0f}, p90 {metrics.p90_jct:,.0f})")
         print(f"  makespan  : {metrics.makespan:,.0f} s")
         print(f"  STP       : {metrics.stp:.3f} work-seconds/s/accelerator")
+        print(f"  energy    : {metrics.energy_j / 3.6e6:,.2f} kWh "
+              f"({metrics.avg_power_w:,.0f} W cluster avg, "
+              f"{metrics.energy_per_job_j / 3.6e6:,.3f} kWh/job)")
         print(f"  breakdown : queue {b['queue']:,.0f}s | mps {b['mps']:,.0f}s"
               f" | ckpt {b['ckpt']:,.0f}s | run {b['run']:,.0f}s")
         return 0
@@ -117,14 +135,24 @@ def main(argv=None):
         space, hw = a100_mig_space(), A100
     pm = PerfModel(space, hw)
 
+    artifact = _a100_artifact() if args.space == "a100" else None
     if args.estimator == "oracle" or args.policy == "oracle":
         est = OracleEstimator(pm)
     elif args.estimator == "noisy":
         est = NoisyEstimator(pm, sigma=args.sigma, seed=args.seed)
     elif args.estimator == "unet" or (args.estimator == "auto"
-                                      and os.path.exists(ARTIFACT)
-                                      and args.space == "a100"):
-        est = UNetEstimator.from_artifact(pm, ARTIFACT)
+                                      and artifact is not None):
+        if args.space != "a100":
+            raise SystemExit(
+                "[cluster] --estimator unet: no U-Net predictor exists for "
+                f"the {args.space} space (its slice menu does not match the "
+                "net's 7g/4g/3g output rows); use --estimator oracle")
+        if artifact is None:
+            raise SystemExit(
+                "[cluster] --estimator unet: no trained a100 artifact found; "
+                "train one with  PYTHONPATH=src python -m "
+                "repro.core.predictor.train --kinds a100")
+        est = UNetEstimator.from_artifact(pm, artifact)
         print("[cluster] estimator: trained U-Net + linreg heads")
     else:
         est = OracleEstimator(pm)
@@ -132,7 +160,8 @@ def main(argv=None):
 
     jobs = generate_trace(args.jobs, lam_s=args.lam, seed=args.seed)
     cfg = SimConfig(n_gpus=args.accelerators, policy=args.policy,
-                    placer=args.placer, gpu_mtbf_s=args.mtbf, seed=args.seed)
+                    placer=args.placer, objective=args.objective,
+                    gpu_mtbf_s=args.mtbf, seed=args.seed)
     metrics = simulate(jobs, cfg, space, pm, est)
 
     if args.show_meshes and args.space == "tpu":
@@ -152,6 +181,8 @@ def main(argv=None):
           f" p90 {metrics.p90_jct:,.0f})")
     print(f"  makespan  : {metrics.makespan:,.0f} s")
     print(f"  STP       : {metrics.stp:.3f} work-seconds/s/accelerator")
+    print(f"  energy    : {metrics.energy_j / 3.6e6:,.2f} kWh "
+          f"({metrics.avg_power_w:,.0f} W cluster avg)")
     print(f"  breakdown : queue {b['queue']:,.0f}s | mps {b['mps']:,.0f}s | "
           f"ckpt {b['ckpt']:,.0f}s | run {b['run']:,.0f}s")
     return 0

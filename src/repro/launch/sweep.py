@@ -1,4 +1,4 @@
-"""Parallel policy x placer x scenario x seed sweep engine.
+"""Parallel policy x placer x objective x scenario x seed sweep engine.
 
 Fans a grid of cluster simulations across worker *processes* (each cell is
 an independent event-driven run, so the sweep is embarrassingly parallel)
@@ -10,15 +10,22 @@ trajectory tracking (``BENCH_*.json``).
   PYTHONPATH=src python -m repro.launch.sweep --scenarios smoke --seeds 2
   PYTHONPATH=src python -m repro.launch.sweep --scenarios hetero_smoke \\
       --placers least-loaded,hetero-speed --seeds 2
+  PYTHONPATH=src python -m repro.launch.sweep --scenarios hetero_smoke \\
+      --policies miso --objectives throughput,energy,edp --seeds 2
   PYTHONPATH=src python -m repro.launch.sweep --fleet a100:8 --serial
 
 Scenarios come from :mod:`repro.core.scenarios` (each carries a default
-heterogeneous fleet spec and placer, override with ``--fleet`` /
-``--placers``); policies are any registered scheduling policy and placers
-any registered placement layer (:mod:`repro.core.sim.placement`).  The JSON
+heterogeneous fleet spec, placer, objective and optional SimConfig
+overrides; override with ``--fleet`` / ``--placers`` / ``--objectives``);
+policies are any registered scheduling policy, placers any registered
+placement layer (:mod:`repro.core.sim.placement`) and objectives any
+registered Algorithm-1 goal (:mod:`repro.core.sim.objectives`).  The JSON
 schema is versioned: bump ``SCHEMA_VERSION`` on any breaking change to the
-result shape (v2 added the placer axis: results carry a ``placer`` field and
-``summary`` is keyed scenario -> policy -> placer).
+result shape (v2 added the placer axis; v3 adds the objective axis and the
+energy columns: results carry an ``objective`` field plus
+``energy_j`` / ``avg_power_w`` / ``energy_per_job_j`` / ``jct_per_joule``
+metrics, and ``summary`` is keyed scenario -> policy -> placer ->
+objective).
 """
 from __future__ import annotations
 
@@ -30,7 +37,7 @@ import time
 from concurrent.futures import ProcessPoolExecutor
 from typing import Dict, List, Optional, Sequence
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 # grids whose total simulated jobs fall under this run in-process: worker
 # startup (fork + pool plumbing, ~hundreds of ms) dwarfs such cells
@@ -38,23 +45,30 @@ _AUTO_SERIAL_JOBS = 64
 
 
 def _warm_runtime() -> None:
-    """Pay one-time lazy costs in the parent before forking workers, so
-    every worker inherits them instead of re-paying: numpy's random-module
-    machinery (~40 ms on first Generator construction) and — when the MISO
-    predictor artifact exists, i.e. sweeps will run U-Net estimators — the
-    shared jitted U-Net apply for the standard shapes."""
+    """Pay one-time lazy costs before simulating: numpy's random-module
+    machinery (~40 ms on first Generator construction) and — when per-kind
+    predictor artifacts exist, i.e. sweeps will run U-Net estimators — the
+    shared jitted U-Net apply for the standard shapes.  Runs in the parent
+    for serial sweeps and as the pool initializer in every worker: since
+    the per-kind artifacts shipped, workers execute real XLA computations,
+    and forking a parent that already holds XLA's thread pools deadlocks —
+    which is why the pool below uses the *spawn* context and each worker
+    warms its own runtime instead of inheriting a forked one."""
+    import glob
+    import os
+
     import numpy as np
     np.random.default_rng(0)
-    import os
-    artifact = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                            "artifacts", "predictor.npz")
-    if os.path.exists(artifact):
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "artifacts")
+    if glob.glob(os.path.join(art_dir, "predictor*.npz")):
         from repro.core.predictor.unet import warm_jit_cache
         warm_jit_cache()
 
 
 def run_task(task: Dict) -> Dict:
-    """One sweep cell: simulate (policy, placer, scenario, seed) on a fleet.
+    """One sweep cell: simulate (policy, placer, objective, scenario, seed)
+    on a fleet.
 
     Module-level and dict-in/dict-out so it pickles cleanly into worker
     processes.
@@ -68,13 +82,18 @@ def run_task(task: Dict) -> Dict:
     jobs = sc.make_jobs(task["seed"], task.get("n_jobs"))
     fleet = parse_fleet(task.get("fleet") or sc.fleet)
     placer = task.get("placer") or sc.placer
+    objective = task.get("objective") or sc.objective
+    cfg_kwargs = dict(sc.sim_kwargs)     # scenario-bundled SimConfig knobs
+    if task.get("mtbf") is not None:     # explicit --mtbf wins, 0 included
+        cfg_kwargs["gpu_mtbf_s"] = task["mtbf"]
     cfg = SimConfig(n_gpus=len(fleet), policy=task["policy"],
-                    placer=placer, seed=task["seed"],
-                    gpu_mtbf_s=task.get("mtbf", 0.0))
+                    placer=placer, objective=objective, seed=task["seed"],
+                    **cfg_kwargs)
     m = simulate(jobs, cfg, fleet=fleet)
     return {
         "policy": task["policy"],
         "placer": placer,
+        "objective": objective,
         "scenario": task["scenario"],
         "seed": task["seed"],
         "fleet": describe_fleet(fleet),
@@ -86,6 +105,10 @@ def run_task(task: Dict) -> Dict:
             "p90_jct_s": m.p90_jct,
             "makespan_s": m.makespan,
             "stp": m.stp,
+            "energy_j": m.energy_j,
+            "avg_power_w": m.avg_power_w,
+            "energy_per_job_j": m.energy_per_job_j,
+            "jct_per_joule": m.jct_per_joule,
             "breakdown_s": dict(m.breakdown),
         },
         "wall_s": time.time() - t0,
@@ -94,17 +117,19 @@ def run_task(task: Dict) -> Dict:
 
 def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
               seeds: Sequence[int], placers: Optional[Sequence[str]] = None,
+              objectives: Optional[Sequence[str]] = None,
               fleet: Optional[str] = None,
-              n_jobs: Optional[int] = None, mtbf: float = 0.0,
+              n_jobs: Optional[int] = None, mtbf: Optional[float] = None,
               workers: Optional[int] = None, serial: bool = False) -> Dict:
     """Run the full grid and return the JSON-ready report dict.
 
-    ``placers=None`` runs each scenario's own default placer; an explicit
-    list crosses it with every (policy, scenario, seed) cell."""
-    tasks = [{"policy": p, "placer": pl, "scenario": sc, "seed": s,
-              "fleet": fleet, "n_jobs": n_jobs, "mtbf": mtbf}
+    ``placers=None`` / ``objectives=None`` run each scenario's own default;
+    an explicit list crosses it with every (policy, scenario, seed) cell."""
+    tasks = [{"policy": p, "placer": pl, "objective": ob, "scenario": sc,
+              "seed": s, "fleet": fleet, "n_jobs": n_jobs, "mtbf": mtbf}
              for sc in scenarios for p in policies
-             for pl in (placers or [None]) for s in seeds]
+             for pl in (placers or [None])
+             for ob in (objectives or [None]) for s in seeds]
     if workers is None and not serial:
         # tiny grids (e.g. the CI smoke sweep) finish faster in-process than
         # a pool takes to start; an explicit --workers always gets the pool
@@ -112,33 +137,43 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
         total_jobs = sum(t["n_jobs"] or get_scenario(t["scenario"]).n_jobs
                          for t in tasks)
         serial = total_jobs <= _AUTO_SERIAL_JOBS
-    _warm_runtime()
     t0 = time.time()
     if serial or len(tasks) == 1:
+        _warm_runtime()
         results = [run_task(t) for t in tasks]
         workers_used = 1
     else:
+        import multiprocessing
         workers_used = workers or min(len(tasks), os.cpu_count() or 1)
-        with ProcessPoolExecutor(max_workers=workers_used) as pool:
+        # spawn, not fork: workers run jitted U-Net inference (per-kind
+        # predictor artifacts), and forking a jax-initialized parent
+        # deadlocks in XLA's inherited thread-pool locks
+        with ProcessPoolExecutor(
+                max_workers=workers_used,
+                mp_context=multiprocessing.get_context("spawn"),
+                initializer=_warm_runtime) as pool:
             results = list(pool.map(run_task, tasks))
     results.sort(key=lambda r: (r["scenario"], r["policy"], r["placer"],
-                                r["seed"]))
+                                r["objective"], r["seed"]))
 
-    # summary: scenario -> policy -> placer -> seed-mean aggregates (the
-    # placer level is what lets diff_sweeps compare placement layers)
+    # summary: scenario -> policy -> placer -> objective -> seed-mean
+    # aggregates (the leaf levels are what let diff_sweeps compare placement
+    # layers and optimization objectives)
     cells: Dict[tuple, List[Dict]] = {}
     for r in results:
-        cells.setdefault((r["scenario"], r["policy"], r["placer"]),
-                         []).append(r)
-    summary: Dict[str, Dict[str, Dict[str, Dict[str, float]]]] = {}
-    for (sc, p, pl), cell in cells.items():
+        cells.setdefault((r["scenario"], r["policy"], r["placer"],
+                          r["objective"]), []).append(r)
+    summary: Dict[str, Dict] = {}
+    for (sc, p, pl, ob), cell in cells.items():
         mean = lambda key: (sum(r["metrics"][key] for r in cell)
                             / len(cell))
-        summary.setdefault(sc, {}).setdefault(p, {})[pl] = {
+        summary.setdefault(sc, {}).setdefault(p, {}).setdefault(pl, {})[ob] = {
             "avg_jct_s_mean": mean("avg_jct_s"),
             "p90_jct_s_mean": mean("p90_jct_s"),
             "stp_mean": mean("stp"),
             "makespan_s_mean": mean("makespan_s"),
+            "energy_j_mean": mean("energy_j"),
+            "energy_per_job_j_mean": mean("energy_per_job_j"),
         }
 
     return {
@@ -147,6 +182,7 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
         "config": {
             "policies": list(policies),
             "placers": list(placers) if placers else None,
+            "objectives": list(objectives) if objectives else None,
             "scenarios": list(scenarios),
             "seeds": list(seeds),
             "fleet": fleet,          # null = each scenario's default fleet
@@ -168,16 +204,18 @@ def _print_summary(report: Dict) -> None:
     w = max((len(s) for s in report["summary"]), default=8)
     for sc, by_policy in report["summary"].items():
         for p, by_placer in by_policy.items():
-            for pl, agg in by_placer.items():
-                print(f"  {sc:<{w}}  {p:<10} {pl:<15}"
-                      f" avg_jct {agg['avg_jct_s_mean']:>9,.0f}s"
-                      f"  p90 {agg['p90_jct_s_mean']:>9,.0f}s"
-                      f"  stp {agg['stp_mean']:.3f}")
+            for pl, by_obj in by_placer.items():
+                for ob, agg in by_obj.items():
+                    print(f"  {sc:<{w}}  {p:<10} {pl:<15} {ob:<11}"
+                          f" avg_jct {agg['avg_jct_s_mean']:>9,.0f}s"
+                          f"  p90 {agg['p90_jct_s_mean']:>9,.0f}s"
+                          f"  stp {agg['stp_mean']:.3f}"
+                          f"  energy {agg['energy_j_mean'] / 1e6:>7.2f}MJ")
 
 
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
-        description="parallel policy x placer x scenario x seed "
+        description="parallel policy x placer x objective x scenario x seed "
                     "simulation sweep")
     ap.add_argument("--policies", default="miso,srpt",
                     help="comma-separated policy names")
@@ -185,6 +223,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="comma-separated placer names to cross with every "
                          "cell (see repro.core.sim.placement; default: each "
                          "scenario's own placer)")
+    ap.add_argument("--objectives", default=None,
+                    help="comma-separated objective names to cross with "
+                         "every cell (see repro.core.sim.objectives; "
+                         "default: each scenario's own objective)")
     ap.add_argument("--scenarios", default="bursty,diurnal,heavy_tail",
                     help="comma-separated scenario names "
                          "(see repro.core.scenarios)")
@@ -195,8 +237,11 @@ def build_parser() -> argparse.ArgumentParser:
                          "(default: each scenario's own fleet)")
     ap.add_argument("--jobs", type=int, default=None,
                     help="override each scenario's trace length")
-    ap.add_argument("--mtbf", type=float, default=0.0,
-                    help="accelerator MTBF seconds (fault injection)")
+    ap.add_argument("--mtbf", type=float, default=None,
+                    help="accelerator MTBF seconds (fault injection); "
+                         "overrides any scenario-bundled value, 0 disables "
+                         "faults even for fault scenarios (default: each "
+                         "scenario's own setting)")
     ap.add_argument("--workers", type=int, default=None,
                     help="worker processes (default: min(cells, cpus))")
     ap.add_argument("--serial", action="store_true",
@@ -209,6 +254,7 @@ def build_parser() -> argparse.ArgumentParser:
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
     from repro.core.scenarios import available_scenarios, get_scenario
+    from repro.core.sim.objectives import get_objective
     from repro.core.sim.placement import get_placer
     from repro.core.sim.policies import available_policies, get_policy
 
@@ -216,15 +262,20 @@ def main(argv=None) -> int:
     scenarios = [s.strip() for s in args.scenarios.split(",") if s.strip()]
     placers = ([p.strip() for p in args.placers.split(",") if p.strip()]
                if args.placers else None)
+    objectives = ([o.strip() for o in args.objectives.split(",") if o.strip()]
+                  if args.objectives else None)
     for p in policies:
         get_policy(p)                    # fail fast with the full list
     for s in scenarios:
         get_scenario(s)
     for pl in placers or ():
         get_placer(pl)
+    for ob in objectives or ():
+        get_objective(ob)
 
     report = run_sweep(policies, scenarios, seeds=list(range(args.seeds)),
-                       placers=placers, fleet=args.fleet, n_jobs=args.jobs,
+                       placers=placers, objectives=objectives,
+                       fleet=args.fleet, n_jobs=args.jobs,
                        mtbf=args.mtbf, workers=args.workers,
                        serial=args.serial)
     with open(args.out, "w") as f:

@@ -2,11 +2,12 @@
 golden guarantee that homogeneous runs are bit-identical through the fleet
 code path."""
 import copy
+import os
 from dataclasses import replace
 
 import pytest
 
-from repro.core.estimators import OracleEstimator
+from repro.core.estimators import OracleEstimator, UNetEstimator
 from repro.core.fleet import (available_kinds, describe_fleet,
                               homogeneous_fleet, parse_fleet)
 from repro.core.jobs import WORKLOADS, Job
@@ -51,6 +52,20 @@ def test_h100_space_doubles_memory():
     for s in h.sizes:
         assert h.slice_mem_gb(s) == 2 * SPACE.slice_mem_gb(s)
     assert len(h.partitions) == len(SPACE.partitions)   # same 4g/3g exclusion
+
+
+def test_per_kind_predictor_artifacts_ship():
+    """The trained per-kind artifacts are committed and route through
+    ``GPUSpec.estimator`` as U-Net estimators for every GPU kind we train
+    for — heterogeneous sweeps no longer silently run the oracle
+    (ROADMAP's per-type-predictor item)."""
+    for spec in parse_fleet("a100:1+h100:1"):
+        assert spec.artifact is not None, \
+            f"no predictor artifact shipped for {spec.kind}"
+        assert os.path.exists(spec.artifact)
+        assert isinstance(spec.estimator, UNetEstimator)
+        # the estimator is bound to the kind's own space/perf model
+        assert spec.estimator.pm is spec.pm
 
 
 def test_gpu_carries_own_spec():

@@ -1,0 +1,401 @@
+"""Objective layer: the registry, golden bit-identity of the default
+throughput objective across all 7 policies, power-model shapes, the
+energy/edp selection semantics (QoS-floor + feasibility), bruteforce-oracle
+agreement, batch/single equivalence, and the engine's energy integration
+(including correlated rack failures)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.estimators import OracleEstimator
+from repro.core.fleet import (A100_POWER, H100_POWER, PowerModel,
+                              parse_fleet)
+from repro.core.jobs import WORKLOADS, Job
+from repro.core.optimizer import (clear_memo, optimize_partition,
+                                  optimize_partition_batch,
+                                  optimize_partition_bruteforce)
+from repro.core.partitions import a100_mig_space, h100_mig_space
+from repro.core.perfmodel import PerfModel
+from repro.core.sim.objectives import (EnergyObjective, Objective,
+                                       available_objectives, get_objective,
+                                       partition_watts, register_objective)
+from repro.core.simulator import ClusterSim, SimConfig, simulate
+from repro.core.traces import generate_trace
+
+SPACE = a100_mig_space()
+PM = PerfModel(SPACE)
+EST = OracleEstimator(PM)
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "simulator_golden.json")
+
+ALL_POLICIES = ("nopart", "optsta", "mpsonly", "miso", "oracle",
+                "miso-frag", "srpt")
+
+
+# --------------------------------------------------------------- registry
+
+def test_registry_has_builtins():
+    names = available_objectives()
+    for n in ("throughput", "energy", "edp"):
+        assert n in names
+        assert get_objective(n).name == n
+
+
+def test_unknown_objective_raises():
+    with pytest.raises(ValueError, match="unknown objective"):
+        get_objective("does-not-exist")
+    with pytest.raises(ValueError, match="unknown objective"):
+        ClusterSim([], SimConfig(objective="does-not-exist"), SPACE, PM, EST)
+
+
+def test_duplicate_registration_raises():
+    with pytest.raises(ValueError, match="duplicate"):
+        @register_objective
+        class Clash(Objective):                    # noqa: F811
+            name = "energy"
+
+            def score_rows(self, objs, watts):
+                return objs
+    assert get_objective("energy") is EnergyObjective   # unchanged
+
+
+# ------------------------------------------------- golden (default = paper)
+
+with open(GOLDEN) as f:
+    _GOLD = json.load(f)
+_GCFG = _GOLD["config"]
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_throughput_objective_bit_identical_to_golden(policy):
+    """Explicitly threading objective="throughput" through the whole stack
+    (SimConfig -> Policy -> optimizer) reproduces the recorded golden
+    traces bit-for-bit for every policy: the objective refactor did not
+    move the default behavior."""
+    jobs = generate_trace(_GCFG["n_jobs"], lam_s=_GCFG["lam_s"], seed=0,
+                          max_duration_s=_GCFG["max_duration_s"])
+    m = simulate(jobs, SimConfig(n_gpus=_GCFG["n_gpus"], policy=policy,
+                                 objective="throughput"), SPACE, PM, EST)
+    g = _GOLD[f"{policy}/seed0"]
+    assert m.avg_jct == g["avg_jct"]
+    assert m.makespan == g["makespan"]
+    assert m.stp == g["stp"]
+    assert list(m.jcts) == g["jcts"]
+    assert m.breakdown == g["breakdown"]
+
+
+# ------------------------------------------------------------ power model
+
+def test_power_model_sublinear_per_slice():
+    """The power-partitioning paper's shape: a small slice draws more than
+    its compute share of the full active power."""
+    full = A100_POWER.active_w(1.0)
+    one_g = A100_POWER.active_w(1 / 7)
+    assert full == A100_POWER.max_active_w
+    assert one_g > full / 7                 # disproportionate small-slice draw
+    assert one_g < full                     # ... but still less than the whole
+    # seven 1g slices burn more than one 7g slice: consolidation saves power
+    assert 7 * one_g > full
+
+
+def test_fleet_specs_carry_per_kind_power():
+    a100, h100 = parse_fleet("a100:1+h100:1")
+    assert a100.power is A100_POWER
+    assert h100.power is H100_POWER
+    assert h100.power.idle_w > a100.power.idle_w
+    assert h100.power.max_active_w > a100.power.max_active_w
+
+
+def test_partition_watts_matches_power_model():
+    for m in (1, 2, 3):
+        watts = partition_watts(SPACE, A100_POWER, m)
+        rows = SPACE.partitions_of_len(m)
+        assert watts.shape == (len(rows),)
+        for w, part in zip(watts, rows):
+            assert w == pytest.approx(A100_POWER.partition_w(SPACE, part))
+        assert (watts > A100_POWER.idle_w).all()
+
+
+# ------------------------------------------------- selection semantics
+
+def test_energy_picks_cheaper_slice_above_floor():
+    """A lone job running at ~full speed on 3g (a small job that can't use
+    the whole GPU): energy takes the cheap slice; throughput keeps the
+    full GPU."""
+    sv = {7: 1.0, 4: 0.97, 3: 0.96, 2: 0.5, 1: 0.2}
+    t = optimize_partition(SPACE, [sv], memo=False)
+    e = optimize_partition(SPACE, [sv], memo=False, objective="energy",
+                           power=A100_POWER)
+    assert t.partition == (7,)
+    assert e.partition == (3,)              # cheapest watts above the floor
+    # 2g (speed 0.5) is cheaper still but violates the QoS floor
+    assert EnergyObjective.qos_floor > 0.5
+    w = lambda c: A100_POWER.partition_w(SPACE, c.partition)
+    assert w(e) < w(t)
+
+
+def test_energy_floor_rejects_slow_cheap_slices():
+    """A job whose small-slice speeds fall below the floor stays on the
+    full GPU: the floor is what keeps 'save watts' from starving jobs."""
+    sv = {7: 1.0, 4: 0.9, 3: 0.85, 2: 0.5, 1: 0.2}
+    e = optimize_partition(SPACE, [sv], memo=False, objective="energy",
+                           power=A100_POWER)
+    assert e.partition == (7,)              # nothing else clears 0.95
+
+
+def test_edp_balances_speed_and_power():
+    """EDP sits between throughput (speed-greedy) and energy (watt-greedy):
+    with a shallow speed curve it drops to a cheap slice, with a steep one
+    it keeps the full GPU."""
+    shallow = {7: 1.0, 4: 0.97, 3: 0.96, 2: 0.6, 1: 0.25}
+    d = optimize_partition(SPACE, [shallow], memo=False, objective="edp",
+                           power=A100_POWER)
+    assert d.partition != (7,)
+    steep = {7: 1.0, 4: 0.55, 3: 0.5, 2: 0.3, 1: 0.1}
+    d2 = optimize_partition(SPACE, [steep], memo=False, objective="edp",
+                            power=A100_POWER)
+    assert d2.partition == (7,)
+    # within the shared floor, edp leans toward faster rows than energy:
+    # for two jobs where (4, 3) clears the floor, energy takes the cheaper
+    # watts while edp's T^2 term can prefer the faster multiset
+    from repro.core.sim.objectives import EdpObjective
+    assert EdpObjective.qos_floor == EnergyObjective.qos_floor
+
+
+def test_objectives_memoize_independently():
+    """The shared optimizer memo keys on objective identity: asking for
+    throughput then energy with identical speeds must not alias."""
+    sv = {7: 1.0, 4: 0.97, 3: 0.96, 2: 0.5, 1: 0.2}
+    clear_memo()
+    t1 = optimize_partition(SPACE, [sv])
+    e1 = optimize_partition(SPACE, [sv], objective="energy", power=A100_POWER)
+    t2 = optimize_partition(SPACE, [sv])
+    e2 = optimize_partition(SPACE, [sv], objective="energy", power=A100_POWER)
+    assert t1 == t2 and e1 == e2
+    assert t1.partition != e1.partition
+
+
+def test_miso_frag_honors_energy_floor():
+    """miso-frag's tolerance scan must restrict to the objective's eligible
+    rows: under energy, a watt-cheap slice below the QoS floor (here 3g at
+    0.6 speed, whose T/W ratio beats the full GPU's) must not win."""
+    jobs = [Job(jid=0, profile=WORKLOADS[0], arrival=0.0, work=300.0)]
+    sim = ClusterSim(jobs, SimConfig(n_gpus=1, policy="miso-frag",
+                                     objective="energy"), SPACE, PM, EST)
+    sv = {7: 1.0, 4: 0.62, 3: 0.6, 2: 0.3, 1: 0.1}
+    choice = sim.policy.choose_partition([sv], power=A100_POWER)
+    assert choice.partition == (7,)
+    # ... while a near-full-speed cheap slice is still taken
+    sv2 = {7: 1.0, 4: 0.97, 3: 0.96, 2: 0.3, 1: 0.1}
+    choice2 = sim.policy.choose_partition([sv2], power=A100_POWER)
+    assert choice2.partition != (7,)
+
+
+# ------------------------------------------- oracle / batch equivalence
+
+def _random_speeds(rng, m, zero_frac=0.25):
+    out = []
+    for _ in range(m):
+        sv = {}
+        for s in SPACE.sizes:
+            sv[s] = 0.0 if rng.random() < zero_frac else float(rng.random())
+        out.append(sv)
+    return out
+
+
+def _score(space, power, objective, choice):
+    w = power.partition_w(space, choice.partition)
+    if objective == "energy":
+        return choice.objective / w
+    if objective == "edp":
+        return choice.objective ** 2 / w
+    return choice.objective
+
+
+@pytest.mark.parametrize("objective", ["energy", "edp"])
+@pytest.mark.parametrize("space", [a100_mig_space(), h100_mig_space()])
+def test_objective_agrees_with_bruteforce(objective, space):
+    """The vectorized objective path attains exactly the bruteforce
+    oracle's score (choices may differ only on exact ties)."""
+    rng = np.random.default_rng(42)
+    pm_pow = A100_POWER
+    for m in (1, 2, 3):
+        for _ in range(20):
+            speeds = _random_speeds(rng, m)
+            fast = optimize_partition(space, speeds, memo=False,
+                                      objective=objective, power=pm_pow)
+            slow = optimize_partition_bruteforce(space, speeds,
+                                                 objective=objective,
+                                                 power=pm_pow)
+            assert fast is not None and slow is not None
+            assert _score(space, pm_pow, objective, fast) == \
+                pytest.approx(_score(space, pm_pow, objective, slow))
+
+
+@pytest.mark.parametrize("objective", ["energy", "edp"])
+def test_batch_matches_singles(objective):
+    rng = np.random.default_rng(7)
+    mixes = [_random_speeds(rng, m) for m in (1, 2, 2, 3, 3, 3, 1)]
+    clear_memo()
+    singles = [optimize_partition(SPACE, sp, memo=False, objective=objective,
+                                  power=A100_POWER) for sp in mixes]
+    batched = optimize_partition_batch(SPACE, mixes, memo=False,
+                                       objective=objective, power=A100_POWER)
+    assert batched == singles
+    # and with require_feasible + memo, as the policy layer calls it
+    clear_memo()
+    singles = [optimize_partition(SPACE, sp, require_feasible=True,
+                                  objective=objective, power=A100_POWER)
+               for sp in mixes]
+    clear_memo()
+    batched = optimize_partition_batch(SPACE, mixes, require_feasible=True,
+                                       objective=objective, power=A100_POWER)
+    assert batched == singles
+
+
+# --------------------------------------- QoS safety (never violate floors)
+
+def _assert_qos_safe(speeds, objective):
+    """If any feasible row exists (throughput path finds one), the
+    energy/edp choice must also be feasible: every job's assigned slice
+    carries non-zero speed (zero encodes OOM / QoS-floor violation)."""
+    ref = optimize_partition(SPACE, speeds, require_feasible=True,
+                             memo=False)
+    got = optimize_partition(SPACE, speeds, require_feasible=True,
+                             memo=False, objective=objective,
+                             power=A100_POWER)
+    assert (ref is None) == (got is None)
+    if got is not None:
+        assert got.feasible
+        for j, sv in enumerate(speeds):
+            assert sv.get(got.partition[j], 0.0) > 0.0
+
+
+@pytest.mark.parametrize("objective", ["energy", "edp"])
+def test_energy_edp_never_pick_qos_violating_partition_seeded(objective):
+    rng = np.random.default_rng(123)
+    for m in (1, 2, 3, 4):
+        for _ in range(25):
+            _assert_qos_safe(_random_speeds(rng, m, zero_frac=0.4), objective)
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @st.composite
+    def _speed_mixes(draw):
+        m = draw(st.integers(min_value=1, max_value=4))
+        return [
+            {s: draw(st.one_of(st.just(0.0),
+                               st.floats(min_value=0.0, max_value=1.0)))
+             for s in SPACE.sizes}
+            for _ in range(m)]
+
+    @settings(max_examples=60, deadline=None)
+    @given(_speed_mixes(), st.sampled_from(["energy", "edp"]))
+    def test_energy_edp_never_pick_qos_violating_partition(mix, objective):
+        _assert_qos_safe(mix, objective)
+except ImportError:                        # pragma: no cover
+    pass
+
+
+# -------------------------------------------------- engine integration
+
+def test_simulation_integrates_energy():
+    jobs = generate_trace(12, lam_s=30.0, seed=4, max_duration_s=900)
+    m = simulate(jobs, SimConfig(n_gpus=2, policy="miso"), SPACE, PM, EST)
+    assert len(m.jcts) == len(jobs)
+    assert m.energy_j > 0.0
+    # the idle floor alone over the makespan is a lower bound; 2 GPUs at
+    # full tilt an upper one
+    assert m.energy_j >= 2 * A100_POWER.idle_w * m.makespan * 0.5
+    # per-GPU ceiling: idle + seven 1g slices (sublinearity makes that the
+    # most power-hungry full partition, above max_active_w)
+    ceiling = A100_POWER.idle_w + 7 * A100_POWER.active_w(1 / 7)
+    assert m.avg_power_w <= 2 * ceiling * 1.05
+    assert m.energy_per_job_j == pytest.approx(m.energy_j / len(jobs))
+    assert m.jct_per_joule == pytest.approx(m.avg_jct / m.energy_j)
+
+
+@pytest.mark.parametrize("objective", ["energy", "edp"])
+def test_energy_objectives_complete_all_jobs(objective):
+    jobs = generate_trace(15, lam_s=30.0, seed=9, max_duration_s=900)
+    m = simulate(jobs, SimConfig(n_gpus=2, policy="miso",
+                                 objective=objective), SPACE, PM, EST)
+    assert len(m.jcts) == len(jobs)
+    assert min(m.relative_jcts) >= 1.0 - 1e-9
+
+
+def test_energy_objective_saves_joules_on_hetero_fleet():
+    """The headline trade-off: on the mixed fleet, optimizing for energy
+    spends fewer joules than optimizing for throughput."""
+    jobs = generate_trace(20, lam_s=20.0, seed=11, max_duration_s=1200)
+    fleet = parse_fleet("a100:2+h100:2")
+    t = simulate(jobs, SimConfig(policy="miso", objective="throughput"),
+                 fleet=fleet)
+    e = simulate(jobs, SimConfig(policy="miso", objective="energy"),
+                 fleet=fleet)
+    assert len(t.jcts) == len(e.jcts) == len(jobs)
+    assert e.energy_j < t.energy_j
+
+
+def test_downtime_draws_no_power():
+    """A GPU under repair is powered off: its energy integral excludes the
+    repair window."""
+    job = Job(jid=0, profile=WORKLOADS[0], arrival=0.0, work=100.0)
+    sim = ClusterSim([job], SimConfig(n_gpus=1, policy="nopart"),
+                     SPACE, PM, EST)
+    g = sim.gpus[0]
+    sim.t = 100.0
+    g.advance(100.0)
+    e0 = g.energy_j
+    assert e0 == pytest.approx(A100_POWER.idle_w * 100.0)
+    g.down_until = 200.0                    # down for [100, 200]
+    sim.t = 250.0
+    g.advance(250.0)
+    # only the [200, 250] tail draws idle power
+    assert g.energy_j - e0 == pytest.approx(A100_POWER.idle_w * 50.0)
+
+
+# ------------------------------------------------ correlated rack faults
+
+def test_rack_failure_takes_down_whole_rack():
+    jobs = generate_trace(4, lam_s=5.0, seed=0, max_duration_s=600)
+    cfg = SimConfig(n_gpus=4, policy="miso", rack_size=2, rack_mtbf_s=1e9,
+                    repair_s=100.0)
+    sim = ClusterSim(jobs, cfg, SPACE, PM, EST)
+    sim.t = 50.0
+    sim._on_rack_failure(0)
+    assert sim.gpus[0].down_until == 150.0
+    assert sim.gpus[1].down_until == 150.0
+    assert sim.gpus[2].down_until == 0.0    # other rack untouched
+    assert sim.gpus[3].down_until == 0.0
+    # the next failure event for this rack was rescheduled
+    assert any(ev[2] == "rack_failure" and ev[3] == 0 for ev in sim.events)
+
+
+def test_rack_outage_scenario_completes():
+    from repro.core.scenarios import get_scenario
+    sc = get_scenario("rack_outage")
+    assert sc.sim_kwargs["rack_size"] == 2
+    assert sc.sim_kwargs["rack_mtbf_s"] > 0
+    jobs = sc.make_jobs(seed=0)
+    fleet = parse_fleet(sc.fleet)
+    cfg = SimConfig(n_gpus=len(fleet), policy="miso", seed=0,
+                    **sc.sim_kwargs)
+    m = simulate(jobs, cfg, fleet=fleet)
+    assert len(m.jcts) == len(jobs)         # everything survives the outages
+
+
+def test_rack_failures_requeue_and_recover():
+    """Force a mid-run rack outage and check both victims roll back and the
+    trace still completes."""
+    jobs = [Job(jid=i, profile=WORKLOADS[0], arrival=0.0, work=400.0)
+            for i in range(2)]
+    cfg = SimConfig(n_gpus=2, policy="miso", rack_size=2, rack_mtbf_s=900.0,
+                    repair_s=120.0, ckpt_interval_s=200.0, seed=3)
+    m = simulate(jobs, cfg, SPACE, PM, EST)
+    assert len(m.jcts) == 2

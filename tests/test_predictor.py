@@ -84,3 +84,26 @@ def test_trained_artifact_accuracy():
     pred = np.asarray(net(jnp.asarray(data["val_x"])))
     mae = float(np.abs(pred - data["val_y"]).mean())
     assert mae < 0.05
+
+
+@pytest.mark.parametrize("kind", ["a100", "h100"])
+def test_per_kind_artifact_accuracy(kind):
+    """Each committed per-kind artifact holds the same accuracy band on
+    fresh mixes drawn from its *own* kind's ground truth."""
+    from repro.core.fleet import default_artifact_path
+    from repro.core.predictor.train import kind_perfmodel, load_artifact
+    path = default_artifact_path(kind)
+    assert path is not None, f"artifacts/predictor_{kind}.npz not committed"
+    params, heads, hist = load_artifact(path)
+    assert hist["val_mae"][-1] < 0.035
+    net = unet.UNet(params)
+    pm = kind_perfmodel(kind)
+    data = ds.generate_dataset(pm, mixes_per_count=10, seed=123)
+    pred = np.asarray(net(jnp.asarray(data["val_x"])))
+    assert float(np.abs(pred - data["val_y"]).mean()) < 0.05
+
+
+def test_kind_perfmodel_rejects_unknown():
+    from repro.core.predictor.train import kind_perfmodel
+    with pytest.raises(ValueError, match="no trainable predictor"):
+        kind_perfmodel("tpu")

@@ -1,6 +1,7 @@
-"""Parallel sweep engine: schema stability (v2: the placer axis),
-deterministic serial/parallel equivalence, fleet/placer overrides, the
-report differ's v1/v2 compatibility, and the CLI entry point."""
+"""Parallel sweep engine: schema stability (v3: the objective axis and
+energy columns), deterministic serial/parallel equivalence,
+fleet/placer/objective overrides, the report differ's v1/v2/v3
+compatibility, and the CLI entry point."""
 import importlib.util
 import json
 import os
@@ -9,10 +10,13 @@ import pytest
 
 from repro.launch.sweep import SCHEMA_VERSION, run_sweep, run_task
 
-RESULT_KEYS = {"policy", "placer", "scenario", "seed", "fleet", "n_jobs",
-               "n_completed", "metrics", "wall_s"}
+RESULT_KEYS = {"policy", "placer", "objective", "scenario", "seed", "fleet",
+               "n_jobs", "n_completed", "metrics", "wall_s"}
 METRIC_KEYS = {"avg_jct_s", "p50_jct_s", "p90_jct_s", "makespan_s", "stp",
-               "breakdown_s"}
+               "energy_j", "avg_power_w", "energy_per_job_j",
+               "jct_per_joule", "breakdown_s"}
+SUMMARY_KEYS = {"avg_jct_s_mean", "p90_jct_s_mean", "stp_mean",
+                "makespan_s_mean", "energy_j_mean", "energy_per_job_j_mean"}
 
 
 def test_run_task_schema():
@@ -22,6 +26,8 @@ def test_run_task_schema():
     assert r["n_completed"] == r["n_jobs"] > 0
     assert r["fleet"] == "a100:2"            # smoke's default fleet
     assert r["placer"] == "least-loaded"     # smoke's default placer
+    assert r["objective"] == "throughput"    # smoke's default objective
+    assert r["metrics"]["energy_j"] > 0.0    # energy integration is live
     json.dumps(r)                            # JSON-serializable end to end
 
 
@@ -30,15 +36,16 @@ def test_run_sweep_serial_grid():
     assert rep["schema_version"] == SCHEMA_VERSION
     assert rep["kind"] == "miso-sweep"
     assert len(rep["results"]) == 4
-    keys = [(r["scenario"], r["policy"], r["placer"], r["seed"])
-            for r in rep["results"]]
+    keys = [(r["scenario"], r["policy"], r["placer"], r["objective"],
+             r["seed"]) for r in rep["results"]]
     assert keys == sorted(keys)              # stable result ordering
     assert set(rep["summary"]["smoke"]) == {"miso", "srpt"}
     for by_placer in rep["summary"]["smoke"].values():
         assert set(by_placer) == {"least-loaded"}
-        for agg in by_placer.values():
-            assert set(agg) == {"avg_jct_s_mean", "p90_jct_s_mean",
-                                "stp_mean", "makespan_s_mean"}
+        for by_obj in by_placer.values():
+            assert set(by_obj) == {"throughput"}
+            for agg in by_obj.values():
+                assert set(agg) == SUMMARY_KEYS
 
 
 def test_placer_axis_crosses_grid():
@@ -54,6 +61,19 @@ def test_placer_axis_crosses_grid():
     # to least-loaded, so both cells carry identical metrics
     a, b = rep["results"]
     assert a["metrics"] == b["metrics"]
+
+
+def test_objective_axis_crosses_grid():
+    rep = run_sweep(["miso"], ["smoke"], seeds=[0],
+                    objectives=["throughput", "energy", "edp"], serial=True)
+    assert len(rep["results"]) == 3
+    assert {r["objective"] for r in rep["results"]} == {"throughput",
+                                                        "energy", "edp"}
+    by_obj = rep["summary"]["smoke"]["miso"]["least-loaded"]
+    assert set(by_obj) == {"throughput", "energy", "edp"}
+    assert rep["config"]["objectives"] == ["throughput", "energy", "edp"]
+    for agg in by_obj.values():
+        assert agg["energy_j_mean"] > 0.0
 
 
 def test_parallel_matches_serial():
@@ -107,9 +127,10 @@ def _load_diff_sweeps():
     return mod
 
 
-def test_diff_sweeps_reads_v1_and_v2_summaries(tmp_path):
-    """v1 reports (pre-placer) normalize to placer=least-loaded and compare
-    cleanly against v2 candidates."""
+def test_diff_sweeps_reads_v1_v2_and_v3_summaries(tmp_path):
+    """v1 (pre-placer) and v2 (pre-objective) reports normalize to
+    placer=least-loaded / objective=throughput and compare cleanly against
+    v3 candidates."""
     ds = _load_diff_sweeps()
     agg = {"avg_jct_s_mean": 100.0, "p90_jct_s_mean": 200.0,
            "stp_mean": 1.5, "makespan_s_mean": 400.0}
@@ -117,14 +138,22 @@ def test_diff_sweeps_reads_v1_and_v2_summaries(tmp_path):
           "summary": {"smoke": {"miso": agg}}}
     v2 = {"schema_version": 2, "kind": "miso-sweep",
           "summary": {"smoke": {"miso": {"least-loaded": agg}}}}
-    p1, p2 = tmp_path / "v1.json", tmp_path / "v2.json"
+    v3 = {"schema_version": 3, "kind": "miso-sweep",
+          "summary": {"smoke": {"miso": {"least-loaded":
+                                         {"throughput": agg}}}}}
+    p1, p2, p3 = tmp_path / "v1.json", tmp_path / "v2.json", \
+        tmp_path / "v3.json"
     p1.write_text(json.dumps(v1))
     p2.write_text(json.dumps(v2))
-    key = ("smoke", "miso", "least-loaded")
+    p3.write_text(json.dumps(v3))
+    key = ("smoke", "miso", "least-loaded", "throughput")
     assert ds.load_summary(str(p1)) == {key: agg}
     assert ds.load_summary(str(p2)) == {key: agg}
-    regressions, notes = ds.diff_reports(str(p1), str(p2), threshold=0.02)
-    assert regressions == [] and notes == []
+    assert ds.load_summary(str(p3)) == {key: agg}
+    for old in (p1, p2):
+        regressions, notes = ds.diff_reports(str(old), str(p3),
+                                             threshold=0.02)
+        assert regressions == [] and notes == []
 
 
 def test_diff_sweeps_flags_regressions_per_placer(tmp_path):
@@ -142,4 +171,39 @@ def test_diff_sweeps_flags_regressions_per_placer(tmp_path):
     pc.write_text(json.dumps(cand))
     regressions, _ = ds.diff_reports(str(pb), str(pc), threshold=0.02)
     assert len(regressions) == 1
-    assert "smoke/miso/hetero-speed" in regressions[0]
+    assert "smoke/miso/hetero-speed/throughput" in regressions[0]
+
+
+def test_diff_sweeps_flags_energy_regressions(tmp_path):
+    """The v3 energy columns gate exactly like the JCT ones: more joules
+    than baseline (beyond threshold) fails."""
+    ds = _load_diff_sweeps()
+    base_agg = {"avg_jct_s_mean": 100.0, "energy_j_mean": 1.0e6}
+    bad_agg = {"avg_jct_s_mean": 100.0, "energy_j_mean": 1.1e6}
+    mk = lambda agg: {"schema_version": 3, "kind": "miso-sweep",
+                      "summary": {"smoke": {"miso": {"least-loaded":
+                                                     {"energy": agg}}}}}
+    pb, pc = tmp_path / "base.json", tmp_path / "cand.json"
+    pb.write_text(json.dumps(mk(base_agg)))
+    pc.write_text(json.dumps(mk(bad_agg)))
+    regressions, _ = ds.diff_reports(str(pb), str(pc), threshold=0.02)
+    assert len(regressions) == 1
+    assert "energy_j_mean" in regressions[0]
+    assert "smoke/miso/least-loaded/energy" in regressions[0]
+
+
+def test_v3_report_round_trip(tmp_path):
+    """A freshly-generated v3 report JSON-round-trips through the differ:
+    same report on both sides -> zero regressions, objective-keyed cells."""
+    ds = _load_diff_sweeps()
+    rep = run_sweep(["miso"], ["smoke"], seeds=[0],
+                    objectives=["throughput", "energy"], serial=True)
+    p = tmp_path / "rep.json"
+    p.write_text(json.dumps(rep))
+    cells = ds.load_summary(str(p))
+    assert ("smoke", "miso", "least-loaded", "throughput") in cells
+    assert ("smoke", "miso", "least-loaded", "energy") in cells
+    for agg in cells.values():
+        assert agg["energy_j_mean"] > 0.0
+    regressions, notes = ds.diff_reports(str(p), str(p), threshold=0.02)
+    assert regressions == [] and notes == []
