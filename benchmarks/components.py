@@ -183,6 +183,42 @@ def kernel_bench(fast=True):
     return rows
 
 
+def trace_scaling(fast=True):
+    """Engine scalability: replay synthetic Alibaba-distribution traces at
+    growing fleet sizes (the indexed-hot-path acceptance curve).
+
+    Each cell drives one miso run over a homogeneous a100 fleet of ``n``
+    GPUs with ``min(20*n, 100_000)`` jobs; the arrival rate scales with the
+    fleet (``load_scale = n/16``) so per-GPU utilization stays roughly
+    constant and wall time isolates the engine's per-event cost.  The full
+    grid ends at the 5,000-GPU / 100K-job cell, whose wall time must stay
+    under 5 minutes single-process."""
+    from repro.core.fleet import homogeneous_fleet
+    from repro.core.simulator import ClusterSim, SimConfig
+    from repro.core.traces_alibaba import synthesize_alibaba_trace
+    sizes = (8, 64, 512) if fast else (8, 64, 512, 2048, 5000)
+    fleet_proto = homogeneous_fleet(SPACE, PM, ORACLE_EST, 1)[0]
+    rows = []
+    for n in sizes:
+        n_jobs = min(20 * n, 100_000)
+        jobs = synthesize_alibaba_trace(n_jobs, seed=7, load_scale=n / 16.0,
+                                        max_duration_s=7200.0)
+        cfg = SimConfig(n_gpus=n, policy="miso", profile=True)
+        sim = ClusterSim(jobs, cfg, fleet=[fleet_proto] * n)
+        t0 = time.perf_counter()
+        m = sim.run()
+        wall = time.perf_counter() - t0
+        p = sim.prof
+        rows.append(row(
+            f"trace_scaling_n{n}", wall / max(p["events"], 1.0),
+            f"gpus={n};jobs={len(jobs)};wall_s={wall:.2f};"
+            f"events={int(p['events'])};completed={len(m.jcts)};"
+            f"jobs_per_s={len(m.jcts) / max(wall, 1e-9):.0f};"
+            f"placement_s={p['placement_s']:.2f};"
+            f"alg1_s={p['alg1_s']:.2f};estimator_s={p['estimator_s']:.2f}"))
+    return rows
+
+
 def tpu_cluster(fast=True):
     """MISO over TPU-pod sub-slices (the DESIGN.md adaptation)."""
     from repro.core.estimators import OracleEstimator
@@ -215,7 +251,8 @@ def write_report(path: str, fast: bool = True) -> dict:
         "kind": "miso-components",
         "rows": [{"name": n, "us_per_call": float(us), "derived": d}
                  for n, us, d in (optimizer_latency(fast=fast)
-                                  + scheduling_policies(fast=fast))],
+                                  + scheduling_policies(fast=fast)
+                                  + trace_scaling(fast=fast))],
     }
     with open(path, "w") as f:
         json.dump(report, f, indent=1)

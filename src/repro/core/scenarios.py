@@ -120,6 +120,10 @@ class Scenario:
     n_jobs: int = 60                     # default trace length
     placer: str = "least-loaded"         # default placement layer for sweeps
     objective: str = "throughput"        # default Algorithm-1 objective
+    # False for fixed-trace replays: make_jobs ignores the seed (every seed
+    # in a sweep grid replays the identical workload; seeds still vary
+    # fault injection inside the simulator)
+    seed_sensitive: bool = True
     # extra SimConfig overrides bundled with the scenario (e.g. rack-fault
     # knobs); the sweep's explicit flags still win over these
     sim_kwargs: Mapping[str, float] = field(default_factory=dict)
@@ -219,3 +223,35 @@ register_scenario(Scenario(
     fleet="a100:2+h100:2", n_jobs=14,
     sim_kwargs={"rack_size": 2, "rack_mtbf_s": 2400.0, "repair_s": 240.0,
                 "ckpt_interval_s": 300.0}))
+
+
+# ------------------------------------------------------------ trace replay
+
+def _replay_jobs(seed: int, n_jobs: int):
+    """The committed Alibaba v2020 sample, sliced to the first ``n_jobs``
+    expanded jobs.  Deterministic: the CSV fixes arrivals, sizes and QoS —
+    ``seed`` is ignored by design, so every seed in a sweep grid replays
+    the identical workload (seed still varies fault injection)."""
+    from repro.core.traces_alibaba import load_alibaba_trace
+    return load_alibaba_trace(limit_jobs=n_jobs)
+
+
+def _synth_jobs(seed: int, n_jobs: int):
+    """Synthetic jobs bootstrapped from the sample's empirical joint
+    (size, duration, task) distribution and inter-arrival gaps."""
+    from repro.core.traces_alibaba import synthesize_alibaba_trace
+    return synthesize_alibaba_trace(n_jobs, seed=seed)
+
+
+register_scenario(Scenario(
+    "trace_replay", "replay of the committed Alibaba cluster-trace-gpu-"
+                    "v2020 sample CSV (production arrival bursts, task-"
+                    "class QoS tiers, multi-instance groups)",
+    _replay_jobs, fleet="a100:12+h100:4", n_jobs=200, seed_sensitive=False))
+
+register_scenario(Scenario(
+    "trace_synth", "synthetic workload drawn from the Alibaba sample's "
+                   "empirical size/duration/arrival distributions "
+                   "(scales to arbitrary job counts)",
+    _synth_jobs, fleet="a100:12+h100:4", n_jobs=200,
+    placer="hetero-speed"))

@@ -40,6 +40,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -52,6 +53,7 @@ from repro.core.metrics import TraceMetrics, compute_metrics
 from repro.core.partitions import PartitionSpace
 from repro.core.perfmodel import PerfModel
 from repro.core.sim.gpu import CKPT, GPU, IDLE, MIG_RUN, MPS_PROF, RJob
+from repro.core.sim.index import FleetIndex, WorkAggregate
 from repro.core.sim.policies import get_policy
 
 
@@ -82,6 +84,9 @@ class SimConfig:
     # profiling measurement noise (paper Fig 14): sigma of the relative error
     # on each MPS-matrix entry; drawn from the simulator RNG per window
     mps_noise_sigma: float = 0.0
+    # collect per-component wall-clock (placement / Algorithm-1 / estimator /
+    # event loop) into ClusterSim.prof; surfaced by `launch/sweep --profile`
+    profile: bool = False
 
 
 class ClusterSim:
@@ -121,6 +126,25 @@ class ClusterSim:
         self.profile_cache: Dict[tuple, Dict[int, float]] = {}  # (mi_group, space)
         self.completed: List[int] = []
         self._counter = itertools.count()
+        # per-component wall-clock buckets (None = profiling off, the hot
+        # paths check `prof is not None` and pay nothing)
+        self.prof: Optional[Dict[str, float]] = (
+            {"placement_s": 0.0, "alg1_s": 0.0, "estimator_s": 0.0,
+             "total_s": 0.0, "events": 0.0} if cfg.profile else None)
+        # -- placement hot-path structures (see repro.core.sim.index):
+        # in-system remaining-work aggregate (hetero-speed split point) ...
+        self.work_agg = WorkAggregate()
+        self._resident_count = 0
+        # ... cached up-set, invalidated on failure / repair promotion; the
+        # down-heap drives promotions lazily as the clock passes down_until
+        self._up_cache: Optional[List[GPU]] = None
+        self._down_heap: List[Tuple[float, int]] = []
+        # ... and the per-kind (count, max-addable-slice) fleet index; built
+        # before the policy so its placer can bind to it
+        self.index = FleetIndex(self)
+        for g in self.gpus:
+            self._refresh_feas(g)
+            self.index.add(g)
         self.policy = get_policy(cfg.policy)(self)
 
         for j in jobs:
@@ -152,13 +176,30 @@ class ClusterSim:
 
     def run(self) -> TraceMetrics:
         n_target = len(self.jobs)
+        prof = self.prof
+        t_run0 = time.perf_counter() if prof is not None else 0.0
         while self.events and len(self.completed) < n_target:
             t, _, kind, payload, stamp = heapq.heappop(self.events)
             if t > self.cfg.max_sim_s:
                 break
             self.t = t
+            if prof is not None:
+                prof["events"] += 1.0
             if kind == "arrival":
-                self._on_arrival(self.jobs[payload])
+                # drain every further arrival stamped exactly t so the FCFS
+                # admit runs once over the whole burst (trace replays carry
+                # integer timestamps with heavy same-second bursts); for
+                # FCFS this is literally the same placement sequence, and
+                # queue-scanning disciplines (SRPT) see the full burst at
+                # once — their intended semantics
+                self._enqueue(self.jobs[payload])
+                events = self.events
+                while events and events[0][0] == t and events[0][2] == "arrival":
+                    _, _, _, jid2, _ = heapq.heappop(events)
+                    if prof is not None:
+                        prof["events"] += 1.0
+                    self._enqueue(self.jobs[jid2])
+                self.policy.admit()
             elif kind == "gpu_timer":
                 g = self.gpus[payload]
                 if stamp != g.stamp or t < g.phase_end - 1e-9:
@@ -178,7 +219,11 @@ class ClusterSim:
                 if rj is None or rj.job.remaining > 1e-6:
                     self._schedule_gpu_events(g)
                     continue
-                self._on_completion(g, rj.job)
+                batch = self._drain_same_tick_completions(t, g, rj.job)
+                if batch is None:
+                    self._on_completion(g, rj.job)
+                else:
+                    self._on_completion_batch(batch)
             elif kind == "failure":
                 self._on_failure(self.gpus[payload])
             elif kind == "rack_failure":
@@ -190,6 +235,8 @@ class ClusterSim:
         # extends idle/energy windows
         for g in self.gpus:
             g.advance(self.t)
+        if prof is not None:
+            prof["total_s"] += time.perf_counter() - t_run0
         return compute_metrics([self.jobs[i] for i in self.completed],
                                self.cfg.n_gpus,
                                energy_j=float(sum(g.energy_j
@@ -200,9 +247,76 @@ class ClusterSim:
     # Shared feasibility checks usable by any policy's pick_gpu; all are
     # evaluated against the candidate GPU's own space / perf model.
 
+    def _sync_up(self):
+        """Promote repaired GPUs back into the in-service structures once
+        the clock passes their ``down_until``.  Entries whose GPU failed
+        again while down (``down_until`` extended, a fresh entry pushed) or
+        was already promoted are stale and skipped."""
+        heap = self._down_heap
+        t = self.t
+        while heap and heap[0][0] <= t:
+            _, gid = heapq.heappop(heap)
+            g = self.gpus[gid]
+            if g._in_index or t < g.down_until:
+                continue
+            self._refresh_feas(g)
+            self.index.add(g)
+            self._up_cache = None
+
     def up_gpus(self):
-        """GPUs currently in service (not failed / under repair)."""
-        return [g for g in self.gpus if self.t >= g.down_until]
+        """GPUs currently in service (not failed / under repair).  Cached:
+        the up-set only changes at failure events and ``down_until``
+        boundaries, both of which invalidate it — not on every call."""
+        self._sync_up()
+        if self._up_cache is None:
+            self._up_cache = [g for g in self.gpus if self.t >= g.down_until]
+        return self._up_cache
+
+    def _refresh_feas(self, g: GPU):
+        """Recompute ``g._max_add``: the largest menu slice a new job could
+        still require with ``g``'s residents feasibly re-partitioned around
+        it (0 = nothing fits).  ``PartitionSpace.placeable`` is monotone in
+        the added requirement, so for memory-monotone menus
+        ``spare_slice_ok(g, job) == (min_required_slice(job) <= _max_add)``
+        — which is what lets the fleet index prune whole buckets instead of
+        running ``feasible_exact`` per GPU.  Non-monotone menus (no shipped
+        space) get ``None``: never pruned, always exact-checked."""
+        space = g.space
+        if not space._mem_monotone:
+            g._max_add = None
+            return
+        if len(g.jobs) >= space.max_jobs:
+            g._max_add = 0
+            return
+        reqs = []
+        for rj in g.jobs.values():
+            j = rj.job
+            r = space.min_required_slice(max(j.profile.mem_gb, j.min_mem_gb),
+                                         j.qos_min_slice)
+            if r is None:                # unplaceable resident (forced state):
+                g._max_add = 0           # nothing more fits for sure
+                return
+            reqs.append(r)
+        g._max_add = 0
+        for s in sorted(space.sizes, reverse=True):
+            if space.placeable(reqs + [s]):
+                g._max_add = s
+                break
+
+    def _resident_changed(self, g: GPU):
+        """Re-bucket ``g`` after its resident set changed (in-service GPUs
+        only; failed ones re-enter via the repair promotion)."""
+        if g._in_index:
+            self._refresh_feas(g)
+            self.index.update(g)
+
+    def remove_resident(self, g: GPU, jid: int):
+        """Remove one resident from ``g`` keeping the placement index and
+        resident accounting consistent.  Policies must route evictions
+        through this instead of ``del g.jobs[jid]``."""
+        del g.jobs[jid]
+        self._resident_count -= 1
+        self._resident_changed(g)
 
     def mem_ok(self, g: GPU, job: Job, exclude: Optional[int] = None) -> bool:
         total = sum(rj.job.profile.mem_gb for jid, rj in g.jobs.items()
@@ -234,11 +348,15 @@ class ClusterSim:
 
     # ------------------------------------------------------ job lifecycle
 
+    def _enqueue(self, job: Job):
+        job.queue_since = self.t
+        self.queue.append(job.jid)
+        self.work_agg.add(job.remaining)
+
     def _on_arrival(self, job: Job):
         # multi-instance clones are expanded by traces.expand_multi_instance;
         # clones share an mi_group so the MPS profile is measured only once.
-        job.queue_since = self.t
-        self.queue.append(job.jid)
+        self._enqueue(job)
         self.policy.admit()
 
     def place(self, g: GPU, job: Job):
@@ -248,6 +366,8 @@ class ClusterSim:
             job.start_time = self.t
         job.t_queue += max(0.0, self.t - job.queue_since)
         g.jobs[job.jid] = RJob(job)
+        self._resident_count += 1
+        self._resident_changed(g)
         self.policy.on_place(g, job)
         self.finalize(g)
 
@@ -302,14 +422,61 @@ class ClusterSim:
                 rj.since_ckpt_t = 0.0
                 rj.since_ckpt_work = 0.0
 
-    def _on_completion(self, g: GPU, job: Job):
+    def _drain_same_tick_completions(self, t: float, first: GPU,
+                                     first_job: Job):
+        """Pop every further *valid* completion event stamped exactly ``t``
+        so the policies' completion reactions batch (MISO re-optimizes every
+        affected GPU through one Algorithm-1 pass) and the queue is admitted
+        once for the whole tick.  Only contiguous completion events are
+        taken — interleaved other-kind events keep their heap order — and at
+        most one completion per GPU can be valid (``next_completion``
+        schedules only the earliest; a same-tick follow-up is rescheduled by
+        the finalize and drains on the next loop iteration).  Returns None
+        when ``first`` is alone at this tick."""
+        batch = None
+        events = self.events
+        prof = self.prof
+        while events and events[0][0] == t and events[0][2] == "completion":
+            _, _, _, (gid, jid), stamp = heapq.heappop(events)
+            if prof is not None:
+                prof["events"] += 1.0
+            g2 = self.gpus[gid]
+            if stamp != g2.stamp:
+                continue
+            g2.advance(t)
+            rj = g2.jobs.get(jid)
+            if rj is None or rj.job.remaining > 1e-6:
+                self._schedule_gpu_events(g2)
+                continue
+            if batch is None:
+                batch = [(first, first_job)]
+            batch.append((g2, rj.job))
+        return batch
+
+    def _finish(self, g: GPU, job: Job):
+        """Shared completion accounting (single and batched paths)."""
         job.finish_time = self.t
+        self.work_agg.discard(job.remaining)
         job.remaining = 0.0
-        del g.jobs[job.jid]
+        self.remove_resident(g, job.jid)
         g.estimates.pop(job.jid, None)
         self.completed.append(job.jid)
+
+    def _on_completion(self, g: GPU, job: Job):
+        self._finish(g, job)
         self.policy.on_completion(g, job)
         self.finalize(g)
+        self.policy.admit()
+
+    def _on_completion_batch(self, items: Sequence[Tuple[GPU, Job]]):
+        """Several same-tick completions on distinct GPUs: account them all,
+        let the policy react once (batched Algorithm-1 across the affected
+        GPUs), then finalize each GPU and admit the queue once."""
+        for g, job in items:
+            self._finish(g, job)
+        self.policy.on_completion_batch(items)
+        for g, _ in items:
+            self.finalize(g)
         self.policy.admit()
 
     # ---------------------------------------------------------- failures
@@ -345,19 +512,27 @@ class ClusterSim:
                 # destroyed progress is the speed-weighted work accrued since
                 # then (RJob.since_ckpt_work), never wall-clock seconds and
                 # never cumulative t_run across earlier placements
-                job.remaining = min(job.work,
-                                    job.remaining + rj.since_ckpt_work)
+                rolled = min(job.work, job.remaining + rj.since_ckpt_work)
+                self.work_agg.shift(rolled - job.remaining)
+                job.remaining = rolled
                 job.queue_since = self.t
                 requeued.append(job.jid)
             # victims go to the queue head without reversing their relative
             # (placement) order
             self.queue[:0] = requeued
+            self._resident_count -= len(g.jobs)
             g.jobs.clear()
             g.estimates.clear()
         g.phase = IDLE
         g.partition = ()
         g.down_until = self.t + self.cfg.repair_s
         g.stamp += 1
+        # out of service: drop from the fleet index and the up-set cache;
+        # _sync_up promotes it back once the clock passes down_until (a
+        # re-failure while down just leaves a stale, skipped heap entry)
+        self.index.remove(g)
+        self._up_cache = None
+        heapq.heappush(self._down_heap, (g.down_until, g.gid))
         self._push(g.down_until, "repair", g.gid, g.stamp)
 
     # ---------------------------------------------------------- common

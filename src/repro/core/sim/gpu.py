@@ -84,6 +84,12 @@ class GPU:
         self.stamp = 0               # event invalidation
         self.needs_profile = False
         self.down_until = 0.0
+        # fleet-index bookkeeping (owned by engine + sim.index): current
+        # bucket, membership flag, and the largest menu slice a new job
+        # could still require here (None = non-monotone menu, never pruned)
+        self._idx_pos: Optional[Tuple[int, int]] = None
+        self._in_index = False
+        self._max_add: Optional[int] = None
 
     # ------------------------------------------------------------ progress
 
@@ -111,10 +117,12 @@ class GPU:
                 w = self._idle_w
             self.energy_j += w * live
         interval = self.sim.cfg.ckpt_interval_s
-        for rj in self.jobs.values():
+        dec = 0.0                    # progress drained from the in-system
+        for rj in self.jobs.values():  # remaining-work aggregate below
             if self.phase in (MIG_RUN, MPS_PROF):
                 done = rj.speed * dt
                 rj.job.remaining -= done
+                dec += done
                 if self.phase == MIG_RUN:
                     rj.job.t_run += dt
                 else:
@@ -137,6 +145,8 @@ class GPU:
                 rj.job.t_ckpt += dt
             else:
                 rj.job.t_queue += dt
+        if dec:
+            self.sim.work_agg.shift(-dec)
         self.last_update = t
 
     def refresh_speeds(self):

@@ -1,0 +1,231 @@
+"""Incremental indexed structures for the engine's placement hot path.
+
+Pre-refactor, every placement decision rescanned the whole fleet: the
+candidate filter walked ``up_gpus()`` (itself rebuilt per call) and ran the
+memory + spare-slice checks on each GPU, and the hetero-speed placer summed
+every queued and resident job's remaining work for its split point — all
+O(fleet) or O(jobs) per decision, which is what kept production-trace scale
+(5,000 GPUs / 100K jobs) out of reach.  This module holds the replacement
+structures; the engine owns their maintenance at its (few) mutation points:
+
+* :class:`FleetIndex` — per-kind buckets of in-service GPUs keyed
+  ``(resident count, max addable slice)``, each bucket a sorted gid list.
+  ``first()`` streams GPUs in exactly the least-loaded order — count
+  ascending, gid ascending within a count, merged across kinds — returning
+  the first one that passes the policy's admission predicate, so the
+  paper's ``min(candidates, key=(len(jobs), gid))`` rule is reproduced
+  bit-for-bit without materializing the candidate list.  The *max addable
+  slice* dimension (``GPU._max_add``, maintained by the engine from the
+  exact spare-slice feasibility) prunes whole buckets: a saturated fleet is
+  skipped in O(buckets), not O(GPUs).
+* :class:`WorkAggregate` — Kahan-compensated running sum of in-system
+  remaining work, updated as jobs arrive / progress / complete / roll back,
+  turning the hetero-speed placer's split point into O(1).
+
+The index only ever *accelerates* enumeration — feasibility itself stays
+with ``Policy.admit_ok`` / the engine's exact checks, so a policy the index
+cannot see (one that overrides ``placement_candidates`` wholesale) simply
+falls back to the materialized path.
+"""
+from __future__ import annotations
+
+import heapq
+from bisect import insort
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from repro.core.jobs import Job
+    from repro.core.sim.engine import ClusterSim
+    from repro.core.sim.gpu import GPU
+
+
+class WorkAggregate:
+    """Kahan-compensated sum of remaining work over in-system jobs.
+
+    ``count`` tracks how many jobs the total covers; consumers compare it
+    against the engine's queue + resident population and fall back to an
+    exact recompute on mismatch (hand-built test sims assign ``sim.queue``
+    directly and never see the arrival hook)."""
+
+    __slots__ = ("total", "count", "_c")
+
+    def __init__(self):
+        self.total = 0.0
+        self.count = 0
+        self._c = 0.0
+
+    def add(self, x: float):
+        """A job entered the system (arrival)."""
+        self.count += 1
+        self._acc(x)
+
+    def discard(self, x: float):
+        """A job left the system (completion) holding ``x`` remaining."""
+        self.count -= 1
+        self._acc(-x)
+
+    def shift(self, dx: float):
+        """An in-system job's remaining work changed by ``dx`` in place
+        (progress integration, failure rollback)."""
+        self._acc(dx)
+
+    def _acc(self, x: float):
+        y = x - self._c
+        t = self.total + y
+        self._c = (t - self.total) - y
+        self.total = t
+
+
+class _Kind:
+    """Buckets for one GPU kind (one shared :class:`GPUSpec`)."""
+
+    __slots__ = ("space", "speed", "levels", "n_levels", "counts")
+
+    def __init__(self, space, speed: float):
+        self.space = space
+        self.speed = speed
+        # level 0 = nothing addable; level k = k-th smallest menu size is
+        # the largest still-addable slice.  Feasibility is monotone in the
+        # requirement, so "admits a job needing r" == "level >= level(r)".
+        self.levels: Dict[int, int] = {0: 0}
+        for k, s in enumerate(sorted(space.sizes)):
+            self.levels[s] = k + 1
+        self.n_levels = len(space.sizes) + 1
+        self.counts: List[List[List[int]]] = []      # [count][level] -> gids
+
+    def bucket(self, count: int, level: int) -> List[int]:
+        while count >= len(self.counts):
+            self.counts.append([[] for _ in range(self.n_levels)])
+        return self.counts[count][level]
+
+
+class FleetIndex:
+    """Per-kind (count, max-addable-slice) buckets over in-service GPUs."""
+
+    def __init__(self, sim: "ClusterSim"):
+        self.sim = sim
+        self._kinds: Dict[int, _Kind] = {}           # id(spec) -> _Kind
+        #: bumps on every membership / up-set change; the FCFS admit's
+        #: blocked-head cache keys on it (placement feasibility depends
+        #: only on resident sets and the up-set, never on elapsed time)
+        self.version = 0
+
+    # ------------------------------------------------------- maintenance
+
+    def _kind_of(self, g: "GPU") -> _Kind:
+        kd = self._kinds.get(id(g.spec))
+        if kd is None:
+            kd = self._kinds[id(g.spec)] = _Kind(g.space, g.speed_scale)
+        return kd
+
+    def _level(self, kd: _Kind, g: "GPU") -> int:
+        if g._max_add is None:                       # non-monotone menu:
+            return kd.n_levels - 1                   # never prune it away
+        return kd.levels[g._max_add]
+
+    def add(self, g: "GPU"):
+        """Insert an in-service GPU at its current (count, max_add)."""
+        kd = self._kind_of(g)
+        pos = (len(g.jobs), self._level(kd, g))
+        insort(kd.bucket(*pos), g.gid)
+        g._idx_pos = pos
+        g._in_index = True
+        self.version += 1
+
+    def remove(self, g: "GPU"):
+        """Drop a GPU (failure takes it out of service)."""
+        if not g._in_index:
+            return
+        kd = self._kind_of(g)
+        kd.bucket(*g._idx_pos).remove(g.gid)
+        g._idx_pos = None
+        g._in_index = False
+        self.version += 1
+
+    def update(self, g: "GPU"):
+        """Re-bucket after a resident-set change on an in-service GPU."""
+        kd = self._kind_of(g)
+        pos = (len(g.jobs), self._level(kd, g))
+        if pos != g._idx_pos:
+            kd.bucket(*g._idx_pos).remove(g.gid)
+            insort(kd.bucket(*pos), g.gid)
+            g._idx_pos = pos
+        self.version += 1
+
+    # ------------------------------------------------------------ queries
+
+    def first(self, pred: Callable[["GPU"], bool], job: "Job",
+              max_count: Optional[int] = None, prune: bool = True,
+              kinds: Optional[List[_Kind]] = None) -> Optional["GPU"]:
+        """First GPU in least-loaded order — (resident count, gid), merged
+        across kinds — passing ``pred``; None when nothing does.
+
+        ``max_count`` caps the resident count (None = each kind's
+        ``space.max_jobs - 1``, the default admission's cap; policies like
+        MPS-only pass their own).  ``prune=True`` skips buckets whose max
+        addable slice cannot cover ``job``'s exact slice requirement — only
+        valid when ``pred`` implies the engine's spare-slice check, i.e.
+        for the default shared-MIG admission."""
+        return self._scan(pred, job, max_count, prune, kinds, None)
+
+    def candidates(self, pred: Callable[["GPU"], bool], job: "Job",
+                   max_count: Optional[int] = None, prune: bool = True,
+                   kinds: Optional[List[_Kind]] = None) -> List["GPU"]:
+        """Every GPU :meth:`first` would consider that passes ``pred`` —
+        the policy's full candidate set, for placers that score rather than
+        take the least-loaded order (frag-aware, best-fit-slice).  Count-
+        major order, NOT the gid order ``Policy.placement_candidates``
+        returns: callers must rank with an order-independent total key."""
+        out: List["GPU"] = []
+        self._scan(pred, job, max_count, prune, kinds, out)
+        return out
+
+    def _scan(self, pred, job, max_count, prune, kinds, collect):
+        self.sim._sync_up()
+        gpus = self.sim.gpus
+        plans = []
+        cmax = -1
+        for kd in (kinds if kinds is not None else self._kinds.values()):
+            cap = kd.space.max_jobs - 1 if max_count is None else max_count
+            lvl0 = 0
+            if prune:
+                sp = kd.space
+                if sp._mem_monotone:
+                    r = sp.min_required_slice(
+                        max(job.profile.mem_gb, job.min_mem_gb),
+                        job.qos_min_slice)
+                    if r is None:
+                        continue                 # no slice of this kind fits
+                    lvl0 = kd.levels[r]
+            cap = min(cap, len(kd.counts) - 1)
+            if cap < 0:
+                continue
+            plans.append((kd, cap, lvl0))
+            if cap > cmax:
+                cmax = cap
+        for c in range(cmax + 1):
+            lists = []
+            for kd, cap, lvl0 in plans:
+                if c > cap:
+                    continue
+                for lst in kd.counts[c][lvl0:]:
+                    if lst:
+                        lists.append(lst)
+            if not lists:
+                continue
+            gids = lists[0] if len(lists) == 1 else heapq.merge(*lists)
+            for gid in gids:
+                g = gpus[gid]
+                if pred(g):
+                    if collect is None:
+                        return g
+                    collect.append(g)
+        return None
+
+    def speed_groups(self) -> List[tuple]:
+        """Distinct speed scales ascending, each with its kinds — the
+        hetero-speed placer walks them in preference order."""
+        by_speed: Dict[float, List[_Kind]] = {}
+        for kd in self._kinds.values():
+            by_speed.setdefault(kd.speed, []).append(kd)
+        return sorted(by_speed.items())

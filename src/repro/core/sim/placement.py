@@ -95,6 +95,26 @@ class Placer(ABC):
         ``candidates`` is the policy's feasible set; implementations must
         only ever return a member of it."""
 
+    def pick_for(self, job: Job, policy) -> Optional[GPU]:
+        """Entry point from ``Policy.pick_gpu``.  Default: enumerate the
+        policy's feasible GPUs through the fleet index (count-capped,
+        feasibility-level-pruned buckets instead of an O(fleet) scan) and
+        rank them with :meth:`pick` — whose ``min`` over a total key is
+        enumeration-order independent, so this is exactly
+        ``pick(job, policy.placement_candidates(job))``.  Placers that can
+        rank straight off the index order override this further; policies
+        whose candidate rule is not index-expressible fall back to the
+        materialized list."""
+        if not policy.indexable:
+            return self.pick(job, policy.placement_candidates(job))
+        return self.pick(job, self._index_candidates(job, policy))
+
+    def _index_candidates(self, job: Job, policy) -> List[GPU]:
+        max_count, prune = policy.admit_caps(job)
+        return self.sim.index.candidates(
+            lambda g: policy.admit_ok(g, job), job,
+            max_count=max_count, prune=prune)
+
     # ------------------------------------------------------ shared helpers
 
     @staticmethod
@@ -140,6 +160,16 @@ class LeastLoadedPlacer(Placer):
     def pick(self, job: Job, candidates: Sequence[GPU]) -> Optional[GPU]:
         return self.least_loaded(candidates)
 
+    def pick_for(self, job: Job, policy) -> Optional[GPU]:
+        # the index streams GPUs in exactly this placer's preference order —
+        # (resident count, gid) — so the first feasible one IS the pick; a
+        # saturated fleet costs a bucket scan, not an O(fleet) rebuild
+        if not policy.indexable:
+            return self.pick(job, policy.placement_candidates(job))
+        max_count, prune = policy.admit_caps(job)
+        return self.sim.index.first(lambda g: policy.admit_ok(g, job), job,
+                                    max_count=max_count, prune=prune)
+
 
 @register_placer
 class HeteroSpeedPlacer(Placer):
@@ -167,7 +197,40 @@ class HeteroSpeedPlacer(Placer):
         return min(gpus, key=lambda g: (sign * g.speed_scale,
                                         len(g.jobs), g.gid))
 
+    def pick_for(self, job: Job, policy) -> Optional[GPU]:
+        # walk the fleet's speed classes in this job's preference order and
+        # take the (count, gid)-first feasible GPU of the first class that
+        # has one — the same GPU ``pick`` finds by ranking the materialized
+        # list, without building it (a class whose candidates are empty
+        # costs one pruned bucket scan)
+        if not policy.indexable:
+            return self.pick(job, policy.placement_candidates(job))
+        sim = self.sim
+        max_count, prune = policy.admit_caps(job)
+        pred = lambda g: policy.admit_ok(g, job)   # noqa: E731
+        groups = sim.index.speed_groups()
+        if len(groups) > 1 and job.remaining >= self._split_point():
+            groups = groups[::-1]
+        for _, kinds in groups:
+            g = sim.index.first(pred, job, max_count=max_count,
+                                prune=prune, kinds=kinds)
+            if g is not None:
+                return g
+        return None
+
     def _split_point(self) -> float:
+        """Mean remaining work over everything in the system, O(1) from the
+        engine's incremental aggregate.  Hand-built sims that bypass the
+        arrival path (tests assigning ``sim.queue`` directly) show up as a
+        population mismatch and fall back to the exact recompute."""
+        sim = self.sim
+        agg = sim.work_agg
+        n = len(sim.queue) + sim._resident_count
+        if agg.count != n:
+            return self._split_point_exact()
+        return agg.total / n if n else 0.0
+
+    def _split_point_exact(self) -> float:
         sim = self.sim
         rem = [sim.jobs[j].remaining for j in sim.queue]
         for g in sim.gpus:

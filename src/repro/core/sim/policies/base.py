@@ -32,8 +32,9 @@ GPU's per-kind power model — into every Algorithm-1 call.
 """
 from __future__ import annotations
 
+import time
 from abc import ABC, abstractmethod
-from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Type
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple, Type
 
 from repro.core.jobs import Job, JobProfile
 from repro.core.optimizer import optimize_partition, optimize_partition_batch
@@ -81,19 +82,46 @@ class Policy(ABC):
         self.sim = sim
         self.placer = get_placer(sim.cfg.placer)(sim)
         self.objective = get_objective(sim.cfg.objective)()
+        self.indexable = self._index_exact()
+        # blocked-head cache: (head jid, index version) when the last admit
+        # stalled — feasibility depends only on resident sets and the
+        # up-set, both versioned by the fleet index, so an unchanged pair
+        # means the head still fits nowhere and the queue scan is skipped
+        self._blocked: Optional[Tuple[int, int]] = None
+
+    def _index_exact(self) -> bool:
+        """Whether ``placement_candidates`` is faithfully described by the
+        (``admit_ok``, ``admit_caps``) fleet-index contract: the class
+        providing ``placement_candidates`` must itself provide ``admit_ok``
+        (declaring the pair in sync).  A subclass that overrides the
+        candidate rule alone falls back to the materialized scan instead of
+        silently getting the base contract's candidates."""
+        for klass in type(self).__mro__:
+            if "placement_candidates" in vars(klass):
+                return klass is Policy or "admit_ok" in vars(klass)
+        return True
 
     # ------------------------------------------------------ queue discipline
 
     def admit(self):
-        """FCFS: place queue-head jobs until the head does not fit."""
+        """FCFS: place queue-head jobs until the head does not fit.  A head
+        recorded as blocked stays blocked until the fleet index version
+        moves (placement, completion, eviction, failure, repair) — FCFS
+        never looks past it, so the whole call short-circuits."""
         sim = self.sim
+        sim._sync_up()                   # repair promotions bump the version
+        if self._blocked is not None and sim.queue \
+                and self._blocked == (sim.queue[0], sim.index.version):
+            return
         while sim.queue:
             job = sim.jobs[sim.queue[0]]
             g = self.pick_gpu(job)
             if g is None:
+                self._blocked = (job.jid, sim.index.version)
                 return
             sim.queue.pop(0)
             sim.place(g, job)
+        self._blocked = None
 
     # ---------------------------------------------------------- placement
 
@@ -102,17 +130,46 @@ class Policy(ABC):
         Default: the shared-MIG admission every partitioning policy uses —
         in-service, under the space's job cap, memory-feasible and passing
         the exact spare-slice check.  Policies with different co-location
-        semantics (NoPart, MPS-only, OptSta) override *this*, not
-        ``pick_gpu``, so every placer composes with them."""
+        semantics (NoPart, MPS-only, OptSta) override *this* — together
+        with the (``admit_ok``, ``admit_caps``) index contract below — so
+        every placer composes with them."""
         sim = self.sim
         return [g for g in sim.up_gpus()
                 if len(g.jobs) < g.space.max_jobs and sim.mem_ok(g, job)
                 and sim.spare_slice_ok(g, job)]
 
+    # The same admission as a fleet-index query, so placers can enumerate
+    # feasible GPUs from the index instead of scanning the fleet: the index
+    # applies ``admit_caps`` (resident-count cap; prune=True additionally
+    # skips buckets whose max addable slice cannot cover the job — exactly
+    # the spare-slice check for memory-monotone menus) and ``admit_ok``
+    # settles whatever the buckets cannot.
+
+    def admit_ok(self, g: GPU, job: Job) -> bool:
+        """Per-GPU residue of ``placement_candidates`` once the index has
+        applied this policy's caps.  Default: the memory check, plus the
+        exact spare-slice check only where bucket pruning could not prove
+        it (non-monotone menus, ``g._max_add is None``)."""
+        sim = self.sim
+        return sim.mem_ok(g, job) and (g._max_add is not None
+                                       or sim.spare_slice_ok(g, job))
+
+    def admit_caps(self, job: Job) -> Tuple[Optional[int], bool]:
+        """(max resident count, prune by slice-requirement level) for the
+        index query.  None = each kind's ``space.max_jobs - 1``."""
+        return None, True
+
     def pick_gpu(self, job: Job) -> Optional[GPU]:
         """Choose a GPU for ``job`` (None leaves it queued): the pluggable
-        placer ranks this policy's feasible candidates."""
-        return self.placer.pick(job, self.placement_candidates(job))
+        placer ranks this policy's feasible candidates (straight off the
+        fleet index wherever the policy's rule is index-expressible)."""
+        prof = self.sim.prof
+        if prof is None:
+            return self.placer.pick_for(job, self)
+        t0 = time.perf_counter()
+        g = self.placer.pick_for(job, self)
+        prof["placement_s"] += time.perf_counter() - t0
+        return g
 
     # ------------------------------------------------------------ lifecycle
 
@@ -136,6 +193,16 @@ class Policy(ABC):
     @abstractmethod
     def on_completion(self, g: GPU, job: Job):
         """``job`` finished and was removed from ``g.jobs``."""
+
+    def on_completion_batch(self, items: Sequence[tuple]):
+        """Several jobs finished at the same simulation tick, on distinct
+        GPUs (``items`` is (gpu, job) pairs in event order; the engine
+        drains the heap for same-tick completions).  Default: sequential —
+        correct for policies whose completion reaction is local to the
+        affected GPU.  MISO-family policies override this to fuse the
+        re-optimizations into one batched Algorithm-1 pass."""
+        for g, job in items:
+            self.on_completion(g, job)
 
     # ------------------------------------------------------------ MPS model
 
@@ -199,8 +266,19 @@ class Policy(ABC):
             g.phase = IDLE
             g.partition = ()
             return
-        choice = self.choose_partition(self.partition_speeds(g, jids),
-                                       space=g.space, power=g.power)
+        prof = self.sim.prof
+        if prof is None:
+            choice = self.choose_partition(self.partition_speeds(g, jids),
+                                           space=g.space, power=g.power)
+        else:
+            t0 = time.perf_counter()
+            speeds = self.partition_speeds(g, jids)
+            t1 = time.perf_counter()
+            choice = self.choose_partition(speeds, space=g.space,
+                                           power=g.power)
+            t2 = time.perf_counter()
+            prof["estimator_s"] += t1 - t0   # oracle runs its estimator here
+            prof["alg1_s"] += t2 - t1
         self._apply_choice(g, jids, choice, overhead)
 
     def repartition_many(self, gs: Sequence[GPU], overhead: bool = False):
@@ -217,11 +295,23 @@ class Policy(ABC):
                 continue
             per_space.setdefault((id(g.space), id(g.power)),
                                  []).append((g, jids))
+        prof = self.sim.prof
         for items in per_space.values():
             g0 = items[0][0]
-            choices = self.choose_partition_batch(
-                [self.partition_speeds(g, jids) for g, jids in items],
-                space=g0.space, power=g0.power)
+            if prof is None:
+                choices = self.choose_partition_batch(
+                    [self.partition_speeds(g, jids) for g, jids in items],
+                    space=g0.space, power=g0.power)
+            else:
+                t0 = time.perf_counter()
+                speeds = [self.partition_speeds(g, jids)
+                          for g, jids in items]
+                t1 = time.perf_counter()
+                choices = self.choose_partition_batch(
+                    speeds, space=g0.space, power=g0.power)
+                t2 = time.perf_counter()
+                prof["estimator_s"] += t1 - t0
+                prof["alg1_s"] += t2 - t1
             for (g, jids), choice in zip(items, choices):
                 self._apply_choice(g, jids, choice, overhead)
 

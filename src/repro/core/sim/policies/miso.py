@@ -11,6 +11,8 @@ sweep (paper §4.3: spawned instances are not re-profiled).
 """
 from __future__ import annotations
 
+import time
+
 from repro.core.jobs import Job
 from repro.core.sim.gpu import CKPT, GPU, IDLE, MIG_RUN, MPS_PROF
 from repro.core.sim.policies.base import Policy, register_policy
@@ -60,6 +62,8 @@ class MisoPolicy(Policy):
                 self.on_phase_end(g)
             return
         mixes = {g.gid: self._mix(g) for g in prof_gs}
+        prof = self.sim.prof
+        t0 = time.perf_counter() if prof is not None else 0.0
         mats = {g.gid: self._measure(g, mixes[g.gid][1]) for g in prof_gs}
         by_est = {}
         for g in prof_gs:
@@ -71,6 +75,8 @@ class MisoPolicy(Policy):
             for g, est in zip(group,
                               group[0].estimator.estimate_batch(requests)):
                 ests[g.gid] = est
+        if prof is not None:
+            prof["estimator_s"] += time.perf_counter() - t0
         for g in gs:
             if g.phase == MPS_PROF:
                 self._store_estimates(g, mixes[g.gid][0], ests[g.gid])
@@ -85,6 +91,19 @@ class MisoPolicy(Policy):
         elif not g.jobs:
             g.phase = IDLE
             g.partition = ()
+
+    def on_completion_batch(self, items):
+        """Same-tick completions: one batched Algorithm-1 pass re-optimizes
+        every affected GPU that keeps running jobs (equivalent to the
+        per-GPU :meth:`on_completion` reactions — completions in a batch
+        land on distinct GPUs, so the reactions are independent)."""
+        repart = [g for g, _ in items if g.jobs and g.phase == MIG_RUN]
+        for g, _ in items:
+            if not g.jobs:
+                g.phase = IDLE
+                g.partition = ()
+        if repart:
+            self.repartition_many(repart, overhead=True)
 
     # ------------------------------------------------------------ profiling
 
@@ -108,8 +127,12 @@ class MisoPolicy(Policy):
 
     def measure_and_partition(self, g: GPU):
         jids, profs, qos = self._mix(g)
+        prof = self.sim.prof
+        t0 = time.perf_counter() if prof is not None else 0.0
         mps_mat = self._measure(g, profs)
         ests = g.estimator.estimate(profs, mps_mat, qos=qos)
+        if prof is not None:
+            prof["estimator_s"] += time.perf_counter() - t0
         self._store_estimates(g, jids, ests)
         self.repartition(g, overhead=True)
 

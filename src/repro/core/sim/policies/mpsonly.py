@@ -21,6 +21,14 @@ class MpsOnlyPolicy(Policy):
                 if len(g.jobs) < sim.cfg.mps_only_max_jobs
                 and sim.mem_ok(g, job)]
 
+    # index contract: the job-count cap lives in the buckets; no partitions
+    # are ever built, so slice-requirement pruning must stay off
+    def admit_ok(self, g: GPU, job: Job) -> bool:
+        return self.sim.mem_ok(g, job)
+
+    def admit_caps(self, job: Job):
+        return self.sim.cfg.mps_only_max_jobs - 1, False
+
     def on_place(self, g: GPU, job: Job):
         g.phase = MPS_PROF               # progresses at MPS speeds forever
         g.phase_end = float("inf")

@@ -18,6 +18,13 @@ class NoPartPolicy(Policy):
     def placement_candidates(self, job: Job) -> List[GPU]:
         return [g for g in self.sim.up_gpus() if not g.jobs]
 
+    # index contract: empty GPUs are exactly the count-0 buckets
+    def admit_ok(self, g: GPU, job: Job) -> bool:
+        return not g.jobs
+
+    def admit_caps(self, job: Job):
+        return 0, False
+
     def on_place(self, g: GPU, job: Job):
         g.phase = MIG_RUN
         g.partition = (g.space.full_size,)

@@ -10,6 +10,7 @@ Algorithm 1 uses), replacing the historical per-subset dict DP.
 from __future__ import annotations
 
 import itertools
+import time
 from typing import List
 
 import numpy as np
@@ -25,15 +26,19 @@ class OptStaPolicy(Policy):
     name = "optsta"
 
     def placement_candidates(self, job: Job) -> List[GPU]:
-        cands = []
-        for g in self.sim.up_gpus():
-            fits = [s for s in self._free_slices(g)
-                    if g.space.slice_mem_gb(s) >= max(job.profile.mem_gb,
-                                                      job.min_mem_gb)
-                    and s >= job.qos_min_slice]
-            if fits:
-                cands.append(g)
-        return cands
+        return [g for g in self.sim.up_gpus() if self.admit_ok(g, job)]
+
+    # index contract: feasibility is "some free fixed slice fits", checked
+    # per GPU; the static partition is not the spare-slice model, so the
+    # slice-requirement bucket pruning stays off
+    def admit_ok(self, g: GPU, job: Job) -> bool:
+        need = max(job.profile.mem_gb, job.min_mem_gb)
+        return any(g.space.slice_mem_gb(s) >= need
+                   and s >= job.qos_min_slice
+                   for s in self._free_slices(g))
+
+    def admit_caps(self, job: Job):
+        return None, False
 
     def on_place(self, g: GPU, job: Job):
         self._assign(g)
@@ -82,6 +87,8 @@ class OptStaPolicy(Policy):
         # the configured objective ranks the size-subsets (throughput's
         # first-strict-max over subset order is the historical np.argmax),
         # with each subset's watts from the GPU's own power model
+        prof = sim.prof
+        t0 = time.perf_counter() if prof is not None else 0.0
         part = tuple(sorted(sizes, reverse=True))
         subs = list(set(itertools.combinations(part, len(jids))))
         objs, perms, _ = assign_multisets(g.space, subs, speeds)
@@ -94,5 +101,7 @@ class OptStaPolicy(Policy):
         idx = self.objective.select(objs, watts,
                                     np.ones(len(subs), dtype=bool))
         best_perm = perms[idx]
+        if prof is not None:
+            prof["alg1_s"] += time.perf_counter() - t0
         for jid, size in zip(jids, best_perm):
             g.jobs[jid].slice_size = int(size)

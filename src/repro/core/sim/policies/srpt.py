@@ -32,11 +32,22 @@ class SrptPolicy(MisoPolicy):
         self._evicted: Dict[int, int] = {}       # jid -> times preempted
         # keyed (jid, space name): estimates only transfer within a kind
         self._known_profiles: Dict[tuple, Dict[int, float]] = {}
+        # blocked-queue cache, same idea as the FCFS blocked-head cache but
+        # over the whole scan: with an unchanged (index version, queue
+        # length) nothing that could unblock any queued job has happened —
+        # queue edits other than arrivals all bump the version, arrivals
+        # change the length, and the preemption condition only *degrades*
+        # as victims progress (remaining work shrinks monotonically)
+        self._stalled = None
 
     # ------------------------------------------------------ queue discipline
 
     def admit(self):
         sim = self.sim
+        sim._sync_up()
+        if self._stalled is not None and \
+                self._stalled == (sim.index.version, len(sim.queue)):
+            return
         while sim.queue:
             order = sorted(sim.queue,
                            key=lambda j: (sim.jobs[j].remaining, j))
@@ -48,7 +59,9 @@ class SrptPolicy(MisoPolicy):
                     break
             else:
                 if not self._try_preempt(sim.jobs[order[0]]):
+                    self._stalled = (sim.index.version, len(sim.queue))
                     return
+        self._stalled = None
 
     def _try_preempt(self, job: Job) -> bool:
         """Evict the largest-remaining running job whose departure actually
@@ -84,7 +97,7 @@ class SrptPolicy(MisoPolicy):
     def _evict(self, g: GPU, victim: Job):
         sim = self.sim
         g.advance(sim.t)
-        del g.jobs[victim.jid]
+        sim.remove_resident(g, victim.jid)   # keeps the fleet index in sync
         est = g.estimates.pop(victim.jid, None)
         if est is not None:
             self._known_profiles[(victim.jid, g.space.name)] = est
@@ -117,7 +130,15 @@ class SrptPolicy(MisoPolicy):
             self._known_profiles[(jid, g.space.name)] = est
 
     def on_completion(self, g: GPU, job: Job):
+        self._forget(job)
+        super().on_completion(g, job)
+
+    def on_completion_batch(self, items):
+        for _, job in items:
+            self._forget(job)
+        super().on_completion_batch(items)
+
+    def _forget(self, job: Job):
         for key in [k for k in self._known_profiles if k[0] == job.jid]:
             del self._known_profiles[key]
         self._evicted.pop(job.jid, None)
-        super().on_completion(g, job)

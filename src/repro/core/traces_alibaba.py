@@ -1,0 +1,297 @@
+"""Alibaba ``cluster-trace-gpu-v2020`` replay: CSV loader + synthetic twin.
+
+The PAI trace (https://github.com/alibaba/clusterdata, ``cluster-trace-gpu
+-v2020``) records ~100K GPU jobs over two months on a ~6,500-GPU production
+cluster — the workload the fragmentation-aware MIG scheduling line of work
+(PAPERS.md: Ting et al.; Zambianco et al.) evaluates against, and the one
+the related litosly repo drives at full scale.  This module maps its rows
+onto the simulator's :class:`~repro.core.jobs.Job` model so every policy /
+placer / objective in the registry can be replayed against production-shaped
+load:
+
+* **submission time** — the trace's ``start_time`` column (seconds; the
+  public per-job file does not carry a separate submit column, so queueing
+  inside the original cluster is not replayed — our simulator re-queues
+  under its own schedulers).  An optional 11th ``submit_time`` column wins
+  when present.  Times are normalized so the first kept row arrives at 0.
+* **work** — ``(end_time - start_time) * min(plan_gpu/100, 1)``: the wall
+  duration scaled by the requested GPU share, i.e. seconds of *exclusive
+  full-GPU* execution, which is what ``Job.work`` means.  Zero/negative
+  durations (unfinished rows, clock skew) are dropped and counted.
+* **QoS tier** — ``plan_gpu`` (percent of a GPU, 25/50/100/200...) maps to
+  the smallest slice covering that compute share; latency-ish task classes
+  (``chief`` / ``evaluator`` / ``ps``) carry a slice floor on top.  Shares
+  above 100% either clamp to the full slice (default) or reject with a
+  clear error (``oversize="error"``).
+* **workload profile** — the trace has no model identity, so each job draws
+  a pool profile (:data:`repro.core.jobs.WORKLOADS`) by a deterministic
+  hash of its ``job_name``: stable across runs, processes and machines.
+* **instances** — ``inst_num`` expands into co-scheduled clones sharing an
+  ``mi_group`` (capped: the trace's CPU-worker counts reach the hundreds).
+
+:func:`synthesize_alibaba_trace` bootstraps the committed sample's joint
+(duration, gpu-share, task-class, instance-count) rows and its empirical
+inter-arrival distribution into arbitrarily long traces with the same
+shape — the offline stand-in for the real CSV (which is too large to
+commit) and the load generator for the engine scaling benchmark.
+"""
+from __future__ import annotations
+
+import csv
+import hashlib
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.jobs import Job, JobProfile, WORKLOADS
+from repro.core.partitions import PartitionSpace, a100_mig_space
+from repro.core.traces import expand_multi_instance
+
+#: the public per-job schema of ``pai_job_duration_estimate_100K.csv``-style
+#: exports (litosly / related work); an optional trailing ``submit_time``
+#: column is honored when present.
+ALIBABA_COLUMNS = ("job_name", "task_name", "inst_num", "status",
+                   "start_time", "end_time", "plan_cpu", "plan_mem",
+                   "plan_gpu", "gpu_type")
+
+#: slice floors by task class: coordination/serving roles need
+#: responsiveness, so they carry a QoS floor beyond their compute share
+TASK_QOS_FLOOR = {"chief": 2, "evaluator": 2, "ps": 1}
+
+#: committed ~200-row sample (see ``tools/make_alibaba_sample.py``)
+SAMPLE_CSV = os.path.join(os.path.dirname(__file__), "..", "data",
+                          "alibaba_v2020_sample.csv")
+
+_INSTANCE_CAP = 4          # trace inst_num counts CPU workers, often 100s
+_MIN_WORK_S = 1.0
+
+
+@dataclass
+class TraceStats:
+    """Row accounting for one :func:`load_alibaba_trace` pass."""
+    rows_total: int = 0            # data rows seen (header excluded)
+    rows_used: int = 0             # rows that became jobs
+    rows_malformed: int = 0        # short rows / unparseable numbers
+    rows_zero_duration: int = 0    # end <= start (unfinished / skewed)
+    rows_no_gpu: int = 0           # plan_gpu missing or 0 (CPU-only)
+    rows_clamped: int = 0          # plan_gpu > 100 clamped to the full slice
+    t0: float = 0.0                # raw submit time mapped to arrival 0
+    span_s: float = 0.0            # arrival span of the kept rows
+
+
+@dataclass(frozen=True)
+class TraceRow:
+    """One parsed trace row (before the Job mapping)."""
+    job_name: str
+    task_name: str
+    inst_num: int
+    status: str
+    submit: float                  # raw trace time (seconds)
+    duration: float                # end - start wall seconds
+    gpu_share: float               # plan_gpu / 100 (1.0 = one full GPU)
+    gpu_type: str
+
+
+def _det_index(key: str, n: int) -> int:
+    """Deterministic ``job_name -> [0, n)`` (stable across processes;
+    ``hash()`` is salted per interpreter and must not leak into traces)."""
+    h = hashlib.sha256(key.encode()).digest()
+    return int.from_bytes(h[:8], "big") % n
+
+
+def parse_alibaba_csv(path: str, *, strict: bool = False
+                      ) -> Tuple[List[TraceRow], TraceStats]:
+    """Parse the CSV into :class:`TraceRow` records + accounting.
+
+    Malformed rows (too few columns, unparseable numbers) are skipped and
+    counted unless ``strict=True``, which raises with the offending line
+    number.  Zero/negative-duration and GPU-less rows are dropped and
+    counted; rows are **not** yet time-sorted (the trace interleaves
+    out-of-order submissions; :func:`load_alibaba_trace` sorts)."""
+    rows: List[TraceRow] = []
+    stats = TraceStats()
+    with open(path, newline="") as f:
+        for lineno, rec in enumerate(csv.reader(f), start=1):
+            if not rec or (lineno == 1 and rec[0].strip() == "job_name"):
+                continue                       # blank line / header
+            stats.rows_total += 1
+            try:
+                if len(rec) < len(ALIBABA_COLUMNS):
+                    raise ValueError(f"{len(rec)} columns, "
+                                     f"need {len(ALIBABA_COLUMNS)}")
+                start = float(rec[4])
+                end = float(rec[5])
+                plan_gpu = float(rec[8]) if rec[8].strip() else 0.0
+                inst = int(float(rec[2])) if rec[2].strip() else 1
+                submit = float(rec[10]) if len(rec) > 10 and rec[10].strip() \
+                    else start
+            except ValueError as e:
+                if strict:
+                    raise ValueError(
+                        f"{path}:{lineno}: malformed trace row {rec!r} "
+                        f"({e})") from None
+                stats.rows_malformed += 1
+                continue
+            if end <= start:
+                stats.rows_zero_duration += 1
+                continue
+            if plan_gpu <= 0.0:
+                stats.rows_no_gpu += 1
+                continue
+            rows.append(TraceRow(
+                job_name=rec[0].strip(), task_name=rec[1].strip().lower(),
+                inst_num=max(1, inst), status=rec[3].strip(),
+                submit=submit, duration=end - start,
+                gpu_share=plan_gpu / 100.0, gpu_type=rec[9].strip()))
+    return rows, stats
+
+
+def _qos_for(space: PartitionSpace, gpu_share: float, task_name: str) -> int:
+    """Smallest slice covering the requested compute share, lifted by the
+    task-class floor.  ``gpu_share`` is pre-capped at 1.0 by the caller."""
+    qos = 0
+    for size in sorted(space.sizes):
+        if space.compute_frac(size) >= gpu_share:
+            qos = size
+            break
+    else:                                     # pragma: no cover - cap'd
+        qos = space.full_size
+    floor = TASK_QOS_FLOOR.get(task_name, 0)
+    if floor and floor in space.slices:
+        qos = max(qos, floor)
+    return qos
+
+
+def rows_to_jobs(rows: Sequence[TraceRow], *,
+                 space: Optional[PartitionSpace] = None,
+                 pool: Optional[Sequence[JobProfile]] = None,
+                 oversize: str = "clamp",
+                 max_duration_s: Optional[float] = None,
+                 stats: Optional[TraceStats] = None) -> List[Job]:
+    """Map parsed rows (already time-ordered, arrivals relative to 0) onto
+    simulator Jobs; shared by the CSV loader and the synthetic generator.
+
+    ``oversize`` controls ``plan_gpu > 100`` (multi-GPU requests, which no
+    MIG slice can serve): ``"clamp"`` caps the request at the full slice,
+    ``"error"`` raises with the row identity."""
+    if oversize not in ("clamp", "error"):
+        raise ValueError(f"oversize={oversize!r}: expected 'clamp' or "
+                         f"'error'")
+    space = space or a100_mig_space()
+    pool = list(pool or WORKLOADS)
+    jobs: List[Job] = []
+    for i, r in enumerate(rows):
+        share = r.gpu_share
+        if share > 1.0:
+            if oversize == "error":
+                raise ValueError(
+                    f"job {r.job_name!r}: plan_gpu={share * 100:.0f}% "
+                    f"exceeds the largest MIG slice "
+                    f"({space.full_size}g = 100%); pass oversize='clamp' "
+                    f"to cap multi-GPU requests at one full slice")
+            share = 1.0
+            if stats is not None:
+                stats.rows_clamped += 1
+        duration = r.duration
+        if max_duration_s is not None:
+            duration = min(duration, max_duration_s)
+        prof = pool[_det_index(r.job_name, len(pool))]
+        jobs.append(Job(
+            jid=i, profile=prof, arrival=r.submit,
+            work=max(_MIN_WORK_S, duration * share),
+            qos_min_slice=_qos_for(space, share, r.task_name),
+            n_instances=min(r.inst_num, _INSTANCE_CAP)))
+    return expand_multi_instance(jobs)
+
+
+def load_alibaba_trace(path: str = SAMPLE_CSV, *,
+                       limit_jobs: Optional[int] = None,
+                       t_start: Optional[float] = None,
+                       t_end: Optional[float] = None,
+                       space: Optional[PartitionSpace] = None,
+                       pool: Optional[Sequence[JobProfile]] = None,
+                       oversize: str = "clamp", strict: bool = False,
+                       max_duration_s: Optional[float] = None,
+                       stats_out: Optional[TraceStats] = None) -> List[Job]:
+    """Load an Alibaba v2020 CSV as a replayable job trace.
+
+    Rows are sorted by submission time (the raw trace interleaves
+    out-of-order submissions) and normalized so the first kept row arrives
+    at t=0.  ``t_start`` / ``t_end`` slice a window *after* normalization
+    (window jobs are re-based to arrive at ``t - t_start``); ``limit_jobs``
+    then keeps the first N of the slice — both deterministic, so two loads
+    of the same window are identical.  Pass ``stats_out`` (a fresh
+    :class:`TraceStats`) to receive the row accounting."""
+    rows, stats = parse_alibaba_csv(path, strict=strict)
+    rows.sort(key=lambda r: (r.submit, r.job_name, r.task_name))
+    if rows:
+        t0 = rows[0].submit
+        stats.t0 = t0
+        rows = [TraceRow(r.job_name, r.task_name, r.inst_num, r.status,
+                         r.submit - t0, r.duration, r.gpu_share, r.gpu_type)
+                for r in rows]
+    if t_start is not None or t_end is not None:
+        lo = t_start or 0.0
+        hi = t_end if t_end is not None else float("inf")
+        rows = [TraceRow(r.job_name, r.task_name, r.inst_num, r.status,
+                         r.submit - lo, r.duration, r.gpu_share, r.gpu_type)
+                for r in rows if lo <= r.submit < hi]
+    if limit_jobs is not None:
+        rows = rows[:limit_jobs]
+    stats.rows_used = len(rows)
+    stats.span_s = rows[-1].submit - rows[0].submit if len(rows) > 1 else 0.0
+    jobs = rows_to_jobs(rows, space=space, pool=pool, oversize=oversize,
+                        max_duration_s=max_duration_s, stats=stats)
+    if stats_out is not None:
+        stats_out.__dict__.update(stats.__dict__)
+    return jobs
+
+
+# ------------------------------------------------------------- synthesis
+
+
+def synthesize_alibaba_trace(n_jobs: int, *, seed: int = 0,
+                             sample_path: str = SAMPLE_CSV,
+                             load_scale: float = 1.0,
+                             space: Optional[PartitionSpace] = None,
+                             pool: Optional[Sequence[JobProfile]] = None,
+                             max_duration_s: Optional[float] = None
+                             ) -> List[Job]:
+    """Synthetic trace with the sample's empirical distributions.
+
+    Bootstraps whole rows — the joint (duration, gpu-share, task-class,
+    instance-count) tuple is resampled together, preserving the trace's
+    correlations (big requests run longer) — and draws inter-arrivals from
+    the sample's empirical gaps, scaled down by ``load_scale`` (2.0 = twice
+    the arrival rate; scale it with fleet size to keep utilization
+    constant).  Seeded and deterministic; shares the row->Job mapping with
+    the CSV loader, so QoS / oversize / instance semantics are identical."""
+    if n_jobs <= 0:
+        return []
+    if load_scale <= 0:
+        raise ValueError(f"load_scale must be > 0, got {load_scale}")
+    base, _ = parse_alibaba_csv(sample_path)
+    if not base:
+        raise ValueError(f"{sample_path}: no usable rows to bootstrap from")
+    base.sort(key=lambda r: (r.submit, r.job_name, r.task_name))
+    submits = np.asarray([r.submit for r in base], dtype=float)
+    iats = np.diff(submits)
+    iats = iats[iats > 0]
+    if iats.size == 0:
+        iats = np.asarray([1.0])
+    rng = np.random.default_rng((seed, 0xA11BABA))
+    picks = rng.integers(0, len(base), size=n_jobs)
+    gaps = rng.choice(iats, size=n_jobs) / load_scale
+    arrivals = np.cumsum(gaps) - gaps[0]          # first arrival at 0
+    rows = [TraceRow(job_name=f"synth-{seed}-{i}",
+                     task_name=base[k].task_name,
+                     inst_num=base[k].inst_num, status="Synthesized",
+                     submit=float(arrivals[i]),
+                     duration=base[k].duration,
+                     gpu_share=base[k].gpu_share,
+                     gpu_type=base[k].gpu_type)
+            for i, k in enumerate(picks)]
+    return rows_to_jobs(rows, space=space, pool=pool, oversize="clamp",
+                        max_duration_s=max_duration_s)

@@ -86,11 +86,33 @@ def run_task(task: Dict) -> Dict:
     cfg_kwargs = dict(sc.sim_kwargs)     # scenario-bundled SimConfig knobs
     if task.get("mtbf") is not None:     # explicit --mtbf wins, 0 included
         cfg_kwargs["gpu_mtbf_s"] = task["mtbf"]
+    profile = bool(task.get("profile"))
     cfg = SimConfig(n_gpus=len(fleet), policy=task["policy"],
                     placer=placer, objective=objective, seed=task["seed"],
-                    **cfg_kwargs)
-    m = simulate(jobs, cfg, fleet=fleet)
-    return {
+                    profile=profile, **cfg_kwargs)
+    if profile:
+        # keep the engine object to read its per-component clock buckets
+        import copy
+
+        from repro.core.simulator import ClusterSim
+        sim = ClusterSim(copy.deepcopy(jobs), cfg, fleet=fleet)
+        m = sim.run()
+        p = sim.prof
+        prof_out = {
+            "placement_s": p["placement_s"],
+            "alg1_s": p["alg1_s"],
+            "estimator_s": p["estimator_s"],
+            # everything else the run loop did: heap churn, accounting,
+            # phase bookkeeping
+            "event_loop_s": max(0.0, p["total_s"] - p["placement_s"]
+                                - p["alg1_s"] - p["estimator_s"]),
+            "total_s": p["total_s"],
+            "events": int(p["events"]),
+        }
+    else:
+        m = simulate(jobs, cfg, fleet=fleet)
+        prof_out = None
+    out = {
         "policy": task["policy"],
         "placer": placer,
         "objective": objective,
@@ -113,6 +135,9 @@ def run_task(task: Dict) -> Dict:
         },
         "wall_s": time.time() - t0,
     }
+    if prof_out is not None:
+        out["profile"] = prof_out
+    return out
 
 
 def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
@@ -120,13 +145,17 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
               objectives: Optional[Sequence[str]] = None,
               fleet: Optional[str] = None,
               n_jobs: Optional[int] = None, mtbf: Optional[float] = None,
-              workers: Optional[int] = None, serial: bool = False) -> Dict:
+              workers: Optional[int] = None, serial: bool = False,
+              profile: bool = False) -> Dict:
     """Run the full grid and return the JSON-ready report dict.
 
     ``placers=None`` / ``objectives=None`` run each scenario's own default;
-    an explicit list crosses it with every (policy, scenario, seed) cell."""
+    an explicit list crosses it with every (policy, scenario, seed) cell.
+    ``profile=True`` attaches per-component wall-clock (placement /
+    Algorithm-1 / estimator / event loop) to every result."""
     tasks = [{"policy": p, "placer": pl, "objective": ob, "scenario": sc,
-              "seed": s, "fleet": fleet, "n_jobs": n_jobs, "mtbf": mtbf}
+              "seed": s, "fleet": fleet, "n_jobs": n_jobs, "mtbf": mtbf,
+              "profile": profile}
              for sc in scenarios for p in policies
              for pl in (placers or [None])
              for ob in (objectives or [None]) for s in seeds]
@@ -211,6 +240,17 @@ def _print_summary(report: Dict) -> None:
                           f"  p90 {agg['p90_jct_s_mean']:>9,.0f}s"
                           f"  stp {agg['stp_mean']:.3f}"
                           f"  energy {agg['energy_j_mean'] / 1e6:>7.2f}MJ")
+    profiled = [r for r in report["results"] if r.get("profile")]
+    if profiled:
+        tot = {k: sum(r["profile"][k] for r in profiled)
+               for k in ("placement_s", "alg1_s", "estimator_s",
+                         "event_loop_s", "total_s")}
+        n_ev = sum(r["profile"]["events"] for r in profiled)
+        print(f"[sweep] profile: total {tot['total_s']:.2f}s over "
+              f"{n_ev:,} events — placement {tot['placement_s']:.2f}s, "
+              f"Algorithm-1 {tot['alg1_s']:.2f}s, estimator "
+              f"{tot['estimator_s']:.2f}s, event loop "
+              f"{tot['event_loop_s']:.2f}s")
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -246,6 +286,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="worker processes (default: min(cells, cpus))")
     ap.add_argument("--serial", action="store_true",
                     help="run in-process, no worker pool")
+    ap.add_argument("--profile", action="store_true",
+                    help="attach per-component wall-clock (placement, "
+                         "Algorithm-1, estimator, event loop) to every "
+                         "result and print the totals")
     ap.add_argument("--out", default="BENCH_sweep.json",
                     help="JSON report path")
     return ap
@@ -277,7 +321,7 @@ def main(argv=None) -> int:
                        placers=placers, objectives=objectives,
                        fleet=args.fleet, n_jobs=args.jobs,
                        mtbf=args.mtbf, workers=args.workers,
-                       serial=args.serial)
+                       serial=args.serial, profile=args.profile)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1, sort_keys=False)
         f.write("\n")

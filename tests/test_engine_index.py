@@ -1,0 +1,204 @@
+"""The indexed placement hot path: the fleet index, the cached up-set, the
+max-addable-slice fast path and the remaining-work aggregate must be exact
+accelerations — every answer identical to the O(fleet)/O(jobs) recompute
+they replaced."""
+import numpy as np
+import pytest
+
+from repro.core.estimators import OracleEstimator
+from repro.core.jobs import Job, WORKLOADS
+from repro.core.partitions import a100_mig_space
+from repro.core.perfmodel import PerfModel
+from repro.core.simulator import ClusterSim, SimConfig
+from repro.core.traces import generate_trace
+
+SPACE = a100_mig_space()
+PM = PerfModel(SPACE)
+EST = OracleEstimator(PM)
+
+
+def _sim(jobs, **kw):
+    import copy
+    cfg = SimConfig(**kw)
+    return ClusterSim(copy.deepcopy(jobs), cfg, SPACE, PM, EST)
+
+
+# --------------------------------------------------------- up-set caching
+
+
+def test_up_gpus_cache_matches_recompute_under_rack_outages():
+    """The cached up-set must equal the brute-force recompute at every
+    admission decision while racks fail and repair around it."""
+    jobs = generate_trace(30, lam_s=15.0, seed=9, max_duration_s=900)
+    sim = _sim(jobs, n_gpus=8, policy="miso", rack_size=2,
+               rack_mtbf_s=1200.0, repair_s=180.0, ckpt_interval_s=300.0,
+               seed=3)
+    mismatches = []
+    orig_admit = sim.policy.admit
+
+    def checked_admit():
+        got = {g.gid for g in sim.up_gpus()}
+        want = {g.gid for g in sim.gpus if sim.t >= g.down_until}
+        if got != want:
+            mismatches.append((sim.t, got, want))
+        orig_admit()
+
+    sim.policy.admit = checked_admit
+    m = sim.run()
+    assert not mismatches
+    assert len(m.jcts) == len(jobs)
+    # the scenario actually exercised outages: someone was down at some point
+    assert any(g.down_until > 0 for g in sim.gpus)
+
+
+def test_up_gpus_reflects_failure_and_repair_immediately():
+    jobs = [Job(jid=0, profile=WORKLOADS[0], arrival=0.0, work=600.0)]
+    sim = _sim(jobs, n_gpus=2, policy="miso", repair_s=120.0)
+    assert {g.gid for g in sim.up_gpus()} == {0, 1}
+    sim._on_failure(sim.gpus[0])
+    assert {g.gid for g in sim.up_gpus()} == {1}
+    assert not sim.gpus[0]._in_index
+    sim.t = sim.gpus[0].down_until          # repair boundary reached
+    assert {g.gid for g in sim.up_gpus()} == {0, 1}
+    assert sim.gpus[0]._in_index
+
+
+def test_refailure_while_down_leaves_stale_heap_entry_harmless():
+    jobs = [Job(jid=0, profile=WORKLOADS[0], arrival=0.0, work=600.0)]
+    sim = _sim(jobs, n_gpus=1, policy="miso", repair_s=100.0)
+    g = sim.gpus[0]
+    sim._on_failure(g)
+    first_up = g.down_until
+    sim.t = 50.0
+    sim._on_failure(g)                       # failed again while down
+    assert g.down_until == 150.0
+    sim.t = first_up                         # stale entry expires: still down
+    assert sim.up_gpus() == []
+    sim.t = g.down_until
+    assert [x.gid for x in sim.up_gpus()] == [0]
+
+
+# ---------------------------------------------- max-addable-slice fast path
+
+
+def _states(seed, n_jobs=24, n_gpus=3):
+    """Yield mid-trace GPU states by snapshotting a real run."""
+    jobs = generate_trace(n_jobs, lam_s=10.0, seed=seed, max_duration_s=900,
+                          qos_frac=0.3, mem_constraint_frac=0.3)
+    sim = _sim(jobs, n_gpus=n_gpus, policy="miso")
+    sim.run()
+    return sim
+
+
+def test_max_add_equals_exact_spare_slice_check():
+    """``min_required_slice(job) <= _max_add`` must agree with the exact
+    ``spare_slice_ok`` for every (GPU state, probe job) pair the shipped
+    memory-monotone menu can produce."""
+    sim = _states(seed=2)
+    probes = generate_trace(12, lam_s=1.0, seed=5, qos_frac=0.5,
+                            mem_constraint_frac=0.5)
+    for g in sim.gpus:
+        sim._refresh_feas(g)
+        assert g._max_add is not None        # a100 menu is memory-monotone
+        for job in probes:
+            r = SPACE.min_required_slice(
+                max(job.profile.mem_gb, job.min_mem_gb), job.qos_min_slice)
+            fast = r is not None and r <= g._max_add \
+                and len(g.jobs) < SPACE.max_jobs
+            slow = len(g.jobs) < SPACE.max_jobs and sim.spare_slice_ok(g, job)
+            assert fast == slow, (g.gid, dict(g.jobs), job.jid, r, g._max_add)
+
+
+def test_index_buckets_track_resident_sets_through_a_run():
+    """After a full run the index's buckets must hold exactly the in-service
+    GPUs at their true (count, level) positions."""
+    sim = _states(seed=4)
+    seen = set()
+    for kd in sim.index._kinds.values():
+        for count, by_level in enumerate(kd.counts):
+            for level, gids in enumerate(by_level):
+                for gid in gids:
+                    g = sim.gpus[gid]
+                    assert g._in_index
+                    assert len(g.jobs) == count
+                    assert g._idx_pos == (count, level)
+                    assert sim.index._level(kd, g) == level
+                    seen.add(gid)
+    assert seen == {g.gid for g in sim.gpus if g._in_index}
+
+
+# -------------------------------------------------- remaining-work aggregate
+
+
+def test_work_aggregate_tracks_exact_remaining_sum():
+    """The Kahan aggregate must match the exact queue+resident remaining-work
+    sum at every admission decision of a churny trace."""
+    jobs = generate_trace(40, lam_s=8.0, seed=11, max_duration_s=600)
+    sim = _sim(jobs, n_gpus=3, policy="miso", gpu_mtbf_s=1500.0,
+               repair_s=120.0, seed=7)
+    worst = [0.0]
+    orig_admit = sim.policy.admit
+
+    def checked_admit():
+        for g in sim.gpus:
+            g.advance(sim.t)                 # settle progress integration
+        exact = sum(sim.jobs[j].remaining for j in sim.queue) + sum(
+            rj.job.remaining for g in sim.gpus for rj in g.jobs.values())
+        n = len(sim.queue) + sim._resident_count
+        assert sim.work_agg.count == n
+        worst[0] = max(worst[0], abs(sim.work_agg.total - exact))
+        orig_admit()
+
+    sim.policy.admit = checked_admit
+    m = sim.run()
+    assert len(m.jcts) == len(jobs)
+    assert worst[0] < 1e-6 * max(1.0, sum(j.work for j in jobs))
+
+
+def test_split_point_falls_back_on_hand_built_queue():
+    """Tests (and tools) assign ``sim.queue`` directly without the arrival
+    hook; the O(1) split point must detect the count mismatch and recompute
+    exactly."""
+    from repro.core.sim.placement import get_placer
+    jobs = [Job(jid=i, profile=WORKLOADS[0], arrival=0.0, work=100.0 * (i + 1))
+            for i in range(3)]
+    sim = _sim(jobs, n_gpus=2, policy="miso", placer="hetero-speed")
+    sim.queue = [0, 1, 2]                    # bypasses _enqueue on purpose
+    placer = sim.policy.placer
+    assert sim.work_agg.count == 0           # aggregate never saw them
+    assert placer._split_point() == pytest.approx((100 + 200 + 300) / 3)
+
+
+# ------------------------------------------------- index == materialized
+
+
+@pytest.mark.parametrize("policy", ["miso", "nopart", "mpsonly", "srpt"])
+@pytest.mark.parametrize("placer", ["least-loaded", "frag-aware",
+                                    "best-fit-slice"])
+def test_indexed_placement_equals_materialized_scan(policy, placer):
+    """Forcing the fallback (materialized placement_candidates scan) must
+    reproduce the indexed run decision-for-decision."""
+    jobs = generate_trace(25, lam_s=12.0, seed=6, max_duration_s=900,
+                          qos_frac=0.25, mem_constraint_frac=0.25)
+    fast = _sim(jobs, n_gpus=4, policy=policy, placer=placer)
+    slow = _sim(jobs, n_gpus=4, policy=policy, placer=placer)
+    assert fast.policy.indexable
+    slow.policy.indexable = False            # force the legacy scan
+    mf, ms = fast.run(), slow.run()
+    assert mf.jcts == ms.jcts
+    assert mf.avg_jct == ms.avg_jct
+    assert fast.completed == slow.completed
+
+
+def test_same_tick_arrival_burst_places_like_sequential_fcfs():
+    """A burst of identical-timestamp arrivals (integer trace seconds) must
+    admit exactly as back-to-back single arrivals would under FCFS."""
+    prof = WORKLOADS[0]
+    burst = [Job(jid=i, profile=prof, arrival=100.0, work=300.0 + 10 * i)
+             for i in range(6)]
+    spread = [Job(jid=i, profile=prof, arrival=100.0 + 1e-7 * i,
+                  work=300.0 + 10 * i) for i in range(6)]
+    mb = _sim(burst, n_gpus=2, policy="miso").run()
+    msp = _sim(spread, n_gpus=2, policy="miso").run()
+    assert len(mb.jcts) == len(burst)
+    assert mb.avg_jct == pytest.approx(msp.avg_jct, rel=1e-6)

@@ -1,0 +1,171 @@
+"""Alibaba trace loader: row accounting, QoS mapping, window determinism,
+oversize handling and the synthetic twin's distributions."""
+import pytest
+
+from repro.core import traces_alibaba as ta
+from repro.core.partitions import a100_mig_space
+
+SPACE = a100_mig_space()
+
+HEADER = ("job_name,task_name,inst_num,status,start_time,end_time,"
+          "plan_cpu,plan_mem,plan_gpu,gpu_type\n")
+
+
+def _write(tmp_path, rows, header=HEADER):
+    p = tmp_path / "trace.csv"
+    p.write_text(header + "".join(r + "\n" for r in rows))
+    return str(p)
+
+
+def test_sample_csv_loads_and_accounts(tmp_path):
+    stats = ta.TraceStats()
+    jobs = ta.load_alibaba_trace(stats_out=stats)
+    assert jobs, "committed sample must yield jobs"
+    assert stats.rows_total == (stats.rows_used + stats.rows_malformed
+                                + stats.rows_zero_duration
+                                + stats.rows_no_gpu)
+    assert jobs[0].arrival == 0.0                      # normalized to t=0
+    assert all(j.work >= ta._MIN_WORK_S for j in jobs)
+    assert all(j.qos_min_slice in (0,) + SPACE.sizes for j in jobs)
+
+
+def test_malformed_short_and_unparseable_rows_counted(tmp_path):
+    path = _write(tmp_path, [
+        "a,worker,1,Terminated,0,100,600,29,50,V100",
+        "b,worker,1,Terminated",                    # short row
+        "c,worker,1,Terminated,zero,100,600,29,50,V100",  # bad number
+        "d,worker,1,Terminated,10,110,600,29,25,V100",
+    ])
+    stats = ta.TraceStats()
+    jobs = ta.load_alibaba_trace(path, stats_out=stats)
+    assert stats.rows_malformed == 2
+    assert stats.rows_used == 2
+    assert len(jobs) == 2
+
+
+def test_strict_raises_with_line_number(tmp_path):
+    path = _write(tmp_path, [
+        "a,worker,1,Terminated,0,100,600,29,50,V100",
+        "b,worker,1,Terminated",
+    ])
+    with pytest.raises(ValueError, match=r"trace\.csv:3: malformed"):
+        ta.load_alibaba_trace(path, strict=True)
+
+
+def test_zero_duration_and_cpu_only_rows_dropped(tmp_path):
+    path = _write(tmp_path, [
+        "a,worker,1,Terminated,100,100,600,29,50,V100",   # end == start
+        "b,worker,1,Failed,100,90,600,29,50,V100",        # end < start
+        "c,worker,1,Terminated,0,50,600,29,0,CPU",        # no GPU
+        "d,worker,1,Terminated,0,50,600,29,,CPU",         # blank plan_gpu
+        "e,worker,1,Terminated,0,100,600,29,100,V100",
+    ])
+    stats = ta.TraceStats()
+    jobs = ta.load_alibaba_trace(path, stats_out=stats)
+    assert stats.rows_zero_duration == 2
+    assert stats.rows_no_gpu == 2
+    assert len(jobs) == 1 and jobs[0].work == pytest.approx(100.0)
+
+
+def test_out_of_order_submissions_sorted_and_rebased(tmp_path):
+    path = _write(tmp_path, [
+        "late,worker,1,Terminated,500,600,600,29,50,V100",
+        "early,worker,1,Terminated,100,400,600,29,50,V100",
+        "mid,worker,1,Terminated,300,350,600,29,50,V100",
+    ])
+    stats = ta.TraceStats()
+    jobs = ta.load_alibaba_trace(path, stats_out=stats)
+    arrivals = [j.arrival for j in jobs]
+    assert arrivals == sorted(arrivals)
+    assert arrivals[0] == 0.0 and stats.t0 == 100.0
+    assert arrivals == [0.0, 200.0, 400.0]
+
+
+def test_oversize_clamps_by_default_and_rejects_on_error(tmp_path):
+    path = _write(tmp_path, [
+        "big,worker,1,Terminated,0,100,600,29,200,V100",  # 2 GPUs
+    ])
+    stats = ta.TraceStats()
+    jobs = ta.load_alibaba_trace(path, stats_out=stats)
+    assert stats.rows_clamped == 1
+    # work = duration * min(share, 1): clamped to one full GPU
+    assert jobs[0].work == pytest.approx(100.0)
+    assert jobs[0].qos_min_slice == SPACE.full_size
+    with pytest.raises(ValueError, match="plan_gpu=200%"):
+        ta.load_alibaba_trace(path, oversize="error")
+    with pytest.raises(ValueError, match="oversize"):
+        ta.load_alibaba_trace(path, oversize="maybe")
+
+
+def test_qos_mapping_share_and_task_floor(tmp_path):
+    path = _write(tmp_path, [
+        "tiny,worker,1,Terminated,0,100,600,29,10,V100",
+        "half,worker,1,Terminated,1,100,600,29,50,V100",
+        "coord,chief,1,Terminated,2,100,600,29,10,V100",
+        "param,ps,1,Terminated,3,100,600,29,10,V100",
+    ])
+    jobs = ta.load_alibaba_trace(path)
+    tiny, half, coord, param = jobs
+    assert tiny.qos_min_slice == min(SPACE.sizes)
+    # 50% share -> smallest slice with compute_frac >= 0.5
+    assert SPACE.compute_frac(half.qos_min_slice) >= 0.5
+    # chief floor lifts a tiny request to a 2-slice
+    assert coord.qos_min_slice >= ta.TASK_QOS_FLOOR["chief"]
+    assert param.qos_min_slice >= ta.TASK_QOS_FLOOR["ps"]
+
+
+def test_window_slicing_is_deterministic_and_rebased(tmp_path):
+    path = _write(tmp_path, [
+        f"j{i},worker,1,Terminated,{i * 100},{i * 100 + 50},600,29,50,V100"
+        for i in range(10)
+    ])
+    full = ta.load_alibaba_trace(path)
+    win = ta.load_alibaba_trace(path, t_start=200.0, t_end=600.0)
+    win2 = ta.load_alibaba_trace(path, t_start=200.0, t_end=600.0)
+    key = lambda js: [(j.jid, j.arrival, j.work, j.profile.name) for j in js]
+    assert key(win) == key(win2)                       # deterministic
+    assert len(win) == 4                               # t in {200,300,400,500}
+    assert win[0].arrival == 0.0                       # re-based to window
+    assert len(full) == 10
+    lim = ta.load_alibaba_trace(path, limit_jobs=3)
+    assert key(lim) == key(full[:3])
+
+
+def test_multi_instance_expansion_capped_and_grouped(tmp_path):
+    path = _write(tmp_path, [
+        "grp,worker,100,Terminated,0,100,600,29,50,V100",
+    ])
+    jobs = ta.load_alibaba_trace(path)
+    assert len(jobs) == ta._INSTANCE_CAP               # 100 workers capped
+    groups = {j.mi_group for j in jobs}
+    assert groups == {jobs[0].jid}                     # one shared group
+
+
+def test_profile_assignment_is_stable_across_loads(tmp_path):
+    path = _write(tmp_path, [
+        f"job-{i},worker,1,Terminated,{i},{i + 100},600,29,50,V100"
+        for i in range(8)
+    ])
+    a = [j.profile.name for j in ta.load_alibaba_trace(path)]
+    b = [j.profile.name for j in ta.load_alibaba_trace(path)]
+    assert a == b                                      # sha-hash, not hash()
+    assert len(set(a)) > 1                             # pool actually used
+
+
+def test_synthesize_matches_sample_support_and_scales_load():
+    jobs = ta.synthesize_alibaba_trace(300, seed=3)
+    assert len(jobs) >= 300                            # mi-expansion only adds
+    assert jobs[0].arrival == 0.0
+    key = lambda js: [(j.jid, j.arrival, j.work) for j in js]
+    assert key(jobs) == key(ta.synthesize_alibaba_trace(300, seed=3))
+    assert key(jobs) != key(ta.synthesize_alibaba_trace(300, seed=4))
+    base_rows, _ = ta.parse_alibaba_csv(ta.SAMPLE_CSV)
+    qos_support = {ta._qos_for(SPACE, min(r.gpu_share, 1.0), r.task_name)
+                   for r in base_rows}
+    assert {j.qos_min_slice for j in jobs} <= qos_support
+    fast = ta.synthesize_alibaba_trace(300, seed=3, load_scale=4.0)
+    span = lambda js: max(j.arrival for j in js)
+    assert span(fast) == pytest.approx(span(jobs) / 4.0)
+    with pytest.raises(ValueError, match="load_scale"):
+        ta.synthesize_alibaba_trace(10, load_scale=0.0)
+    assert ta.synthesize_alibaba_trace(0) == []
