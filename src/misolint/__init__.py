@@ -1,0 +1,19 @@
+"""Import shim: the real misolint package lives in ``tools/lint/misolint``
+(lint tooling stays out of the runtime tree), but ``PYTHONPATH=src`` is
+this repo's standard import root — so this package redirects its search
+path there, making ``python -m misolint src/ tests/`` and
+``from misolint import ruleset_hash`` (the sweep's ``lint_version`` stamp)
+work with no extra configuration.
+"""
+import os as _os
+
+__path__ = [_os.path.abspath(_os.path.join(
+    _os.path.dirname(__file__), _os.pardir, _os.pardir,
+    "tools", "lint", "misolint"))]
+
+# resolves inside tools/lint/misolint thanks to the __path__ redirect
+from misolint.api import (Finding, lint_paths, lint_source,  # noqa: E402
+                          ruleset_hash, __version__)
+
+__all__ = ["Finding", "lint_paths", "lint_source", "ruleset_hash",
+           "__version__"]

@@ -704,7 +704,7 @@ def optimize_partition_bruteforce(space: PartitionSpace,
         return _bruteforce_objective(space, speeds, obj_fn, power)
     best_obj, best_config = -1.0, None
     for part in space.partitions_of_len(m):
-        for perm in set(itertools.permutations(part)):
+        for perm in sorted(set(itertools.permutations(part))):
             obj = sum(speeds[j].get(perm[j], 0.0) for j in range(m))
             if obj > best_obj:
                 best_obj, best_config = obj, perm
@@ -725,7 +725,7 @@ def _bruteforce_objective(space: PartitionSpace, speeds, objective, power):
     objs, watts, perms = [], [], []
     for part in rows:
         best_t, best_perm = -1.0, None
-        for perm in set(itertools.permutations(part)):
+        for perm in sorted(set(itertools.permutations(part))):
             t = sum(speeds[j].get(perm[j], 0.0) for j in range(m))
             if t > best_t:
                 best_t, best_perm = t, perm

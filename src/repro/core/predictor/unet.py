@@ -125,6 +125,8 @@ def warm_jit_cache(levels: int = 3, jobs: int = 7,
     parameter *shapes*, so warming with freshly-initialized params also
     covers artifact-loaded ones.
     """
+    # misolint: disable=MS102 -- shape-only jit warm-up: params are discarded
+    # and XLA keys its compile cache on shapes, so any constant key works
     params, _ = init(jax.random.PRNGKey(0), levels, jobs)
     for b in batch_buckets:
         m = jnp.zeros((b, levels, jobs), jnp.float32)

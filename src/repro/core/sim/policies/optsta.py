@@ -90,7 +90,11 @@ class OptStaPolicy(Policy):
         prof = sim.prof
         t0 = time.perf_counter() if prof is not None else 0.0
         part = tuple(sorted(sizes, reverse=True))
-        subs = list(set(itertools.combinations(part, len(jids))))
+        # descending-lex dedup: for a non-increasing `part`, combinations()
+        # already yields subsets in this order, so sorting pins the historical
+        # subset-enumeration tie-break without trusting set hash order
+        subs = sorted(set(itertools.combinations(part, len(jids))),
+                      reverse=True)
         objs, perms, _ = assign_multisets(g.space, subs, speeds)
         objs = np.asarray(objs)
         if self.objective.needs_power:

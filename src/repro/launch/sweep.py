@@ -205,7 +205,7 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
             "energy_per_job_j_mean": mean("energy_per_job_j"),
         }
 
-    return {
+    report = {
         "schema_version": SCHEMA_VERSION,
         "kind": "miso-sweep",
         "config": {
@@ -224,6 +224,16 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
         "results": results,
         "summary": summary,
     }
+    if profile:
+        # stamp which determinism contract produced these numbers: the
+        # misolint rule-set hash ties a benchmark JSON to the exact lint
+        # rules the tree was clean under (see README "Static analysis")
+        try:
+            from misolint import ruleset_hash
+            report["lint_version"] = ruleset_hash()
+        except ImportError:     # lint tooling not on sys.path: stamp absent
+            report["lint_version"] = None
+    return report
 
 
 def _print_summary(report: Dict) -> None:

@@ -65,7 +65,7 @@ def save_checkpoint(ckpt_dir: str, step: int, state: dict, *,
     arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
     manifest = {
         "step": int(step),
-        "keys": list(arrays.keys()),
+        "keys": list(arrays),
         "shapes": {k: list(a.shape) for k, a in arrays.items()},
         "dtypes": {k: str(a.dtype) for k, a in arrays.items()},
         "format": 1,

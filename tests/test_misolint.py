@@ -1,0 +1,540 @@
+"""misolint: per-rule positive/negative fixtures, suppressions, baseline
+filtering, --fix rewrites, the CLI, and the meta-test that keeps the lint
+honest — the live tree must stay clean modulo the committed baseline.
+
+Fixture snippets are linted as *strings* (never executed), with the path
+argument chosen to land inside each rule's scope.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from misolint import lint_source, ruleset_hash
+from misolint.api import lint_paths
+from misolint.baseline import Baseline, fingerprint, make_entries
+from misolint.context import build_context
+from misolint.fixes import fix_source
+from misolint.rules import all_rules
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CORE = "src/repro/core/x.py"          # inside MS101 scope
+SIM = "src/repro/core/sim/x.py"       # inside MS107/MS108 scope
+ANY = "src/repro/anywhere.py"
+
+
+def ids(findings, *, include_suppressed=False):
+    return [f.rule for f in findings
+            if include_suppressed or not f.suppressed]
+
+
+def lint(src, path=ANY, **kw):
+    return lint_source(textwrap.dedent(src), path, **kw)
+
+
+# ------------------------------------------------------------------ MS101
+
+def test_ms101_positive_numpy_global():
+    fs = lint("""
+        import numpy as np
+        x = np.random.rand(3)
+        np.random.seed(0)
+    """, CORE)
+    assert ids(fs) == ["MS101", "MS101"]
+
+
+def test_ms101_positive_stdlib_random():
+    fs = lint("""
+        import random
+        v = random.randint(0, 7)
+    """, CORE)
+    assert ids(fs) == ["MS101"]
+
+
+def test_ms101_negative_generator_and_annotations():
+    fs = lint("""
+        import numpy as np
+
+        def draw(rng: np.random.Generator) -> float:
+            return rng.random()
+
+        RNG = np.random.default_rng(0)
+        SS = np.random.SeedSequence(42)
+    """, CORE)
+    assert ids(fs) == []
+
+
+def test_ms101_out_of_scope_path():
+    fs = lint("""
+        import numpy as np
+        x = np.random.rand(3)
+    """, "src/repro/launch/cli_tool.py")
+    assert ids(fs) == []
+
+
+# ------------------------------------------------------------------ MS102
+
+def test_ms102_positive_seed_and_const_prngkey():
+    fs = lint("""
+        import jax
+
+        def measure(self):
+            self.rng.seed(0)
+            k = jax.random.PRNGKey(0)
+            return k
+    """)
+    assert ids(fs) == ["MS102", "MS102"]
+
+
+def test_ms102_negative_variable_key_module_level_and_main():
+    fs = lint("""
+        import jax
+        K = jax.random.PRNGKey(0)          # module top level: fine
+
+        def step(seed):
+            return jax.random.PRNGKey(seed)   # threaded seed: fine
+
+        def main():
+            return jax.random.PRNGKey(1)      # CLI entry point: fine
+    """)
+    assert ids(fs) == []
+
+
+def test_ms102_exempts_test_files():
+    fs = lint("""
+        import jax
+
+        def test_thing():
+            k = jax.random.PRNGKey(0)
+            return k
+    """, "tests/test_thing.py")
+    assert ids(fs) == []
+
+
+# ------------------------------------------------------------------ MS103
+
+def test_ms103_positive_forms():
+    fs = lint("""
+        s = {1, 2, 3}
+        for x in set(range(4)):
+            pass
+        xs = list({4, 5} | s)
+        ys = [y for y in frozenset((6, 7))]
+        zs = tuple({4, 5}.union(s))
+    """)
+    assert ids(fs) == ["MS103"] * 4
+
+
+def test_ms103_no_dataflow_on_bare_names():
+    # a set bound to a name is invisible to the syntactic check (no
+    # dataflow) — the rule is deliberately local to keep zero false
+    # positives on list/tuple variables
+    fs = lint("""
+        s = set()
+        for x in s:
+            pass
+    """)
+    assert ids(fs) == []
+
+
+def test_ms103_negative_order_free_sinks():
+    fs = lint("""
+        s = {3, 1, 2}
+        n = len(set(s))
+        lo = min({1, 2})
+        ok = 2 in {1, 2}
+        canon = sorted({9, 8})
+        total = sum(x for x in {1, 2, 3})
+        for x in sorted(set(s)):
+            pass
+    """)
+    assert ids(fs) == []
+
+
+def test_ms103_keys_iteration_flagged():
+    fs = lint("""
+        d = {"a": 1}
+        for k in d.keys():
+            pass
+    """)
+    assert ids(fs) == ["MS103"]
+
+
+# ------------------------------------------------------------------ MS104
+
+def test_ms104_positive_name_mismatch_and_multiple():
+    fs = lint("""
+        from repro.core.sim.policies.base import Policy, register_policy
+
+        @register_policy
+        class A(Policy):
+            name = "not-the-module"
+
+        @register_policy
+        class B(Policy):
+            name = "other"
+    """, "src/repro/core/sim/policies/my_policy.py")
+    rules = ids(fs)
+    # one 2-policies-per-module finding + a name mismatch per class
+    assert rules.count("MS104") == 3
+
+
+def test_ms104_positive_missing_and_duplicate_names():
+    fs = lint("""
+        from repro.core.sim.placement import Placer, register_placer
+
+        @register_placer
+        class NoName(Placer):
+            pass
+
+        @register_placer
+        class P1(Placer):
+            name = "dup"
+
+        @register_placer
+        class P2(Placer):
+            name = "dup"
+    """, "src/repro/core/sim/placement_extra.py")
+    assert ids(fs) == ["MS104", "MS104"]  # missing literal name + duplicate
+
+
+def test_ms104_negative_well_formed_policy_module():
+    fs = lint("""
+        from repro.core.sim.policies.base import Policy, register_policy
+
+        @register_policy
+        class MyFragPolicy(Policy):
+            name = "my-frag"
+    """, "src/repro/core/sim/policies/my_frag.py")
+    assert ids(fs) == []
+
+
+# ------------------------------------------------------------------ MS105
+
+def test_ms105_positive_variants():
+    fs = lint("""
+        def f(a, b=[], c={}, *, d=set()):
+            return a, b, c, d
+    """)
+    assert ids(fs) == ["MS105"] * 3
+
+
+def test_ms105_negative_none_and_immutable():
+    fs = lint("""
+        def f(a, b=None, c=(), d="x", e=0):
+            if b is None:
+                b = []
+            return a, b, c, d, e
+    """)
+    assert ids(fs) == []
+
+
+# ------------------------------------------------------------------ MS106
+
+def test_ms106_positive_default_context():
+    fs = lint("""
+        import jax
+        from concurrent.futures import ProcessPoolExecutor
+
+        def sweep(tasks):
+            with ProcessPoolExecutor(max_workers=2) as pool:
+                return list(pool.map(str, tasks))
+    """)
+    msgs = [f for f in fs if not f.suppressed and f.rule == "MS106"]
+    assert len(msgs) == 1
+    assert "imports jax" in msgs[0].message
+
+
+def test_ms106_positive_fork_context_and_bare_pool():
+    fs = lint("""
+        import multiprocessing
+        from concurrent.futures import ProcessPoolExecutor
+
+        def bad(tasks):
+            ctx = multiprocessing.get_context("fork")
+            pool = multiprocessing.Pool(2)
+            with ProcessPoolExecutor(
+                    mp_context=multiprocessing.get_context("fork")) as p:
+                pass
+    """)
+    # fork get_context (x2, one nested in the executor call), bare Pool,
+    # and the executor configured with a fork context
+    assert ids(fs) == ["MS106"] * 4
+
+
+def test_ms106_negative_spawn():
+    fs = lint("""
+        import multiprocessing
+        from concurrent.futures import ProcessPoolExecutor
+
+        def sweep(tasks, run):
+            with ProcessPoolExecutor(
+                    max_workers=2,
+                    mp_context=multiprocessing.get_context("spawn")) as pool:
+                return list(pool.map(run, tasks))
+    """)
+    assert ids(fs) == []
+
+
+# ------------------------------------------------------------------ MS107
+
+def test_ms107_positive_accumulator():
+    fs = lint("""
+        def advance(self, windows):
+            total = 0.0
+            for dt in windows:
+                total += dt * self.speed
+            return total
+    """, SIM)
+    assert ids(fs) == ["MS107"]
+
+
+def test_ms107_negative_counters_and_per_item():
+    fs = lint("""
+        def advance(self, rjobs, dt):
+            n = 0
+            events = 0.0
+            for rj in rjobs:
+                rj.since_ckpt_t += dt      # per-item update off the loop var
+                n += 1                     # int counter
+                events += 1.0              # integral-step counter, exact
+    """, SIM)
+    assert ids(fs) == []
+
+
+def test_ms107_out_of_scope():
+    fs = lint("""
+        def outside(xs):
+            t = 0.0
+            for x in xs:
+                t += x
+            return t
+    """, ANY)
+    assert ids(fs) == []
+
+
+# ------------------------------------------------------------------ MS108
+
+def test_ms108_positive_wall_clock():
+    fs = lint("""
+        import time
+        from datetime import datetime
+
+        def stamp(self):
+            self.t0 = time.time()
+            return datetime.now()
+    """, SIM)
+    assert ids(fs) == ["MS108", "MS108"]
+
+
+def test_ms108_negative_perf_counter_and_scope():
+    fs = lint("""
+        import time
+
+        def profile(self, prof):
+            t0 = time.perf_counter()      # designated profiling clock
+            return t0
+    """, SIM)
+    assert ids(fs) == []
+    # same wall-clock call outside the engine scope is not MS108's business
+    fs = lint("""
+        import time
+        t0 = time.time()
+    """, "src/repro/launch/sweep.py")
+    assert ids(fs) == []
+
+
+# ------------------------------------------- suppressions & MS000 hygiene
+
+def test_inline_suppression_with_reason():
+    fs = lint("""
+        def f(xs, acc=[]):  # misolint: disable=MS105 -- fixture: shared accumulator is the point
+            return acc
+    """)
+    assert ids(fs) == []
+    sup = [f for f in fs if f.suppressed]
+    assert len(sup) == 1 and "shared accumulator" in sup[0].suppress_reason
+
+
+def test_standalone_suppression_covers_next_statement_through_comments():
+    fs = lint("""
+        # misolint: disable=MS103 -- fixture: order provably cannot matter
+        # here because the loop body is commutative
+        for x in {1, 2, 3}:
+            pass
+    """)
+    assert ids(fs) == []
+    assert any(f.suppressed for f in fs)
+
+
+def test_suppression_without_reason_is_flagged():
+    fs = lint("""
+        def f(xs, acc=[]):  # misolint: disable=MS105
+            return acc
+    """)
+    assert ids(fs) == ["MS000"]
+
+
+def test_unused_suppression_is_flagged():
+    fs = lint("""
+        x = 1  # misolint: disable=MS103 -- nothing fires here
+    """)
+    assert ids(fs) == ["MS000"]
+
+
+def test_suppression_only_covers_named_rule():
+    fs = lint("""
+        def f(xs, acc=[]):  # misolint: disable=MS103 -- wrong rule id
+            return acc
+    """)
+    # MS105 still fires; the MS103 suppression is unused -> MS000 too
+    assert sorted(ids(fs)) == ["MS000", "MS105"]
+
+
+# ----------------------------------------------------------- baseline
+
+def test_baseline_filters_known_findings(tmp_path):
+    src = textwrap.dedent("""
+        def f(xs, acc=[]):
+            return acc
+    """)
+    path = tmp_path / "mod.py"
+    path.write_text(src)
+    pairs, errors = lint_paths([str(path)], root=str(tmp_path))
+    assert not errors
+    active = [(f, fingerprint(f, ctx.lines)) for f, ctx in pairs
+              if not f.suppressed]
+    assert [f.rule for f, _ in active] == ["MS105"]
+
+    bl_path = tmp_path / "baseline.json"
+    Baseline().save(str(bl_path), make_entries(active), ruleset_hash())
+    bl = Baseline.load(str(bl_path))
+    tagged = bl.filter(active)
+    assert all(base for _, base in tagged)          # grandfathered
+
+    # a *new* finding (different line content) is not filtered
+    path.write_text(src.replace("acc=[]", "acc=[], extra={}"))
+    pairs, _ = lint_paths([str(path)], root=str(tmp_path))
+    active = [(f, fingerprint(f, ctx.lines)) for f, ctx in pairs
+              if not f.suppressed]
+    tagged = bl.filter(active)
+    assert [base for _, base in tagged] == [False, False]
+
+
+def test_baseline_count_budget(tmp_path):
+    src = "def f(a=[], b=[]):\n    return a, b\n"
+    path = tmp_path / "mod.py"
+    path.write_text(src)
+    pairs, _ = lint_paths([str(path)], root=str(tmp_path))
+    active = [(f, fingerprint(f, ctx.lines)) for f, ctx in pairs]
+    assert len(active) == 2
+    # both findings share one fingerprint (same line content); a baseline
+    # recording count=1 only absorbs one of them
+    fp = active[0][1]
+    assert active[1][1] == fp
+    bl = Baseline({fp: 1})
+    tagged = bl.filter(active)
+    assert sorted(base for _, base in tagged) == [False, True]
+
+
+# ----------------------------------------------------------------- --fix
+
+def test_fix_mutable_default_and_set_iteration(tmp_path):
+    src = textwrap.dedent("""
+        def f(xs, acc=[], *, m={}):
+            "doc"
+            for x in set(xs):
+                acc.append(x)
+            return acc, m
+    """)
+    ctx = build_context("mod.py", src)
+    fixed, n = fix_source(ctx)
+    assert n == 3
+    compiled = compile(fixed, "mod.py", "exec")     # still valid python
+    assert "acc=None" in fixed and "m=None" in fixed
+    assert "if acc is None:" in fixed and "acc = []" in fixed
+    assert "if m is None:" in fixed and "m = {}" in fixed
+    assert "sorted(set(xs))" in fixed
+    # the fixed source lints clean
+    assert ids(lint_source(fixed, ANY)) == []
+    # behavior: fresh default per call now
+    ns = {}
+    exec(compiled, ns)
+    assert ns["f"]([2, 1]) == ([1, 2], {})
+    assert ns["f"]([3]) == ([3], {})                # no shared-state leak
+
+
+def test_fix_respects_suppressions():
+    src = ("def f(xs, acc=[]):  "
+           "# misolint: disable=MS105 -- fixture: intentional cache\n"
+           "    return acc\n")
+    ctx = build_context("mod.py", src)
+    fixed, n = fix_source(ctx)
+    assert n == 0 and fixed == src
+
+
+# ------------------------------------------------------------------- CLI
+
+def _run_cli(args, cwd=REPO):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, "-m", "misolint", *args],
+                          capture_output=True, text=True, cwd=cwd, env=env)
+
+
+def test_cli_json_output(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f(a=[]):\n    return a\n")
+    proc = _run_cli(["--format", "json", "--no-baseline", str(bad)])
+    assert proc.returncode == 1
+    doc = json.loads(proc.stdout)
+    assert doc["counts"]["new"] == 1
+    assert doc["findings"][0]["rule"] == "MS105"
+    assert doc["ruleset"] == ruleset_hash()
+
+
+def test_cli_exit_codes(tmp_path):
+    good = tmp_path / "good.py"
+    good.write_text("def f(a=None):\n    return a\n")
+    assert _run_cli(["--no-baseline", str(good)]).returncode == 0
+    broken = tmp_path / "broken.py"
+    broken.write_text("def f(:\n")
+    assert _run_cli(["--no-baseline", str(broken)]).returncode == 2
+
+
+# ------------------------------------------------------------- meta-tests
+
+def test_rule_table_is_complete():
+    rules = all_rules()
+    assert [r.id for r in rules] == [f"MS10{i}" for i in range(1, 9)]
+    assert all(r.title for r in rules)
+    assert {r.id for r in rules if r.fixable} == {"MS103", "MS105"}
+
+
+def test_ruleset_hash_is_stable():
+    h = ruleset_hash()
+    assert h == ruleset_hash()
+    assert len(h) == 12 and int(h, 16) >= 0
+
+
+def test_live_tree_is_clean_modulo_baseline():
+    """The lint can never silently rot: src/ and tests/ must produce zero
+    NEW findings under the committed baseline.  If this fails you either
+    fix the finding, suppress it with a reason, or (deliberately!)
+    regenerate the baseline — see README 'Static analysis'."""
+    proc = _run_cli(["src", "tests"])
+    assert proc.returncode == 0, (
+        f"misolint found new violations:\n{proc.stdout}\n{proc.stderr}")
+
+
+def test_live_tree_baseline_is_current_ruleset():
+    with open(os.path.join(REPO, "tools", "lint",
+                           "misolint_baseline.json")) as fh:
+        doc = json.load(fh)
+    assert doc["ruleset"] == ruleset_hash(), (
+        "baseline was generated under a different rule set; re-triage and "
+        "run: PYTHONPATH=src python -m misolint --write-baseline src/ tests/")

@@ -207,3 +207,16 @@ def test_v3_report_round_trip(tmp_path):
         assert agg["energy_j_mean"] > 0.0
     regressions, notes = ds.diff_reports(str(p), str(p), threshold=0.02)
     assert regressions == [] and notes == []
+
+
+def test_profile_stamps_lint_version():
+    """``--profile`` reports carry the misolint rule-set hash so archived
+    numbers record which determinism contract the tree was clean under."""
+    from misolint import ruleset_hash
+    rep = run_sweep(["miso"], ["smoke"], seeds=[0], serial=True,
+                    profile=True)
+    assert rep["lint_version"] == ruleset_hash()
+    assert len(rep["lint_version"]) == 12
+    # and only --profile reports pay for the stamp
+    bare = run_sweep(["miso"], ["smoke"], seeds=[0], serial=True)
+    assert "lint_version" not in bare

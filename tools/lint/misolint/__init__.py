@@ -1,0 +1,30 @@
+"""misolint — determinism & simulator-invariant static analysis for MISO.
+
+Every headline number this repo reports (JCT deltas, energy, the 5,000-GPU
+trace replay) rests on *bit-identical, deterministic* simulation.  misolint
+encodes that contract as eight mechanical AST checks (MS101..MS108) so the
+violations that burned review time in past PRs — re-seed-to-0 inside a
+measurement call, fork-after-jax pool deadlocks, hash-ordered set iteration
+feeding placement — fail CI instead of reaching reviewers.
+
+Run it from the repo root (the package is importable both via the repo's
+standard ``PYTHONPATH=src`` and via ``PYTHONPATH=tools/lint``)::
+
+    PYTHONPATH=src python -m misolint src/ tests/
+    PYTHONPATH=src python -m misolint --format json src/
+    PYTHONPATH=src python -m misolint --fix src/        # MS103/MS105 autofix
+    PYTHONPATH=src python -m misolint --write-baseline src/ tests/
+
+Suppress an intentional finding inline (same line or the line above), with
+a mandatory reason after ``--``::
+
+    params, _ = init(jax.random.PRNGKey(0), ...)  # misolint: disable=MS102 -- shape-only jit warmup
+
+See ``misolint/rules/`` for one module per rule and ``README.md`` ("Static
+analysis") for how to add a rule or regenerate the baseline.
+"""
+from misolint.api import (Finding, lint_paths, lint_source, ruleset_hash,
+                          __version__)
+
+__all__ = ["Finding", "lint_paths", "lint_source", "ruleset_hash",
+           "__version__"]

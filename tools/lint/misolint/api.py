@@ -1,0 +1,129 @@
+"""Programmatic entry points: lint a source string, lint paths, hash the
+rule set.
+
+``lint_source`` / ``lint_paths`` return findings with suppression state
+already resolved (inline ``# misolint: disable=...`` comments consumed;
+suppressions *without* a reason string surface as MS000 findings so silent
+mutings are impossible).  Baseline filtering is layered on top by the CLI
+— the API returns everything so tests can assert on raw rule behavior.
+"""
+from __future__ import annotations
+
+import ast
+import hashlib
+import os
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from misolint.context import ModuleContext, build_context
+from misolint.rules import all_rules
+from misolint.rules.base import Finding
+
+__version__ = "1.0.0"
+
+_SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", ".mypy_cache",
+              "node_modules", ".venv", "venv", "build", "dist", ".eggs"}
+
+
+def ruleset_hash() -> str:
+    """Stable 12-hex digest of the active rule set: ids, titles, scopes and
+    the rule modules' source text.  Stamped into sweep reports
+    (``lint_version``) so benchmark JSONs record which determinism contract
+    they were produced under."""
+    h = hashlib.sha256()
+    rules_dir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "rules")
+    for name in sorted(os.listdir(rules_dir)):
+        if name.endswith(".py"):
+            with open(os.path.join(rules_dir, name), "rb") as fh:
+                h.update(name.encode())
+                h.update(b"\x00")
+                h.update(fh.read())
+                h.update(b"\x00")
+    return h.hexdigest()[:12]
+
+
+def _iter_py_files(paths: Sequence[str]) -> Iterable[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs if d not in _SKIP_DIRS)
+                for name in sorted(files):
+                    if name.endswith(".py"):
+                        yield os.path.join(root, name)
+
+
+def _relpath(path: str, root: Optional[str]) -> str:
+    rel = os.path.relpath(path, root) if root else path
+    return rel.replace(os.sep, "/").removeprefix("./")
+
+
+def lint_context(ctx: ModuleContext,
+                 select: Optional[Sequence[str]] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for rule_cls in all_rules():
+        if select and rule_cls.id not in select:
+            continue
+        rule = rule_cls()
+        if not rule.applies_to(ctx.path):
+            continue
+        findings.extend(rule.check(ctx))
+    # resolve inline suppressions
+    resolved: List[Finding] = []
+    for f in sorted(findings, key=lambda f: f.sort_key):
+        sup = ctx.suppressed(f.rule, f.line)
+        if sup is not None:
+            resolved.append(Finding(
+                rule=f.rule, path=f.path, line=f.line, col=f.col,
+                message=f.message, suppressed=True,
+                suppress_reason=sup.reason))
+        else:
+            resolved.append(f)
+    # a suppression that never fired, or fired without a reason, is itself
+    # a finding: reasons are the audit trail the contract depends on
+    for sup in ctx.suppressions:
+        if sup.used and not sup.reason:
+            resolved.append(Finding(
+                rule="MS000", path=ctx.path, line=sup.line, col=0,
+                message=(f"suppression of {','.join(sup.rules)} has no "
+                         f"reason: append `-- <why this is safe>`")))
+        elif not sup.used:
+            resolved.append(Finding(
+                rule="MS000", path=ctx.path, line=sup.line, col=0,
+                message=(f"unused suppression of {','.join(sup.rules)}: "
+                         f"nothing fires here any more — delete it")))
+    return sorted(resolved, key=lambda f: f.sort_key)
+
+
+def lint_source(source: str, path: str = "<string>",
+                select: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint one source string (fixture-test entry point)."""
+    return lint_context(build_context(path, source), select)
+
+
+def lint_paths(paths: Sequence[str], root: Optional[str] = None,
+               select: Optional[Sequence[str]] = None,
+               ) -> Tuple[List[Tuple[Finding, ModuleContext]], List[str]]:
+    """Lint files/directories. Returns (findings with their contexts,
+    unparseable-file errors).  Paths in findings are relative to ``root``
+    (default: the current working directory)."""
+    results: List[Tuple[Finding, ModuleContext]] = []
+    errors: List[str] = []
+    for fpath in _iter_py_files(paths):
+        try:
+            with open(fpath, encoding="utf-8") as fh:
+                source = fh.read()
+        except OSError as exc:
+            errors.append(f"{fpath}: unreadable: {exc}")
+            continue
+        rel = _relpath(fpath, root)
+        try:
+            ctx = build_context(rel, source)
+        except SyntaxError as exc:
+            errors.append(f"{rel}:{exc.lineno}: syntax error: {exc.msg}")
+            continue
+        for f in lint_context(ctx, select):
+            results.append((f, ctx))
+    return results, errors

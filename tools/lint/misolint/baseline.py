@@ -1,0 +1,104 @@
+"""Committed baseline of grandfathered findings.
+
+CI must fail on *new* violations only, so findings already present when a
+rule landed are recorded here and filtered out.  Fingerprints are content-
+addressed — ``sha1(rule \\x00 path \\x00 stripped-source-line)`` with a
+per-fingerprint count — so the baseline survives unrelated line-number
+drift but expires the moment the offending line is edited (which is the
+point: touching the line means you own the finding).
+
+Regenerate (after triaging!) with::
+
+    PYTHONPATH=src python -m misolint --write-baseline src/ tests/
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+from misolint.rules.base import Finding
+
+BASELINE_VERSION = 1
+DEFAULT_BASELINE = os.path.join("tools", "lint", "misolint_baseline.json")
+
+
+def fingerprint(f: Finding, lines: Optional[List[str]] = None,
+                line_text: Optional[str] = None) -> str:
+    if line_text is None:
+        if lines and 1 <= f.line <= len(lines):
+            line_text = lines[f.line - 1]
+        else:
+            line_text = ""
+    h = hashlib.sha1()
+    h.update(f.rule.encode())
+    h.update(b"\x00")
+    h.update(f.path.encode())
+    h.update(b"\x00")
+    h.update(line_text.strip().encode())
+    return h.hexdigest()[:16]
+
+
+class Baseline:
+    def __init__(self, counts: Optional[Dict[str, int]] = None,
+                 ruleset: str = "", notes: Optional[Dict[str, str]] = None):
+        self.counts = dict(counts or {})
+        self.ruleset = ruleset
+        self.notes = dict(notes or {})   # fingerprint -> human context
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        with open(path) as fh:
+            raw = json.load(fh)
+        if raw.get("version") != BASELINE_VERSION:
+            raise ValueError(f"baseline {path}: unsupported version "
+                             f"{raw.get('version')!r}")
+        counts = {e["fingerprint"]: int(e.get("count", 1))
+                  for e in raw.get("findings", [])}
+        notes = {e["fingerprint"]: e["note"]
+                 for e in raw.get("findings", []) if e.get("note")}
+        return cls(counts, raw.get("ruleset", ""), notes)
+
+    def save(self, path: str, entries: List[dict], ruleset: str) -> None:
+        doc = {
+            "version": BASELINE_VERSION,
+            "ruleset": ruleset,
+            "findings": entries,
+        }
+        with open(path, "w") as fh:
+            json.dump(doc, fh, indent=1, sort_keys=False)
+            fh.write("\n")
+
+    def filter(self, findings: List[Tuple[Finding, str]]
+               ) -> List[Tuple[Finding, bool]]:
+        """Tag each (finding, fingerprint) as baselined or new, consuming
+        baseline budget per fingerprint."""
+        budget = dict(self.counts)
+        out: List[Tuple[Finding, bool]] = []
+        for f, fp in findings:
+            if budget.get(fp, 0) > 0:
+                budget[fp] -= 1
+                out.append((f, True))
+            else:
+                out.append((f, False))
+        return out
+
+
+def make_entries(findings: List[Tuple[Finding, str]],
+                 notes: Optional[Dict[str, str]] = None) -> List[dict]:
+    """Aggregate (finding, fingerprint) pairs into committed-baseline rows,
+    sorted for stable diffs."""
+    agg: Dict[str, dict] = {}
+    for f, fp in findings:
+        e = agg.setdefault(fp, {"fingerprint": fp, "rule": f.rule,
+                                "path": f.path, "count": 0,
+                                "example_line": f.line,
+                                "message": f.message})
+        e["count"] += 1
+        e["example_line"] = min(e["example_line"], f.line)
+    for fp, note in (notes or {}).items():
+        if fp in agg:
+            agg[fp]["note"] = note
+    return sorted(agg.values(),
+                  key=lambda e: (e["path"], e["rule"], e["fingerprint"]))

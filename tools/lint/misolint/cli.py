@@ -1,0 +1,197 @@
+"""Command-line driver: ``python -m misolint [paths...]``.
+
+Exit codes: 0 clean (after suppressions + baseline), 1 new findings,
+2 usage or parse errors.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from misolint.api import __version__, lint_paths, ruleset_hash
+from misolint.baseline import (Baseline, DEFAULT_BASELINE, fingerprint,
+                               make_entries)
+from misolint.fixes import fix_source
+from misolint.rules import all_rules
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="misolint",
+        description="determinism & simulator-invariant static analysis "
+                    "(rules MS101..MS108; see tools/lint/misolint/rules/)")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files/directories to lint (default: src tests)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline JSON path (default: {DEFAULT_BASELINE} "
+                         f"when it exists)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline file (report everything)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the current findings to the baseline file "
+                         "and exit 0")
+    ap.add_argument("--fix", action="store_true",
+                    help="apply mechanical fixes (MS103 sorted() wrap, "
+                         "MS105 None+guard) in place, then re-lint")
+    ap.add_argument("--diff", metavar="GIT_REF", default=None,
+                    help="diff-aware mode: only report findings in files "
+                         "changed vs GIT_REF (e.g. origin/main)")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also list suppressed/baselined findings in text "
+                         "output")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    ap.add_argument("--version", action="store_true",
+                    help="print version + rule-set hash and exit")
+    return ap
+
+
+def _changed_files(ref: str) -> Optional[List[str]]:
+    try:
+        out = subprocess.run(
+            ["git", "diff", "--name-only", "--diff-filter=dR", ref, "--"],
+            capture_output=True, text=True, check=True)
+    except (OSError, subprocess.CalledProcessError) as exc:
+        print(f"misolint: --diff {ref}: git diff failed: {exc}",
+              file=sys.stderr)
+        return None
+    return [l.strip().replace(os.sep, "/")
+            for l in out.stdout.splitlines() if l.strip()]
+
+
+def _run_fix(paths: Sequence[str]) -> int:
+    from misolint.api import _iter_py_files
+    from misolint.context import build_context
+    n_total = 0
+    for fpath in _iter_py_files(paths):
+        with open(fpath, encoding="utf-8") as fh:
+            source = fh.read()
+        try:
+            ctx = build_context(fpath.replace(os.sep, "/"), source)
+        except SyntaxError:
+            continue
+        new_source, n = fix_source(ctx)
+        if n:
+            with open(fpath, "w", encoding="utf-8") as fh:
+                fh.write(new_source)
+            print(f"misolint: fixed {n} finding(s) in {fpath}")
+            n_total += n
+    print(f"misolint: --fix applied {n_total} fix(es); re-run the golden "
+          f"trace tests before committing")
+    return n_total
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    rs_hash = ruleset_hash()
+
+    if args.version:
+        print(f"misolint {__version__} (ruleset {rs_hash})")
+        return 0
+    if args.list_rules:
+        for cls in all_rules():
+            scope = ", ".join(cls.scope) if cls.scope else "everywhere"
+            fx = "  [--fix]" if cls.fixable else ""
+            print(f"{cls.id}  {cls.title}  ({scope}){fx}")
+        return 0
+
+    select = ([r.strip() for r in args.select.split(",") if r.strip()]
+              if args.select else None)
+
+    if args.fix:
+        _run_fix(args.paths)
+
+    pairs, errors = lint_paths(args.paths, select=select)
+    for err in errors:
+        print(f"misolint: error: {err}", file=sys.stderr)
+
+    # fingerprint everything once (baseline matching + --write-baseline)
+    fps: List[Tuple] = [(f, fingerprint(f, ctx.lines)) for f, ctx in pairs]
+
+    baseline_path = args.baseline or (
+        DEFAULT_BASELINE if os.path.exists(DEFAULT_BASELINE) else None)
+    baseline = None
+    if baseline_path and not args.no_baseline and not args.write_baseline \
+            and os.path.exists(baseline_path):
+        baseline = Baseline.load(baseline_path)
+        if baseline.ruleset and baseline.ruleset != rs_hash:
+            print(f"misolint: warning: baseline {baseline_path} was written "
+                  f"for ruleset {baseline.ruleset}, current is {rs_hash} — "
+                  f"regenerate with --write-baseline after triage",
+                  file=sys.stderr)
+
+    if args.diff is not None:
+        changed = _changed_files(args.diff)
+        if changed is None:
+            return 2
+        changed_set = set(changed)
+        fps = [(f, fp) for f, fp in fps if f.path in changed_set]
+
+    if args.write_baseline:
+        active = [(f, fp) for f, fp in fps if not f.suppressed]
+        path = args.baseline or DEFAULT_BASELINE
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        Baseline().save(path, make_entries(active), rs_hash)
+        print(f"misolint: wrote {len(active)} finding(s) "
+              f"({len(make_entries(active))} fingerprints) to {path}")
+        return 0
+
+    # classify: suppressed / baselined / new
+    unsuppressed = [(f, fp) for f, fp in fps if not f.suppressed]
+    if baseline is not None:
+        tagged = baseline.filter(unsuppressed)
+    else:
+        tagged = [(f, False) for f, _ in unsuppressed]
+    new = [f for f, base in tagged if not base]
+    baselined = [f for f, base in tagged if base]
+    suppressed = [f for f, _ in fps if f.suppressed]
+
+    if args.format == "json":
+        doc = {
+            "version": __version__,
+            "ruleset": rs_hash,
+            "baseline": baseline_path if baseline is not None else None,
+            "counts": {"new": len(new), "baselined": len(baselined),
+                       "suppressed": len(suppressed),
+                       "errors": len(errors)},
+            "findings": [
+                {"rule": f.rule, "path": f.path, "line": f.line,
+                 "col": f.col, "message": f.message,
+                 "status": ("baselined" if base else "new")}
+                for f, base in tagged
+            ] + [
+                {"rule": f.rule, "path": f.path, "line": f.line,
+                 "col": f.col, "message": f.message, "status": "suppressed",
+                 "reason": f.suppress_reason}
+                for f in suppressed
+            ],
+            "parse_errors": errors,
+        }
+        print(json.dumps(doc, indent=1))
+    else:
+        for f in new:
+            print(f"{f.path}:{f.line}:{f.col + 1}: {f.rule} {f.message}")
+        if args.show_suppressed:
+            for f in baselined:
+                print(f"{f.path}:{f.line}:{f.col + 1}: {f.rule} "
+                      f"[baselined] {f.message}")
+            for f in suppressed:
+                reason = f.suppress_reason or "(no reason)"
+                print(f"{f.path}:{f.line}:{f.col + 1}: {f.rule} "
+                      f"[suppressed: {reason}] {f.message}")
+        tail = (f"{len(new)} finding(s)"
+                f" ({len(baselined)} baselined, {len(suppressed)} "
+                f"suppressed; ruleset {rs_hash})")
+        print(f"misolint: {tail}" if new or baselined or suppressed
+              else f"misolint: clean (ruleset {rs_hash})")
+
+    if errors:
+        return 2
+    return 1 if new else 0

@@ -1,0 +1,163 @@
+"""Per-file lint context: parsed AST, source lines, comment suppressions
+and cheap module-level facts shared by every rule.
+
+Suppression grammar (comments only, so it never affects runtime):
+
+    x = risky()            # misolint: disable=MS103 -- reason why it is ok
+    # misolint: disable=MS103,MS107 -- reason (applies to the NEXT line)
+    # misolint: disable-file=MS102 -- reason (whole file, any position)
+
+The reason string after ``--`` is mandatory: a suppression without one is
+itself reported (rule id ``MS000``), so "just silence it" leaves a trail.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+_DISABLE_RE = re.compile(
+    r"#\s*misolint:\s*(disable(?:-file)?)\s*=\s*"
+    r"(MS\d{3}(?:\s*,\s*MS\d{3})*)\s*(?:--\s*(.*\S))?\s*$")
+
+
+@dataclass
+class Suppression:
+    line: int                 # line the comment sits on (1-based)
+    rules: Tuple[str, ...]
+    reason: Optional[str]
+    file_level: bool
+    used: bool = False
+
+
+@dataclass
+class ModuleContext:
+    """Everything a rule needs to inspect one Python file."""
+    path: str                 # normalized, repo-relative (forward slashes)
+    source: str
+    tree: ast.AST
+    lines: List[str]
+    suppressions: List[Suppression] = field(default_factory=list)
+    # local name -> dotted module it refers to ("np" -> "numpy",
+    # "ProcessPoolExecutor" -> "concurrent.futures.ProcessPoolExecutor")
+    imports: Dict[str, str] = field(default_factory=dict)
+    parents: Dict[ast.AST, ast.AST] = field(default_factory=dict)
+
+    # ------------------------------------------------------------ queries
+
+    def imports_module(self, dotted: str) -> bool:
+        """True if the file imports ``dotted`` (or a submodule of it) at
+        any level, including inside functions."""
+        prefix = dotted + "."
+        return any(m == dotted or m.startswith(prefix)
+                   for m in self.imports.values())
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Resolve a Name/Attribute chain to its dotted origin, expanding
+        import aliases: ``np.random.rand`` -> ``numpy.random.rand``."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = self.imports.get(node.id, node.id)
+        parts.append(root)
+        return ".".join(reversed(parts))
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self.parents.get(node)
+
+    def enclosing(self, node: ast.AST, *types) -> Optional[ast.AST]:
+        """Nearest ancestor of one of ``types`` (not counting node)."""
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, types):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+    def _comment_only(self, line: int) -> bool:
+        if not (1 <= line <= len(self.lines)):
+            return False
+        stripped = self.lines[line - 1].strip()
+        return stripped.startswith("#")
+
+    def suppressed(self, rule_id: str, line: int) -> Optional[Suppression]:
+        """The suppression covering (rule, line), if any; marks it used.
+
+        A directive covers its own line (inline comments) and the next
+        statement below it — intervening comment-only lines are skipped, so
+        a multi-line reason can continue in plain comments under the
+        directive."""
+        for s in self.suppressions:
+            if rule_id not in s.rules:
+                continue
+            covered = s.file_level or s.line == line
+            if not covered and s.line < line:
+                covered = all(self._comment_only(i)
+                              for i in range(s.line + 1, line))
+            if covered:
+                s.used = True
+                return s
+        return None
+
+
+def _collect_imports(tree: ast.AST) -> Dict[str, str]:
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    out[a.asname] = a.name
+                else:
+                    # `import a.b` binds `a` locally but still imports a.b;
+                    # the sentinel key keeps the full path visible to
+                    # imports_module() without shadowing a real binding
+                    out[a.name.split(".")[0]] = a.name.split(".")[0]
+                    out["\x00import:" + a.name] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def _collect_suppressions(source: str) -> List[Suppression]:
+    sups: List[Suppression] = []
+    try:
+        toks = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in toks:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _DISABLE_RE.search(tok.string)
+            if not m:
+                continue
+            rules = tuple(r.strip() for r in m.group(2).split(","))
+            sups.append(Suppression(
+                line=tok.start[0], rules=rules, reason=m.group(3),
+                file_level=(m.group(1) == "disable-file")))
+    except tokenize.TokenizeError:
+        pass
+    return sups
+
+
+def build_context(path: str, source: str) -> ModuleContext:
+    tree = ast.parse(source, filename=path)
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return ModuleContext(
+        path=path.replace("\\", "/"),
+        source=source,
+        tree=tree,
+        lines=source.splitlines(),
+        suppressions=_collect_suppressions(source),
+        imports=_collect_imports(tree),
+        parents=parents,
+    )

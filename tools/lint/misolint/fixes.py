@@ -1,0 +1,137 @@
+"""``--fix``: mechanical rewrites for the rules where the fix is a pure
+syntax transformation.
+
+* MS103 — wrap the offending set-valued iterable in ``sorted(...)``.
+* MS105 — mutable default ``=[]``/``={}``/``=set()`` becomes ``=None`` plus
+  an ``if arg is None: arg = <original>`` guard after the docstring.
+
+Both rewrites change *behavior* only where the code was already
+order-dependent or sharing state — which is why the workflow is: run
+``--fix``, re-run the golden-trace tests, and only keep fixes that stay
+bit-identical (regenerate the baseline with a justification otherwise).
+Suppressed findings are never auto-fixed.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from misolint.context import ModuleContext
+from misolint.rules.ms103_set_iteration import SetIterationRule
+from misolint.rules.ms105_mutable_default import MutableDefaultRule, \
+    is_mutable_default
+
+
+def _offsets(source: str) -> List[int]:
+    """Absolute offset of the start of each 1-based line."""
+    offs = [0]
+    for line in source.splitlines(keepends=True):
+        offs.append(offs[-1] + len(line))
+    return offs
+
+
+def _abs(offs: List[int], line: int, col: int) -> int:
+    return offs[line - 1] + col
+
+
+class _Edit:
+    __slots__ = ("start", "end", "text")
+
+    def __init__(self, start: int, end: int, text: str):
+        self.start, self.end, self.text = start, end, text
+
+
+def _apply(source: str, edits: List[_Edit]) -> str:
+    for e in sorted(edits, key=lambda e: e.start, reverse=True):
+        source = source[:e.start] + e.text + source[e.end:]
+    return source
+
+
+def _node_span(offs: List[int], node: ast.AST) -> Optional[Tuple[int, int]]:
+    if getattr(node, "end_lineno", None) is None:
+        return None
+    return (_abs(offs, node.lineno, node.col_offset),
+            _abs(offs, node.end_lineno, node.end_col_offset))
+
+
+def _ms103_edits(ctx: ModuleContext,
+                 offs: List[int]) -> Tuple[List[_Edit], int]:
+    rule = SetIterationRule()
+    if not rule.applies_to(ctx.path):
+        return [], 0
+    edits: List[_Edit] = []
+    seen = set()
+    for f in rule.check(ctx):
+        if ctx.suppressed(f.rule, f.line):
+            continue
+        # relocate the flagged expression node from the finding position
+        for node in ast.walk(ctx.tree):
+            if (getattr(node, "lineno", None) == f.line
+                    and getattr(node, "col_offset", None) == f.col
+                    and isinstance(node, (ast.Call, ast.Set, ast.SetComp,
+                                          ast.BinOp))):
+                span = _node_span(offs, node)
+                if span and span not in seen:
+                    seen.add(span)
+                    edits.append(_Edit(span[0], span[0], "sorted("))
+                    edits.append(_Edit(span[1], span[1], ")"))
+                break
+    return edits, len(seen)
+
+
+def _ms105_edits(ctx: ModuleContext,
+                 offs: List[int]) -> Tuple[List[_Edit], int]:
+    rule = MutableDefaultRule()
+    if not rule.applies_to(ctx.path):
+        return [], 0
+    edits: List[_Edit] = []
+    n_fixed = 0
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        args = node.args
+        pos = args.posonlyargs + args.args
+        pairs = list(zip(pos[len(pos) - len(args.defaults):], args.defaults))
+        pairs += [(a, d) for a, d in zip(args.kwonlyargs, args.kw_defaults)
+                  if d is not None]
+        guards: List[Tuple[str, str]] = []
+        for arg, default in pairs:
+            if not is_mutable_default(default):
+                continue
+            if ctx.suppressed("MS105", default.lineno):
+                continue
+            span = _node_span(offs, default)
+            if span is None or default.lineno != default.end_lineno:
+                continue        # multi-line defaults: fix by hand
+            src = ctx.source[span[0]:span[1]]
+            edits.append(_Edit(span[0], span[1], "None"))
+            guards.append((arg.arg, src))
+        if not guards or not node.body:
+            continue
+        # insert guards after the docstring (or at the body start)
+        body = node.body
+        first = body[0]
+        anchor = first
+        if (isinstance(first, ast.Expr)
+                and isinstance(first.value, ast.Constant)
+                and isinstance(first.value.value, str) and len(body) > 1):
+            anchor = body[1]
+        indent = " " * anchor.col_offset
+        at = _abs(offs, anchor.lineno, 0)
+        text = "".join(f"{indent}if {name} is None:\n"
+                       f"{indent}    {name} = {src}\n"
+                       for name, src in guards)
+        edits.append(_Edit(at, at, text))
+        n_fixed += len(guards)
+    return edits, n_fixed
+
+
+def fix_source(ctx: ModuleContext) -> Tuple[str, int]:
+    """Apply MS103/MS105 fixes to one module; returns (new_source,
+    n_findings_fixed). Non-overlapping by construction (distinct spans)."""
+    offs = _offsets(ctx.source)
+    e103, n103 = _ms103_edits(ctx, offs)
+    e105, n105 = _ms105_edits(ctx, offs)
+    if not e103 and not e105:
+        return ctx.source, 0
+    return _apply(ctx.source, e103 + e105), n103 + n105

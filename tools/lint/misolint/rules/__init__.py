@@ -1,0 +1,29 @@
+"""Rule registry: one module per rule, mirroring the simulator's
+policy/placer/objective registries.
+
+A rule is a class with a unique ``id`` (``MS1xx``), a one-line ``title``,
+an optional ``scope`` (repo-relative path prefixes it applies to; empty =
+everywhere) and a ``check(ctx) -> List[Finding]`` method.  Rules that can
+rewrite code mechanically also implement ``fix(ctx, finding) -> edits``
+(see ``misolint.fixes``).
+
+Register with the decorator::
+
+    @register_rule
+    class MyRule(Rule):
+        id = "MS1xx"
+        ...
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Type
+
+from misolint.rules.base import Rule, register_rule, all_rules, get_rule
+
+# importing the modules registers the built-ins (kept in id order)
+from misolint.rules import (ms101_global_rng, ms102_reseed,  # noqa: F401
+                            ms103_set_iteration, ms104_registry,
+                            ms105_mutable_default, ms106_fork_safety,
+                            ms107_float_accumulation, ms108_wall_clock)
+
+__all__ = ["Rule", "register_rule", "all_rules", "get_rule"]

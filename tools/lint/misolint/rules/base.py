@@ -1,0 +1,74 @@
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple, Type
+
+from misolint.context import ModuleContext
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    # set post-check by the driver, never by rules:
+    suppressed: bool = False
+    suppress_reason: Optional[str] = None
+    baselined: bool = False
+
+    @property
+    def sort_key(self) -> Tuple[str, int, int, str]:
+        return (self.path, self.line, self.col, self.rule)
+
+
+_REGISTRY: Dict[str, Type["Rule"]] = {}
+
+
+def register_rule(cls: Type["Rule"]) -> Type["Rule"]:
+    if not getattr(cls, "id", None):
+        raise ValueError(f"{cls.__name__} must define a non-empty `id`")
+    if cls.id in _REGISTRY:
+        raise ValueError(f"duplicate rule id {cls.id!r}")
+    _REGISTRY[cls.id] = cls
+    return cls
+
+
+def all_rules() -> List[Type["Rule"]]:
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+
+
+def get_rule(rule_id: str) -> Type["Rule"]:
+    try:
+        return _REGISTRY[rule_id]
+    except KeyError:
+        raise ValueError(f"unknown rule {rule_id!r}; "
+                         f"available: {', '.join(sorted(_REGISTRY))}") from None
+
+
+class Rule:
+    """Base class. Subclasses set ``id``/``title``/``scope`` and implement
+    ``check``; ``scope`` is a tuple of path prefixes (repo-relative,
+    forward slashes) — empty means every linted file."""
+
+    id: str = ""
+    title: str = ""
+    scope: Tuple[str, ...] = ()
+    fixable: bool = False
+
+    def applies_to(self, path: str) -> bool:
+        if not self.scope:
+            return True
+        return any(p in path for p in self.scope)
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+    def finding(self, ctx: ModuleContext, node: ast.AST,
+                message: str) -> Finding:
+        return Finding(rule=self.id, path=ctx.path,
+                       line=getattr(node, "lineno", 0),
+                       col=getattr(node, "col_offset", 0),
+                       message=message)

@@ -1,0 +1,60 @@
+"""MS101: global / unseeded RNG inside the simulator core.
+
+``src/repro/core/`` must thread explicit ``numpy.random.Generator``
+objects (or JAX keys) through every stochastic path — the module-level
+``np.random.*`` / ``random.*`` functions share hidden global state, so one
+stray call desynchronizes every seeded stream in the process and the
+golden traces stop being golden.
+
+Allowed: ``np.random.default_rng``, ``Generator`` / ``SeedSequence`` /
+``BitGenerator`` constructors (``PCG64``, ``Philox``, ...), and any
+attribute *reference* (annotations like ``np.random.Generator``).  Flagged:
+*calls* to the stateful module-level API (``np.random.rand``, ``np.random
+.seed``, ``random.random``, ``random.shuffle``, ...).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from misolint.context import ModuleContext
+from misolint.rules.base import Finding, Rule, register_rule
+
+_NP_ALLOWED = {"default_rng", "Generator", "SeedSequence", "BitGenerator",
+               "PCG64", "PCG64DXSM", "Philox", "SFC64", "MT19937",
+               "RandomState"}  # RandomState(seed) is explicit-stream too
+# stdlib random: the Random class is an explicit stream; everything else
+# module-level mutates the hidden global instance
+_STDLIB_ALLOWED = {"Random", "SystemRandom"}
+
+
+@register_rule
+class GlobalRngRule(Rule):
+    id = "MS101"
+    title = "global/unseeded RNG in simulator core (thread a Generator)"
+    scope = ("src/repro/core/",)
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = ctx.resolve(node.func)
+            if not dotted:
+                continue
+            parts = dotted.split(".")
+            if (len(parts) >= 3 and parts[0] == "numpy"
+                    and parts[1] == "random"
+                    and parts[2] not in _NP_ALLOWED):
+                out.append(self.finding(
+                    ctx, node,
+                    f"call to global numpy RNG `{'.'.join(parts[1:])}`: "
+                    f"thread an explicit np.random.Generator instead"))
+            elif (len(parts) == 2 and parts[0] == "random"
+                    and parts[1] not in _STDLIB_ALLOWED
+                    and ctx.imports_module("random")):
+                out.append(self.finding(
+                    ctx, node,
+                    f"call to stdlib global RNG `{dotted}`: thread an "
+                    f"explicit random.Random or np.random.Generator"))
+        return out

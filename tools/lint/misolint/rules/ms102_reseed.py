@@ -1,0 +1,69 @@
+"""MS102: re-seeding inside a function body.
+
+The PR 2 bug class: ``UNetEstimator.measure_mps`` re-seeded its RNG to 0
+on *every call*, silently collapsing profiling noise to a constant.  Seeds
+belong at module top level or in a CLI ``main`` — a ``*.seed(...)`` call,
+``np.random.seed``, or a ``PRNGKey(<constant>)`` buried inside any other
+function makes every caller share one hidden stream reset.
+
+``PRNGKey(x)`` with a *variable* argument is fine (the seed was threaded
+in); only constant literals are flagged.  Test files are exempt: a fixed
+key inside a test is the correct pattern, not a bug.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from misolint.context import ModuleContext
+from misolint.rules.base import Finding, Rule, register_rule
+
+_CLI_FUNC_NAMES = {"main", "_main", "cli"}
+
+
+def _is_const(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        return _is_const(node.operand)
+    if isinstance(node, ast.BinOp):     # e.g. PRNGKey(0x5EED + 1)
+        return _is_const(node.left) and _is_const(node.right)
+    return False
+
+
+@register_rule
+class ReseedRule(Rule):
+    id = "MS102"
+    title = "re-seeding inside a function (seed at module/CLI top level)"
+    scope = ("src/",)
+
+    def applies_to(self, path: str) -> bool:
+        if not super().applies_to(path):
+            return False
+        name = path.rsplit("/", 1)[-1]
+        return not (name.startswith("test_") or name == "conftest.py")
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = ctx.enclosing(node, ast.FunctionDef, ast.AsyncFunctionDef)
+            if fn is None or fn.name in _CLI_FUNC_NAMES:
+                continue
+            dotted = ctx.resolve(node.func) or ""
+            if dotted.endswith(".seed") or dotted == "seed":
+                out.append(self.finding(
+                    ctx, node,
+                    f"`{dotted}(...)` inside `{fn.name}`: re-seeding in a "
+                    f"function resets a shared stream on every call; seed "
+                    f"once at module/CLI top level and thread the "
+                    f"Generator/key"))
+            elif (dotted.split(".")[-1] == "PRNGKey" and node.args
+                    and _is_const(node.args[0])):
+                out.append(self.finding(
+                    ctx, node,
+                    f"constant PRNGKey({ast.unparse(node.args[0])}) inside "
+                    f"`{fn.name}`: every call replays the same stream; "
+                    f"accept a key/seed parameter instead"))
+        return out

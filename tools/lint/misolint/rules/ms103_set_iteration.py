@@ -1,0 +1,103 @@
+"""MS103: iterating a set where the order can feed decisions.
+
+Set iteration order is a hash-table artifact: stable enough to *look*
+deterministic in one interpreter, free to change across platforms, Python
+versions and (for str elements) ``PYTHONHASHSEED``.  Any set iteration
+whose element order can reach ordering-sensitive code — placement
+candidate lists, first-strict-max argmax scans, heap pushes — must go
+through an explicit ``sorted(...)``.
+
+Flagged consumption sites: ``for x in <set>``, comprehensions over a set,
+``list/tuple/enumerate/iter/reversed(<set>)``, ``*<set>`` unpacking and
+``heapq`` calls.  Order-insensitive sinks are allowed: ``sorted``, ``len``,
+``sum``, ``min``, ``max``, ``any``, ``all``, ``set``, ``frozenset``,
+membership tests and comparisons.  ``dict.keys()`` iteration is flagged in
+the same way when written explicitly — iterate the dict itself, or wrap in
+``sorted(...)`` when the order feeds a decision.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from misolint.context import ModuleContext
+from misolint.rules.base import Finding, Rule, register_rule
+
+_ORDER_FREE_SINKS = {"sorted", "len", "sum", "min", "max", "any", "all",
+                     "set", "frozenset", "bool"}
+_ORDERED_WRAPPERS = {"list", "tuple", "enumerate", "iter", "reversed"}
+_SET_BINOPS = (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)
+_SET_METHODS = {"union", "intersection", "difference", "symmetric_difference"}
+
+
+def is_set_expr(node: ast.AST) -> bool:
+    """Syntactically set-valued: literals, comprehensions, set()/frozenset()
+    calls, .keys() views, set algebra on any of those."""
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        f = node.func
+        if isinstance(f, ast.Name) and f.id in ("set", "frozenset"):
+            return True
+        if isinstance(f, ast.Attribute):
+            if f.attr == "keys":
+                return True
+            if f.attr in _SET_METHODS and is_set_expr(f.value):
+                return True
+    if isinstance(node, ast.BinOp) and isinstance(node.op, _SET_BINOPS):
+        return is_set_expr(node.left) or is_set_expr(node.right)
+    return False
+
+
+@register_rule
+class SetIterationRule(Rule):
+    id = "MS103"
+    title = "unordered set iteration on a potential decision path"
+    fixable = True      # wrap the iterable in sorted(...)
+
+    def _sink_name(self, ctx: ModuleContext,
+                   consumer: ast.AST) -> Optional[str]:
+        """Name of the call directly consuming ``consumer``'s result, for
+        the order-insensitive allowance (e.g. sorted(x for x in s))."""
+        parent = ctx.parent(consumer)
+        if isinstance(parent, ast.Call) and isinstance(parent.func, ast.Name):
+            return parent.func.id
+        return None
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        out: List[Finding] = []
+
+        def flag(node: ast.AST, how: str) -> None:
+            out.append(self.finding(
+                ctx, node,
+                f"{how} iterates a set in hash order; wrap the iterable in "
+                f"sorted(...) (or restructure) so downstream decisions "
+                f"cannot depend on hash-table layout"))
+
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.For) and is_set_expr(node.iter):
+                flag(node.iter, "for-loop")
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                for gen in node.generators:
+                    if is_set_expr(gen.iter):
+                        # a genexp feeding straight into an order-free sink
+                        # (sorted(...), sum(...)) is fine
+                        if (isinstance(node, ast.GeneratorExp)
+                                and self._sink_name(ctx, node)
+                                in _ORDER_FREE_SINKS):
+                            continue
+                        flag(gen.iter, "comprehension")
+            elif isinstance(node, ast.Call):
+                f = node.func
+                name = f.id if isinstance(f, ast.Name) else (
+                    ctx.resolve(f) or "")
+                if (isinstance(f, ast.Name) and name in _ORDERED_WRAPPERS
+                        and node.args and is_set_expr(node.args[0])):
+                    flag(node.args[0], f"{name}(...)")
+                elif (name.startswith("heapq.") and node.args
+                        and any(is_set_expr(a) for a in node.args)):
+                    flag(node, f"{name}(...)")
+            elif isinstance(node, ast.Starred) and is_set_expr(node.value):
+                flag(node.value, "starred unpacking")
+        return out

@@ -1,0 +1,112 @@
+"""MS104: registry hygiene for the policy/placer/objective plugin layers.
+
+The simulator's pluggable layers all follow one convention: a module under
+``policies/`` holds exactly one ``@register_policy`` class whose literal
+``name`` matches the module (underscores become hyphens — ``miso_frag.py``
+registers ``"miso-frag"``), so ``SimConfig.policy`` strings, file names and
+sweep-report columns never drift apart.  Placers and objectives share the
+decorator convention: every ``@register_placer`` / ``@register_objective``
+class must carry a unique, non-empty literal ``name``.
+
+Violations here are how registries rot: a module registering two policies
+under one file, a class whose name is computed at runtime (unfindable by
+grep), or a copy-pasted duplicate name that silently shadows at import.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from misolint.context import ModuleContext
+from misolint.rules.base import Finding, Rule, register_rule
+
+_DECORATORS = ("register_policy", "register_placer", "register_objective")
+_EXEMPT_MODULES = {"__init__", "base"}
+
+
+def _decorator_name(dec: ast.AST) -> Optional[str]:
+    if isinstance(dec, ast.Name):
+        return dec.id
+    if isinstance(dec, ast.Attribute):
+        return dec.attr
+    if isinstance(dec, ast.Call):
+        return _decorator_name(dec.func)
+    return None
+
+
+def _literal_name_attr(cls: ast.ClassDef) -> Optional[str]:
+    """The class's literal `name = "..."` assignment, if any."""
+    for stmt in cls.body:
+        if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)
+                and stmt.targets[0].id == "name"
+                and isinstance(stmt.value, ast.Constant)
+                and isinstance(stmt.value.value, str)):
+            return stmt.value.value
+        if (isinstance(stmt, ast.AnnAssign)
+                and isinstance(stmt.target, ast.Name)
+                and stmt.target.id == "name"
+                and isinstance(stmt.value, ast.Constant)
+                and isinstance(stmt.value.value, str)):
+            return stmt.value.value
+    return None
+
+
+@register_rule
+class RegistryHygieneRule(Rule):
+    id = "MS104"
+    title = "plugin registry hygiene (one policy per module, literal names)"
+    scope = ("src/",)
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        out: List[Finding] = []
+        registered: List[tuple] = []   # (class node, decorator, name|None)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            decs = [d for d in (_decorator_name(x) for x in node.decorator_list)
+                    if d in _DECORATORS]
+            if not decs:
+                continue
+            registered.append((node, decs[0], _literal_name_attr(node)))
+
+        seen: Dict[str, str] = {}
+        for cls, dec, name in registered:
+            if not name:
+                out.append(self.finding(
+                    ctx, cls,
+                    f"@{dec} class `{cls.name}` has no literal string "
+                    f"`name = \"...\"` attribute — registry names must be "
+                    f"grep-able constants"))
+            elif name in seen:
+                out.append(self.finding(
+                    ctx, cls,
+                    f"@{dec} name {name!r} on `{cls.name}` duplicates "
+                    f"`{seen[name]}` in the same module — the second "
+                    f"registration raises (or shadows) at import"))
+            else:
+                seen[name] = cls.name
+
+        # policies/ package: one registered policy per module, file name
+        # and registry name must agree
+        if "/policies/" in ctx.path:
+            module = ctx.path.rsplit("/", 1)[-1].removesuffix(".py")
+            if module not in _EXEMPT_MODULES:
+                policies = [(c, d, n) for c, d, n in registered
+                            if d == "register_policy"]
+                if len(policies) != 1:
+                    out.append(Finding(
+                        rule=self.id, path=ctx.path, line=1, col=0,
+                        message=(f"module `{module}.py` registers "
+                                 f"{len(policies)} policies; the convention "
+                                 f"is exactly one @register_policy class "
+                                 f"per module")))
+                for cls, _, name in policies:
+                    if name and name != module.replace("_", "-"):
+                        out.append(self.finding(
+                            ctx, cls,
+                            f"policy name {name!r} does not match module "
+                            f"`{module}.py` (expected "
+                            f"{module.replace('_', '-')!r}) — keep file "
+                            f"names and SimConfig.policy strings aligned"))
+        return out

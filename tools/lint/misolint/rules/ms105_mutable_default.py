@@ -1,0 +1,62 @@
+"""MS105: mutable default arguments.
+
+``def f(jobs=[])`` evaluates the list once at definition time; every call
+then shares (and mutates) the same object.  In a simulator that replays
+traces across seeds and worker processes this is state leaking between
+runs — the canonical fix is ``=None`` plus a guard in the body, which
+``misolint --fix`` applies mechanically.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from misolint.context import ModuleContext
+from misolint.rules.base import Finding, Rule, register_rule
+
+_MUTABLE_CALLS = {"list", "dict", "set", "bytearray", "defaultdict",
+                  "OrderedDict", "Counter", "deque"}
+
+
+def is_mutable_default(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        f = node.func
+        name = f.id if isinstance(f, ast.Name) else (
+            f.attr if isinstance(f, ast.Attribute) else None)
+        return name in _MUTABLE_CALLS
+    return False
+
+
+@register_rule
+class MutableDefaultRule(Rule):
+    id = "MS105"
+    title = "mutable default argument"
+    fixable = True      # default -> None + `if x is None:` guard
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)):
+                continue
+            args = node.args
+            pos = args.posonlyargs + args.args
+            for arg, default in zip(pos[len(pos) - len(args.defaults):],
+                                    args.defaults):
+                if is_mutable_default(default):
+                    out.append(self.finding(
+                        ctx, default,
+                        f"mutable default `{arg.arg}="
+                        f"{ast.unparse(default)}`: shared across calls; "
+                        f"use None and rebuild inside the body"))
+            for arg, default in zip(args.kwonlyargs, args.kw_defaults):
+                if default is not None and is_mutable_default(default):
+                    out.append(self.finding(
+                        ctx, default,
+                        f"mutable default `{arg.arg}="
+                        f"{ast.unparse(default)}`: shared across calls; "
+                        f"use None and rebuild inside the body"))
+        return out

@@ -1,0 +1,91 @@
+"""MS106: fork-safety — worker pools must use the spawn context.
+
+The PR 5 deadlock class: once a process has initialized JAX/XLA (thread
+pools, locked allocators), ``fork()`` clones held locks into children that
+can never release them — the sweep hung forever the first time workers ran
+real U-Net inference.  The repo contract is therefore *always spawn*:
+
+* ``ProcessPoolExecutor(...)`` must pass an explicit ``mp_context=`` (and
+  not a fork one);
+* ``multiprocessing.Pool`` / ``Process`` must come from
+  ``get_context("spawn")``;
+* ``get_context("fork")`` / ``set_start_method("fork")`` are flagged
+  outright.
+
+The check applies everywhere (any module can be imported after jax is
+live); the message notes when the file itself imports jax, which makes the
+fork hazard a certainty rather than a latency.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from misolint.context import ModuleContext
+from misolint.rules.base import Finding, Rule, register_rule
+
+
+def _kwarg(call: ast.Call, name: str):
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _is_fork_const(node: ast.AST) -> bool:
+    return isinstance(node, ast.Constant) and node.value == "fork"
+
+
+@register_rule
+class ForkSafetyRule(Rule):
+    id = "MS106"
+    title = "process pool without explicit spawn context (fork-after-jax)"
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        out: List[Finding] = []
+        jax_note = (" — this file imports jax, so a forked child inherits "
+                    "XLA's held locks and deadlocks"
+                    if ctx.imports_module("jax") else "")
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = ctx.resolve(node.func) or ""
+            tail = dotted.split(".")[-1]
+            if tail == "ProcessPoolExecutor":
+                mpc = _kwarg(node, "mp_context")
+                if mpc is None:
+                    out.append(self.finding(
+                        ctx, node,
+                        f"ProcessPoolExecutor without explicit mp_context=: "
+                        f"the platform default (fork on Linux) deadlocks "
+                        f"under live XLA; pass multiprocessing.get_context"
+                        f"(\"spawn\"){jax_note}"))
+                elif (isinstance(mpc, ast.Call)
+                        and (ctx.resolve(mpc.func) or "").endswith(
+                            "get_context")
+                        and mpc.args and _is_fork_const(mpc.args[0])):
+                    out.append(self.finding(
+                        ctx, node,
+                        f"ProcessPoolExecutor with a fork context: use "
+                        f"get_context(\"spawn\"){jax_note}"))
+            elif tail in ("Pool", "Process") and dotted.startswith(
+                    "multiprocessing."):
+                out.append(self.finding(
+                    ctx, node,
+                    f"bare multiprocessing.{tail}: derive workers from "
+                    f"multiprocessing.get_context(\"spawn\") so the start "
+                    f"method is explicit{jax_note}"))
+            elif tail == "get_context" and node.args \
+                    and _is_fork_const(node.args[0]):
+                out.append(self.finding(
+                    ctx, node,
+                    f"get_context(\"fork\") requested: forking a "
+                    f"jax-initialized process deadlocks; use spawn"
+                    f"{jax_note}"))
+            elif tail == "set_start_method" and node.args \
+                    and _is_fork_const(node.args[0]):
+                out.append(self.finding(
+                    ctx, node,
+                    f"set_start_method(\"fork\"): the repo contract is "
+                    f"spawn everywhere{jax_note}"))
+        return out

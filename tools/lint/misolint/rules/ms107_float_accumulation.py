@@ -1,0 +1,89 @@
+"""MS107: naive float accumulation in simulator hot loops.
+
+The engine's index invariants (``WorkAggregate`` vs. exact recompute,
+energy integrals, per-component profile clocks) only hold bit-for-bit
+because accumulation sites are deliberate.  A bare ``total += x`` in a
+loop inside ``core/sim/`` accumulates rounding error that depends on
+iteration count and order; the contract is to use the Kahan
+:class:`~repro.core.sim.index.WorkAggregate`, ``math.fsum`` or ``np.sum``
+— or to suppress with a reason when the sum is short and feeds a Kahan
+aggregate anyway.
+
+Skipped automatically: integer-literal increments (``count += 1`` event
+counters) and per-item updates whose target hangs off the loop variable
+(``rj.since_ckpt_t += dt`` updates each job, it does not accumulate
+across them).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from misolint.context import ModuleContext
+from misolint.rules.base import Finding, Rule, register_rule
+
+
+def _root_name(node: ast.AST) -> Optional[str]:
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _target_names(target: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for n in ast.walk(target):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+    return out
+
+
+def _is_integral_literal(node: ast.AST) -> bool:
+    """Integer-valued literal steps (``+= 1``, ``+= 1.0``): exact in binary
+    floating point up to 2**53, so counters are not accumulation hazards."""
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        node = node.operand
+    if not isinstance(node, ast.Constant):
+        return False
+    v = node.value
+    return type(v) is int or (type(v) is float and v.is_integer())
+
+
+@register_rule
+class FloatAccumulationRule(Rule):
+    id = "MS107"
+    title = "naive `+=` float accumulation in a sim hot loop"
+    scope = ("src/repro/core/sim/", "src/repro/core/simulator.py")
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.AugAssign)
+                    and isinstance(node.op, ast.Add)):
+                continue
+            if _is_integral_literal(node.value):
+                continue
+            # collect enclosing loops up to the nearest function boundary
+            loop_vars: Set[str] = set()
+            in_loop = False
+            cur = ctx.parent(node)
+            while cur is not None and not isinstance(
+                    cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.Lambda, ast.Module)):
+                if isinstance(cur, ast.For):
+                    in_loop = True
+                    loop_vars |= _target_names(cur.target)
+                elif isinstance(cur, ast.While):
+                    in_loop = True
+                cur = ctx.parent(cur)
+            if not in_loop:
+                continue
+            root = _root_name(node.target)
+            if root is not None and root in loop_vars:
+                continue        # per-item update, not a cross-loop sum
+            out.append(self.finding(
+                ctx, node,
+                f"`{ast.unparse(node.target)} += ...` accumulates floats "
+                f"across loop iterations; use the Kahan WorkAggregate, "
+                f"math.fsum or np.sum (or suppress with a reason if the "
+                f"sum is short-lived and bounded)"))
+        return out

@@ -1,0 +1,67 @@
+"""MS108: wall-clock and entropy sources inside the simulation engine.
+
+Simulated time is the only clock the engine may consult: a ``time.time()``
+or ``datetime.now()`` on a decision path makes results depend on when (or
+on which machine) the run happened, which no seed can reproduce.  The same
+goes for ambient entropy (``os.urandom``, ``uuid.uuid4``, ``secrets.*``).
+
+``time.perf_counter()`` is deliberately *not* flagged: it is the
+designated profiling clock — its readings only ever land in the
+``sim.prof`` wall-clock buckets that ``sweep --profile`` reports, never in
+simulation state.  Putting a perf_counter value into sim state is exactly
+what this rule exists to keep greppable, so route new timing through the
+prof dict.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from misolint.context import ModuleContext
+from misolint.rules.base import Finding, Rule, register_rule
+
+_BANNED = {
+    "time.time": "wall-clock read",
+    "time.time_ns": "wall-clock read",
+    "time.monotonic": "host-monotonic clock read",
+    "time.monotonic_ns": "host-monotonic clock read",
+    "time.localtime": "wall-clock read",
+    "datetime.datetime.now": "wall-clock read",
+    "datetime.datetime.utcnow": "wall-clock read",
+    "datetime.datetime.today": "wall-clock read",
+    "datetime.date.today": "wall-clock read",
+    "os.urandom": "ambient entropy",
+    "uuid.uuid4": "ambient entropy",
+    "uuid.uuid1": "host/time-derived id",
+    "secrets.token_bytes": "ambient entropy",
+    "secrets.token_hex": "ambient entropy",
+}
+
+
+@register_rule
+class WallClockRule(Rule):
+    id = "MS108"
+    title = "wall-clock/entropy source inside the sim engine"
+    scope = ("src/repro/core/sim/", "src/repro/core/simulator.py")
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = ctx.resolve(node.func) or ""
+            kind = _BANNED.get(dotted)
+            if kind is None and dotted:
+                # `from datetime import datetime` -> datetime.datetime.now
+                # resolves already; also catch bare `now()` style imports
+                for full, k in _BANNED.items():
+                    if dotted == full.split(".", 1)[-1]:
+                        kind = k
+                        break
+            if kind:
+                out.append(self.finding(
+                    ctx, node,
+                    f"{kind} `{dotted}()` inside the sim engine: simulated "
+                    f"time (`sim.t`) and seeded RNG streams are the only "
+                    f"admissible time/entropy sources here"))
+        return out
