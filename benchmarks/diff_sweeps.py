@@ -9,7 +9,10 @@ scenario regresses by more than ``--threshold`` (default 2%):
 * ``stp_mean`` — lower is worse (a throughput regression);
 * ``energy_j_mean`` / ``energy_per_job_j_mean`` — higher is worse (an
   energy regression; only compared when both reports carry the v3 energy
-  columns).
+  columns);
+* ``goodput_mean`` — lower is worse and ``work_lost_s_mean`` — higher is
+  worse (robustness regressions; only compared when both reports carry the
+  v4 robustness columns — the CI gate for the chaos scenarios).
 
 Timing fields (``wall_s``, ``wall_s_total``) and execution details
 (``config.workers``, ``config.serial``) are ignored: how a sweep was
@@ -35,6 +38,8 @@ METRICS = {
     "stp_mean": -1,
     "energy_j_mean": +1,
     "energy_per_job_j_mean": +1,
+    "goodput_mean": -1,
+    "work_lost_s_mean": +1,
 }
 
 

@@ -4,7 +4,7 @@ ratios) that the pluggable objective layer optimizes for."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Sequence
+from typing import Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -30,14 +30,32 @@ class TraceMetrics:
                                  # merit on its own (more joules at equal JCT
                                  # *lowers* it); rank efficiency with
                                  # energy_per_job_j / energy_j instead
+    # robustness accounting (all zero when no fault model is enabled).
+    # ``stp`` only ever counted committed work — rolled-back progress is
+    # re-added to job.remaining and redone — so goodput aliases stp and
+    # gross_stp adds back the fault-destroyed work for the classic
+    # goodput-vs-throughput split.
+    goodput: float = 0.0         # committed work rate per GPU (== stp)
+    gross_stp: float = 0.0       # goodput + fault-destroyed work rate
+    work_lost_s: float = 0.0     # work-seconds destroyed by faults/migrations
+    n_fault_events: int = 0      # injector + hard (GPU/rack outage) faults
+    blast_jobs: int = 0          # jobs killed by MPS blast-radius faults
+    blast_radius_max: int = 0    # largest single-fault co-resident kill
+    mean_recover_s: float = 0.0  # eviction -> re-placement, per victim
+    quarantine_occupancy: float = 0.0  # quarantined GPU-time / fleet-time
+    n_quarantines: int = 0
+    n_migrations: int = 0        # residents evacuated via the primitive
 
 
 def compute_metrics(jobs: Sequence[Job], n_gpus: int,
                     energy_j: float = 0.0,
-                    energy_span_s: float = 0.0) -> TraceMetrics:
+                    energy_span_s: float = 0.0,
+                    fault_stats: Optional[Mapping] = None) -> TraceMetrics:
     """``energy_span_s`` is the wall-clock span ``energy_j`` was integrated
     over (the engine's final clock); it defaults to the makespan, which
-    undercounts the pre-first-arrival idle window."""
+    undercounts the pre-first-arrival idle window.  ``fault_stats`` is the
+    engine's robustness counter map (``ClusterSim.fstats`` plus the lost /
+    recover aggregates); ``None`` leaves every robustness field zero."""
     done = [j for j in jobs if j.finish_time is not None]
     if not done:
         raise ValueError("no completed jobs")
@@ -56,6 +74,25 @@ def compute_metrics(jobs: Sequence[Job], n_gpus: int,
     }
     avg_jct = float(jcts.mean())
     span = energy_span_s if energy_span_s > 0 else makespan
+    robust = {}
+    if fault_stats is not None:
+        fs = fault_stats
+        lost = float(fs.get("work_lost_s", 0.0))
+        n_rec = int(fs.get("n_recovered", 0))
+        robust = dict(
+            goodput=float(stp),
+            gross_stp=float(stp + (lost / makespan / n_gpus
+                                   if makespan > 0 else 0.0)),
+            work_lost_s=lost,
+            n_fault_events=int(fs.get("n_faults", 0)),
+            blast_jobs=int(fs.get("blast_jobs", 0)),
+            blast_radius_max=int(fs.get("blast_radius_max", 0)),
+            mean_recover_s=(float(fs.get("recover_s_total", 0.0)) / n_rec
+                            if n_rec else 0.0),
+            quarantine_occupancy=(float(fs.get("quarantine_gpu_s", 0.0))
+                                  / (n_gpus * span) if span > 0 else 0.0),
+            n_quarantines=int(fs.get("n_quarantines", 0)),
+            n_migrations=int(fs.get("n_migrations", 0)))
     return TraceMetrics(
         avg_jct=avg_jct, makespan=float(makespan), stp=float(stp),
         p50_jct=float(np.percentile(jcts, 50)),
@@ -66,4 +103,5 @@ def compute_metrics(jobs: Sequence[Job], n_gpus: int,
         energy_j=float(energy_j),
         avg_power_w=float(energy_j / span) if span > 0 else 0.0,
         energy_per_job_j=float(energy_j / len(done)),
-        jct_per_joule=float(avg_jct / energy_j) if energy_j > 0 else 0.0)
+        jct_per_joule=float(avg_jct / energy_j) if energy_j > 0 else 0.0,
+        **robust)

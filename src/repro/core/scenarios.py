@@ -23,6 +23,13 @@ Arrival processes (all seeded, all returning sorted times):
 * ``rack_outage``  — correlated rack-level failures: whole racks of GPUs go
   down in one event (``SimConfig.rack_size`` / ``rack_mtbf_s``), the
   failure-domain realism per-GPU Poisson faults cannot express
+* ``mps_blast``    — chaos: crash shocks whose blast radius depends on the
+  victim GPU's phase (MPS window kills every co-resident, MIG one slice) —
+  the paper §2 containment asymmetry, via the ``mps_blast`` fault injector
+* ``flaky_fleet``  — chaos: blasts + flaky MIG reconfigs + persistent
+  stragglers with the health/quarantine machinery ON (its ablation twin
+  ``flaky_fleet_noq`` turns quarantine+migration OFF; the pair is the CI
+  gate showing graceful degradation buys goodput)
 
 Usage::
 
@@ -125,8 +132,9 @@ class Scenario:
     # fault injection inside the simulator)
     seed_sensitive: bool = True
     # extra SimConfig overrides bundled with the scenario (e.g. rack-fault
-    # knobs); the sweep's explicit flags still win over these
-    sim_kwargs: Mapping[str, float] = field(default_factory=dict)
+    # or chaos-injector knobs); the sweep's explicit flags still win over
+    # these
+    sim_kwargs: Mapping[str, object] = field(default_factory=dict)
 
     def make_jobs(self, seed: int, n_jobs: Optional[int] = None) -> List[Job]:
         return self.make(seed, n_jobs or self.n_jobs)
@@ -223,6 +231,58 @@ register_scenario(Scenario(
     fleet="a100:2+h100:2", n_jobs=14,
     sim_kwargs={"rack_size": 2, "rack_mtbf_s": 2400.0, "repair_s": 240.0,
                 "ckpt_interval_s": 300.0}))
+
+
+# ------------------------------------------------------- chaos scenarios
+# Fault-injection settings (see repro.core.sim.faults): seeds vary the
+# chaos schedule via the dedicated (seed, 0xFA17) fault stream even where
+# the workload itself is fixed.
+
+register_scenario(Scenario(
+    "mps_blast", "chaos: phase-dependent crash shocks — a fault during an "
+                 "MPS exploration window kills every co-resident, under "
+                 "MIG exactly one slice (paper §2 containment asymmetry)",
+    _with_arrivals(poisson_arrivals, 35.0, seed_salt=707,
+                   max_duration_s=1800.0),
+    fleet="a100:3+h100:1", n_jobs=16,
+    sim_kwargs={"faults": ("mps_blast",), "mps_crash_mtbf_s": 900.0,
+                "ckpt_interval_s": 240.0, "quarantine_faults": 2,
+                "quarantine_window_s": 1800.0,
+                "quarantine_repair_s": 600.0}))
+
+# shared chaos knobs for the flaky-fleet ablation pair: blasts + flaky MIG
+# reconfigs + persistent stragglers (recover_s far beyond the trace, so
+# only a quarantine's hardware swap clears a straggler)
+_FLAKY_FAULTS = {
+    "faults": ("mps_blast", "flaky_reconfig", "straggler"),
+    "mps_crash_mtbf_s": 1500.0,
+    "reconfig_fail_p": 0.15, "reconfig_retry_s": 15.0,
+    "reconfig_max_retries": 2,
+    "straggler_mtbf_s": 700.0, "straggler_factor": 0.25,
+    "straggler_recover_s": 100000.0,
+    "ckpt_interval_s": 240.0, "repair_s": 480.0,
+}
+
+register_scenario(Scenario(
+    "flaky_fleet", "chaos: blasts + flaky reconfigs + persistent "
+                   "stragglers, health/quarantine machinery ON (repeated "
+                   "faults evacuate via the migration primitive)",
+    _with_arrivals(poisson_arrivals, 40.0, seed_salt=808,
+                   max_duration_s=1800.0),
+    fleet="a100:3+h100:1", n_jobs=16,
+    sim_kwargs={**_FLAKY_FAULTS, "quarantine_faults": 2,
+                "quarantine_window_s": 3600.0,
+                "quarantine_repair_s": 480.0}))
+
+register_scenario(Scenario(
+    "flaky_fleet_noq", "ablation twin of flaky_fleet with quarantine + "
+                       "migration OFF: degraded GPUs stay in service "
+                       "(stragglers never clear, blast repeat-offenders "
+                       "keep hosting jobs)",
+    _with_arrivals(poisson_arrivals, 40.0, seed_salt=808,
+                   max_duration_s=1800.0),
+    fleet="a100:3+h100:1", n_jobs=16,
+    sim_kwargs={**_FLAKY_FAULTS, "quarantine_faults": 0}))
 
 
 # ------------------------------------------------------------ trace replay

@@ -2,15 +2,22 @@
 
 * ``engine``   — event loop, clock, failures, accounting (:class:`ClusterSim`)
 * ``gpu``      — per-GPU phase state machine ``IDLE→CKPT→MPS_PROF→MIG_RUN``
+  plus the orthogonal health machine ``healthy→degraded→quarantined``
 * ``policies`` — pluggable scheduling policies (``Policy`` ABC + registry)
 * ``placement`` — pluggable placement layer (``Placer`` ABC + registry)
 * ``objectives`` — pluggable Algorithm-1 goals (``Objective`` ABC + registry:
   ``throughput`` / ``energy`` / ``edp``)
+* ``faults``   — pluggable fault injectors (``FaultInjector`` ABC + registry:
+  ``mps_blast`` / ``flaky_reconfig`` / ``straggler`` / ``estimator_garbage``)
 
 ``from repro.core.simulator import ...`` remains a supported alias.
 """
 from repro.core.sim.engine import ClusterSim, SimConfig, simulate
-from repro.core.sim.gpu import CKPT, GPU, IDLE, MIG_RUN, MPS_PROF, RJob
+from repro.core.sim.faults import (FaultInjector, available_fault_injectors,
+                                   get_fault_injector,
+                                   register_fault_injector)
+from repro.core.sim.gpu import (CKPT, DEGRADED, GPU, HEALTHY, IDLE, MIG_RUN,
+                                MPS_PROF, QUARANTINED, RJob)
 from repro.core.sim.objectives import (Objective, available_objectives,
                                        get_objective, register_objective)
 from repro.core.sim.placement import (Placer, available_placers, get_placer,
@@ -21,8 +28,11 @@ from repro.core.sim.policies import (Policy, available_policies, get_policy,
 __all__ = [
     "ClusterSim", "SimConfig", "simulate",
     "GPU", "RJob", "IDLE", "CKPT", "MPS_PROF", "MIG_RUN",
+    "HEALTHY", "DEGRADED", "QUARANTINED",
     "Policy", "register_policy", "get_policy", "available_policies",
     "Placer", "register_placer", "get_placer", "available_placers",
     "Objective", "register_objective", "get_objective",
     "available_objectives",
+    "FaultInjector", "register_fault_injector", "get_fault_injector",
+    "available_fault_injectors",
 ]

@@ -52,7 +52,9 @@ from repro.core.jobs import Job
 from repro.core.metrics import TraceMetrics, compute_metrics
 from repro.core.partitions import PartitionSpace
 from repro.core.perfmodel import PerfModel
-from repro.core.sim.gpu import CKPT, GPU, IDLE, MIG_RUN, MPS_PROF, RJob
+from repro.core.sim.faults import FaultInjector, get_fault_injector
+from repro.core.sim.gpu import (CKPT, DEGRADED, GPU, HEALTHY, IDLE, MIG_RUN,
+                                MPS_PROF, QUARANTINED, RJob)
 from repro.core.sim.index import FleetIndex, WorkAggregate
 from repro.core.sim.policies import get_policy
 
@@ -80,6 +82,25 @@ class SimConfig:
     # GPU ids fail together at Poisson rate 1/rack_mtbf_s (both must be > 0)
     rack_size: int = 0
     rack_mtbf_s: float = 0.0
+    # pluggable fault injectors (core/sim/faults.py) by registry name; the
+    # default () enables nothing — no fault events exist, no fault RNG is
+    # drawn, golden traces stay bit-identical (zero-overhead guarantee)
+    faults: Tuple[str, ...] = ()
+    mps_crash_mtbf_s: float = 0.0    # mps_blast: mean s between crash shocks
+    reconfig_fail_p: float = 0.0     # flaky_reconfig: P(repartition op fails)
+    reconfig_retry_s: float = 20.0   # base retry backoff, doubled per attempt
+    reconfig_max_retries: int = 3    # exhausted retries = hard GPU fault
+    straggler_mtbf_s: float = 0.0    # straggler: mean s between onsets
+    straggler_factor: float = 0.5    # degraded speed multiplier while struck
+    straggler_recover_s: float = 1800.0  # degradation clears after this
+    estimator_fault_p: float = 0.0   # estimator_garbage: P(garbage window)
+    # GPU health state machine (healthy -> degraded -> quarantined ->
+    # repaired): `quarantine_faults` soft faults within `quarantine_window_s`
+    # quarantine the GPU for `quarantine_repair_s`, migrating its residents
+    # off via the checkpoint/rollback primitive.  0 = never quarantine.
+    quarantine_faults: int = 0
+    quarantine_window_s: float = 3600.0
+    quarantine_repair_s: float = 1800.0
     seed: int = 0
     # profiling measurement noise (paper Fig 14): sigma of the relative error
     # on each MPS-matrix entry; drawn from the simulator RNG per window
@@ -123,6 +144,12 @@ class ClusterSim:
         # numbers across sensitivity arms — varying mps_noise_sigma must not
         # perturb the failure-injection schedule drawn from self.rng
         self.noise_rng = np.random.default_rng((cfg.seed, 0xA100))
+        # third dedicated stream, for the pluggable fault injectors
+        # (core/sim/faults.py): enabling or tuning chaos must not perturb
+        # the Poisson failure schedule in self.rng or the measurement noise
+        # in self.noise_rng — and vice versa (CONTRIBUTING, determinism
+        # contract)
+        self.fault_rng = np.random.default_rng((cfg.seed, 0xFA17))
         self.profile_cache: Dict[tuple, Dict[int, float]] = {}  # (mi_group, space)
         self.completed: List[int] = []
         self._counter = itertools.count()
@@ -146,6 +173,30 @@ class ClusterSim:
             self._refresh_feas(g)
             self.index.add(g)
         self.policy = get_policy(cfg.policy)(self)
+        # -- robustness accounting (all zero when nothing ever faults):
+        # destroyed work and recovery waits are Kahan-summed like the
+        # in-system work aggregate; counters are plain ints
+        self.fstats: Dict[str, float] = {
+            "n_faults": 0, "n_blasts": 0, "blast_jobs": 0,
+            "blast_radius_max": 0, "n_quarantines": 0, "n_migrations": 0,
+            "n_reconfig_retries": 0, "n_estimator_faults": 0,
+            "quarantine_gpu_s": 0.0,
+        }
+        self.lost_agg = WorkAggregate()    # work-seconds destroyed by faults
+        self.recover_agg = WorkAggregate()  # fault-eviction -> re-place waits
+        self._evict_t: Dict[int, float] = {}  # jid -> last fault-evict time
+        # -- fault injectors: engine-side hooks are collected once so runs
+        # without them pay a single empty-list check per hook point
+        self.fault_injectors: Dict[str, FaultInjector] = {}
+        self._reconfig_hooks: List[FaultInjector] = []
+        self._est_hooks: List[FaultInjector] = []
+        for name in cfg.faults:
+            inj = get_fault_injector(name)(self)
+            self.fault_injectors[name] = inj
+            if type(inj).on_reconfig_end is not FaultInjector.on_reconfig_end:
+                self._reconfig_hooks.append(inj)
+            if type(inj).filter_estimates is not FaultInjector.filter_estimates:
+                self._est_hooks.append(inj)
 
         for j in jobs:
             self._push(j.arrival, "arrival", j.jid)
@@ -158,6 +209,8 @@ class ClusterSim:
             for r in range(n_racks):
                 self._push(float(self.rng.exponential(cfg.rack_mtbf_s)),
                            "rack_failure", r)
+        for inj in self.fault_injectors.values():
+            inj.schedule_initial()
 
     # ---------------------------------------------------------- event glue
 
@@ -228,6 +281,11 @@ class ClusterSim:
                 self._on_failure(self.gpus[payload])
             elif kind == "rack_failure":
                 self._on_rack_failure(payload)
+            elif kind == "fault":
+                # pluggable chaos (core/sim/faults.py): payload routes to
+                # the owning injector, which handles and usually re-arms it
+                name, data = payload
+                self.fault_injectors[name].on_event(data)
             elif kind == "repair":
                 self.policy.admit()
         # settle every GPU's accounting (and energy integral) to the final
@@ -237,11 +295,23 @@ class ClusterSim:
             g.advance(self.t)
         if prof is not None:
             prof["total_s"] += time.perf_counter() - t_run0
+        fs = self.fstats
+        if fs["n_quarantines"]:
+            # a quarantine still open at the final clock only occupied the
+            # fleet up to that clock, not its whole repair window
+            fs["quarantine_gpu_s"] -= sum(
+                g.down_until - self.t for g in self.gpus
+                if g.health == QUARANTINED and g.down_until > self.t)
         return compute_metrics([self.jobs[i] for i in self.completed],
                                self.cfg.n_gpus,
                                energy_j=float(sum(g.energy_j
                                                   for g in self.gpus)),
-                               energy_span_s=self.t)
+                               energy_span_s=self.t,
+                               fault_stats={
+                                   **fs,
+                                   "work_lost_s": self.lost_agg.total,
+                                   "recover_s_total": self.recover_agg.total,
+                                   "n_recovered": self.recover_agg.count})
 
     # ----------------------------------------------- placement constraints
     # Shared feasibility checks usable by any policy's pick_gpu; all are
@@ -259,6 +329,10 @@ class ClusterSim:
             g = self.gpus[gid]
             if g._in_index or t < g.down_until:
                 continue
+            if g.health != HEALTHY:
+                # repairs are full repairs: a quarantined (or degraded-then-
+                # failed) GPU comes back healthy
+                g.health = HEALTHY
             self._refresh_feas(g)
             self.index.add(g)
             self._up_cache = None
@@ -365,6 +439,12 @@ class ClusterSim:
         if job.start_time is None:
             job.start_time = self.t
         job.t_queue += max(0.0, self.t - job.queue_since)
+        if self._evict_t:
+            # time-to-recover: the wait between a fault eviction (failure /
+            # blast / migration) and this re-placement
+            t0 = self._evict_t.pop(job.jid, None)
+            if t0 is not None:
+                self.recover_agg.add(self.t - t0)
         g.jobs[job.jid] = RJob(job)
         self._resident_count += 1
         self._resident_changed(g)
@@ -396,7 +476,12 @@ class ClusterSim:
         """A phase window on ``g`` expired; let the policy transition the
         state machine.  ``schedule=False`` suppresses event scheduling for
         callers that finalize the GPU themselves right after (e.g. the
-        zero-dead-time checkpoint in MISO's ``begin_profiling``)."""
+        zero-dead-time checkpoint in MISO's ``begin_profiling`` — such
+        instant transitions are not reconfigure ops and skip the fault
+        hook)."""
+        if schedule and self._reconfig_hooks and g.phase == CKPT \
+                and self._reconfig_failed(g):
+            return
         self._pre_phase_end(g)
         self.policy.on_phase_end(g)
         self.finalize(g, schedule=schedule)
@@ -407,11 +492,28 @@ class ClusterSim:
         GPU exactly as back-to-back :meth:`end_phase` calls would (phase
         ends are cross-GPU independent; event counters are consumed only by
         the finalize loop, in the same order)."""
+        if self._reconfig_hooks:
+            gs = [g for g in gs
+                  if not (g.phase == CKPT and self._reconfig_failed(g))]
+            if not gs:
+                return
         for g in gs:
             self._pre_phase_end(g)
         self.policy.on_phase_end_batch(gs)
         for g in gs:
             self.finalize(g)
+
+    def _reconfig_failed(self, g: GPU) -> bool:
+        """Give enabled injectors a shot at failing the reconfigure op that
+        ends a CKPT window (transient MIG-reconfiguration faults).  True
+        means the op failed: the injector already rescheduled the retry (or
+        escalated to a hard fault) and the phase end must not proceed — in
+        particular the in-flight checkpoint is NOT durable (no since_ckpt
+        reset), matching the mid-save failure semantics in ``GPU.advance``."""
+        for inj in self._reconfig_hooks:
+            if inj.on_reconfig_end(g):
+                return True
+        return False
 
     def _pre_phase_end(self, g: GPU):
         g.advance(self.t)
@@ -479,10 +581,17 @@ class ClusterSim:
             self.finalize(g)
         self.policy.admit()
 
-    # ---------------------------------------------------------- failures
+    # ------------------------------------------- failures, faults & health
 
     def _on_failure(self, g: GPU):
-        self._fail_gpu(g)
+        # an independent failure landing on a GPU already down (rack outage
+        # or an earlier fault) is absorbed: it must not restart the repair
+        # clock, re-evacuate an empty GPU or push a second live heap entry —
+        # the same guard the rack path applies.  The next-failure draw still
+        # happens, so the Poisson schedule is unchanged either way.
+        if self.t >= g.down_until:
+            self.record_fault(g, hard=True)
+            self._fail_gpu(g)
         if self.cfg.gpu_mtbf_s > 0:
             self._push(self.t + float(self.rng.exponential(self.cfg.gpu_mtbf_s)),
                        "failure", g.gid)
@@ -495,37 +604,134 @@ class ClusterSim:
         lo = rack * self.cfg.rack_size
         for g in self.gpus[lo:lo + self.cfg.rack_size]:
             if self.t >= g.down_until:
+                self.record_fault(g, hard=True)
                 self._fail_gpu(g)
         self._push(self.t + float(self.rng.exponential(self.cfg.rack_mtbf_s)),
                    "rack_failure", rack)
 
-    def _fail_gpu(self, g: GPU):
-        """Take ``g`` down now: roll resident jobs back to their last
-        placement checkpoint, requeue them at the head, schedule the
-        repair.  Shared by independent and rack-correlated failures."""
+    def record_fault(self, g: GPU, hard: bool = False) -> bool:
+        """Account one fault on ``g`` and drive the health state machine
+        (healthy -> degraded -> quarantined).  ``hard`` faults — outright
+        GPU/rack failures, which already pay a full repair window — are
+        counted but do not feed the quarantine tracker.  Returns True when
+        this fault tipped ``g`` into quarantine (its residents are already
+        migrated off and the GPU is down)."""
+        self.fstats["n_faults"] += 1
+        if hard:
+            return False
+        cfg = self.cfg
+        g.fault_times.append(self.t)
+        lo = self.t - cfg.quarantine_window_s
+        while g.fault_times and g.fault_times[0] < lo:
+            g.fault_times.pop(0)
+        if (cfg.quarantine_faults > 0
+                and len(g.fault_times) >= cfg.quarantine_faults
+                and self.t >= g.down_until):
+            self._quarantine(g)
+            return True
+        if g.health == HEALTHY:
+            g.health = DEGRADED
+        return False
+
+    def _quarantine(self, g: GPU):
+        """Too many faults inside the window: migrate every resident off
+        ``g`` (checkpoint/rollback primitive) and take it out of service
+        for ``cfg.quarantine_repair_s`` through the same down machinery
+        plain failures use; the repair promotion restores it to healthy."""
+        fs = self.fstats
+        fs["n_quarantines"] += 1
+        fs["quarantine_gpu_s"] += self.cfg.quarantine_repair_s
+        self.migrate_residents(g)
+        g.fault_times = []
+        self._take_down(g, self.cfg.quarantine_repair_s)
+        g.health = QUARANTINED
+        # unlike plain failures (whose victims wait for the next admit),
+        # evacuation is a deliberate scheduling action: re-place now
+        self.policy.admit()
+
+    def migrate_residents(self, g: GPU) -> int:
+        """Migration primitive (quarantine evacuation today; live migration
+        / defragmentation tomorrow): checkpoint-roll every resident of
+        ``g`` back and requeue it at the head in placement order.  A
+        migrating job pays exactly its since-last-checkpoint work — the
+        same price a failure charges — and its re-placement wait lands in
+        the time-to-recover metric.  Returns the number migrated; ``g``
+        stays in service (callers that also fail the GPU take it down
+        themselves)."""
+        n = len(g.jobs)
+        if n:
+            self.fstats["n_migrations"] += n
+            self._evacuate_residents(g)
+            g.phase = IDLE
+            g.partition = ()
+            self._resident_changed(g)
+            self.finalize(g)
+        return n
+
+    def crash_jobs(self, g: GPU, jids: Sequence[int]):
+        """Fault-kill specific residents of ``g`` (MPS blast radius / MIG
+        slice containment): each victim rolls back to its last placement
+        checkpoint and requeues at the head in placement order; ``g`` stays
+        in service and the policy reshapes the survivors
+        (``Policy.on_fault_evict``)."""
         g.advance(self.t)
-        if g.jobs:
-            requeued = []
-            for rj in g.jobs.values():
-                job = rj.job
-                # roll back to the last checkpoint of THIS placement: the
-                # destroyed progress is the speed-weighted work accrued since
-                # then (RJob.since_ckpt_work), never wall-clock seconds and
-                # never cumulative t_run across earlier placements
-                rolled = min(job.work, job.remaining + rj.since_ckpt_work)
-                self.work_agg.shift(rolled - job.remaining)
-                job.remaining = rolled
-                job.queue_since = self.t
-                requeued.append(job.jid)
-            # victims go to the queue head without reversing their relative
-            # (placement) order
-            self.queue[:0] = requeued
-            self._resident_count -= len(g.jobs)
-            g.jobs.clear()
-            g.estimates.clear()
+        victims = set(jids)
+        requeued = []
+        for jid in list(g.jobs):
+            if jid not in victims:
+                continue
+            rj = g.jobs[jid]
+            job = rj.job
+            rolled = min(job.work, job.remaining + rj.since_ckpt_work)
+            self.work_agg.shift(rolled - job.remaining)
+            self.lost_agg.shift(rolled - job.remaining)
+            job.remaining = rolled
+            job.queue_since = self.t
+            self._evict_t[jid] = self.t
+            requeued.append(jid)
+            del g.jobs[jid]
+            g.estimates.pop(jid, None)
+        self.queue[:0] = requeued
+        self._resident_count -= len(requeued)
+        self._resident_changed(g)
+        self.policy.on_fault_evict(g)
+        self.finalize(g)
+        self.policy.admit()
+
+    def _evacuate_residents(self, g: GPU):
+        """Checkpoint-rollback eviction shared by failures, quarantine and
+        migration: every resident loses its since-last-checkpoint work
+        (speed-weighted, never wall-clock seconds and never cumulative
+        t_run across earlier placements), is requeued at the head without
+        reversing placement order, and starts a time-to-recover clock."""
+        g.advance(self.t)
+        if not g.jobs:
+            return
+        requeued = []
+        for rj in g.jobs.values():
+            job = rj.job
+            rolled = min(job.work, job.remaining + rj.since_ckpt_work)
+            self.work_agg.shift(rolled - job.remaining)
+            self.lost_agg.shift(rolled - job.remaining)
+            job.remaining = rolled
+            job.queue_since = self.t
+            self._evict_t[job.jid] = self.t
+            requeued.append(job.jid)
+        self.queue[:0] = requeued
+        self._resident_count -= len(g.jobs)
+        g.jobs.clear()
+        g.estimates.clear()
+
+    def _take_down(self, g: GPU, repair_s: float):
+        """Out of service for ``repair_s``, shared by failures and
+        quarantine.  Repairs are full repairs: straggler degradation and
+        any in-flight reconfig retry clear with the hardware swap."""
         g.phase = IDLE
         g.partition = ()
-        g.down_until = self.t + self.cfg.repair_s
+        g.speed_fault = 1.0
+        g.sched_ok = True
+        g.reconfig_tries = 0
+        g.down_until = self.t + repair_s
         g.stamp += 1
         # out of service: drop from the fleet index and the up-set cache;
         # _sync_up promotes it back once the clock passes down_until (a
@@ -534,6 +740,22 @@ class ClusterSim:
         self._up_cache = None
         heapq.heappush(self._down_heap, (g.down_until, g.gid))
         self._push(g.down_until, "repair", g.gid, g.stamp)
+
+    def _fail_gpu(self, g: GPU):
+        """Take ``g`` down now: roll resident jobs back to their last
+        placement checkpoint, requeue them at the head, schedule the
+        repair.  Shared by independent failures, rack outages and
+        exhausted reconfig retries."""
+        self._evacuate_residents(g)
+        self._take_down(g, self.cfg.repair_s)
+
+    def filter_estimates(self, g: GPU, jids: Sequence[int], ests):
+        """Give enabled estimator-fault injectors a chance to corrupt the
+        freshly-produced slice-speed estimates (no-op list when no injector
+        hooks the point — the zero-overhead path)."""
+        for inj in self._est_hooks:
+            ests = inj.filter_estimates(g, jids, ests)
+        return ests
 
     # ---------------------------------------------------------- common
 

@@ -1,0 +1,289 @@
+"""Pluggable fault injection: the failure-domain realism layer.
+
+MISO's central trade-off is that MPS is lightweight but lacks the error
+containment MIG provides (paper §2): a job crash during an MPS exploration
+window can take down every co-located job, while MIG isolates the blast to
+one slice.  Uniform Poisson GPU/rack outages (``SimConfig.gpu_mtbf_s`` /
+``rack_mtbf_s``, owned by the engine) cannot express that asymmetry — this
+module holds the injectors that can, behind the same registry pattern the
+policies / placers / objectives layers use:
+
+* ``mps_blast``         — crash shocks whose blast radius depends on the
+  victim GPU's phase: every co-resident dies during an MPS window, exactly
+  one (random) sliced job dies under MIG, nothing dies while checkpointing
+  or idle.
+* ``flaky_reconfig``    — a CKPT-ending MIG repartition op fails with
+  probability ``reconfig_fail_p`` and is retried under bounded exponential
+  backoff; the GPU is unschedulable while retrying, and exhausting
+  ``reconfig_max_retries`` escalates to a hard GPU fault.
+* ``straggler``         — persistent speed degradation (``straggler_factor``
+  multiplier), not binary death; clears after ``straggler_recover_s`` or a
+  quarantine repair.
+* ``estimator_garbage`` — the U-Net occasionally emits garbage slice-speed
+  estimates (NaNs / junk / all-zero); the policy layer degrades to its
+  last-known-good estimate or the oracle fallback instead of crashing
+  (``Policy.sanitize_estimate``).
+
+Determinism contract: every injector draws exclusively from the engine's
+dedicated ``sim.fault_rng`` stream (seeded ``(seed, 0xFA17)``), in event
+order — enabling or tuning chaos never perturbs the main failure schedule
+(``sim.rng``) or the MPS measurement noise (``sim.noise_rng``).  With
+``SimConfig.faults=()`` no injector exists, no fault event is scheduled and
+no fault RNG is drawn: golden traces stay bit-identical (the zero-overhead
+guarantee, enforced by ``tests/test_faults.py``).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any, Dict, List, Sequence, Type
+
+from repro.core.sim.gpu import GPU, MIG_RUN, MPS_PROF
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from repro.core.sim.engine import ClusterSim
+
+Estimate = Dict[int, float]
+
+_REGISTRY: Dict[str, Type["FaultInjector"]] = {}
+
+
+def register_fault_injector(cls: Type["FaultInjector"]
+                            ) -> Type["FaultInjector"]:
+    """Class decorator: make ``cls`` reachable from ``SimConfig.faults``."""
+    if not getattr(cls, "name", None):
+        raise ValueError(f"{cls.__name__} must define a non-empty `name`")
+    if cls.name in _REGISTRY:
+        raise ValueError(f"duplicate fault injector name {cls.name!r} "
+                         f"({_REGISTRY[cls.name].__name__} vs {cls.__name__})")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def get_fault_injector(name: str) -> Type["FaultInjector"]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown fault injector {name!r}; "
+            f"available: {', '.join(available_fault_injectors())}") from None
+
+
+def available_fault_injectors() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+class FaultInjector:
+    """Base class for fault injectors (one instance per simulation).
+
+    Injectors drive themselves through ``"fault"`` events on the engine's
+    heap: :meth:`schedule_initial` arms the first one at construction time
+    and :meth:`on_event` handles (and typically re-arms) each firing.  The
+    two engine-side hooks below are dispatched only when an *enabled*
+    injector overrides them, so un-hooked simulations pay a single
+    empty-list check.
+    """
+
+    name: str = ""
+
+    def __init__(self, sim: "ClusterSim"):
+        self.sim = sim
+
+    def schedule_initial(self) -> None:
+        """Push this injector's first event(s); called at engine build."""
+
+    def on_event(self, payload: Any) -> None:
+        """Handle one ``"fault"`` event addressed to this injector."""
+
+    def on_reconfig_end(self, g: GPU) -> bool:
+        """A CKPT window (checkpoint + MIG reconfigure op) just expired on
+        ``g``.  Return True to fail the op: the injector has rescheduled
+        the retry (or escalated) and the phase end must not proceed."""
+        return False
+
+    def filter_estimates(self, g: GPU, jids: Sequence[int],
+                         ests: Sequence[Estimate]) -> Sequence[Estimate]:
+        """Intercept freshly-produced slice-speed estimates (corruption
+        point for estimator faults)."""
+        return ests
+
+
+@register_fault_injector
+class MpsBlastInjector(FaultInjector):
+    """Phase-dependent crash shocks (paper §2's containment asymmetry).
+
+    A Poisson stream (rate ``1 / mps_crash_mtbf_s``) of crash shocks, each
+    aimed at a uniformly random GPU.  The blast radius is decided by what
+    the victim GPU is doing:
+
+    * MPS exploration window — no error containment: every co-resident on
+      the GPU dies (rolled back to its last checkpoint and requeued);
+    * MIG run — hardware isolation: exactly one random sliced job dies,
+      its slice-mates survive untouched;
+    * CKPT / idle / down — no kernels in flight, the shock is absorbed.
+    """
+
+    name = "mps_blast"
+
+    def schedule_initial(self) -> None:
+        if self.sim.cfg.mps_crash_mtbf_s > 0.0:
+            self._arm()
+
+    def _arm(self) -> None:
+        sim = self.sim
+        dt = float(sim.fault_rng.exponential(sim.cfg.mps_crash_mtbf_s))
+        sim._push(sim.t + dt, "fault", (self.name, None))
+
+    def on_event(self, payload: Any) -> None:
+        sim = self.sim
+        g = sim.gpus[int(sim.fault_rng.integers(len(sim.gpus)))]
+        self._arm()
+        if sim.t < g.down_until or not g.jobs:
+            return
+        if g.phase == MPS_PROF:
+            victims = list(g.jobs)
+            fs = sim.fstats
+            fs["n_blasts"] += 1
+            fs["blast_jobs"] += len(victims)
+            if len(victims) > fs["blast_radius_max"]:
+                fs["blast_radius_max"] = len(victims)
+        elif g.phase == MIG_RUN:
+            sliced = [jid for jid, rj in g.jobs.items() if rj.slice_size]
+            if not sliced:
+                return
+            victims = [sliced[int(sim.fault_rng.integers(len(sliced)))]]
+        else:
+            return
+        sim.crash_jobs(g, victims)
+        sim.record_fault(g)
+
+
+@register_fault_injector
+class FlakyReconfigInjector(FaultInjector):
+    """Transient MIG-reconfiguration failures with bounded backoff.
+
+    Each CKPT-ending repartition op fails independently with probability
+    ``reconfig_fail_p``.  A failed op keeps the GPU in its CKPT phase for a
+    backoff of ``reconfig_retry_s * 2**(attempt-1)`` and pulls it out of
+    the placement index (unschedulable while retrying — residents keep
+    paying checkpoint time).  Exhausting ``reconfig_max_retries`` is a hard
+    GPU fault: the health machinery may quarantine the GPU, otherwise it
+    fails outright and pays the normal repair window.
+    """
+
+    name = "flaky_reconfig"
+
+    def on_reconfig_end(self, g: GPU) -> bool:
+        sim = self.sim
+        cfg = sim.cfg
+        if cfg.reconfig_fail_p <= 0.0:
+            return False
+        if float(sim.fault_rng.random()) >= cfg.reconfig_fail_p:
+            if not g.sched_ok:
+                # a retried op finally landed: back into service
+                g.sched_ok = True
+                g.reconfig_tries = 0
+                if sim.t >= g.down_until:
+                    sim._refresh_feas(g)
+                    sim.index.add(g)
+            return False
+        g.reconfig_tries += 1
+        sim.fstats["n_reconfig_retries"] += 1
+        if g.reconfig_tries > cfg.reconfig_max_retries:
+            # retries exhausted: escalate.  record_fault may quarantine
+            # (evacuate + quarantine repair window); otherwise the GPU
+            # fails outright
+            if not sim.record_fault(g):
+                sim._fail_gpu(g)
+            return True
+        g.advance(sim.t)
+        if g.sched_ok:
+            g.sched_ok = False
+            sim.index.remove(g)
+        backoff = cfg.reconfig_retry_s * (2.0 ** (g.reconfig_tries - 1))
+        g.phase_end = sim.t + backoff
+        sim._schedule_gpu_events(g)
+        return True
+
+
+@register_fault_injector
+class StragglerInjector(FaultInjector):
+    """Persistent stragglers: speed degradation, not binary death.
+
+    A Poisson stream (rate ``1 / straggler_mtbf_s``) of degradation onsets,
+    each hitting a uniformly random in-service GPU: its effective speed is
+    multiplied by ``straggler_factor`` (health -> degraded) until
+    ``straggler_recover_s`` elapses or a quarantine repair replaces the
+    hardware.  Already-struck or down GPUs absorb the shock.
+    """
+
+    name = "straggler"
+
+    def schedule_initial(self) -> None:
+        if self.sim.cfg.straggler_mtbf_s > 0.0:
+            self._arm()
+
+    def _arm(self) -> None:
+        sim = self.sim
+        dt = float(sim.fault_rng.exponential(sim.cfg.straggler_mtbf_s))
+        sim._push(sim.t + dt, "fault", (self.name, None))
+
+    def on_event(self, payload: Any) -> None:
+        sim = self.sim
+        if payload is not None:
+            self._recover(sim.gpus[int(payload)])
+            return
+        g = sim.gpus[int(sim.fault_rng.integers(len(sim.gpus)))]
+        self._arm()
+        if sim.t < g.down_until or g.speed_fault != 1.0:
+            return
+        g.advance(sim.t)                 # settle progress at healthy speed
+        g.speed_fault = sim.cfg.straggler_factor
+        if sim.record_fault(g):
+            return                       # quarantined: evacuated, down, reset
+        sim.finalize(g)                  # degraded speeds + rescheduled events
+        sim._push(sim.t + sim.cfg.straggler_recover_s, "fault",
+                  (self.name, g.gid))
+
+    def _recover(self, g: GPU) -> None:
+        from repro.core.sim.gpu import DEGRADED, HEALTHY
+        sim = self.sim
+        if g.speed_fault == 1.0 or sim.t < g.down_until:
+            return                       # already repaired (e.g. quarantine)
+        g.advance(sim.t)
+        g.speed_fault = 1.0
+        if g.health == DEGRADED:
+            g.health = HEALTHY
+        sim.finalize(g)
+
+
+@register_fault_injector
+class EstimatorFaultInjector(FaultInjector):
+    """Estimator faults: the U-Net occasionally outputs garbage.
+
+    With probability ``estimator_fault_p`` per profiling window, the whole
+    window's estimates are replaced by one of three garbage modes (all-NaN
+    numerical blow-up, uniform junk including negatives, silent all-zero).
+    The policy layer is expected to catch this and degrade to its
+    last-known-good estimate or the oracle fallback
+    (``Policy.sanitize_estimate``) instead of feeding it to Algorithm 1.
+    """
+
+    name = "estimator_garbage"
+
+    def filter_estimates(self, g: GPU, jids: Sequence[int],
+                         ests: Sequence[Estimate]) -> Sequence[Estimate]:
+        sim = self.sim
+        p = sim.cfg.estimator_fault_p
+        if p <= 0.0 or float(sim.fault_rng.random()) >= p:
+            return ests
+        sim.fstats["n_estimator_faults"] += 1
+        mode = int(sim.fault_rng.integers(3))
+        out: List[Estimate] = []
+        for est in ests:
+            if mode == 0:
+                out.append({s: float("nan") for s in est})
+            elif mode == 1:
+                junk = sim.fault_rng.uniform(-10.0, 10.0, size=len(est))
+                out.append({s: float(v) for s, v in zip(est, junk)})
+            else:
+                out.append({s: 0.0 for s in est})
+        return out

@@ -47,6 +47,13 @@ if TYPE_CHECKING:  # pragma: no cover - import cycle guard
 
 IDLE, CKPT, MPS_PROF, MIG_RUN = "idle", "ckpt", "mps", "mig"
 
+# GPU health states (healthy -> degraded -> quarantined -> repaired back to
+# healthy); driven by engine.record_fault / the repair promotion.  Orthogonal
+# to the phase machine: a degraded GPU still schedules, a quarantined one is
+# down (its residents were migrated off via the checkpoint/rollback
+# primitive) until the quarantine repair promotes it.
+HEALTHY, DEGRADED, QUARANTINED = "healthy", "degraded", "quarantined"
+
 
 @dataclass
 class RJob:
@@ -84,6 +91,17 @@ class GPU:
         self.stamp = 0               # event invalidation
         self.needs_profile = False
         self.down_until = 0.0
+        # ---- health state machine (engine.record_fault / faults.py):
+        # recent fault times inside the quarantine window, the straggler
+        # speed multiplier (1.0 = healthy, folded into refresh_speeds only
+        # when != 1.0 so the golden path's float ops are untouched), and
+        # the schedulability gate flaky reconfig retries clear while the
+        # GPU is stuck re-running a failed repartition op
+        self.health = HEALTHY
+        self.fault_times: list = []
+        self.speed_fault = 1.0
+        self.sched_ok = True
+        self.reconfig_tries = 0
         # fleet-index bookkeeping (owned by engine + sim.index): current
         # bucket, membership flag, and the largest menu slice a new job
         # could still require here (None = non-monotone menu, never pruned)
@@ -158,10 +176,15 @@ class GPU:
     def refresh_speeds(self):
         sim = self.sim
         rjs = list(self.jobs.values())
+        # straggler degradation folds into the scale only when present:
+        # the healthy path multiplies by speed_scale alone, bit-identical
+        # to the pre-fault-model simulator
+        scale = self.speed_scale if self.speed_fault == 1.0 \
+            else self.speed_scale * self.speed_fault
         if self.phase == MIG_RUN:
             for rj in rjs:
                 prof = rj.job.profile_at(1.0 - rj.job.remaining / rj.job.work)
-                rj.speed = (self.speed_scale * self.pm.slice_speed(prof, rj.slice_size)
+                rj.speed = (scale * self.pm.slice_speed(prof, rj.slice_size)
                             if rj.slice_size else 0.0)
         elif self.phase == MPS_PROF:
             if rjs:
@@ -169,7 +192,7 @@ class GPU:
                          for rj in rjs]
                 speeds = sim.policy.mps_phase_speeds(profs, g=self)
                 for rj, s in zip(rjs, speeds):
-                    rj.speed = self.speed_scale * float(s)
+                    rj.speed = scale * float(s)
         else:
             for rj in rjs:
                 rj.speed = 0.0

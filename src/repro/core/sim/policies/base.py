@@ -36,6 +36,7 @@ import time
 from abc import ABC, abstractmethod
 from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple, Type
 
+from repro.core.estimators import OracleEstimator
 from repro.core.jobs import Job, JobProfile
 from repro.core.optimizer import optimize_partition, optimize_partition_batch
 from repro.core.perfmodel import MPS_LEVELS
@@ -135,8 +136,8 @@ class Policy(ABC):
         every placer composes with them."""
         sim = self.sim
         return [g for g in sim.up_gpus()
-                if len(g.jobs) < g.space.max_jobs and sim.mem_ok(g, job)
-                and sim.spare_slice_ok(g, job)]
+                if g.sched_ok and len(g.jobs) < g.space.max_jobs
+                and sim.mem_ok(g, job) and sim.spare_slice_ok(g, job)]
 
     # The same admission as a fleet-index query, so placers can enumerate
     # feasible GPUs from the index instead of scanning the fleet: the index
@@ -204,6 +205,15 @@ class Policy(ABC):
         for g, job in items:
             self.on_completion(g, job)
 
+    def on_fault_evict(self, g: GPU):
+        """Fault injection just killed *some* residents of ``g``
+        (``ClusterSim.crash_jobs``); the GPU itself stays in service.
+        Reshape what is left.  Default: only reset an emptied GPU —
+        partitioning policies override to re-optimize the survivors."""
+        if not g.jobs:
+            g.phase = IDLE
+            g.partition = ()
+
     # ------------------------------------------------------------ MPS model
 
     def mps_phase_speeds(self, profs: Sequence[JobProfile],
@@ -225,6 +235,32 @@ class Policy(ABC):
         reads the estimates cached on the GPU at profiling time."""
         return [g.estimates.get(j, {g.space.full_size: 1.0})
                 for j in jids]
+
+    def sanitize_estimate(self, g: GPU, jid: int,
+                          est: Dict[int, float]) -> Dict[int, float]:
+        """Graceful degradation for estimator faults: a slice-speed map is
+        valid iff every value is a finite fraction in [0, 1.5] (slight
+        super-linearity tolerated) and at least one slice shows progress.
+        Garbage degrades to the job's last-known-good estimate when one is
+        cached, else to the oracle's ground-truth slice speeds — Algorithm 1
+        never sees NaNs, negatives or an all-zero map."""
+        ok = True
+        mx = 0.0
+        for v in est.values():
+            if not (0.0 <= v <= 1.5):        # NaN fails this comparison too
+                ok = False
+                break
+            if v > mx:
+                mx = v
+        if ok and mx > 0.0:
+            return est
+        prev = g.estimates.get(jid)
+        if prev is not None:
+            return prev
+        job = self.sim.jobs[jid]
+        prof = job.profile_at(1.0 - job.remaining / job.work)
+        return OracleEstimator(g.pm).estimate(
+            [prof], qos=[job.qos_min_slice])[0]
 
     def choose_partition(self, speeds: Sequence[Dict[int, float]],
                          space=None, power=None):

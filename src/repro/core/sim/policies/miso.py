@@ -105,6 +105,18 @@ class MisoPolicy(Policy):
         if repart:
             self.repartition_many(repart, overhead=True)
 
+    def on_fault_evict(self, g: GPU):
+        """A fault killed some residents mid-flight: re-optimize the
+        surviving slice layout exactly like a completion does (survivors
+        already have profiles; no new MPS sweep).  A GPU caught outside its
+        MIG run (checkpointing / profiling) keeps its in-flight phase — the
+        pipeline re-converges on its own."""
+        if g.jobs and g.phase == MIG_RUN:
+            self.repartition(g, overhead=True)
+        elif not g.jobs:
+            g.phase = IDLE
+            g.partition = ()
+
     # ------------------------------------------------------------ profiling
 
     def begin_profiling(self, g: GPU):
@@ -163,6 +175,13 @@ class MisoPolicy(Policy):
         multi-instance profile cache).  Subclasses hook here to keep their
         own profile bookkeeping, so the fused batch path sees it too."""
         sim = self.sim
+        if sim._est_hooks:
+            # estimator-fault corruption point + graceful degradation: the
+            # sanitizer runs before anything is cached, so last-known-good
+            # lookups see the previous window's estimates
+            ests = [self.sanitize_estimate(g, jid, est)
+                    for jid, est in zip(jids,
+                                        sim.filter_estimates(g, jids, ests))]
         for jid, est in zip(jids, ests):
             g.estimates[jid] = est
             grp = sim.jobs[jid].mi_group

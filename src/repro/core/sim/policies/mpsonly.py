@@ -18,7 +18,7 @@ class MpsOnlyPolicy(Policy):
     def placement_candidates(self, job: Job) -> List[GPU]:
         sim = self.sim
         return [g for g in sim.up_gpus()
-                if len(g.jobs) < sim.cfg.mps_only_max_jobs
+                if g.sched_ok and len(g.jobs) < sim.cfg.mps_only_max_jobs
                 and sim.mem_ok(g, job)]
 
     # index contract: the job-count cap lives in the buckets; no partitions

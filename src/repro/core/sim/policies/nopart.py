@@ -16,7 +16,7 @@ class NoPartPolicy(Policy):
     name = "nopart"
 
     def placement_candidates(self, job: Job) -> List[GPU]:
-        return [g for g in self.sim.up_gpus() if not g.jobs]
+        return [g for g in self.sim.up_gpus() if g.sched_ok and not g.jobs]
 
     # index contract: empty GPUs are exactly the count-0 buckets
     def admit_ok(self, g: GPU, job: Job) -> bool:

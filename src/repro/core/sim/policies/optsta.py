@@ -26,7 +26,8 @@ class OptStaPolicy(Policy):
     name = "optsta"
 
     def placement_candidates(self, job: Job) -> List[GPU]:
-        return [g for g in self.sim.up_gpus() if self.admit_ok(g, job)]
+        return [g for g in self.sim.up_gpus()
+                if g.sched_ok and self.admit_ok(g, job)]
 
     # index contract: feasibility is "some free fixed slice fits", checked
     # per GPU; the static partition is not the spare-slice model, so the
@@ -47,6 +48,16 @@ class OptStaPolicy(Policy):
     def on_completion(self, g: GPU, job: Job):
         self._assign(g)
         g.phase = MIG_RUN if g.jobs else IDLE
+
+    def on_fault_evict(self, g: GPU):
+        # survivors migrate best-first onto the freed fixed slices, the
+        # same reshuffle a completion triggers (no reconfigure: static)
+        if g.jobs:
+            self._assign(g)
+            g.phase = MIG_RUN
+        else:
+            g.phase = IDLE
+            g.partition = ()
 
     # ------------------------------------------------------------ internals
 

@@ -7,18 +7,24 @@ MPS-only / MISO / Oracle / MISO-frag / SRPT) under
 
     from repro.core.simulator import SimConfig, ClusterSim, simulate
 """
-from repro.core.sim import (CKPT, IDLE, MIG_RUN, MPS_PROF, ClusterSim, GPU,
+from repro.core.sim import (CKPT, DEGRADED, HEALTHY, IDLE, MIG_RUN, MPS_PROF,
+                            QUARANTINED, ClusterSim, FaultInjector, GPU,
                             Objective, Placer, Policy, RJob, SimConfig,
-                            available_objectives, available_placers,
-                            available_policies, get_objective, get_placer,
-                            get_policy, register_objective, register_placer,
+                            available_fault_injectors, available_objectives,
+                            available_placers, available_policies,
+                            get_fault_injector, get_objective, get_placer,
+                            get_policy, register_fault_injector,
+                            register_objective, register_placer,
                             register_policy, simulate)
 
 __all__ = [
     "ClusterSim", "SimConfig", "simulate",
     "GPU", "RJob", "IDLE", "CKPT", "MPS_PROF", "MIG_RUN",
+    "HEALTHY", "DEGRADED", "QUARANTINED",
     "Policy", "register_policy", "get_policy", "available_policies",
     "Placer", "register_placer", "get_placer", "available_placers",
     "Objective", "register_objective", "get_objective",
     "available_objectives",
+    "FaultInjector", "register_fault_injector", "get_fault_injector",
+    "available_fault_injectors",
 ]

@@ -97,8 +97,54 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mtbf", type=float, default=0.0,
                     help="accelerator MTBF seconds (fault injection)")
+    from repro.core.simulator import available_fault_injectors
+    ap.add_argument("--faults", default=None,
+                    help="comma-separated fault injectors to enable with "
+                         "demo chaos knobs (available: "
+                         f"{', '.join(available_fault_injectors())}); "
+                         "repeated faults quarantine the GPU and migrate "
+                         "its residents off")
     ap.add_argument("--show-meshes", action="store_true")
     return ap
+
+
+# demo knobs applied per enabled injector by --faults (the flaky_fleet
+# scenario's settings); sweeps wanting full control use scenario sim_kwargs
+_FAULT_DEMO_KNOBS = {
+    "mps_blast": {"mps_crash_mtbf_s": 1500.0},
+    "flaky_reconfig": {"reconfig_fail_p": 0.15, "reconfig_retry_s": 15.0,
+                       "reconfig_max_retries": 2},
+    "straggler": {"straggler_mtbf_s": 700.0, "straggler_factor": 0.25,
+                  "straggler_recover_s": 100000.0},
+    "estimator_garbage": {"estimator_fault_p": 0.2},
+}
+
+
+def _fault_kwargs(spec: str | None) -> dict:
+    """SimConfig overrides for a ``--faults`` spec (empty dict when off)."""
+    if not spec:
+        return {}
+    from repro.core.simulator import get_fault_injector
+    names = tuple(s.strip() for s in spec.split(",") if s.strip())
+    for n in names:
+        get_fault_injector(n)            # fail fast with the full list
+    kw: dict = {"faults": names, "ckpt_interval_s": 240.0,
+                "quarantine_faults": 2, "quarantine_window_s": 3600.0,
+                "quarantine_repair_s": 480.0}
+    for n in names:
+        kw.update(_FAULT_DEMO_KNOBS.get(n, {}))
+    return kw
+
+
+def _print_robustness(metrics) -> None:
+    print(f"  goodput   : {metrics.goodput:.3f} committed work-seconds/s/"
+          f"accelerator (gross {metrics.gross_stp:.3f}, "
+          f"{metrics.work_lost_s:,.0f} work-s destroyed)")
+    print(f"  faults    : {metrics.n_fault_events} events | "
+          f"{metrics.blast_jobs} blast kills (max radius "
+          f"{metrics.blast_radius_max}) | {metrics.n_quarantines} "
+          f"quarantines | {metrics.n_migrations} migrations | "
+          f"quarantine occupancy {metrics.quarantine_occupancy:.1%}")
 
 
 def main(argv=None):
@@ -110,7 +156,8 @@ def main(argv=None):
         jobs = generate_trace(args.jobs, lam_s=args.lam, seed=args.seed)
         cfg = SimConfig(n_gpus=len(fleet), policy=args.policy,
                         placer=args.placer, objective=args.objective,
-                        gpu_mtbf_s=args.mtbf, seed=args.seed)
+                        gpu_mtbf_s=args.mtbf, seed=args.seed,
+                        **_fault_kwargs(args.faults))
         metrics = simulate(jobs, cfg, fleet=fleet)
         b = metrics.breakdown
         by_kind = {s.kind: type(s.estimator).__name__ for s in fleet}
@@ -127,6 +174,8 @@ def main(argv=None):
               f"{metrics.energy_per_job_j / 3.6e6:,.3f} kWh/job)")
         print(f"  breakdown : queue {b['queue']:,.0f}s | mps {b['mps']:,.0f}s"
               f" | ckpt {b['ckpt']:,.0f}s | run {b['run']:,.0f}s")
+        if args.faults:
+            _print_robustness(metrics)
         return 0
 
     if args.space == "tpu":
@@ -161,7 +210,8 @@ def main(argv=None):
     jobs = generate_trace(args.jobs, lam_s=args.lam, seed=args.seed)
     cfg = SimConfig(n_gpus=args.accelerators, policy=args.policy,
                     placer=args.placer, objective=args.objective,
-                    gpu_mtbf_s=args.mtbf, seed=args.seed)
+                    gpu_mtbf_s=args.mtbf, seed=args.seed,
+                    **_fault_kwargs(args.faults))
     metrics = simulate(jobs, cfg, space, pm, est)
 
     if args.show_meshes and args.space == "tpu":
@@ -185,6 +235,8 @@ def main(argv=None):
           f"({metrics.avg_power_w:,.0f} W cluster avg)")
     print(f"  breakdown : queue {b['queue']:,.0f}s | mps {b['mps']:,.0f}s | "
           f"ckpt {b['ckpt']:,.0f}s | run {b['run']:,.0f}s")
+    if args.faults:
+        _print_robustness(metrics)
     return 0
 
 

@@ -21,23 +21,31 @@ policies are any registered scheduling policy, placers any registered
 placement layer (:mod:`repro.core.sim.placement`) and objectives any
 registered Algorithm-1 goal (:mod:`repro.core.sim.objectives`).  The JSON
 schema is versioned: bump ``SCHEMA_VERSION`` on any breaking change to the
-result shape (v2 added the placer axis; v3 adds the objective axis and the
-energy columns: results carry an ``objective`` field plus
-``energy_j`` / ``avg_power_w`` / ``energy_per_job_j`` / ``jct_per_joule``
-metrics, and ``summary`` is keyed scenario -> policy -> placer ->
-objective).
+result shape (v2 added the placer axis; v3 added the objective axis and the
+energy columns; v4 adds the robustness columns — ``goodput`` /
+``gross_stp`` / ``work_lost_s`` / blast, recovery and quarantine counters
+in every result, ``goodput_mean`` / ``work_lost_s_mean`` in the summary —
+plus a top-level ``errors`` list of cells that crashed or timed out).
+
+Hardening (chaos sweeps run long and can die mid-grid): every cell runs
+under a per-cell wall-clock budget (``--cell-timeout``, SIGALRM) with
+bounded retry (``--retries``); a cell that still fails is recorded in
+``report["errors"]`` instead of sinking the whole sweep, and ``--resume
+partial.json`` skips cells already present in an earlier report of the
+same schema version.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import signal
 import sys
 import time
 from concurrent.futures import ProcessPoolExecutor
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 # grids whose total simulated jobs fall under this run in-process: worker
 # startup (fork + pool plumbing, ~hundreds of ms) dwarfs such cells
@@ -132,6 +140,17 @@ def run_task(task: Dict) -> Dict:
             "energy_per_job_j": m.energy_per_job_j,
             "jct_per_joule": m.jct_per_joule,
             "breakdown_s": dict(m.breakdown),
+            # v4 robustness columns (all zero when no fault model ran)
+            "goodput": m.goodput,
+            "gross_stp": m.gross_stp,
+            "work_lost_s": m.work_lost_s,
+            "n_fault_events": m.n_fault_events,
+            "blast_jobs": m.blast_jobs,
+            "blast_radius_max": m.blast_radius_max,
+            "mean_recover_s": m.mean_recover_s,
+            "quarantine_occupancy": m.quarantine_occupancy,
+            "n_quarantines": m.n_quarantines,
+            "n_migrations": m.n_migrations,
         },
         "wall_s": time.time() - t0,
     }
@@ -140,25 +159,113 @@ def run_task(task: Dict) -> Dict:
     return out
 
 
+class CellTimeout(Exception):
+    """A sweep cell exceeded its per-cell wall-clock budget."""
+
+
+def _on_alarm(signum, frame):
+    raise CellTimeout("cell exceeded its wall-clock budget")
+
+
+def run_task_safe(task: Dict) -> Dict:
+    """Crash-isolated :func:`run_task`: per-cell wall-clock budget
+    (``task["cell_timeout"]`` seconds, SIGALRM — skipped on platforms
+    without it) and bounded retry (``task["retries"]`` attempts).  A cell
+    that exhausts its attempts returns an *error record* (same identity
+    keys, an ``"error"`` string, no ``"metrics"``) instead of raising, so
+    one diverging simulation cannot sink an hours-long grid."""
+    timeout = task.get("cell_timeout")
+    attempts = max(1, int(task.get("retries") or 1))
+    use_alarm = bool(timeout) and hasattr(signal, "SIGALRM")
+    err: Optional[BaseException] = None
+    for _ in range(attempts):
+        try:
+            if use_alarm:
+                old = signal.signal(signal.SIGALRM, _on_alarm)
+                signal.setitimer(signal.ITIMER_REAL, float(timeout))
+            try:
+                return run_task(task)
+            finally:
+                if use_alarm:
+                    signal.setitimer(signal.ITIMER_REAL, 0.0)
+                    signal.signal(signal.SIGALRM, old)
+        except Exception as e:
+            err = e                      # recorded below, never swallowed
+    from repro.core.scenarios import get_scenario
+    sc = get_scenario(task["scenario"])
+    return {
+        "policy": task["policy"],
+        "placer": task.get("placer") or sc.placer,
+        "objective": task.get("objective") or sc.objective,
+        "scenario": task["scenario"],
+        "seed": task["seed"],
+        "error": f"{type(err).__name__}: {err}",
+        "attempts": attempts,
+    }
+
+
+def _task_key(task: Dict) -> Tuple[str, str, str, str, int]:
+    """The identity of a cell inside a report, with the scenario's default
+    placer / objective resolved exactly as :func:`run_task` resolves it."""
+    from repro.core.scenarios import get_scenario
+    sc = get_scenario(task["scenario"])
+    return (task["scenario"], task["policy"],
+            task.get("placer") or sc.placer,
+            task.get("objective") or sc.objective, task["seed"])
+
+
+def _load_resume_cells(path: str) -> Dict[Tuple, Dict]:
+    """Successful cells of a partial report, keyed by cell identity.
+    Error cells are *not* loaded (a resumed sweep retries them); a report
+    from a different schema version resumes nothing — its metric columns
+    would not line up with the cells this sweep produces."""
+    with open(path) as f:
+        rep = json.load(f)
+    if rep.get("kind") != "miso-sweep":
+        raise ValueError(f"{path} is not a miso-sweep report")
+    if rep.get("schema_version") != SCHEMA_VERSION:
+        return {}
+    return {(r["scenario"], r["policy"], r["placer"], r["objective"],
+             r["seed"]): r for r in rep.get("results", [])}
+
+
 def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
               seeds: Sequence[int], placers: Optional[Sequence[str]] = None,
               objectives: Optional[Sequence[str]] = None,
               fleet: Optional[str] = None,
               n_jobs: Optional[int] = None, mtbf: Optional[float] = None,
               workers: Optional[int] = None, serial: bool = False,
-              profile: bool = False) -> Dict:
+              profile: bool = False, retries: int = 1,
+              cell_timeout: Optional[float] = None,
+              resume: Optional[str] = None) -> Dict:
     """Run the full grid and return the JSON-ready report dict.
 
     ``placers=None`` / ``objectives=None`` run each scenario's own default;
     an explicit list crosses it with every (policy, scenario, seed) cell.
     ``profile=True`` attaches per-component wall-clock (placement /
-    Algorithm-1 / estimator / event loop) to every result."""
+    Algorithm-1 / estimator / event loop) to every result.  ``retries`` /
+    ``cell_timeout`` bound each cell (exhausted cells land in
+    ``report["errors"]``); ``resume`` is the path of a partial report whose
+    successful same-schema cells are carried over instead of re-run."""
     tasks = [{"policy": p, "placer": pl, "objective": ob, "scenario": sc,
               "seed": s, "fleet": fleet, "n_jobs": n_jobs, "mtbf": mtbf,
-              "profile": profile}
+              "profile": profile, "retries": retries,
+              "cell_timeout": cell_timeout}
              for sc in scenarios for p in policies
              for pl in (placers or [None])
              for ob in (objectives or [None]) for s in seeds]
+    resumed: List[Dict] = []
+    if resume is not None:
+        done = _load_resume_cells(resume)
+        if done:
+            fresh = []
+            for t in tasks:
+                prev = done.get(_task_key(t))
+                if prev is not None:
+                    resumed.append(prev)
+                else:
+                    fresh.append(t)
+            tasks = fresh
     if workers is None and not serial:
         # tiny grids (e.g. the CI smoke sweep) finish faster in-process than
         # a pool takes to start; an explicit --workers always gets the pool
@@ -167,9 +274,12 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
                          for t in tasks)
         serial = total_jobs <= _AUTO_SERIAL_JOBS
     t0 = time.time()
-    if serial or len(tasks) == 1:
+    if not tasks:                        # fully resumed: nothing to run
+        results = []
+        workers_used = 1
+    elif serial or len(tasks) == 1:
         _warm_runtime()
-        results = [run_task(t) for t in tasks]
+        results = [run_task_safe(t) for t in tasks]
         workers_used = 1
     else:
         import multiprocessing
@@ -181,9 +291,13 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
                 max_workers=workers_used,
                 mp_context=multiprocessing.get_context("spawn"),
                 initializer=_warm_runtime) as pool:
-            results = list(pool.map(run_task, tasks))
-    results.sort(key=lambda r: (r["scenario"], r["policy"], r["placer"],
-                                r["objective"], r["seed"]))
+            results = list(pool.map(run_task_safe, tasks))
+    errors = [r for r in results if "error" in r]
+    results = [r for r in results if "error" not in r] + resumed
+    sort_key = lambda r: (r["scenario"], r["policy"], r["placer"],
+                          r["objective"], r["seed"])
+    results.sort(key=sort_key)
+    errors.sort(key=sort_key)
 
     # summary: scenario -> policy -> placer -> objective -> seed-mean
     # aggregates (the leaf levels are what let diff_sweeps compare placement
@@ -203,6 +317,8 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
             "makespan_s_mean": mean("makespan_s"),
             "energy_j_mean": mean("energy_j"),
             "energy_per_job_j_mean": mean("energy_per_job_j"),
+            "goodput_mean": mean("goodput"),
+            "work_lost_s_mean": mean("work_lost_s"),
         }
 
     report = {
@@ -218,10 +334,14 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
             "n_jobs": n_jobs,        # null = each scenario's default length
             "mtbf_s": mtbf,
             "workers": workers_used,
-            "serial": bool(serial or len(tasks) == 1),
+            "serial": bool(serial or len(tasks) <= 1),
+            "retries": retries,
+            "cell_timeout_s": cell_timeout,
+            "resumed_cells": len(resumed),
         },
         "wall_s_total": time.time() - t0,
         "results": results,
+        "errors": errors,
         "summary": summary,
     }
     if profile:
@@ -240,6 +360,13 @@ def _print_summary(report: Dict) -> None:
     print(f"[sweep] {len(report['results'])} runs on "
           f"{report['config']['workers']} worker(s) in "
           f"{report['wall_s_total']:.1f}s")
+    if report["config"]["resumed_cells"]:
+        print(f"[sweep] resumed {report['config']['resumed_cells']} "
+              f"cell(s) from a partial report")
+    for e in report.get("errors", ()):
+        print(f"[sweep] ERROR {e['scenario']}/{e['policy']}/{e['placer']}/"
+              f"{e['objective']} seed={e['seed']}: {e['error']} "
+              f"({e['attempts']} attempt(s))")
     w = max((len(s) for s in report["summary"]), default=8)
     for sc, by_policy in report["summary"].items():
         for p, by_placer in by_policy.items():
@@ -300,6 +427,16 @@ def build_parser() -> argparse.ArgumentParser:
                     help="attach per-component wall-clock (placement, "
                          "Algorithm-1, estimator, event loop) to every "
                          "result and print the totals")
+    ap.add_argument("--retries", type=int, default=1,
+                    help="attempts per cell before recording it as an "
+                         "error cell (default 1: no retry)")
+    ap.add_argument("--cell-timeout", type=float, default=None,
+                    help="per-cell wall-clock budget in seconds (SIGALRM; "
+                         "a timed-out attempt counts against --retries)")
+    ap.add_argument("--resume", default=None,
+                    help="partial report JSON whose successful same-schema "
+                         "cells are carried over instead of re-run "
+                         "(error cells are retried)")
     ap.add_argument("--out", default="BENCH_sweep.json",
                     help="JSON report path")
     return ap
@@ -331,7 +468,9 @@ def main(argv=None) -> int:
                        placers=placers, objectives=objectives,
                        fleet=args.fleet, n_jobs=args.jobs,
                        mtbf=args.mtbf, workers=args.workers,
-                       serial=args.serial, profile=args.profile)
+                       serial=args.serial, profile=args.profile,
+                       retries=args.retries, cell_timeout=args.cell_timeout,
+                       resume=args.resume)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1, sort_keys=False)
         f.write("\n")

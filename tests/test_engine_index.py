@@ -63,19 +63,25 @@ def test_up_gpus_reflects_failure_and_repair_immediately():
     assert sim.gpus[0]._in_index
 
 
-def test_refailure_while_down_leaves_stale_heap_entry_harmless():
+def test_refailure_while_down_is_absorbed():
+    """A failure landing on a GPU already down for repair is absorbed: it
+    must not extend the repair clock, push a second live ``(down_until,
+    gid)`` heap entry or perturb the cached up-set — the same guard the
+    rack-outage path applies (double-failure audit)."""
     jobs = [Job(jid=0, profile=WORKLOADS[0], arrival=0.0, work=600.0)]
     sim = _sim(jobs, n_gpus=1, policy="miso", repair_s=100.0)
     g = sim.gpus[0]
     sim._on_failure(g)
     first_up = g.down_until
+    heap_before = list(sim._down_heap)
     sim.t = 50.0
     sim._on_failure(g)                       # failed again while down
-    assert g.down_until == 150.0
-    sim.t = first_up                         # stale entry expires: still down
+    assert g.down_until == first_up          # repair clock untouched
+    assert sim._down_heap == heap_before     # no duplicate heap entry
     assert sim.up_gpus() == []
-    sim.t = g.down_until
+    sim.t = first_up                         # original repair boundary
     assert [x.gid for x in sim.up_gpus()] == [0]
+    assert g._in_index
 
 
 # ---------------------------------------------- max-addable-slice fast path

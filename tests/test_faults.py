@@ -1,0 +1,457 @@
+"""The fault-injection layer and the GPU health state machine.
+
+Three contracts, in order of importance:
+
+* **Zero-overhead guarantee** — with ``SimConfig.faults=()`` no injector
+  exists and no fault RNG is drawn; golden traces stay bit-identical.
+  Enabling injectors with all their rates at zero must also change nothing.
+* **Blast-radius semantics** — the paper's §2 containment asymmetry: an MPS
+  window has no error containment (every co-resident dies), MIG isolates
+  the kill to one slice, checkpoint/idle windows absorb the shock.
+* **Graceful degradation** — repeated soft faults quarantine the GPU and
+  migrate residents off; repairs are full repairs; garbage estimates
+  degrade to last-known-good/oracle instead of crashing Algorithm 1.
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core.estimators import OracleEstimator
+from repro.core.jobs import WORKLOADS, Job
+from repro.core.partitions import a100_mig_space
+from repro.core.perfmodel import PerfModel
+from repro.core.scenarios import get_scenario
+from repro.core.simulator import (DEGRADED, HEALTHY, QUARANTINED, CKPT,
+                                  MIG_RUN, MPS_PROF, ClusterSim, SimConfig,
+                                  available_fault_injectors,
+                                  get_fault_injector, simulate)
+from repro.core.traces import generate_trace
+
+SPACE = a100_mig_space()
+PM = PerfModel(SPACE)
+EST = OracleEstimator(PM)
+
+
+def _sim(jobs, **kw):
+    cfg = SimConfig(**kw)
+    return ClusterSim(copy.deepcopy(jobs), cfg, SPACE, PM, EST)
+
+
+def _run_scenario(name, policy, seed, **over):
+    from repro.core.fleet import parse_fleet
+    sc = get_scenario(name)
+    jobs = sc.make_jobs(seed)
+    fleet = parse_fleet(sc.fleet)
+    kw = dict(sc.sim_kwargs)
+    kw.update(over)
+    cfg = SimConfig(n_gpus=len(fleet), policy=policy, placer=sc.placer,
+                    objective=sc.objective, seed=seed, **kw)
+    return simulate(jobs, cfg, fleet=fleet)
+
+
+class _ScriptedRng:
+    """Stand-in fault RNG returning a scripted sequence of uniforms."""
+
+    def __init__(self, vals):
+        self.vals = list(vals)
+
+    def random(self):
+        return self.vals.pop(0)
+
+
+# ----------------------------------------------------------- registry
+
+
+def test_registry_lists_the_builtin_injectors():
+    names = available_fault_injectors()
+    assert names == sorted(names)
+    for n in ("mps_blast", "flaky_reconfig", "straggler",
+              "estimator_garbage"):
+        assert n in names
+        assert get_fault_injector(n).name == n
+    with pytest.raises(ValueError, match="unknown fault injector"):
+        get_fault_injector("definitely_not_a_fault")
+
+
+# ------------------------------------------------- zero-overhead guarantee
+
+
+def test_injectors_off_builds_no_hooks():
+    sim = _sim([], n_gpus=2, policy="miso")
+    assert sim.fault_injectors == {}
+    assert sim._reconfig_hooks == [] and sim._est_hooks == []
+
+
+def test_enabled_injectors_with_zero_rates_are_bit_identical():
+    """All four injectors enabled but every rate at zero: no fault event is
+    scheduled, no fault RNG is drawn, and the trace is bit-identical to the
+    injectors-off golden run (the zero-overhead guarantee)."""
+    jobs = generate_trace(24, lam_s=20.0, seed=3, max_duration_s=900)
+    cfg = dict(n_gpus=4, policy="miso", seed=1, ckpt_interval_s=240.0)
+    base = simulate(jobs, SimConfig(**cfg), SPACE, PM, EST)
+    zero = simulate(jobs, SimConfig(
+        faults=tuple(available_fault_injectors()),
+        mps_crash_mtbf_s=0.0, reconfig_fail_p=0.0, straggler_mtbf_s=0.0,
+        estimator_fault_p=0.0, **cfg), SPACE, PM, EST)
+    assert np.array_equal(np.asarray(base.jcts), np.asarray(zero.jcts))
+    assert base.stp == zero.stp and base.makespan == zero.makespan
+    assert zero.n_fault_events == 0 and zero.work_lost_s == 0.0
+    assert zero.goodput == zero.stp
+
+
+def test_fault_stream_is_isolated_from_the_failure_schedule():
+    """Injectors draw only from the dedicated ``fault_rng`` stream: arming
+    chaos must not advance the main failure RNG or the MPS noise RNG."""
+    jobs = generate_trace(6, lam_s=20.0, seed=0, max_duration_s=600)
+    kw = dict(n_gpus=2, policy="miso", seed=7, gpu_mtbf_s=5000.0)
+    plain = _sim(jobs, **kw)
+    chaos = _sim(jobs, faults=("mps_blast", "straggler"),
+                 mps_crash_mtbf_s=300.0, straggler_mtbf_s=400.0, **kw)
+    # schedule_initial drew twice from chaos.fault_rng; the other streams
+    # must still be at the same point in their sequences
+    assert np.array_equal(plain.rng.random(8), chaos.rng.random(8))
+    assert np.array_equal(plain.noise_rng.random(8), chaos.noise_rng.random(8))
+
+
+def test_chaos_runs_are_deterministic():
+    a = _run_scenario("flaky_fleet", "miso", seed=1)
+    b = _run_scenario("flaky_fleet", "miso", seed=1)
+    assert np.array_equal(np.asarray(a.jcts), np.asarray(b.jcts))
+    assert a.goodput == b.goodput and a.n_fault_events == b.n_fault_events
+    assert a.work_lost_s == b.work_lost_s
+
+
+def test_metrics_robustness_fields_default_clean():
+    jobs = generate_trace(8, lam_s=20.0, seed=2, max_duration_s=600)
+    m = simulate(jobs, SimConfig(n_gpus=2, policy="miso"), SPACE, PM, EST)
+    assert m.goodput == m.stp and m.gross_stp == m.stp
+    assert m.work_lost_s == 0.0 and m.n_fault_events == 0
+    assert m.n_quarantines == 0 and m.n_migrations == 0
+    assert m.quarantine_occupancy == 0.0
+
+
+# -------------------------------------------------- blast-radius asymmetry
+
+
+def test_mps_blast_kills_every_coresident():
+    """No error containment during an MPS window: all residents die, each
+    rolled back to its last checkpoint and restarted."""
+    jobs = [Job(jid=i, profile=WORKLOADS[0], arrival=0.0, work=5000.0)
+            for i in range(3)]
+    sim = _sim(jobs, n_gpus=1, policy="mpsonly", mps_only_max_jobs=3,
+               ckpt_interval_s=1e9, faults=("mps_blast",),
+               mps_crash_mtbf_s=1e9)
+    for i in range(3):
+        sim._on_arrival(sim.jobs[i])
+    g = sim.gpus[0]
+    assert g.phase == MPS_PROF and len(g.jobs) == 3
+    sim.t = 50.0
+    sim.fault_injectors["mps_blast"].on_event(None)
+    fs = sim.fstats
+    assert fs["n_blasts"] == 1 and fs["blast_jobs"] == 3
+    assert fs["blast_radius_max"] == 3 and fs["n_faults"] == 1
+    assert g.health == DEGRADED
+    # no checkpoint ever completed: every victim lost all its progress
+    for j in sim.jobs.values():
+        assert j.remaining == pytest.approx(5000.0)
+    assert sim.lost_agg.total > 0.0
+    # the GPU stayed in service, so the eager re-admit already re-placed
+    # the victims (time-to-recover 0); none of them vanished
+    assert sim.recover_agg.count == 3
+    assert len(g.jobs) + len(sim.queue) == 3
+
+
+def test_mig_blast_kills_exactly_one_slice():
+    """Hardware isolation under MIG: one random sliced job dies, its
+    slice-mates keep running untouched."""
+    jobs = [Job(jid=i, profile=WORKLOADS[0], arrival=0.0, work=5000.0)
+            for i in range(2)]
+    sim = _sim(jobs, n_gpus=1, policy="miso", ckpt_interval_s=1e9,
+               faults=("mps_blast",), mps_crash_mtbf_s=1e9)
+    for i in range(2):
+        sim._on_arrival(sim.jobs[i])
+    g = sim.gpus[0]
+    sim.t = g.phase_end
+    sim.end_phase(g)                        # MPS sweep -> CKPT
+    sim.t = g.phase_end
+    sim.end_phase(g)                        # CKPT -> MIG_RUN
+    assert g.phase == MIG_RUN and len(g.jobs) == 2
+    before = {jid: sim.jobs[jid].remaining for jid in g.jobs}
+    sim.t += 10.0
+    sim.fault_injectors["mps_blast"].on_event(None)
+    assert sim.fstats["n_faults"] == 1
+    assert sim.fstats["n_blasts"] == 0      # MIG kills are not blasts
+    # exactly one victim rolled back to its last durable checkpoint (the
+    # CKPT that just completed); the survivor kept its 10s of progress
+    rolled = [jid for jid in before
+              if sim.jobs[jid].remaining >= before[jid] - 1e-9]
+    assert len(rolled) == 1
+    survivor = next(jid for jid in before if jid not in rolled)
+    assert sim.jobs[survivor].remaining < before[survivor]
+
+
+def test_blast_is_absorbed_while_checkpointing():
+    jobs = [Job(jid=0, profile=WORKLOADS[0], arrival=0.0, work=5000.0)]
+    sim = _sim(jobs, n_gpus=1, policy="miso", ckpt_interval_s=1e9,
+               faults=("mps_blast",), mps_crash_mtbf_s=1e9)
+    sim._on_arrival(sim.jobs[0])
+    g = sim.gpus[0]
+    sim.t = g.phase_end
+    sim.end_phase(g)
+    assert g.phase == CKPT
+    sim.fault_injectors["mps_blast"].on_event(None)
+    assert sim.fstats["n_faults"] == 0 and g.health == HEALTHY
+    assert 0 in g.jobs and sim.queue == []
+
+
+def test_blast_asymmetry_end_to_end():
+    """Same chaos scenario: a policy living in MPS windows takes multi-job
+    blasts; MISO's short probe windows + MIG isolation keep the radius at
+    (at most) one."""
+    mps = _run_scenario("mps_blast", "mpsonly", seed=1)
+    mig = _run_scenario("mps_blast", "miso", seed=1)
+    assert mps.blast_radius_max >= 2
+    assert mig.blast_radius_max <= 1
+
+
+# ----------------------------------------------------- flaky reconfigures
+
+
+def _flaky_sim():
+    jobs = [Job(jid=0, profile=WORKLOADS[0], arrival=0.0, work=5000.0)]
+    sim = _sim(jobs, n_gpus=1, policy="miso", ckpt_interval_s=1e9,
+               faults=("flaky_reconfig",), reconfig_fail_p=0.5,
+               reconfig_retry_s=10.0, reconfig_max_retries=2,
+               repair_s=300.0)
+    sim._on_arrival(sim.jobs[0])
+    g = sim.gpus[0]
+    sim.t = g.phase_end
+    sim.end_phase(g)                        # MPS sweep -> CKPT
+    assert g.phase == CKPT
+    return sim, g
+
+
+def test_flaky_reconfig_retries_with_exponential_backoff():
+    sim, g = _flaky_sim()
+    sim.fault_rng = _ScriptedRng([0.0, 0.0, 0.99])   # fail, fail, succeed
+    t0 = g.phase_end
+    sim.t = t0
+    sim.end_phase(g)                        # attempt 1 fails
+    assert g.phase == CKPT and g.phase_end == pytest.approx(t0 + 10.0)
+    assert not g.sched_ok and not g._in_index
+    assert sim.fstats["n_reconfig_retries"] == 1
+    sim.t = g.phase_end
+    sim.end_phase(g)                        # attempt 2 fails: backoff doubles
+    assert g.phase_end == pytest.approx(sim.t + 20.0)
+    sim.t = g.phase_end
+    sim.end_phase(g)                        # attempt 3 lands
+    assert g.phase == MIG_RUN
+    assert g.sched_ok and g.reconfig_tries == 0 and g._in_index
+    # a retried checkpoint is only durable once the op lands
+    assert g.jobs[0].since_ckpt_work == 0.0
+
+
+def test_flaky_reconfig_exhaustion_escalates_to_gpu_fault():
+    sim, g = _flaky_sim()
+    sim.fault_rng = _ScriptedRng([0.0, 0.0, 0.0])    # never lands
+    for _ in range(3):                      # retries 1, 2, then escalation
+        sim.t = g.phase_end
+        sim.end_phase(g)
+    assert sim.fstats["n_faults"] == 1 and g.health == DEGRADED
+    assert g.down_until == pytest.approx(sim.t + 300.0)
+    assert sim.queue == [0]                 # resident evicted and requeued
+    assert g.sched_ok and g.reconfig_tries == 0   # repairs are full repairs
+
+
+def test_quarantine_during_inflight_reconfig_retry_resets_cleanly():
+    """The interaction case: a GPU mid-backoff (unschedulable, retries
+    pending) gets quarantined by an unrelated fault — the hardware swap
+    must clear the retry state and the repair must restore service."""
+    sim, g = _flaky_sim()
+    sim.fault_rng = _ScriptedRng([0.0])
+    sim.cfg.quarantine_faults = 2
+    sim.cfg.quarantine_window_s = 1e9
+    sim.cfg.quarantine_repair_s = 100.0
+    sim.t = g.phase_end
+    sim.end_phase(g)                        # attempt 1 fails: mid-backoff
+    assert not g.sched_ok and g.reconfig_tries == 1
+    sim.t += 1.0
+    assert not sim.record_fault(g)          # first soft fault: degraded
+    assert g.health == DEGRADED and not g.sched_ok   # retry state survives
+    sim.t += 1.0
+    assert sim.record_fault(g)              # second soft fault -> quarantine
+    assert g.health == QUARANTINED
+    assert g.sched_ok and g.reconfig_tries == 0 and g.speed_fault == 1.0
+    assert not g._in_index and g.fault_times == []
+    assert sim.queue == [0]                 # resident migrated off
+    assert sim.fstats["n_quarantines"] == 1 and sim.fstats["n_migrations"] == 1
+    sim.t = g.down_until
+    sim._sync_up()                          # repair promotion
+    assert g.health == HEALTHY and g._in_index
+
+
+# ------------------------------------------------------------- stragglers
+
+
+def test_straggler_degrades_speed_then_recovers():
+    jobs = [Job(jid=0, profile=WORKLOADS[0], arrival=0.0, work=5000.0)]
+    sim = _sim(jobs, n_gpus=1, policy="nopart", faults=("straggler",),
+               straggler_mtbf_s=1e9, straggler_factor=0.25,
+               straggler_recover_s=100.0)
+    sim._on_arrival(sim.jobs[0])
+    g = sim.gpus[0]
+    assert g.jobs[0].speed == 1.0
+    inj = sim.fault_injectors["straggler"]
+    sim.t = 10.0
+    inj.on_event(None)                      # onset
+    assert g.speed_fault == 0.25 and g.health == DEGRADED
+    assert g.jobs[0].speed == pytest.approx(0.25)
+    assert sim.fstats["n_faults"] == 1
+    sim.t = 110.0
+    inj.on_event(g.gid)                     # recovery event
+    assert g.speed_fault == 1.0 and g.health == HEALTHY
+    assert g.jobs[0].speed == pytest.approx(1.0)
+
+
+# ------------------------------------------------------ estimator garbage
+
+
+def test_garbage_estimates_degrade_to_a_safe_fallback():
+    jobs = [Job(jid=0, profile=WORKLOADS[0], arrival=0.0, work=5000.0)]
+    sim = _sim(jobs, n_gpus=1, policy="miso", faults=("estimator_garbage",),
+               estimator_fault_p=1.0)
+    sim._on_arrival(sim.jobs[0])
+    g = sim.gpus[0]
+    menu = {s: 0.5 for s in SPACE.slices}
+    for garbage in ({s: float("nan") for s in menu},
+                    {s: -3.0 for s in menu},
+                    {s: 0.0 for s in menu}):
+        safe = sim.policy.sanitize_estimate(g, 0, dict(garbage))
+        vals = list(safe.values())
+        assert all(np.isfinite(v) and 0.0 <= v <= 1.5 for v in vals)
+        assert max(vals) > 0.0
+    # a valid estimate passes through untouched
+    assert sim.policy.sanitize_estimate(g, 0, dict(menu)) == menu
+
+
+def test_estimator_garbage_run_survives_end_to_end():
+    jobs = generate_trace(10, lam_s=20.0, seed=5, max_duration_s=600)
+    m = simulate(jobs, SimConfig(n_gpus=2, policy="miso", seed=5,
+                                 faults=("estimator_garbage",),
+                                 estimator_fault_p=1.0), SPACE, PM, EST)
+    assert len(m.jcts) == len(jobs)
+    assert np.isfinite(m.jcts).all() and m.stp > 0.0
+    assert m.n_fault_events == 0            # corrupted estimates, no kills
+
+
+# ------------------------------------------------- health state machine
+
+
+def test_health_window_prunes_old_faults():
+    sim = _sim([], n_gpus=1, policy="miso", quarantine_faults=2,
+               quarantine_window_s=100.0, quarantine_repair_s=50.0)
+    g = sim.gpus[0]
+    sim.t = 0.0
+    assert not sim.record_fault(g)
+    assert g.health == DEGRADED and g.fault_times == [0.0]
+    sim.t = 200.0                           # first fault aged out
+    assert not sim.record_fault(g)
+    assert g.fault_times == [200.0]
+    sim.t = 250.0                           # two faults inside the window
+    assert sim.record_fault(g)
+    assert g.health == QUARANTINED
+    assert g.down_until == pytest.approx(300.0)
+    assert sim.fstats["quarantine_gpu_s"] == pytest.approx(50.0)
+    sim.t = 300.0
+    sim._sync_up()
+    assert g.health == HEALTHY and g._in_index
+
+
+def test_hard_faults_never_feed_the_quarantine_tracker():
+    sim = _sim([], n_gpus=1, policy="miso", quarantine_faults=1)
+    g = sim.gpus[0]
+    for t in (10.0, 20.0, 30.0):
+        sim.t = t
+        assert not sim.record_fault(g, hard=True)
+    assert g.fault_times == [] and g.health == HEALTHY
+    assert sim.fstats["n_faults"] == 3 and sim.fstats["n_quarantines"] == 0
+
+
+def test_rack_outage_during_mps_window_is_a_hard_fault():
+    """A rack power event mid-MPS takes the whole block down (everything
+    rolled back) but never trips quarantine: hard faults already pay a full
+    repair window."""
+    jobs = [Job(jid=i, profile=WORKLOADS[0], arrival=0.0, work=5000.0)
+            for i in range(2)]
+    sim = _sim(jobs, n_gpus=2, policy="mpsonly", rack_size=2,
+               rack_mtbf_s=1e9, repair_s=100.0, quarantine_faults=1)
+    for i in range(2):
+        sim._on_arrival(sim.jobs[i])
+    assert all(g.phase == MPS_PROF for g in sim.gpus if g.jobs)
+    sim.t = 40.0
+    sim._on_rack_failure(0)
+    assert all(sim.t < g.down_until for g in sim.gpus)
+    assert sorted(sim.queue) == [0, 1]
+    assert sim.fstats["n_faults"] == 2
+    assert sim.fstats["n_quarantines"] == 0   # hard, despite threshold 1
+    assert all(g.health == HEALTHY for g in sim.gpus)
+
+
+def test_migration_lands_then_destination_fails():
+    """The interaction case: a quarantine migrates the resident onto the
+    other GPU, which then fails — the job survives both hops with only its
+    since-checkpoint work destroyed each time."""
+    jobs = [Job(jid=0, profile=WORKLOADS[0], arrival=0.0, work=5000.0)]
+    sim = _sim(jobs, n_gpus=2, policy="nopart", quarantine_faults=1,
+               quarantine_repair_s=500.0, repair_s=100.0,
+               ckpt_interval_s=1e9)
+    sim._on_arrival(sim.jobs[0])
+    g0, g1 = sim.gpus
+    assert 0 in g0.jobs
+    sim.t = 30.0
+    assert sim.record_fault(g0)             # quarantine g0: migrate + re-place
+    assert g0.health == QUARANTINED and 0 in g1.jobs
+    assert sim.fstats["n_migrations"] == 1
+    sim.t = 60.0
+    sim._on_failure(g1)                     # destination dies too
+    assert sim.queue == [0] and sim.t < g1.down_until
+    assert sim.jobs[0].remaining == pytest.approx(5000.0)  # no ckpt yet
+    sim.t = max(g0.down_until, g1.down_until)
+    sim.policy.admit()                      # both repaired: placed again
+    assert sum(0 in g.jobs for g in sim.gpus) == 1
+    assert all(g.health == HEALTHY for g in sim.gpus)
+    assert sim.recover_agg.count == 2       # one wait per fault eviction
+
+
+# --------------------------------------------------- chaos scenarios e2e
+
+
+def test_chaos_scenarios_are_seed_sensitive():
+    for name in ("mps_blast", "flaky_fleet", "flaky_fleet_noq"):
+        assert get_scenario(name).seed_sensitive
+    a = _run_scenario("flaky_fleet", "miso", seed=0)
+    b = _run_scenario("flaky_fleet", "miso", seed=1)
+    assert (a.n_fault_events, a.goodput) != (b.n_fault_events, b.goodput)
+
+
+def test_flaky_fleet_completes_and_accounts_for_lost_work():
+    m = _run_scenario("flaky_fleet", "miso", seed=1)
+    sc = get_scenario("flaky_fleet")
+    assert len(m.jcts) == sc.n_jobs and np.isfinite(m.jcts).all()
+    assert m.n_fault_events > 0
+    assert m.work_lost_s > 0.0
+    assert m.gross_stp == pytest.approx(
+        m.goodput + m.work_lost_s / (m.makespan * 4))
+    assert 0.0 <= m.quarantine_occupancy < 1.0
+
+
+def test_quarantine_and_migration_recover_goodput():
+    """The headline graceful-degradation claim: on the flaky fleet, turning
+    the health machine ON (quarantine + migration) beats leaving faulty
+    GPUs in service, in mean goodput over seeds."""
+    on, off = [], []
+    for seed in range(3):
+        on.append(_run_scenario("flaky_fleet", "miso", seed).goodput)
+        off.append(_run_scenario("flaky_fleet_noq", "miso", seed).goodput)
+    assert float(np.mean(on)) > float(np.mean(off))

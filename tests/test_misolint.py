@@ -347,6 +347,64 @@ def test_ms108_negative_perf_counter_and_scope():
     assert ids(fs) == []
 
 
+# ------------------------------------------------------------------ MS109
+
+def test_ms109_positive_bare_except():
+    fs = lint("""
+        def load(path):
+            try:
+                return open(path).read()
+            except:
+                return None
+    """, "src/repro/launch/x.py")
+    assert ids(fs) == ["MS109"]
+
+
+def test_ms109_positive_broad_swallow():
+    fs = lint("""
+        def run(task):
+            try:
+                work(task)
+            except Exception:
+                pass
+            try:
+                work(task)
+            except (ValueError, BaseException):
+                ...
+    """, CORE)
+    assert ids(fs) == ["MS109", "MS109"]
+
+
+def test_ms109_negative_narrow_and_handled():
+    # narrow optional-dependency gates and broad handlers that *act* on
+    # the failure (record / re-raise / fall back) are the contract
+    fs = lint("""
+        def gated():
+            try:
+                import fancy_dep
+            except ImportError:
+                fancy_dep = None
+            errors = []
+            try:
+                risky()
+            except Exception as e:
+                errors.append(str(e))
+            try:
+                risky()
+            except Exception:
+                raise RuntimeError("context")
+    """, CORE)
+    assert ids(fs) == []
+    # and outside core/ + launch/ the rule does not apply
+    fs = lint("""
+        try:
+            risky()
+        except:
+            pass
+    """, ANY)
+    assert ids(fs) == []
+
+
 # ------------------------------------------- suppressions & MS000 hygiene
 
 def test_inline_suppression_with_reason():
@@ -510,7 +568,7 @@ def test_cli_exit_codes(tmp_path):
 
 def test_rule_table_is_complete():
     rules = all_rules()
-    assert [r.id for r in rules] == [f"MS10{i}" for i in range(1, 9)]
+    assert [r.id for r in rules] == [f"MS10{i}" for i in range(1, 10)]
     assert all(r.title for r in rules)
     assert {r.id for r in rules if r.fixable} == {"MS103", "MS105"}
 

@@ -14,9 +14,14 @@ RESULT_KEYS = {"policy", "placer", "objective", "scenario", "seed", "fleet",
                "n_jobs", "n_completed", "metrics", "wall_s"}
 METRIC_KEYS = {"avg_jct_s", "p50_jct_s", "p90_jct_s", "makespan_s", "stp",
                "energy_j", "avg_power_w", "energy_per_job_j",
-               "jct_per_joule", "breakdown_s"}
+               "jct_per_joule", "breakdown_s",
+               # v4 robustness columns
+               "goodput", "gross_stp", "work_lost_s", "n_fault_events",
+               "blast_jobs", "blast_radius_max", "mean_recover_s",
+               "quarantine_occupancy", "n_quarantines", "n_migrations"}
 SUMMARY_KEYS = {"avg_jct_s_mean", "p90_jct_s_mean", "stp_mean",
-                "makespan_s_mean", "energy_j_mean", "energy_per_job_j_mean"}
+                "makespan_s_mean", "energy_j_mean", "energy_per_job_j_mean",
+                "goodput_mean", "work_lost_s_mean"}
 
 
 def test_run_task_schema():
@@ -116,6 +121,107 @@ def test_cli_rejects_unknown_names():
                     "--seeds", "1"])
 
 
+# ------------------------------------------------------------- hardening
+
+def test_error_cell_isolated_not_fatal(monkeypatch):
+    """A cell whose simulation raises lands in report["errors"] with the
+    failure recorded; the rest of the grid still produces results."""
+    from repro.launch import sweep
+
+    real = sweep.run_task
+
+    def flaky(task):
+        if task["seed"] == 1:
+            raise RuntimeError("boom")
+        return real(task)
+
+    monkeypatch.setattr(sweep, "run_task", flaky)
+    rep = sweep.run_sweep(["miso"], ["smoke"], seeds=[0, 1], serial=True,
+                          retries=2)
+    assert len(rep["results"]) == 1
+    assert rep["results"][0]["seed"] == 0
+    (err,) = rep["errors"]
+    assert err["seed"] == 1 and err["attempts"] == 2
+    assert "RuntimeError: boom" in err["error"]
+    # error cells carry resolved identity keys and never reach the summary
+    assert err["placer"] == "least-loaded"
+    assert set(rep["summary"]["smoke"]["miso"]["least-loaded"]
+               ["throughput"]) == SUMMARY_KEYS
+    json.dumps(rep)
+
+
+def test_cell_timeout_records_error(monkeypatch):
+    """A cell that exceeds its wall-clock budget is killed by the SIGALRM
+    guard and recorded, not hung forever."""
+    import signal as _signal
+
+    import pytest as _pytest
+
+    if not hasattr(_signal, "SIGALRM"):
+        _pytest.skip("no SIGALRM on this platform")
+    from repro.launch import sweep
+
+    def hang(task):
+        import time as _t
+        _t.sleep(30.0)
+
+    monkeypatch.setattr(sweep, "run_task", hang)
+    rep = sweep.run_sweep(["miso"], ["smoke"], seeds=[0], serial=True,
+                          cell_timeout=0.2)
+    assert rep["results"] == []
+    (err,) = rep["errors"]
+    assert "CellTimeout" in err["error"]
+    assert rep["config"]["cell_timeout_s"] == 0.2
+
+
+def test_resume_skips_completed_cells(tmp_path, monkeypatch):
+    """--resume carries successful cells of a partial same-schema report
+    over verbatim and only runs the missing ones."""
+    from repro.launch import sweep
+
+    partial = sweep.run_sweep(["miso"], ["smoke"], seeds=[0], serial=True)
+    p = tmp_path / "partial.json"
+    p.write_text(json.dumps(partial))
+
+    ran = []
+    real = sweep.run_task
+
+    def spy(task):
+        ran.append(task["seed"])
+        return real(task)
+
+    monkeypatch.setattr(sweep, "run_task", spy)
+    rep = sweep.run_sweep(["miso"], ["smoke"], seeds=[0, 1], serial=True,
+                          resume=str(p))
+    assert ran == [1]                    # seed 0 came from the partial
+    assert len(rep["results"]) == 2
+    assert rep["config"]["resumed_cells"] == 1
+    assert rep["results"][0]["metrics"] == partial["results"][0]["metrics"]
+
+
+def test_resume_ignores_other_schema_versions(tmp_path):
+    """A partial report from a different schema version resumes nothing
+    (its metric columns would not line up), and a non-sweep JSON is
+    rejected outright."""
+    from repro.launch import sweep
+
+    old = {"schema_version": SCHEMA_VERSION - 1, "kind": "miso-sweep",
+           "results": [{"scenario": "smoke", "policy": "miso",
+                        "placer": "least-loaded",
+                        "objective": "throughput", "seed": 0}]}
+    p = tmp_path / "old.json"
+    p.write_text(json.dumps(old))
+    rep = sweep.run_sweep(["miso"], ["smoke"], seeds=[0], serial=True,
+                          resume=str(p))
+    assert rep["config"]["resumed_cells"] == 0
+    assert len(rep["results"]) == 1
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"kind": "something-else"}))
+    with pytest.raises(ValueError, match="not a miso-sweep report"):
+        sweep.run_sweep(["miso"], ["smoke"], seeds=[0], serial=True,
+                        resume=str(bad))
+
+
 # ------------------------------------------------------------ diff_sweeps
 
 def _load_diff_sweeps():
@@ -190,6 +296,33 @@ def test_diff_sweeps_flags_energy_regressions(tmp_path):
     assert len(regressions) == 1
     assert "energy_j_mean" in regressions[0]
     assert "smoke/miso/least-loaded/energy" in regressions[0]
+
+
+def test_diff_sweeps_flags_robustness_regressions(tmp_path):
+    """The v4 robustness columns gate: losing goodput or destroying more
+    work than baseline (beyond threshold) fails the diff."""
+    ds = _load_diff_sweeps()
+    base_agg = {"goodput_mean": 1.0, "work_lost_s_mean": 100.0}
+    mk = lambda agg: {"schema_version": 4, "kind": "miso-sweep",
+                      "summary": {"flaky_fleet": {"miso": {"least-loaded":
+                                                  {"throughput": agg}}}}}
+    pb = tmp_path / "base.json"
+    pb.write_text(json.dumps(mk(base_agg)))
+    for bad, metric in (({"goodput_mean": 0.9, "work_lost_s_mean": 100.0},
+                         "goodput_mean"),
+                        ({"goodput_mean": 1.0, "work_lost_s_mean": 150.0},
+                         "work_lost_s_mean")):
+        pc = tmp_path / "cand.json"
+        pc.write_text(json.dumps(mk(bad)))
+        regressions, _ = ds.diff_reports(str(pb), str(pc), threshold=0.02)
+        assert len(regressions) == 1
+        assert metric in regressions[0]
+    # improvement in either direction is a note, not a regression
+    pc = tmp_path / "good.json"
+    pc.write_text(json.dumps(mk({"goodput_mean": 1.1,
+                                 "work_lost_s_mean": 50.0})))
+    regressions, notes = ds.diff_reports(str(pb), str(pc), threshold=0.02)
+    assert regressions == [] and len(notes) == 2
 
 
 def test_v3_report_round_trip(tmp_path):

@@ -1,0 +1,79 @@
+"""MS109: bare ``except:`` / silently swallowed exceptions in core & launch.
+
+The robustness contract of the fault-injection layer
+(``repro.core.sim.faults``) is that faults are *modeled*, never ignored: a
+crash becomes a blast-radius event, a flaky reconfigure becomes a bounded
+retry, an estimator blow-up degrades to last-known-good — each observable
+in the robustness metrics.  A bare ``except:`` (which also eats
+``KeyboardInterrupt``/``SystemExit``) or a broad handler whose body only
+``pass``es silently deletes a failure mode instead, producing simulations
+that look healthy while hiding corrupted state.
+
+Flagged inside ``src/repro/core/`` and ``src/repro/launch/``:
+
+* any bare ``except:`` handler, whatever its body;
+* an ``except``-anything handler (``Exception``/``BaseException`` or a
+  tuple containing one) whose body is only ``pass``/``...``/``continue``.
+
+Narrow intentional gates (``except ImportError: pass`` around optional
+deps) stay allowed; genuinely intentional broad swallows get a
+``# misolint: disable=MS109 -- why`` suppression or a baseline entry.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from misolint.context import ModuleContext
+from misolint.rules.base import Finding, Rule, register_rule
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def _is_broad(ctx: ModuleContext, exc: ast.expr) -> bool:
+    """Whether the handler's exception expression catches everything."""
+    if isinstance(exc, ast.Tuple):
+        return any(_is_broad(ctx, e) for e in exc.elts)
+    dotted = ctx.resolve(exc) or ""
+    return dotted.rsplit(".", 1)[-1] in _BROAD
+
+
+def _swallows(body: List[ast.stmt]) -> bool:
+    """Whether the handler body discards the exception without acting on
+    it: nothing but ``pass`` / ``...`` / ``continue``."""
+    for stmt in body:
+        if isinstance(stmt, (ast.Pass, ast.Continue)):
+            continue
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Constant) \
+                and stmt.value.value is Ellipsis:
+            continue
+        return False
+    return True
+
+
+@register_rule
+class SwallowedExceptionRule(Rule):
+    id = "MS109"
+    title = "bare except / silently swallowed exception"
+    scope = ("src/repro/core/", "src/repro/launch/")
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                out.append(self.finding(
+                    ctx, node,
+                    "bare `except:` swallows everything including "
+                    "KeyboardInterrupt/SystemExit; catch the narrowest "
+                    "exception the failure mode can raise (robustness "
+                    "contract: faults are modeled, never ignored)"))
+            elif _is_broad(ctx, node.type) and _swallows(node.body):
+                out.append(self.finding(
+                    ctx, node,
+                    "broad exception handler whose body only passes: the "
+                    "failure mode is silently deleted instead of modeled, "
+                    "recorded or re-raised (robustness contract of the "
+                    "fault-injection layer)"))
+        return out
