@@ -2,6 +2,7 @@
 latency (paper §4.2/§8), kernel microbenches, TPU-pod adaptation."""
 from __future__ import annotations
 
+import copy
 import random
 import time
 
@@ -199,15 +200,23 @@ def trace_scaling(fast=True):
     sizes = (8, 64, 512) if fast else (8, 64, 512, 2048, 5000)
     fleet_proto = homogeneous_fleet(SPACE, PM, ORACLE_EST, 1)[0]
     rows = []
+    # the us/event rows feed CI's regression gate (diff_sweeps.py components
+    # mode), so take the min over a few identical replays: the sim is
+    # deterministic, only the wall clock is noisy, and min-of-N is the
+    # standard noise floor estimator for a deterministic workload
+    reps = 5 if fast else 1
     for n in sizes:
         n_jobs = min(20 * n, 100_000)
         jobs = synthesize_alibaba_trace(n_jobs, seed=7, load_scale=n / 16.0,
                                         max_duration_s=7200.0)
         cfg = SimConfig(n_gpus=n, policy="miso", profile=True)
-        sim = ClusterSim(jobs, cfg, fleet=[fleet_proto] * n)
-        t0 = time.perf_counter()
-        m = sim.run()
-        wall = time.perf_counter() - t0
+        wall = float("inf")
+        for _ in range(reps):
+            sim = ClusterSim(copy.deepcopy(jobs), cfg,
+                             fleet=[fleet_proto] * n)
+            t0 = time.perf_counter()
+            m = sim.run()
+            wall = min(wall, time.perf_counter() - t0)
         p = sim.prof
         rows.append(row(
             f"trace_scaling_n{n}", wall / max(p["events"], 1.0),

@@ -22,6 +22,20 @@ trajectory tracking" tool; CI runs it against the committed baseline in
 
   PYTHONPATH=src python benchmarks/diff_sweeps.py \\
       benchmarks/baselines/BENCH_sweep_smoke.json BENCH_sweep_smoke.json
+
+The same driver also diffs **component reports** (``BENCH_components.json``,
+kind ``miso-components``) — the report kind is auto-detected from the
+baseline file.  In that mode the gated metric is ``us_per_call`` on the
+``trace_scaling_*`` rows (µs per simulator event at each fleet tier): a row
+more than ``--threshold`` slower than the committed baseline (default 10%
+for components — wall-clock noise is real even with the harness's min-of-N
+timing) fails the gate, and a trace row missing from the candidate is a
+coverage regression.  Non-trace rows (optimizer latency, policy walls)
+are reported as notes only: they are microbenches, not the event-loop
+acceptance curve.
+
+  PYTHONPATH=src:. python benchmarks/diff_sweeps.py \\
+      benchmarks/baselines/BENCH_components.json BENCH_components.json
 """
 from __future__ import annotations
 
@@ -29,6 +43,12 @@ import argparse
 import json
 import sys
 from typing import Dict, List, Tuple
+
+# rows of a miso-components report whose us_per_call is gated (higher is
+# a regression); everything else in that report is informational
+GATED_ROW_PREFIX = "trace_scaling_"
+THRESHOLD_SWEEP = 0.02
+THRESHOLD_COMPONENTS = 0.10
 
 # metric key -> direction: +1 means "higher is a regression"
 METRICS = {
@@ -72,6 +92,59 @@ def load_summary(path: str
     return out
 
 
+def report_kind(path: str) -> str:
+    """``"miso-sweep"`` or ``"miso-components"``; raises on anything else."""
+    with open(path) as f:
+        kind = json.load(f).get("kind")
+    if kind not in ("miso-sweep", "miso-components"):
+        raise ValueError(f"{path}: unknown report kind {kind!r}")
+    return kind
+
+
+def load_components(path: str) -> Dict[str, float]:
+    """Row name -> us_per_call from a miso-components report."""
+    with open(path) as f:
+        rep = json.load(f)
+    if rep.get("kind") != "miso-components":
+        raise ValueError(f"{path}: not a miso-components report "
+                         f"(kind={rep.get('kind')!r})")
+    return {r["name"]: float(r["us_per_call"])
+            for r in rep.get("rows", []) if "us_per_call" in r}
+
+
+def diff_components(base_path: str, new_path: str,
+                    threshold: float) -> Tuple[List[str], List[str]]:
+    """Returns (regressions, notes) for two miso-components reports.
+
+    Gates ``us_per_call`` on the ``trace_scaling_*`` rows — the µs/event
+    engine acceptance curve — and treats a gated row that vanished from the
+    candidate as a regression (same vanishing-coverage rule as the sweep
+    differ).  All other rows diff as notes.
+    """
+    base = load_components(base_path)
+    new = load_components(new_path)
+    regressions, notes = [], []
+    for name in sorted(set(base) | set(new)):
+        gated = name.startswith(GATED_ROW_PREFIX)
+        if name not in new:
+            (regressions if gated else notes).append(
+                f"{name}: missing from candidate")
+            continue
+        if name not in base:
+            notes.append(f"{name}: new row (no baseline)")
+            continue
+        b, n = base[name], new[name]
+        if b == 0:
+            continue
+        rel = (n - b) / abs(b)
+        line = f"{name} us_per_call: {b:.4g} -> {n:.4g} ({rel:+.2%})"
+        if gated and rel > threshold:
+            regressions.append(line)
+        elif rel != 0:
+            notes.append(line)
+    return regressions, notes
+
+
 def diff_reports(base_path: str, new_path: str,
                  threshold: float) -> Tuple[List[str], List[str]]:
     """Returns (regressions, notes): human-readable per-cell findings."""
@@ -106,23 +179,34 @@ def diff_reports(base_path: str, new_path: str,
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="diff two BENCH_sweep_*.json reports, flag regressions")
+        description="diff two benchmark reports (sweep or components; "
+                    "kind auto-detected), flag regressions")
     ap.add_argument("baseline")
     ap.add_argument("candidate")
-    ap.add_argument("--threshold", type=float, default=0.02,
-                    help="relative regression to flag (default 2%%)")
+    ap.add_argument("--threshold", type=float, default=None,
+                    help="relative regression to flag (default 2%% for "
+                         "sweep reports, 10%% for components reports)")
     args = ap.parse_args(argv)
-    regressions, notes = diff_reports(args.baseline, args.candidate,
-                                      args.threshold)
+    kind = report_kind(args.baseline)
+    if kind == "miso-components":
+        threshold = (THRESHOLD_COMPONENTS if args.threshold is None
+                     else args.threshold)
+        regressions, notes = diff_components(args.baseline, args.candidate,
+                                             threshold)
+    else:
+        threshold = (THRESHOLD_SWEEP if args.threshold is None
+                     else args.threshold)
+        regressions, notes = diff_reports(args.baseline, args.candidate,
+                                          threshold)
     for line in notes:
         print(f"[diff-sweeps] note: {line}")
     if regressions:
         for line in regressions:
             print(f"[diff-sweeps] REGRESSION: {line}")
         print(f"[diff-sweeps] {len(regressions)} regression(s) over "
-              f"{args.threshold:.0%} vs {args.baseline}")
+              f"{threshold:.0%} vs {args.baseline}")
         return 1
-    print(f"[diff-sweeps] OK: no regression over {args.threshold:.0%} "
+    print(f"[diff-sweeps] OK: no regression over {threshold:.0%} "
           f"vs {args.baseline}")
     return 0
 

@@ -157,7 +157,7 @@ DUMMY_PROFILE = JobProfile(
 # ---------------------------------------------------------------------------
 
 
-@dataclass
+@dataclass(slots=True)
 class Job:
     jid: int
     profile: JobProfile
@@ -179,12 +179,18 @@ class Job:
     t_run: float = 0.0
     start_time: Optional[float] = None
     finish_time: Optional[float] = None
+    # (space, min_required_slice) memo maintained by
+    # PartitionSpace.job_required_slice — placement-scan hot path
+    _req_cache: Optional[tuple] = field(default=None, repr=False,
+                                        compare=False)
 
     def __post_init__(self):
         if self.remaining == 0.0:
             self.remaining = self.work
 
     def profile_at(self, done_frac: float) -> JobProfile:
+        if not self.phases:
+            return self.profile
         prof = self.profile
         for frac, p in self.phases:
             if done_frac >= frac:

@@ -58,17 +58,37 @@ _MEMO_MAX = 65536    # FIFO-bounded: noisy estimators never repeat a key, so
                      # an unbounded dict would be a slow leak across long runs
 
 
+_SIG_CACHE: Dict[int, tuple] = {}   # id(speed dict) -> (dict, space uid, sig)
+_SIG_MAX = 65536
+
+
+def _sig_one(sv: Dict[int, float], space: PartitionSpace) -> tuple:
+    """Rounded per-dict signature fragment, cached on dict identity.
+
+    Estimate dicts are produced once per profiling window (and the oracle
+    estimator memoizes per profile), then passed to the optimizer unchanged
+    on every repartition — so the id-keyed fragment is usually a hit.  The
+    dict is pinned in the entry so the id cannot be recycled while cached."""
+    hit = _SIG_CACHE.get(id(sv))
+    if hit is not None and hit[0] is sv and hit[1] == space.uid:
+        return hit[2]
+    frag = tuple(round(sv.get(s, 0.0), _MEMO_ROUND) for s in space.sizes)
+    if len(_SIG_CACHE) >= _SIG_MAX:
+        _SIG_CACHE.pop(next(iter(_SIG_CACHE)))
+    _SIG_CACHE[id(sv)] = (sv, space.uid, frag)
+    return frag
+
+
 def _memo_key(space: PartitionSpace, speeds, require_feasible: bool) -> tuple:
     # a missing size and an explicit 0.0 produce identical results in every
     # solver path (``.get(size, 0.0)``), so the signature may collapse them
-    sizes = space.sizes
-    sig = tuple(tuple(round(sv.get(s, 0.0), _MEMO_ROUND) for s in sizes)
-                for sv in speeds)
+    sig = tuple(_sig_one(sv, space) for sv in speeds)
     return (space.uid, require_feasible, sig)
 
 
 def clear_memo() -> None:
     _MEMO.clear()
+    _SIG_CACHE.clear()
     _MEMO_STATS["hits"] = _MEMO_STATS["misses"] = 0
 
 

@@ -89,6 +89,15 @@ class PartitionSpace:
         self._mem_monotone = all(
             a[1] <= b[1] for a, b in zip(self._mem_by_size_asc,
                                          self._mem_by_size_asc[1:]))
+        # admission-path memos (pure functions of this immutable space, so
+        # they are safe to share across simulations): (mem, qos) -> scalar
+        # requirement, sorted requirement tuple -> placeable verdict, and
+        # sorted requirement tuple -> largest addable slice (the fleet
+        # index's ``_max_add``).  Job populations draw from bounded profile
+        # pools, so these saturate quickly; bounded FIFO as a leak guard.
+        self._mrs_cache: Dict[Tuple[float, int], Optional[int]] = {}
+        self._placeable_cache: Dict[Tuple[int, ...], bool] = {}
+        self._max_add_cache: Dict[Tuple[int, ...], int] = {}
 
     # -------------------------------------------------------- enumeration
 
@@ -211,10 +220,34 @@ class PartitionSpace:
         memory is non-decreasing in slice size, a slice satisfies a job iff
         ``size >= min_required_slice(job)`` — the whole 2-D (memory, QoS)
         constraint collapses to this one scalar."""
+        key = (mem_gb, qos_min_slice)
+        try:
+            return self._mrs_cache[key]
+        except KeyError:
+            pass
+        out = None
         for size, sz_mem in self._mem_by_size_asc:
             if sz_mem >= mem_gb and size >= qos_min_slice:
-                return size
-        return None
+                out = size
+                break
+        if len(self._mrs_cache) >= 65536:
+            self._mrs_cache.pop(next(iter(self._mrs_cache)))
+        self._mrs_cache[key] = out
+        return out
+
+    def job_required_slice(self, job) -> Optional[int]:
+        """``min_required_slice`` of a :class:`~repro.core.jobs.Job`'s
+        effective footprint ``(max(mem_gb, min_mem_gb), qos_min_slice)``,
+        cached on the job (a job's requirement against one space never
+        changes; the space object is pinned in the cache entry so a
+        heterogeneous fleet re-resolves per space)."""
+        c = job._req_cache
+        if c is not None and c[0] is self:
+            return c[1]
+        r = self.min_required_slice(
+            max(job.profile.mem_gb, job.min_mem_gb), job.qos_min_slice)
+        job._req_cache = (self, r)
+        return r
 
     def placeable(self, required_sizes: Sequence[int]) -> bool:
         """Exact feasibility: does *some* valid partition of length
@@ -226,7 +259,11 @@ class PartitionSpace:
         m = len(required_sizes)
         if m not in self._pareto_by_len:
             return False
-        req = sorted(required_sizes, reverse=True)
+        req = tuple(sorted(required_sizes, reverse=True))
+        cached = self._placeable_cache.get(req)
+        if cached is not None:
+            return cached
+        out = False
         for row in self._pareto_by_len[m]:
             ok = True
             for a, b in zip(row, req):
@@ -234,8 +271,12 @@ class PartitionSpace:
                     ok = False
                     break
             if ok:
-                return True
-        return False
+                out = True
+                break
+        if len(self._placeable_cache) >= 65536:
+            self._placeable_cache.pop(next(iter(self._placeable_cache)))
+        self._placeable_cache[req] = out
+        return out
 
     def required_sizes(self, mems: Sequence[float],
                        qoss: Sequence[int]) -> Optional[Sequence[int]]:

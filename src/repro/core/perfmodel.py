@@ -69,6 +69,7 @@ class PerfModel:
         self.space = space
         self.hw = hw
         self._time_cache: dict = {}
+        self._speed_cache: dict = {}
         self._vec_cache: dict = {}
         self._mps_cache: dict = {}
 
@@ -107,11 +108,16 @@ class PerfModel:
 
     def slice_speed(self, prof: JobProfile, size: int) -> float:
         """Execution speed on a slice normalized by full-slice speed: (0,1]."""
+        key = (id(prof), size)
+        hit = self._speed_cache.get(key)
+        if hit is not None:
+            return hit[1]
         t_full = self.slice_time(prof, self.space.full_size)
         t = self.slice_time(prof, size)
-        if t == float("inf"):
-            return 0.0
-        return t_full / t
+        v = 0.0 if t == float("inf") else t_full / t
+        self._bound(self._speed_cache)
+        self._speed_cache[key] = (prof, v)
+        return v
 
     def speed_vector(self, prof: JobProfile) -> dict:
         hit = self._vec_cache.get(id(prof))

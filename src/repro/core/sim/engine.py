@@ -54,8 +54,9 @@ from repro.core.partitions import PartitionSpace
 from repro.core.perfmodel import PerfModel
 from repro.core.sim.faults import FaultInjector, get_fault_injector
 from repro.core.sim.gpu import (CKPT, DEGRADED, GPU, HEALTHY, IDLE, MIG_RUN,
-                                MPS_PROF, QUARANTINED, RJob)
+                                MPS_PROF, QUARANTINED)
 from repro.core.sim.index import FleetIndex, WorkAggregate
+from repro.core.sim.soa import FleetState
 from repro.core.sim.policies import get_policy
 
 
@@ -172,6 +173,9 @@ class ClusterSim:
         for g in self.gpus:
             self._refresh_feas(g)
             self.index.add(g)
+        # fleet-wide SoA staging buffers for vectorized batch settles
+        # (end-of-run, rollout snapshots); per-event paths never touch it
+        self.fleet_state = FleetState(self.gpus)
         self.policy = get_policy(cfg.policy)(self)
         # -- robustness accounting (all zero when nothing ever faults):
         # destroyed work and recovery waits are Kahan-summed like the
@@ -219,11 +223,15 @@ class ClusterSim:
 
     def _schedule_gpu_events(self, g: GPU):
         g.stamp += 1
-        if g.phase in (CKPT, MPS_PROF):
-            self._push(g.phase_end, "gpu_timer", g.gid, g.stamp)
+        phase = g.phase
+        if phase == CKPT or phase == MPS_PROF:
+            heapq.heappush(self.events, (g.phase_end, next(self._counter),
+                                         "gpu_timer", g.gid, g.stamp))
         nc = g.next_completion()
         if nc:
-            self._push(nc[0], "completion", (g.gid, nc[1]), g.stamp)
+            heapq.heappush(self.events, (nc[0], next(self._counter),
+                                         "completion", (g.gid, nc[1]),
+                                         g.stamp))
 
     # ---------------------------------------------------------- run loop
 
@@ -231,30 +239,24 @@ class ClusterSim:
         n_target = len(self.jobs)
         prof = self.prof
         t_run0 = time.perf_counter() if prof is not None else 0.0
-        while self.events and len(self.completed) < n_target:
-            t, _, kind, payload, stamp = heapq.heappop(self.events)
-            if t > self.cfg.max_sim_s:
+        # hot-loop locals: the heap, the completion list and the clock cap
+        # are bound once (none is ever rebound after __init__)
+        events = self.events
+        completed = self.completed
+        gpus = self.gpus
+        heappop = heapq.heappop
+        max_sim_s = self.cfg.max_sim_s
+        while events and len(completed) < n_target:
+            t, _, kind, payload, stamp = heappop(events)
+            if t > max_sim_s:
                 break
             self.t = t
             if prof is not None:
                 prof["events"] += 1.0
-            if kind == "arrival":
-                # drain every further arrival stamped exactly t so the FCFS
-                # admit runs once over the whole burst (trace replays carry
-                # integer timestamps with heavy same-second bursts); for
-                # FCFS this is literally the same placement sequence, and
-                # queue-scanning disciplines (SRPT) see the full burst at
-                # once — their intended semantics
-                self._enqueue(self.jobs[payload])
-                events = self.events
-                while events and events[0][0] == t and events[0][2] == "arrival":
-                    _, _, _, jid2, _ = heapq.heappop(events)
-                    if prof is not None:
-                        prof["events"] += 1.0
-                    self._enqueue(self.jobs[jid2])
-                self.policy.admit()
-            elif kind == "gpu_timer":
-                g = self.gpus[payload]
+            # dispatch ordered by event frequency: stale-stamped timer /
+            # completion entries dominate the heap traffic at scale
+            if kind == "gpu_timer":
+                g = gpus[payload]
                 if stamp != g.stamp or t < g.phase_end - 1e-9:
                     continue
                 batch = self._drain_same_tick_timers(t, g)
@@ -264,7 +266,7 @@ class ClusterSim:
                     self.end_phase_batch(batch)
             elif kind == "completion":
                 gid, jid = payload
-                g = self.gpus[gid]
+                g = gpus[gid]
                 if stamp != g.stamp:
                     continue
                 g.advance(t)
@@ -277,6 +279,20 @@ class ClusterSim:
                     self._on_completion(g, rj.job)
                 else:
                     self._on_completion_batch(batch)
+            elif kind == "arrival":
+                # drain every further arrival stamped exactly t so the FCFS
+                # admit runs once over the whole burst (trace replays carry
+                # integer timestamps with heavy same-second bursts); for
+                # FCFS this is literally the same placement sequence, and
+                # queue-scanning disciplines (SRPT) see the full burst at
+                # once — their intended semantics
+                self._enqueue(self.jobs[payload])
+                while events and events[0][0] == t and events[0][2] == "arrival":
+                    _, _, _, jid2, _ = heappop(events)
+                    if prof is not None:
+                        prof["events"] += 1.0
+                    self._enqueue(self.jobs[jid2])
+                self.policy.admit()
             elif kind == "failure":
                 self._on_failure(self.gpus[payload])
             elif kind == "rack_failure":
@@ -290,9 +306,10 @@ class ClusterSim:
                 self.policy.admit()
         # settle every GPU's accounting (and energy integral) to the final
         # clock; completed-job metrics are already fixed, so this only
-        # extends idle/energy windows
-        for g in self.gpus:
-            g.advance(self.t)
+        # extends idle/energy windows.  One masked vector update covers the
+        # resident-free rows (bit-identical to the scalar advance — see
+        # core/sim/soa.py); occupied rows keep scalar operation order.
+        self.fleet_state.settle_all(self.t)
         if prof is not None:
             prof["total_s"] += time.perf_counter() - t_run0
         fs = self.fstats
@@ -364,18 +381,25 @@ class ClusterSim:
             return
         reqs = []
         for rj in g.jobs.values():
-            j = rj.job
-            r = space.min_required_slice(max(j.profile.mem_gb, j.min_mem_gb),
-                                         j.qos_min_slice)
+            r = space.job_required_slice(rj.job)
             if r is None:                # unplaceable resident (forced state):
                 g._max_add = 0           # nothing more fits for sure
                 return
             reqs.append(r)
-        g._max_add = 0
-        for s in sorted(space.sizes, reverse=True):
+        key = tuple(sorted(reqs))
+        cached = space._max_add_cache.get(key)
+        if cached is not None:
+            g._max_add = cached
+            return
+        best = 0
+        for s in space.sizes:            # sizes are stored descending
             if space.placeable(reqs + [s]):
-                g._max_add = s
+                best = s
                 break
+        if len(space._max_add_cache) >= 65536:
+            space._max_add_cache.pop(next(iter(space._max_add_cache)))
+        space._max_add_cache[key] = best
+        g._max_add = best
 
     def _resident_changed(self, g: GPU):
         """Re-bucket ``g`` after its resident set changed (in-service GPUs
@@ -388,13 +412,29 @@ class ClusterSim:
         """Remove one resident from ``g`` keeping the placement index and
         resident accounting consistent.  Policies must route evictions
         through this instead of ``del g.jobs[jid]``."""
-        del g.jobs[jid]
+        rj = g._pop_resident(jid)
+        if rj.job.phases:
+            g._n_phased -= 1
+        g._spd_dirty = True
         self._resident_count -= 1
         self._resident_changed(g)
 
     def mem_ok(self, g: GPU, job: Job, exclude: Optional[int] = None) -> bool:
-        total = sum(rj.job.profile.mem_gb for jid, rj in g.jobs.items()
-                    if jid != exclude)
+        if exclude is None:
+            # resident memory sum cached on the speed-key identity chain: a
+            # changed resident set always re-keys refresh_speeds before the
+            # next placement scan, and the recompute below runs in dict
+            # order — bit-identical to summing fresh on every call
+            if g._mem_key is g._spd_key:
+                total = g._mem_total
+            else:
+                total = sum(rj.job.profile.mem_gb
+                            for rj in g.jobs.values())
+                g._mem_total = total
+                g._mem_key = g._spd_key
+        else:
+            total = sum(rj.job.profile.mem_gb for jid, rj in g.jobs.items()
+                        if jid != exclude)
         return total + job.profile.mem_gb <= g.pm.hw.mem_gb
 
     def spare_slice_ok(self, g: GPU, job: Job,
@@ -445,7 +485,10 @@ class ClusterSim:
             t0 = self._evict_t.pop(job.jid, None)
             if t0 is not None:
                 self.recover_agg.add(self.t - t0)
-        g.jobs[job.jid] = RJob(job)
+        g._add_resident(job)
+        if job.phases:
+            g._n_phased += 1
+        g._spd_dirty = True
         self._resident_count += 1
         self._resident_changed(g)
         self.policy.on_place(g, job)
@@ -520,9 +563,7 @@ class ClusterSim:
         if g.phase == CKPT:
             # the checkpoint window ran to completion: the save is durable,
             # so resident jobs have nothing left at risk
-            for rj in g.jobs.values():
-                rj.since_ckpt_t = 0.0
-                rj.since_ckpt_work = 0.0
+            g.reset_ckpt_marks()
 
     def _drain_same_tick_completions(self, t: float, first: GPU,
                                      first_job: Job):
@@ -689,10 +730,13 @@ class ClusterSim:
             job.queue_since = self.t
             self._evict_t[jid] = self.t
             requeued.append(jid)
-            del g.jobs[jid]
+            if job.phases:
+                g._n_phased -= 1
+            g._pop_resident(jid)
             g.estimates.pop(jid, None)
         self.queue[:0] = requeued
         self._resident_count -= len(requeued)
+        g._spd_dirty = True
         self._resident_changed(g)
         self.policy.on_fault_evict(g)
         self.finalize(g)
@@ -719,7 +763,9 @@ class ClusterSim:
             requeued.append(job.jid)
         self.queue[:0] = requeued
         self._resident_count -= len(g.jobs)
-        g.jobs.clear()
+        g._clear_residents()
+        g._n_phased = 0
+        g._spd_dirty = True
         g.estimates.clear()
 
     def _take_down(self, g: GPU, repair_s: float):
@@ -731,6 +777,10 @@ class ClusterSim:
         g.speed_fault = 1.0
         g.sched_ok = True
         g.reconfig_tries = 0
+        # mutations here bypass refresh_speeds: break the speed/watts/memory
+        # validity chains so the next refresh and advance recompute
+        g._spd_dirty = True
+        g._spd_key = object()
         g.down_until = self.t + repair_s
         g.stamp += 1
         # out of service: drop from the fleet index and the up-set cache;

@@ -36,7 +36,6 @@ periodic boundary passes), which is exactly what the engine re-adds to
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import TYPE_CHECKING, Dict, Optional, Tuple
 
 from repro.core.jobs import Job
@@ -55,14 +54,51 @@ IDLE, CKPT, MPS_PROF, MIG_RUN = "idle", "ckpt", "mps", "mig"
 HEALTHY, DEGRADED, QUARANTINED = "healthy", "degraded", "quarantined"
 
 
-@dataclass
 class RJob:
-    """A job resident on a GPU: its current slice and instantaneous speed."""
-    job: Job
-    slice_size: Optional[int] = None
-    speed: float = 0.0               # work-seconds per second, right now
-    since_ckpt_t: float = 0.0        # progressing seconds since last ckpt
-    since_ckpt_work: float = 0.0     # un-checkpointed work-seconds (at risk)
+    """A job resident on a GPU — a *view* over one slot of the GPU's
+    struct-of-arrays resident columns (see :mod:`repro.core.sim.soa`).
+
+    The hot per-resident scalars — instantaneous speed, progressing seconds
+    since the last checkpoint, and the un-checkpointed (at-risk) work —
+    live in the slot-aligned column lists ``GPU._spd`` / ``_ckt`` / ``_ckw``
+    so the engine's inner loops walk contiguous columns instead of chasing
+    one object per resident; the properties below keep every policy-side
+    reader (``rj.speed``, fault rollback's ``rj.since_ckpt_work``, tests)
+    source-compatible.  ``job`` and ``slice_size`` stay plain attributes:
+    they are identity/assignment state, not per-event integrands."""
+
+    __slots__ = ("g", "slot", "job", "slice_size")
+
+    def __init__(self, g: "GPU", slot: int, job: Job,
+                 slice_size: Optional[int] = None):
+        self.g = g
+        self.slot = slot
+        self.job = job
+        self.slice_size = slice_size
+
+    @property
+    def speed(self) -> float:        # work-seconds per second, right now
+        return self.g._spd[self.slot]
+
+    @speed.setter
+    def speed(self, v: float):
+        self.g._spd[self.slot] = v
+
+    @property
+    def since_ckpt_t(self) -> float:  # progressing seconds since last ckpt
+        return self.g._ckt[self.slot]
+
+    @since_ckpt_t.setter
+    def since_ckpt_t(self, v: float):
+        self.g._ckt[self.slot] = v
+
+    @property
+    def since_ckpt_work(self) -> float:  # un-checkpointed work (at risk)
+        return self.g._ckw[self.slot]
+
+    @since_ckpt_work.setter
+    def since_ckpt_work(self, v: float):
+        self.g._ckw[self.slot] = v
 
 
 class GPU:
@@ -84,7 +120,16 @@ class GPU:
         self.energy_j = 0.0
         self.phase = IDLE
         self.phase_end = 0.0
+        # resident store, struct-of-arrays: ``jobs`` (jid -> slot view, in
+        # placement order) is the lookup/iteration surface policies use;
+        # the parallel column lists below are the hot data, slot-aligned
+        # with ``_rjobs`` (list position == slot == dict order).  All four
+        # mutate ONLY through _add_resident/_pop_resident/_clear_residents.
         self.jobs: Dict[int, RJob] = {}
+        self._rjobs: list = []           # slot -> RJob view
+        self._spd: list = []             # slot -> speed (w-s per second)
+        self._ckt: list = []             # slot -> progressing s since ckpt
+        self._ckw: list = []             # slot -> at-risk work-seconds
         self.partition: Tuple[int, ...] = ()
         self.estimates: Dict[int, Dict[int, float]] = {}
         self.last_update = 0.0
@@ -102,12 +147,76 @@ class GPU:
         self.speed_fault = 1.0
         self.sched_ok = True
         self.reconfig_tries = 0
+        # ---- speed-validity cache.  Per-resident speeds are pure functions
+        # of (phase, speed_fault, resident (jid, slice) mix) for progress-
+        # independent profiles, so ``refresh_speeds`` skips the recompute
+        # unless (a) a mutation site flagged ``_spd_dirty`` (resident set or
+        # slice assignment changed — engine place/remove/evict paths and
+        # every policy path that writes ``rj.slice_size``; see the
+        # determinism contract in CONTRIBUTING), (b) the phase object
+        # changed (``is`` on the module constants — a false negative only
+        # recomputes), or (c) the straggler multiplier moved.  ``_n_phased``
+        # counts residents with progress-dependent profiles (``job.phases``),
+        # which disable the skip entirely.  ``_spd_key`` is a fresh object
+        # per recompute: the wall-watts and resident-memory-sum caches hang
+        # off its *identity*, so an unchanged key proves their inputs are
+        # unchanged and the cached values are bit-identical to a fresh
+        # dict-order recompute.
+        self._spd_dirty = True
+        self._spd_phase: object = None
+        self._spd_fault = 1.0
+        self._spd_key: object = None
+        self._w_key: object = object()
+        self._w_val = 0.0
+        self._mem_key: object = object()
+        self._mem_total = 0.0
+        self._n_phased = 0
         # fleet-index bookkeeping (owned by engine + sim.index): current
         # bucket, membership flag, and the largest menu slice a new job
         # could still require here (None = non-monotone menu, never pruned)
         self._idx_pos: Optional[Tuple[int, int]] = None
         self._in_index = False
         self._max_add: Optional[int] = None
+
+    # ---------------------------------------------------- resident columns
+
+    def _add_resident(self, job: Job) -> RJob:
+        """Append ``job`` as the newest resident (slot = placement order)."""
+        rj = RJob(self, len(self._rjobs), job)
+        self.jobs[job.jid] = rj
+        self._rjobs.append(rj)
+        self._spd.append(0.0)
+        self._ckt.append(0.0)
+        self._ckw.append(0.0)
+        return rj
+
+    def _pop_resident(self, jid: int) -> RJob:
+        """Remove one resident, left-compacting the columns so slot order
+        keeps matching dict (placement) order."""
+        rj = self.jobs.pop(jid)
+        i = rj.slot
+        del self._rjobs[i]
+        del self._spd[i]
+        del self._ckt[i]
+        del self._ckw[i]
+        # misolint: disable=MS110 -- slot re-indexing IS the column
+        # maintenance; nothing to vectorize at <=7 slots
+        for r in self._rjobs[i:]:
+            r.slot -= 1
+        return rj
+
+    def _clear_residents(self):
+        self.jobs.clear()
+        self._rjobs.clear()
+        self._spd.clear()
+        self._ckt.clear()
+        self._ckw.clear()
+
+    def reset_ckpt_marks(self):
+        """A checkpoint just committed: nothing is at risk any more."""
+        k = len(self._ckt)
+        self._ckt[:] = [0.0] * k
+        self._ckw[:] = [0.0] * k
 
     # ------------------------------------------------------------ progress
 
@@ -123,79 +232,134 @@ class GPU:
         live = dt if self.last_update >= self.down_until \
             else max(0.0, t - self.down_until)
         if live > 0.0:
-            if self.phase == MIG_RUN:
-                w = self._idle_w
-                slice_w = self._slice_w
-                for rj in self.jobs.values():
-                    if rj.slice_size:
-                        # misolint: disable=MS107 -- bounded watts sum over
-                        # <=7 resident slices per window; fsum would shift
-                        # the golden energy integrals' bits
-                        w += slice_w[rj.slice_size]
-            elif self.phase == MPS_PROF and self.jobs:
-                w = self._mps_w
+            if self._w_key is self._spd_key:
+                w = self._w_val
             else:
-                w = self._idle_w
-            self.energy_j += w * live
-        interval = self.sim.cfg.ckpt_interval_s
-        dec = 0.0                    # progress drained from the in-system
-        for rj in self.jobs.values():  # remaining-work aggregate below
-            if self.phase in (MIG_RUN, MPS_PROF):
-                done = rj.speed * dt
-                rj.job.remaining -= done
-                # misolint: disable=MS107 -- one GPU's same-window progress
-                # (<=7 residents); the fleet-wide total is maintained by the
-                # Kahan WorkAggregate this sum is shifted into below
-                dec += done
                 if self.phase == MIG_RUN:
-                    rj.job.t_run += dt
+                    w = self._idle_w
+                    slice_w = self._slice_w
+                    # misolint: disable=MS110 -- sanctioned scalar walk:
+                    # <=7 residents, result memoized on the speed-cache key
+                    for rj in self._rjobs:
+                        if rj.slice_size:
+                            # misolint: disable=MS107 -- bounded watts sum over
+                            # <=7 resident slices per window; fsum would shift
+                            # the golden energy integrals' bits
+                            w += slice_w[rj.slice_size]
+                elif self.phase == MPS_PROF and self._rjobs:
+                    w = self._mps_w
                 else:
-                    rj.job.t_mps += dt
-                if interval > 0:
-                    rj.since_ckpt_t += dt
-                    rj.since_ckpt_work += done
-                    while rj.since_ckpt_t >= interval:
-                        # a periodic checkpoint boundary fell inside this
-                        # window; the boundary lies within the current dt
-                        # (the pre-add remainder was < interval), so the
-                        # still-at-risk tail ran at the current speed
-                        rj.since_ckpt_t -= interval
-                        rj.since_ckpt_work = rj.speed * rj.since_ckpt_t
-            elif self.phase == CKPT:
+                    w = self._idle_w
+                self._w_val = w
+                self._w_key = self._spd_key
+            self.energy_j += w * live
+        phase = self.phase
+        rjobs = self._rjobs
+        if rjobs:
+            # scalar column walk: slot order == placement (dict) order, so
+            # the progress/aggregate float-op sequence is the historical
+            # one.  Measured: at <=7 residents a numpy row round-trip costs
+            # more than this whole loop; the vectorized path lives in
+            # soa.FleetState for fleet-scope batches only.
+            if phase == MIG_RUN or phase == MPS_PROF:
+                interval = self.sim.cfg.ckpt_interval_s
+                run = phase == MIG_RUN
+                spd = self._spd
+                dec = 0.0            # progress drained from the in-system
+                if interval > 0:     # remaining-work aggregate below
+                    ckt = self._ckt
+                    ckw = self._ckw
+                    # misolint: disable=MS110 -- sanctioned scalar walk, see
+                    # the rationale comment above this block
+                    for i, rj in enumerate(rjobs):
+                        s = spd[i]
+                        done = s * dt
+                        job = rj.job
+                        job.remaining -= done
+                        # misolint: disable=MS107 -- one GPU's same-window
+                        # progress (<=7 residents); the fleet-wide total is
+                        # maintained by the Kahan WorkAggregate this sum is
+                        # shifted into below
+                        dec += done
+                        if run:
+                            job.t_run += dt
+                        else:
+                            job.t_mps += dt
+                        ct = ckt[i] + dt
+                        ckw[i] += done
+                        while ct >= interval:
+                            # a periodic checkpoint boundary fell inside this
+                            # window; the boundary lies within the current dt
+                            # (the pre-add remainder was < interval), so the
+                            # still-at-risk tail ran at the current speed
+                            ct -= interval
+                            ckw[i] = s * ct
+                        ckt[i] = ct
+                else:
+                    # misolint: disable=MS110 -- sanctioned scalar walk, see
+                    # the rationale comment above this block
+                    for i, rj in enumerate(rjobs):
+                        done = spd[i] * dt
+                        job = rj.job
+                        job.remaining -= done
+                        dec += done  # misolint: disable=MS107 -- as above
+                        if run:
+                            job.t_run += dt
+                        else:
+                            job.t_mps += dt
+                if dec:
+                    self.sim.work_agg.shift(-dec)
+            elif phase == CKPT:
                 # the save is in flight, not durable: only a CKPT window that
                 # runs to completion commits (engine.end_phase resets the
                 # since_ckpt counters); a failure mid-save loses everything
                 # back to the last *completed* checkpoint
-                rj.job.t_ckpt += dt
+                # misolint: disable=MS110 -- sanctioned scalar walk (<=7)
+                for rj in rjobs:
+                    rj.job.t_ckpt += dt
             else:
-                rj.job.t_queue += dt
-        if dec:
-            self.sim.work_agg.shift(-dec)
+                # misolint: disable=MS110 -- sanctioned scalar walk (<=7)
+                for rj in rjobs:
+                    rj.job.t_queue += dt
         self.last_update = t
 
     def refresh_speeds(self):
-        sim = self.sim
-        rjs = list(self.jobs.values())
+        if (not self._spd_dirty and self._n_phased == 0
+                and self._spd_phase is self.phase
+                and self._spd_fault == self.speed_fault):
+            return
+        self._spd_dirty = False
+        self._spd_phase = self.phase
+        self._spd_fault = self.speed_fault
+        self._spd_key = object()     # break the watts/memory identity chains
+        rjs = self._rjobs
+        spd = self._spd
         # straggler degradation folds into the scale only when present:
         # the healthy path multiplies by speed_scale alone, bit-identical
         # to the pre-fault-model simulator
         scale = self.speed_scale if self.speed_fault == 1.0 \
             else self.speed_scale * self.speed_fault
         if self.phase == MIG_RUN:
-            for rj in rjs:
-                prof = rj.job.profile_at(1.0 - rj.job.remaining / rj.job.work)
-                rj.speed = (scale * self.pm.slice_speed(prof, rj.slice_size)
-                            if rj.slice_size else 0.0)
+            slice_speed = self.pm.slice_speed
+            # misolint: disable=MS110 -- scalar column walk (<=7 slots),
+            # see the layout rationale in soa.py
+            for i, rj in enumerate(rjs):
+                job = rj.job
+                prof = job.profile if not job.phases else \
+                    job.profile_at(1.0 - job.remaining / job.work)
+                spd[i] = (scale * slice_speed(prof, rj.slice_size)
+                          if rj.slice_size else 0.0)
         elif self.phase == MPS_PROF:
             if rjs:
-                profs = [rj.job.profile_at(1.0 - rj.job.remaining / rj.job.work)
+                # misolint: disable=MS110 -- scalar column walk (<=7 slots)
+                profs = [rj.job.profile if not rj.job.phases else
+                         rj.job.profile_at(1.0 - rj.job.remaining / rj.job.work)
                          for rj in rjs]
-                speeds = sim.policy.mps_phase_speeds(profs, g=self)
-                for rj, s in zip(rjs, speeds):
-                    rj.speed = scale * float(s)
+                speeds = self.sim.policy.mps_phase_speeds(profs, g=self)
+                for i, s in enumerate(speeds):
+                    spd[i] = scale * float(s)
         else:
-            for rj in rjs:
-                rj.speed = 0.0
+            spd[:] = [0.0] * len(spd)
 
     def next_completion(self) -> Optional[Tuple[float, int]]:
         # called after every event on this GPU: hoist the phase check out of
@@ -203,19 +367,25 @@ class GPU:
         if self.phase != MIG_RUN and self.phase != MPS_PROF:
             return None
         best = None
-        for jid, rj in self.jobs.items():
-            if rj.speed > 1e-12:
-                tf = self.last_update + max(rj.job.remaining, 0.0) / rj.speed
+        lu = self.last_update
+        spd = self._spd
+        # misolint: disable=MS110 -- scalar column walk (<=7 slots)
+        for i, rj in enumerate(self._rjobs):
+            s = spd[i]
+            if s > 1e-12:
+                r = rj.job.remaining
+                tf = lu + (r if r > 0.0 else 0.0) / s
                 if best is None or tf < best[0]:
-                    best = (tf, jid)
+                    best = (tf, rj.job.jid)
         return best
 
     # --------------------------------------------------------- transitions
 
     def ckpt_duration(self) -> float:
-        if not self.jobs:
+        if not self._rjobs:
             return self.sim.cfg.mig_reconfig_s * self.sim.cfg.overhead_scale
+        # misolint: disable=MS110 -- scalar column walk (<=7 slots)
         per_job = max(
             self.sim.cfg.ckpt_base_s + rj.job.profile.mem_gb / self.sim.cfg.ckpt_bw_gbps
-            for rj in self.jobs.values())
+            for rj in self._rjobs)
         return (self.sim.cfg.mig_reconfig_s + per_job) * self.sim.cfg.overhead_scale

@@ -30,7 +30,7 @@ falls back to the materialized path.
 from __future__ import annotations
 
 import heapq
-from bisect import insort
+from bisect import bisect_left, insort
 from typing import TYPE_CHECKING, Callable, Dict, List, Optional
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
@@ -137,7 +137,8 @@ class FleetIndex:
         if not g._in_index:
             return
         kd = self._kind_of(g)
-        kd.bucket(*g._idx_pos).remove(g.gid)
+        lst = kd.bucket(*g._idx_pos)
+        del lst[bisect_left(lst, g.gid)]     # sorted: binary-search removal
         g._idx_pos = None
         g._in_index = False
         self.version += 1
@@ -147,7 +148,8 @@ class FleetIndex:
         kd = self._kind_of(g)
         pos = (len(g.jobs), self._level(kd, g))
         if pos != g._idx_pos:
-            kd.bucket(*g._idx_pos).remove(g.gid)
+            lst = kd.bucket(*g._idx_pos)
+            del lst[bisect_left(lst, g.gid)]
             insort(kd.bucket(*pos), g.gid)
             g._idx_pos = pos
         self.version += 1
@@ -191,9 +193,7 @@ class FleetIndex:
             if prune:
                 sp = kd.space
                 if sp._mem_monotone:
-                    r = sp.min_required_slice(
-                        max(job.profile.mem_gb, job.min_mem_gb),
-                        job.qos_min_slice)
+                    r = sp.job_required_slice(job)
                     if r is None:
                         continue                 # no slice of this kind fits
                     lvl0 = kd.levels[r]
@@ -208,7 +208,9 @@ class FleetIndex:
             for kd, cap, lvl0 in plans:
                 if c > cap:
                     continue
-                for lst in kd.counts[c][lvl0:]:
+                rows = kd.counts[c]
+                for i in range(lvl0, len(rows)):
+                    lst = rows[i]
                     if lst:
                         lists.append(lst)
             if not lists:

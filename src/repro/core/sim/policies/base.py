@@ -89,6 +89,11 @@ class Policy(ABC):
         # up-set, both versioned by the fleet index, so an unchanged pair
         # means the head still fits nowhere and the queue scan is skipped
         self._blocked: Optional[Tuple[int, int]] = None
+        # 3-level MPS mean memo: profiles are immutable and drawn from a
+        # bounded pool, so the mean speed list for a (perf model, profile
+        # mix) pair never changes; the profile tuple is pinned in the value
+        # so the id key cannot be recycled.  Callers never mutate the list.
+        self._mps_mean_cache: Dict[tuple, tuple] = {}
 
     def _index_exact(self) -> bool:
         """Whether ``placement_candidates`` is faithfully described by the
@@ -224,8 +229,16 @@ class Policy(ABC):
         bit-for-bit).  ``g=None`` falls back to the homogeneous default
         perf model."""
         pm = g.pm if g is not None else self.sim.pm
+        key = (id(pm),) + tuple(id(p) for p in profs)
+        hit = self._mps_mean_cache.get(key)
+        if hit is not None and all(a is b for a, b in zip(hit[0], profs)):
+            return hit[1]
         m0, m1, m2 = (pm.mps_speeds(profs, lv) for lv in MPS_LEVELS)
-        return [((a + b) + c) / 3.0 for a, b, c in zip(m0, m1, m2)]
+        out = [((a + b) + c) / 3.0 for a, b, c in zip(m0, m1, m2)]
+        if len(self._mps_mean_cache) >= 65536:
+            self._mps_mean_cache.pop(next(iter(self._mps_mean_cache)))
+        self._mps_mean_cache[key] = (tuple(profs), out)
+        return out
 
     # -------------------------------------------------- partition machinery
     # Shared by every MIG-partitioning policy (miso / oracle / variants).
@@ -357,6 +370,7 @@ class Policy(ABC):
         old = tuple(rj.slice_size for rj in g.jobs.values())
         for jid, size in zip(jids, choice.partition):
             g.jobs[jid].slice_size = size
+        g._spd_dirty = True
         g.partition = tuple(sorted(choice.partition, reverse=True))
         if overhead and old != tuple(choice.partition):
             g.phase = CKPT

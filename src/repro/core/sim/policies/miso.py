@@ -132,6 +132,7 @@ class MisoPolicy(Policy):
         g.needs_profile = True
         for rj in g.jobs.values():
             rj.slice_size = None
+        g._spd_dirty = True
         if dead == 0.0:
             # the caller finalizes the GPU once afterwards; suppress the
             # redundant event scheduling here

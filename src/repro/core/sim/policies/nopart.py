@@ -29,6 +29,7 @@ class NoPartPolicy(Policy):
         g.phase = MIG_RUN
         g.partition = (g.space.full_size,)
         g.jobs[job.jid].slice_size = g.space.full_size
+        g._spd_dirty = True
 
     def on_completion(self, g: GPU, job: Job):
         g.phase = IDLE

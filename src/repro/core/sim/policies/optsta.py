@@ -120,3 +120,4 @@ class OptStaPolicy(Policy):
             prof["alg1_s"] += time.perf_counter() - t0
         for jid, size in zip(jids, best_perm):
             g.jobs[jid].slice_size = int(size)
+        g._spd_dirty = True

@@ -1,0 +1,167 @@
+"""Struct-of-arrays fleet state: vectorized batch updates over per-GPU rows.
+
+The simulator's hot state is stored in two layouts, each where it is
+measurably fastest on the event loop's access patterns:
+
+* **Per-resident columns** (``GPU._spd`` / ``_ckt`` / ``_ckw`` — speed,
+  progressing-seconds-since-checkpoint and at-risk work per resident slot)
+  live as slot-aligned *Python* lists on each GPU.  A GPU hosts at most
+  ``space.max_jobs`` (7 on an a100) residents, and at that row length
+  CPython list indexing beats numpy fancy/scalar indexing by 3-10x (a
+  ``row[:k].tolist()`` round-trip alone costs more than the whole scalar
+  update).  ``RJob`` is a *view* over one slot — policies keep reading
+  ``rj.speed`` etc.; the engine's hot loops walk the columns directly.
+* **Per-GPU rows** (energy integral, accounting clock, repair deadline)
+  stay as plain attributes for the single-GPU per-event path, and this
+  module gathers them into fleet-wide numpy arrays at *batch barriers* —
+  points where one masked vector update replaces O(fleet) Python-loop
+  iterations (the end-of-run settle, rack-scale evacuations, rollout
+  sweeps).  All vector arithmetic is elementwise (sub/mul/maximum/where),
+  which IEEE-754 guarantees bit-identical to the scalar expressions in
+  ``GPU.advance`` — the repo's golden traces are the proof obligation, and
+  :func:`settle_scalar` stays behind as the property-test oracle.
+
+Masked-update contract
+----------------------
+``settle_all`` partitions the fleet by ``bool(g.jobs)``: resident-free GPUs
+(idle floors, possibly under repair) take the vectorized path; GPUs with
+residents route through ``GPU.advance`` so per-job progress, checkpoint
+marks and the Kahan work-aggregate shifts keep their exact scalar operation
+order.  The vector path reproduces ``advance``'s energy integral for the
+resident-free case:
+
+    dt   = t - last_update
+    live = dt                      if last_update >= down_until
+           max(0.0, t-down_until)  otherwise
+    energy += idle_w * live        when dt > 0 and live > 0
+
+(a resident-free GPU's wall power is exactly its idle floor in every
+phase — see the watts derivation in ``GPU.advance``).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Dict, List, Sequence
+
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from repro.core.sim.gpu import GPU
+
+
+def settle_scalar(gpus: Sequence["GPU"], t: float) -> None:
+    """Scalar reference settle: per-GPU ``advance`` in gid order.  This is
+    the oracle the vectorized path is property-tested against — do not
+    'optimize' it."""
+    for g in gpus:
+        g.advance(t)
+
+
+class FleetState:
+    """Fleet-wide SoA staging buffers + the vectorized batch operations.
+
+    The object attributes on :class:`GPU` stay canonical; ``gather()``
+    snapshots them into numpy arrays, the vector ops compute on the arrays,
+    and ``scatter()`` writes results back.  Gather/scatter cost O(fleet)
+    attribute traffic once per *batch*, not per event — the win is every
+    Python-level ``advance`` call the mask elides.
+    """
+
+    __slots__ = ("gpus", "n", "idle_w", "last_update", "down_until",
+                 "energy_j")
+
+    def __init__(self, gpus: Sequence["GPU"]):
+        self.gpus = list(gpus)
+        self.n = len(self.gpus)
+        # idle floors are fixed per GPU kind: gather once
+        self.idle_w = np.array([g._idle_w for g in self.gpus])
+        self.last_update = np.zeros(self.n)
+        self.down_until = np.zeros(self.n)
+        self.energy_j = np.zeros(self.n)
+
+    # -------------------------------------------------------- staging I/O
+
+    def gather(self) -> None:
+        """Snapshot the per-GPU scalar attributes into the arrays."""
+        gpus = self.gpus
+        n = self.n
+        self.last_update = np.fromiter(
+            (g.last_update for g in gpus), dtype=np.float64, count=n)
+        self.down_until = np.fromiter(
+            (g.down_until for g in gpus), dtype=np.float64, count=n)
+        self.energy_j = np.fromiter(
+            (g.energy_j for g in gpus), dtype=np.float64, count=n)
+
+    def scatter(self, idx: Sequence[int]) -> None:
+        """Write the arrays back to the GPU attributes for rows ``idx``."""
+        gpus = self.gpus
+        lu = self.last_update.tolist()
+        ej = self.energy_j.tolist()
+        for i in idx:
+            g = gpus[i]
+            g.last_update = lu[i]
+            g.energy_j = ej[i]
+
+    # -------------------------------------------------- batch operations
+
+    def settle_all(self, t: float) -> None:
+        """Advance every GPU's accounting clock and energy integral to
+        ``t`` — one masked vector update for the resident-free rows, the
+        scalar ``advance`` for rows with residents (whose per-job progress
+        and Kahan shifts must keep scalar operation order).  State-for-state
+        bit-identical to :func:`settle_scalar`."""
+        gpus = self.gpus
+        free = [i for i, g in enumerate(gpus) if not g.jobs]
+        if len(free) < 8:
+            # under the numpy break-even row count: scalar is faster AND
+            # trivially identical
+            settle_scalar(gpus, t)
+            return
+        self.gather()
+        idx = np.asarray(free, dtype=np.intp)
+        lu = self.last_update[idx]
+        du = self.down_until[idx]
+        dt = t - lu
+        # live window: repairs power the GPU off until down_until;
+        # down_until only moves forward, so a window straddles at most one
+        # repair boundary (same derivation as GPU.advance)
+        live = np.where(lu >= du, dt, np.maximum(0.0, t - du))
+        pos = (dt > 0.0) & (live > 0.0)
+        add = self.idle_w[idx] * live
+        self.energy_j[idx] = np.where(pos, self.energy_j[idx] + add,
+                                      self.energy_j[idx])
+        self.last_update[idx] = t
+        self.scatter(free)
+        for i, g in enumerate(gpus):
+            if g.jobs:
+                g.advance(t)
+
+    # ------------------------------------------------- resident snapshot
+
+    def resident_matrix(self) -> Dict[str, np.ndarray]:
+        """Export the per-resident SoA columns as fleet-wide ``(G, S)``
+        arrays (``S`` = the largest resident count in the fleet; shorter
+        rows zero-padded, with ``mask`` marking occupied slots).  This is
+        the read-only bridge for vectorized consumers — rollout scoring,
+        property tests, offline analysis — and never feeds back into
+        simulation state."""
+        gpus = self.gpus
+        s = max((len(g._rjobs) for g in gpus), default=0)
+        shape = (self.n, max(s, 1))
+        speed = np.zeros(shape)
+        ck_t = np.zeros(shape)
+        ck_w = np.zeros(shape)
+        remaining = np.zeros(shape)
+        mask = np.zeros(shape, dtype=bool)
+        for i, g in enumerate(gpus):
+            k = len(g._rjobs)
+            if not k:
+                continue
+            speed[i, :k] = g._spd
+            ck_t[i, :k] = g._ckt
+            ck_w[i, :k] = g._ckw
+            # misolint: disable=MS110 -- gather into the (G, S) export is
+            # itself the vectorization boundary; <=7 slots per row
+            remaining[i, :k] = [rj.job.remaining for rj in g._rjobs]
+            mask[i, :k] = True
+        return {"speed": speed, "since_ckpt_t": ck_t, "since_ckpt_work": ck_w,
+                "remaining": remaining, "mask": mask}

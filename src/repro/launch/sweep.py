@@ -27,22 +27,53 @@ energy columns; v4 adds the robustness columns — ``goodput`` /
 in every result, ``goodput_mean`` / ``work_lost_s_mean`` in the summary —
 plus a top-level ``errors`` list of cells that crashed or timed out).
 
+Warm-pool execution (the driver loop that makes cheap rollouts cheap):
+
+* The worker pool is a **process-lifetime singleton**, not a per-sweep
+  throwaway: the first parallel :func:`run_sweep` spawns it (spawn
+  context — forking a jax-initialized parent deadlocks in XLA's inherited
+  thread-pool locks) and every later sweep in the same driver process
+  reuses the already-warm workers, so the spawn + import + jit-warm cost
+  (~seconds per worker) is paid once per process instead of once per
+  sweep.  ``shutdown_pool()`` tears it down explicitly; an ``atexit`` hook
+  does so at interpreter exit, and a worker crash (``BrokenProcessPool``)
+  rebuilds the pool once and retries the batch.
+* Job traces are served from a **content-addressed scenario/trace cache**:
+  in-process memo keyed (scenario, effective seed, trace length) — seeds
+  collapse for ``seed_sensitive=False`` replay scenarios — plus an
+  optional on-disk pickle tier (``--trace-cache DIR``, atomic writes keyed
+  by the sha256 of the cell key) shared across driver processes.  The
+  engine deep-copies its job list (`simulate()` contract), so cached
+  pristine traces are reused bit-identically; repeated cells across
+  sweeps, ``--resume`` re-runs and warm-pool rollout loops all skip job
+  generation.  ``--profile`` attaches per-cell ``gen_s`` / ``setup_s`` /
+  ``overhead_s`` buckets so the saving is measurable, not asserted.
+
 Hardening (chaos sweeps run long and can die mid-grid): every cell runs
 under a per-cell wall-clock budget (``--cell-timeout``, SIGALRM) with
 bounded retry (``--retries``); a cell that still fails is recorded in
 ``report["errors"]`` instead of sinking the whole sweep, and ``--resume
 partial.json`` skips cells already present in an earlier report of the
-same schema version.
+same schema version (error cells are always re-run).  POSIX reserves
+signal delivery for the main thread: when the runner is embedded off the
+main thread (test harnesses, GUI drivers) or the platform has no SIGALRM
+(Windows), the timeout degrades to a documented no-op — the cell runs
+unbounded — instead of dying on ``signal.signal``'s ValueError.
 """
 from __future__ import annotations
 
 import argparse
+import atexit
+import hashlib
 import json
 import os
+import pickle
 import signal
 import sys
+import threading
 import time
 from concurrent.futures import ProcessPoolExecutor
+from concurrent.futures.process import BrokenProcessPool
 from typing import Dict, List, Optional, Sequence, Tuple
 
 SCHEMA_VERSION = 4
@@ -51,17 +82,32 @@ SCHEMA_VERSION = 4
 # startup (fork + pool plumbing, ~hundreds of ms) dwarfs such cells
 _AUTO_SERIAL_JOBS = 64
 
+#: bump when trace generation changes in a way that invalidates cached
+#: pickles (new Job fields, different attribute streams); part of every
+#: cache key, so stale on-disk entries simply stop being addressed
+TRACE_CACHE_VERSION = 1
+
+# in-process trace memo: key -> pristine job list (never simulated on
+# directly — the engine deep-copies; see _get_jobs)
+_TRACE_CACHE: Dict[tuple, list] = {}
+_TRACE_CACHE_MAX = 32                 # traces can be 100K jobs; FIFO-bound
+_FLEET_CACHE: Dict[str, list] = {}    # fleet spec string -> GPUSpec list
+
+_WARMED = False
+
 
 def _warm_runtime() -> None:
     """Pay one-time lazy costs before simulating: numpy's random-module
     machinery (~40 ms on first Generator construction) and — when per-kind
     predictor artifacts exist, i.e. sweeps will run U-Net estimators — the
     shared jitted U-Net apply for the standard shapes.  Runs in the parent
-    for serial sweeps and as the pool initializer in every worker: since
-    the per-kind artifacts shipped, workers execute real XLA computations,
-    and forking a parent that already holds XLA's thread pools deadlocks —
-    which is why the pool below uses the *spawn* context and each worker
-    warms its own runtime instead of inheriting a forked one."""
+    for serial sweeps and as the pool initializer in every worker; the
+    persistent pool means each worker pays it exactly once per driver
+    process, not once per sweep."""
+    global _WARMED
+    if _WARMED:
+        return
+    _WARMED = True
     import glob
     import os
 
@@ -74,6 +120,105 @@ def _warm_runtime() -> None:
         warm_jit_cache()
 
 
+# ------------------------------------------------------------ warm pool
+
+_POOL: Optional[ProcessPoolExecutor] = None
+_POOL_WORKERS = 0
+
+
+def _get_pool(workers: Optional[int]) -> ProcessPoolExecutor:
+    """The process-lifetime worker pool.  ``workers=None`` reuses whatever
+    pool exists (or sizes a new one to the CPU count); an explicit size
+    that differs from the live pool recycles it."""
+    global _POOL, _POOL_WORKERS
+    want = workers or _POOL_WORKERS or (os.cpu_count() or 1)
+    if _POOL is not None and want != _POOL_WORKERS:
+        shutdown_pool()
+    if _POOL is None:
+        import multiprocessing
+        # spawn, not fork: workers run jitted U-Net inference (per-kind
+        # predictor artifacts), and forking a jax-initialized parent
+        # deadlocks in XLA's inherited thread-pool locks
+        _POOL = ProcessPoolExecutor(
+            max_workers=want,
+            mp_context=multiprocessing.get_context("spawn"),
+            initializer=_warm_runtime)
+        _POOL_WORKERS = want
+    return _POOL
+
+
+def shutdown_pool() -> None:
+    """Tear down the persistent worker pool (no-op when none is live).
+    Registered at exit; call explicitly to reclaim the workers early."""
+    global _POOL, _POOL_WORKERS
+    if _POOL is not None:
+        _POOL.shutdown(wait=True)
+        _POOL = None
+        _POOL_WORKERS = 0
+
+
+atexit.register(shutdown_pool)
+
+
+# ---------------------------------------------------------- trace cache
+
+def _trace_key(task: Dict, sc) -> tuple:
+    """Content address of a cell's job trace.  Replay scenarios
+    (``seed_sensitive=False``) generate the identical workload for every
+    seed, so their seeds collapse to one entry."""
+    return (TRACE_CACHE_VERSION, task["scenario"],
+            task["seed"] if sc.seed_sensitive else 0,
+            task.get("n_jobs") or sc.n_jobs)
+
+
+def _get_jobs(task: Dict, sc) -> Tuple[list, float, str]:
+    """The cell's pristine job list, its load cost in seconds, and where
+    it came from (``"memo"`` / ``"disk"`` / ``"fresh"``).  Callers must
+    not mutate the returned list or its jobs — every simulation runs on a
+    deep copy (the ``simulate()`` contract), which is what makes sharing
+    one trace across cells bit-identical to regenerating it."""
+    t0 = time.perf_counter()
+    key = _trace_key(task, sc)
+    jobs = _TRACE_CACHE.get(key)
+    if jobs is not None:
+        return jobs, time.perf_counter() - t0, "memo"
+    src = "fresh"
+    path = None
+    cache_dir = task.get("trace_cache")
+    if cache_dir:
+        os.makedirs(cache_dir, exist_ok=True)
+        h = hashlib.sha256(repr(key).encode()).hexdigest()[:24]
+        path = os.path.join(cache_dir, f"trace_{h}.pkl")
+        if os.path.exists(path):
+            try:
+                with open(path, "rb") as f:
+                    jobs = pickle.load(f)
+                src = "disk"
+            except Exception:
+                jobs = None          # corrupt/partial entry: regenerate
+    if jobs is None:
+        jobs = sc.make_jobs(task["seed"], task.get("n_jobs"))
+        if path is not None:
+            # atomic publish: concurrent workers race benignly (same key
+            # -> same bytes), readers never see a torn file
+            tmp = f"{path}.tmp.{os.getpid()}"
+            with open(tmp, "wb") as f:
+                pickle.dump(jobs, f, protocol=pickle.HIGHEST_PROTOCOL)
+            os.replace(tmp, path)
+    while len(_TRACE_CACHE) >= _TRACE_CACHE_MAX:
+        _TRACE_CACHE.pop(next(iter(_TRACE_CACHE)))
+    _TRACE_CACHE[key] = jobs
+    return jobs, time.perf_counter() - t0, src
+
+
+def _get_fleet(spec: str) -> list:
+    fleet = _FLEET_CACHE.get(spec)
+    if fleet is None:
+        from repro.core.fleet import parse_fleet
+        fleet = _FLEET_CACHE[spec] = parse_fleet(spec)
+    return fleet
+
+
 def run_task(task: Dict) -> Dict:
     """One sweep cell: simulate (policy, placer, objective, scenario, seed)
     on a fleet.
@@ -81,14 +226,16 @@ def run_task(task: Dict) -> Dict:
     Module-level and dict-in/dict-out so it pickles cleanly into worker
     processes.
     """
-    from repro.core.fleet import describe_fleet, parse_fleet
+    import copy
+
+    from repro.core.fleet import describe_fleet
     from repro.core.scenarios import get_scenario
-    from repro.core.simulator import SimConfig, simulate
+    from repro.core.simulator import ClusterSim, SimConfig
 
     t0 = time.time()
     sc = get_scenario(task["scenario"])
-    jobs = sc.make_jobs(task["seed"], task.get("n_jobs"))
-    fleet = parse_fleet(task.get("fleet") or sc.fleet)
+    jobs, gen_s, trace_src = _get_jobs(task, sc)
+    fleet = _get_fleet(task.get("fleet") or sc.fleet)
     placer = task.get("placer") or sc.placer
     objective = task.get("objective") or sc.objective
     cfg_kwargs = dict(sc.sim_kwargs)     # scenario-bundled SimConfig knobs
@@ -98,13 +245,16 @@ def run_task(task: Dict) -> Dict:
     cfg = SimConfig(n_gpus=len(fleet), policy=task["policy"],
                     placer=placer, objective=objective, seed=task["seed"],
                     profile=profile, **cfg_kwargs)
+    # inline simulate(): deep-copy the pristine (possibly cached) trace,
+    # then run — split out so setup vs. simulation time are separable
+    t_set0 = time.perf_counter()
+    sim = ClusterSim(copy.deepcopy(list(jobs)), cfg, fleet=fleet)
+    setup_s = time.perf_counter() - t_set0
+    t_run0 = time.perf_counter()
+    m = sim.run()
+    run_s = time.perf_counter() - t_run0
+    prof_out = None
     if profile:
-        # keep the engine object to read its per-component clock buckets
-        import copy
-
-        from repro.core.simulator import ClusterSim
-        sim = ClusterSim(copy.deepcopy(jobs), cfg, fleet=fleet)
-        m = sim.run()
         p = sim.prof
         prof_out = {
             "placement_s": p["placement_s"],
@@ -116,10 +266,13 @@ def run_task(task: Dict) -> Dict:
                                 - p["alg1_s"] - p["estimator_s"]),
             "total_s": p["total_s"],
             "events": int(p["events"]),
+            # per-cell overhead buckets (everything that is not the
+            # simulation itself); trace_src says whether job generation
+            # was skipped by the content-addressed cache
+            "gen_s": gen_s,
+            "setup_s": setup_s,
+            "trace_src": trace_src,
         }
-    else:
-        m = simulate(jobs, cfg, fleet=fleet)
-        prof_out = None
     out = {
         "policy": task["policy"],
         "placer": placer,
@@ -155,6 +308,7 @@ def run_task(task: Dict) -> Dict:
         "wall_s": time.time() - t0,
     }
     if prof_out is not None:
+        prof_out["overhead_s"] = max(0.0, out["wall_s"] - run_s)
         out["profile"] = prof_out
     return out
 
@@ -169,14 +323,19 @@ def _on_alarm(signum, frame):
 
 def run_task_safe(task: Dict) -> Dict:
     """Crash-isolated :func:`run_task`: per-cell wall-clock budget
-    (``task["cell_timeout"]`` seconds, SIGALRM — skipped on platforms
-    without it) and bounded retry (``task["retries"]`` attempts).  A cell
-    that exhausts its attempts returns an *error record* (same identity
-    keys, an ``"error"`` string, no ``"metrics"``) instead of raising, so
-    one diverging simulation cannot sink an hours-long grid."""
+    (``task["cell_timeout"]`` seconds, SIGALRM) and bounded retry
+    (``task["retries"]`` attempts).  The alarm is armed only when the
+    platform has SIGALRM *and* we are on the main thread — CPython rejects
+    ``signal.signal`` anywhere else — so off-main-thread or Windows runs
+    degrade to a documented no-op (the cell runs unbounded) instead of
+    crashing the grid.  A cell that exhausts its attempts returns an
+    *error record* (same identity keys, an ``"error"`` string, no
+    ``"metrics"``) instead of raising, so one diverging simulation cannot
+    sink an hours-long grid."""
     timeout = task.get("cell_timeout")
     attempts = max(1, int(task.get("retries") or 1))
-    use_alarm = bool(timeout) and hasattr(signal, "SIGALRM")
+    use_alarm = (bool(timeout) and hasattr(signal, "SIGALRM")
+                 and threading.current_thread() is threading.main_thread())
     err: Optional[BaseException] = None
     for _ in range(attempts):
         try:
@@ -216,9 +375,11 @@ def _task_key(task: Dict) -> Tuple[str, str, str, str, int]:
 
 def _load_resume_cells(path: str) -> Dict[Tuple, Dict]:
     """Successful cells of a partial report, keyed by cell identity.
-    Error cells are *not* loaded (a resumed sweep retries them); a report
-    from a different schema version resumes nothing — its metric columns
-    would not line up with the cells this sweep produces."""
+    Cells recorded in ``report["errors"]`` — and any defensive error
+    record that leaked into ``results`` — are *not* loaded, so a resumed
+    sweep always re-runs them; a report from a different schema version
+    resumes nothing — its metric columns would not line up with the cells
+    this sweep produces."""
     with open(path) as f:
         rep = json.load(f)
     if rep.get("kind") != "miso-sweep":
@@ -226,7 +387,8 @@ def _load_resume_cells(path: str) -> Dict[Tuple, Dict]:
     if rep.get("schema_version") != SCHEMA_VERSION:
         return {}
     return {(r["scenario"], r["policy"], r["placer"], r["objective"],
-             r["seed"]): r for r in rep.get("results", [])}
+             r["seed"]): r for r in rep.get("results", [])
+            if "error" not in r and "metrics" in r}
 
 
 def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
@@ -237,20 +399,26 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
               workers: Optional[int] = None, serial: bool = False,
               profile: bool = False, retries: int = 1,
               cell_timeout: Optional[float] = None,
-              resume: Optional[str] = None) -> Dict:
+              resume: Optional[str] = None,
+              trace_cache: Optional[str] = None) -> Dict:
     """Run the full grid and return the JSON-ready report dict.
 
     ``placers=None`` / ``objectives=None`` run each scenario's own default;
     an explicit list crosses it with every (policy, scenario, seed) cell.
     ``profile=True`` attaches per-component wall-clock (placement /
-    Algorithm-1 / estimator / event loop) to every result.  ``retries`` /
-    ``cell_timeout`` bound each cell (exhausted cells land in
+    Algorithm-1 / estimator / event loop) plus per-cell overhead buckets
+    (generation / setup / total non-simulation time) to every result.
+    ``retries`` / ``cell_timeout`` bound each cell (exhausted cells land in
     ``report["errors"]``); ``resume`` is the path of a partial report whose
-    successful same-schema cells are carried over instead of re-run."""
+    successful same-schema cells are carried over instead of re-run (its
+    error cells are re-run).  ``trace_cache`` names a directory for the
+    on-disk tier of the content-addressed trace cache (None = in-process
+    memo only).  Parallel grids run on the persistent warm pool — see the
+    module docstring."""
     tasks = [{"policy": p, "placer": pl, "objective": ob, "scenario": sc,
               "seed": s, "fleet": fleet, "n_jobs": n_jobs, "mtbf": mtbf,
               "profile": profile, "retries": retries,
-              "cell_timeout": cell_timeout}
+              "cell_timeout": cell_timeout, "trace_cache": trace_cache}
              for sc in scenarios for p in policies
              for pl in (placers or [None])
              for ob in (objectives or [None]) for s in seeds]
@@ -282,15 +450,17 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
         results = [run_task_safe(t) for t in tasks]
         workers_used = 1
     else:
-        import multiprocessing
-        workers_used = workers or min(len(tasks), os.cpu_count() or 1)
-        # spawn, not fork: workers run jitted U-Net inference (per-kind
-        # predictor artifacts), and forking a jax-initialized parent
-        # deadlocks in XLA's inherited thread-pool locks
-        with ProcessPoolExecutor(
-                max_workers=workers_used,
-                mp_context=multiprocessing.get_context("spawn"),
-                initializer=_warm_runtime) as pool:
+        pool = _get_pool(workers)
+        workers_used = _POOL_WORKERS
+        try:
+            results = list(pool.map(run_task_safe, tasks))
+        except BrokenProcessPool:
+            # a worker died hard (OOM, segfault in native code): rebuild
+            # the warm pool once and retry the whole batch — cells are
+            # idempotent, so a clean second pass is safe
+            shutdown_pool()
+            pool = _get_pool(workers)
+            workers_used = _POOL_WORKERS
             results = list(pool.map(run_task_safe, tasks))
     errors = [r for r in results if "error" in r]
     results = [r for r in results if "error" not in r] + resumed
@@ -338,6 +508,7 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
             "retries": retries,
             "cell_timeout_s": cell_timeout,
             "resumed_cells": len(resumed),
+            "trace_cache": trace_cache,
         },
         "wall_s_total": time.time() - t0,
         "results": results,
@@ -388,6 +559,17 @@ def _print_summary(report: Dict) -> None:
               f"Algorithm-1 {tot['alg1_s']:.2f}s, estimator "
               f"{tot['estimator_s']:.2f}s, event loop "
               f"{tot['event_loop_s']:.2f}s")
+        ov = [r["profile"] for r in profiled
+              if "overhead_s" in r["profile"]]
+        if ov:
+            n = len(ov)
+            mean_ms = lambda k: sum(o[k] for o in ov) / n * 1e3
+            hits = sum(1 for o in ov if o.get("trace_src") != "fresh")
+            print(f"[sweep] per-cell overhead: mean "
+                  f"{mean_ms('overhead_s'):.1f} ms "
+                  f"(gen {mean_ms('gen_s'):.1f} ms, "
+                  f"setup {mean_ms('setup_s'):.1f} ms; "
+                  f"trace cache {hits}/{n} hits)")
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -420,23 +602,30 @@ def build_parser() -> argparse.ArgumentParser:
                          "faults even for fault scenarios (default: each "
                          "scenario's own setting)")
     ap.add_argument("--workers", type=int, default=None,
-                    help="worker processes (default: min(cells, cpus))")
+                    help="worker processes (default: reuse the live warm "
+                         "pool, else one per CPU)")
     ap.add_argument("--serial", action="store_true",
                     help="run in-process, no worker pool")
     ap.add_argument("--profile", action="store_true",
                     help="attach per-component wall-clock (placement, "
-                         "Algorithm-1, estimator, event loop) to every "
+                         "Algorithm-1, estimator, event loop) and per-cell "
+                         "overhead buckets (gen/setup/total) to every "
                          "result and print the totals")
     ap.add_argument("--retries", type=int, default=1,
                     help="attempts per cell before recording it as an "
                          "error cell (default 1: no retry)")
     ap.add_argument("--cell-timeout", type=float, default=None,
                     help="per-cell wall-clock budget in seconds (SIGALRM; "
-                         "a timed-out attempt counts against --retries)")
+                         "a timed-out attempt counts against --retries; "
+                         "no-op off the main thread or without SIGALRM)")
     ap.add_argument("--resume", default=None,
                     help="partial report JSON whose successful same-schema "
                          "cells are carried over instead of re-run "
                          "(error cells are retried)")
+    ap.add_argument("--trace-cache", default=None,
+                    help="directory for the on-disk tier of the "
+                         "content-addressed trace cache (default: "
+                         "in-process memo only)")
     ap.add_argument("--out", default="BENCH_sweep.json",
                     help="JSON report path")
     return ap
@@ -470,7 +659,7 @@ def main(argv=None) -> int:
                        mtbf=args.mtbf, workers=args.workers,
                        serial=args.serial, profile=args.profile,
                        retries=args.retries, cell_timeout=args.cell_timeout,
-                       resume=args.resume)
+                       resume=args.resume, trace_cache=args.trace_cache)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1, sort_keys=False)
         f.write("\n")

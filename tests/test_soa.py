@@ -1,0 +1,218 @@
+"""Property tests for the struct-of-arrays fleet settle.
+
+The contract under test (soa.py's "masked-update contract"): for any fleet
+state — arbitrary accounting clocks, repair deadlines, phases, resident
+mixes, checkpoint marks — ``FleetState.settle_all(t)`` leaves every GPU and
+every resident job in exactly (bit-for-bit) the state the scalar oracle
+``settle_scalar`` (per-GPU ``GPU.advance`` in gid order) produces, and
+issues the same work-aggregate shifts in the same order.
+
+Fleets are built twice from one parameter set instead of deep-copied, so
+both sides start from independently-constructed but bit-identical state.
+The randomized check runs under hypothesis when the environment has it
+(the container image ships without it) and always under a seeded
+numpy fallback sweep, so the property is exercised in CI either way.
+"""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core.estimators import OracleEstimator
+from repro.core.fleet import homogeneous_fleet
+from repro.core.jobs import WORKLOADS, Job
+from repro.core.partitions import a100_mig_space
+from repro.core.perfmodel import PerfModel
+from repro.core.sim.gpu import CKPT, GPU, IDLE, MIG_RUN, MPS_PROF
+from repro.core.sim.soa import FleetState, settle_scalar
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # container image ships without it
+    HAVE_HYPOTHESIS = False
+
+SPACE = a100_mig_space()
+PM = PerfModel(SPACE)
+SPEC = homogeneous_fleet(SPACE, PM, OracleEstimator(PM), 1)[0]
+PROFILE = WORKLOADS[0]
+PHASES = (IDLE, CKPT, MPS_PROF, MIG_RUN)
+SLICES = (0,) + tuple(SPACE.sizes)
+
+
+class _ShiftLog:
+    """Stands in for the engine's Kahan WorkAggregate: records the shifts
+    ``GPU.advance`` issues so both settle paths can be compared on them."""
+
+    def __init__(self):
+        self.shifts = []
+
+    def shift(self, d):
+        self.shifts.append(d)
+
+
+def make_fleet(params, interval):
+    """Deterministically build a fleet from plain-value parameters; calling
+    twice with the same params yields bit-identical independent fleets."""
+    sim = SimpleNamespace(cfg=SimpleNamespace(ckpt_interval_s=interval),
+                          work_agg=_ShiftLog())
+    gpus = []
+    for gid, p in enumerate(params):
+        g = GPU(gid, sim, SPEC)
+        g.last_update = p["last_update"]
+        g.down_until = p["down_until"]
+        g.energy_j = p["energy"]
+        g.phase = PHASES[p["phase"]]
+        for k, r in enumerate(p["residents"]):
+            job = Job(jid=gid * 8 + k, profile=PROFILE, arrival=0.0,
+                      work=max(r["remaining"], 1.0))
+            job.remaining = r["remaining"]
+            rj = g._add_resident(job)
+            rj.slice_size = SLICES[r["slice"]]
+            g._spd[k] = r["speed"]
+            g._ckt[k] = r["since_t"]
+            g._ckw[k] = r["since_w"]
+        gpus.append(g)
+    return gpus, sim
+
+
+def fleet_state(gpus):
+    """Bit-exact snapshot: float repr round-trips exactly (and tells -0.0
+    from 0.0), so tuple equality here IS bitwise state equality."""
+    out = []
+    for g in gpus:
+        out.append((
+            repr(g.last_update), repr(g.energy_j), repr(g.down_until),
+            [repr(x) for x in g._spd],
+            [repr(x) for x in g._ckt],
+            [repr(x) for x in g._ckw],
+            [(rj.job.jid, rj.slice_size, repr(rj.job.remaining),
+              repr(rj.job.t_run), repr(rj.job.t_mps), repr(rj.job.t_ckpt),
+              repr(rj.job.t_queue)) for rj in g._rjobs],
+        ))
+    return out
+
+
+def check_settle_matches(params, t, interval):
+    vec_gpus, vec_sim = make_fleet(params, interval)
+    ref_gpus, ref_sim = make_fleet(params, interval)
+    assert fleet_state(vec_gpus) == fleet_state(ref_gpus)  # build is stable
+    FleetState(vec_gpus).settle_all(t)
+    settle_scalar(ref_gpus, t)
+    assert fleet_state(vec_gpus) == fleet_state(ref_gpus)
+    assert ([repr(s) for s in vec_sim.work_agg.shifts]
+            == [repr(s) for s in ref_sim.work_agg.shifts])
+
+
+def random_params(rng, n=None):
+    """One fleet parameter set; mixes free/occupied GPUs, live/dead/
+    straddling repair windows, and all four phases."""
+    if n is None:
+        n = int(rng.integers(1, 41))
+    params = []
+    for _ in range(n):
+        occupied = rng.random() < 0.4
+        residents = []
+        if occupied:
+            for _ in range(int(rng.integers(1, 5))):
+                residents.append({
+                    "speed": float(rng.uniform(0.0, 2.0)),
+                    "remaining": float(rng.uniform(0.0, 500.0)),
+                    "since_t": float(rng.uniform(0.0, 150.0)),
+                    "since_w": float(rng.uniform(0.0, 150.0)),
+                    "slice": int(rng.integers(0, len(SLICES))),
+                })
+        params.append({
+            "last_update": float(rng.uniform(0.0, 1000.0)),
+            # 0.0 = never repaired; otherwise the deadline can fall before,
+            # inside, or after the settle window
+            "down_until": (0.0 if rng.random() < 0.5
+                           else float(rng.uniform(0.0, 2000.0))),
+            "energy": float(rng.uniform(0.0, 1e7)),
+            "phase": int(rng.integers(0, len(PHASES))),
+            "residents": residents,
+        })
+    return params
+
+
+@pytest.mark.parametrize("seed", range(30))
+def test_settle_all_matches_scalar_seeded(seed):
+    """Seeded randomized sweep — the always-on property check (hypothesis
+    is not in the container image).  Fleet sizes cross the <8-free-GPU
+    scalar-fallback threshold from both sides."""
+    rng = np.random.default_rng(0xA15E + seed)
+    params = random_params(rng)
+    t = float(rng.uniform(0.0, 1500.0))          # sometimes before clocks
+    interval = float(rng.choice([0.0, 45.0, 300.0]))
+    check_settle_matches(params, t, interval)
+
+
+def test_settle_all_matches_scalar_edges():
+    """Hand-picked boundaries: dt == 0, whole window dead, repair ending
+    exactly at t, empty fleet, exactly-8 free GPUs (vector threshold)."""
+    base = {"energy": 100.0, "phase": 3, "residents": []}
+    params = [
+        dict(base, last_update=50.0, down_until=0.0),     # plain live
+        dict(base, last_update=50.0, down_until=200.0),   # dead past t
+        dict(base, last_update=50.0, down_until=100.0),   # ends exactly at t
+        dict(base, last_update=100.0, down_until=0.0),    # dt == 0
+        dict(base, last_update=150.0, down_until=0.0),    # clock ahead of t
+        dict(base, last_update=0.0, down_until=60.0),     # straddling repair
+        dict(base, last_update=50.0, down_until=50.0),    # boundary equality
+        dict(base, last_update=0.0, down_until=0.0),      # from epoch
+    ]
+    check_settle_matches(params, 100.0, 0.0)
+    check_settle_matches([], 100.0, 0.0)
+
+
+if HAVE_HYPOTHESIS:
+    finite = {"allow_nan": False, "allow_infinity": False}
+
+    resident_st = st.fixed_dictionaries({
+        "speed": st.floats(0.0, 2.0, **finite),
+        "remaining": st.floats(0.0, 500.0, **finite),
+        "since_t": st.floats(0.0, 150.0, **finite),
+        "since_w": st.floats(0.0, 150.0, **finite),
+        "slice": st.integers(0, len(SLICES) - 1),
+    })
+    gpu_st = st.fixed_dictionaries({
+        "last_update": st.floats(0.0, 1000.0, **finite),
+        "down_until": st.floats(0.0, 2000.0, **finite),
+        "energy": st.floats(0.0, 1e7, **finite),
+        "phase": st.integers(0, len(PHASES) - 1),
+        "residents": st.lists(resident_st, max_size=4),
+    })
+
+    @settings(max_examples=60, deadline=None)
+    @given(params=st.lists(gpu_st, max_size=40),
+           t=st.floats(0.0, 1500.0, **finite),
+           interval=st.sampled_from([0.0, 45.0, 300.0]))
+    def test_settle_all_matches_scalar_hypothesis(params, t, interval):
+        check_settle_matches(params, t, interval)
+
+
+# ----------------------------------------------------- resident_matrix view
+
+def test_resident_matrix_export():
+    """The (G, S) export mirrors the columns exactly and never aliases
+    simulation state (mutating the export must not touch the fleet)."""
+    rng = np.random.default_rng(7)
+    params = random_params(rng, n=12)
+    gpus, _ = make_fleet(params, 0.0)
+    fs = FleetState(gpus)
+    mat = fs.resident_matrix()
+    widest = max((len(g._rjobs) for g in gpus), default=0)
+    assert mat["speed"].shape == (12, max(widest, 1))
+    for i, g in enumerate(gpus):
+        k = len(g._rjobs)
+        assert mat["mask"][i, :k].all() and not mat["mask"][i, k:].any()
+        assert mat["speed"][i, :k].tolist() == g._spd
+        assert mat["since_ckpt_t"][i, :k].tolist() == g._ckt
+        assert mat["since_ckpt_work"][i, :k].tolist() == g._ckw
+        assert (mat["remaining"][i, :k].tolist()
+                == [rj.job.remaining for rj in g._rjobs])
+    before = fleet_state(gpus)
+    mat["speed"][:] = -1.0
+    mat["mask"][:] = False
+    assert fleet_state(gpus) == before

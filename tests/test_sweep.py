@@ -342,6 +342,69 @@ def test_v3_report_round_trip(tmp_path):
     assert regressions == [] and notes == []
 
 
+def _components_report(rows):
+    return {"schema_version": 1, "kind": "miso-components",
+            "rows": [{"name": n, "us_per_call": v, "derived": ""}
+                     for n, v in rows.items()]}
+
+
+def test_diff_components_gates_trace_rows_only(tmp_path):
+    """The us/event gate: a trace_scaling row >threshold slower fails; a
+    microbench row slowing down is a note; a vanished trace row is a
+    coverage regression; improvements are notes."""
+    ds = _load_diff_sweeps()
+    pb = tmp_path / "base.json"
+    pb.write_text(json.dumps(_components_report(
+        {"trace_scaling_n8": 50.0, "trace_scaling_n512": 20.0,
+         "optimizer_latency": 100.0})))
+    # 50% slower trace tier -> regression; 50% slower microbench -> note
+    pc = tmp_path / "cand.json"
+    pc.write_text(json.dumps(_components_report(
+        {"trace_scaling_n8": 75.0, "trace_scaling_n512": 20.0,
+         "optimizer_latency": 150.0})))
+    regressions, notes = ds.diff_components(str(pb), str(pc), threshold=0.10)
+    assert len(regressions) == 1 and "trace_scaling_n8" in regressions[0]
+    assert any("optimizer_latency" in n for n in notes)
+    # within threshold -> note, not regression
+    pc.write_text(json.dumps(_components_report(
+        {"trace_scaling_n8": 52.0, "trace_scaling_n512": 18.0,
+         "optimizer_latency": 100.0})))
+    regressions, notes = ds.diff_components(str(pb), str(pc), threshold=0.10)
+    assert regressions == []
+    assert any("trace_scaling_n8" in n for n in notes)
+    # a gated row missing from the candidate fails the gate
+    pc.write_text(json.dumps(_components_report(
+        {"trace_scaling_n8": 50.0, "optimizer_latency": 100.0})))
+    regressions, _ = ds.diff_components(str(pb), str(pc), threshold=0.10)
+    assert len(regressions) == 1
+    assert "trace_scaling_n512" in regressions[0]
+    assert "missing" in regressions[0]
+
+
+def test_diff_main_autodetects_components_kind(tmp_path):
+    """``main`` routes on the baseline's kind field: components reports get
+    the 10% default threshold, so an 8% trace slowdown passes while a 12%
+    one fails."""
+    ds = _load_diff_sweeps()
+    pb = tmp_path / "base.json"
+    pb.write_text(json.dumps(_components_report({"trace_scaling_n8": 50.0})))
+    ok = tmp_path / "ok.json"
+    ok.write_text(json.dumps(_components_report({"trace_scaling_n8": 54.0})))
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(_components_report({"trace_scaling_n8": 56.0})))
+    assert ds.main([str(pb), str(ok)]) == 0
+    assert ds.main([str(pb), str(bad)]) == 1
+    # explicit threshold still wins
+    assert ds.main([str(pb), str(bad), "--threshold", "0.2"]) == 0
+    # and a sweep baseline still routes to the sweep differ (2% default)
+    sb = tmp_path / "sweep.json"
+    sb.write_text(json.dumps(
+        {"schema_version": 4, "kind": "miso-sweep",
+         "summary": {"smoke": {"miso": {"least-loaded":
+                     {"throughput": {"stp_mean": 1.0}}}}}}))
+    assert ds.main([str(sb), str(sb)]) == 0
+
+
 def test_profile_stamps_lint_version():
     """``--profile`` reports carry the misolint rule-set hash so archived
     numbers record which determinism contract the tree was clean under."""

@@ -23,7 +23,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="misolint",
         description="determinism & simulator-invariant static analysis "
-                    "(rules MS101..MS108; see tools/lint/misolint/rules/)")
+                    "(rules MS101..MS110; see tools/lint/misolint/rules/)")
     ap.add_argument("paths", nargs="*", default=["src", "tests"],
                     help="files/directories to lint (default: src tests)")
     ap.add_argument("--format", choices=("text", "json"), default="text")

@@ -25,6 +25,7 @@ from misolint.rules import (ms101_global_rng, ms102_reseed,  # noqa: F401
                             ms103_set_iteration, ms104_registry,
                             ms105_mutable_default, ms106_fork_safety,
                             ms107_float_accumulation, ms108_wall_clock,
-                            ms109_swallowed_exceptions)
+                            ms109_swallowed_exceptions,
+                            ms110_soa_scalar_loop)
 
 __all__ = ["Rule", "register_rule", "all_rules", "get_rule"]

@@ -12,7 +12,10 @@ aggregate anyway.
 Skipped automatically: integer-literal increments (``count += 1`` event
 counters) and per-item updates whose target hangs off the loop variable
 (``rj.since_ckpt_t += dt`` updates each job, it does not accumulate
-across them).
+across them) — including through local aliases bound from the loop
+variable inside the loop body (``job = rj.job; job.t_run += dt``) and
+targets subscripted by the loop index (``ckw[i] += done`` writes one slot
+per iteration).
 """
 from __future__ import annotations
 
@@ -64,6 +67,7 @@ class FloatAccumulationRule(Rule):
                 continue
             # collect enclosing loops up to the nearest function boundary
             loop_vars: Set[str] = set()
+            for_nodes: List[ast.For] = []
             in_loop = False
             cur = ctx.parent(node)
             while cur is not None and not isinstance(
@@ -72,14 +76,37 @@ class FloatAccumulationRule(Rule):
                 if isinstance(cur, ast.For):
                     in_loop = True
                     loop_vars |= _target_names(cur.target)
+                    for_nodes.append(cur)
                 elif isinstance(cur, ast.While):
                     in_loop = True
                 cur = ctx.parent(cur)
             if not in_loop:
                 continue
+            # names derived from the loop variable inside the loop body
+            # (`job = rj.job`) update per-item state, same as the loop
+            # variable itself; chase the aliases to a fixed point
+            derived: Set[str] = set(loop_vars)
+            changed = True
+            while changed:
+                changed = False
+                for ln in for_nodes:
+                    for sub in ast.walk(ln):
+                        if not (isinstance(sub, ast.Assign)
+                                and len(sub.targets) == 1
+                                and isinstance(sub.targets[0], ast.Name)):
+                            continue
+                        name = sub.targets[0].id
+                        if (name not in derived
+                                and _root_name(sub.value) in derived):
+                            derived.add(name)
+                            changed = True
             root = _root_name(node.target)
-            if root is not None and root in loop_vars:
+            if root is not None and root in derived:
                 continue        # per-item update, not a cross-loop sum
+            if (isinstance(node.target, ast.Subscript)
+                    and not isinstance(node.target.slice, ast.Slice)
+                    and _root_name(node.target.slice) in derived):
+                continue        # one slot per iteration, not a running sum
             out.append(self.finding(
                 ctx, node,
                 f"`{ast.unparse(node.target)} += ...` accumulates floats "

@@ -1,0 +1,121 @@
+"""MS110: per-resident Python ``for`` loop over SoA-backed columns.
+
+The simulator's per-resident hot state lives in slot-aligned
+struct-of-arrays columns (``GPU._rjobs`` / ``_spd`` / ``_ckt`` / ``_ckw``;
+layout rationale in ``core/sim/soa.py``).  A Python-level loop over those
+columns inside ``core/sim/`` is one of two things:
+
+* a **sanctioned scalar column walk** — measured faster than any numpy
+  round-trip at the <=7-resident row lengths a GPU can hold, and bit-pinned
+  by the golden traces — which must carry an inline suppression citing that
+  measurement, or
+* an **accidental reintroduction** of per-object iteration on a path that
+  should go through the vectorized ``soa.FleetState`` batch operations.
+
+Either way the loop must be deliberate, so this rule flags every one:
+plain ``for`` statements and comprehensions, through ``enumerate`` /
+``zip`` / ``list`` / ``reversed`` / ``sorted`` wrappers, subscripted
+column slices (``self._rjobs[i:]``), and simple local aliases bound from a
+column in the same function (``rjobs = self._rjobs``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from misolint.context import ModuleContext
+from misolint.rules.base import Finding, Rule, register_rule
+
+#: the SoA column attributes (kept in sync with GPU.__init__ / soa.py)
+COLUMNS = ("_rjobs", "_spd", "_ckt", "_ckw")
+
+#: builtins that forward iteration to their argument(s)
+_WRAPPERS = ("enumerate", "zip", "list", "tuple", "reversed", "sorted")
+
+
+def _column_of(node: ast.AST,
+               aliases: Dict[str, str]) -> Optional[str]:
+    """The SoA column ``node`` refers to, unwrapping subscripts
+    (``self._rjobs[i:]`` iterates the column), or None."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute) and node.attr in COLUMNS:
+        return node.attr
+    if isinstance(node, ast.Name):
+        return aliases.get(node.id)
+    return None
+
+
+def _iter_columns(iter_node: ast.AST,
+                  aliases: Dict[str, str]) -> List[str]:
+    """Columns iterated by a loop's ``iter`` expression, looking through
+    one level of wrapper call (``enumerate(self._rjobs)``)."""
+    cands = [iter_node]
+    if (isinstance(iter_node, ast.Call)
+            and isinstance(iter_node.func, ast.Name)
+            and iter_node.func.id in _WRAPPERS):
+        cands = list(iter_node.args)
+    out = []
+    for c in cands:
+        col = _column_of(c, aliases)
+        if col is not None:
+            out.append(col)
+    return out
+
+
+def _function_aliases(fn: ast.AST) -> Dict[str, str]:
+    """Simple local aliases of SoA columns inside ``fn``:
+    ``spd = self._spd`` binds ``spd`` for the rest of the function."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assign):
+            continue
+        col = _column_of(node.value, {})
+        if col is None:
+            continue
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name):
+                out[tgt.id] = col
+    return out
+
+
+@register_rule
+class SoaScalarLoopRule(Rule):
+    id = "MS110"
+    title = "per-resident Python loop over an SoA-backed column"
+    scope = ("src/repro/core/sim/",)
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        out: List[Finding] = []
+        alias_cache: Dict[int, Dict[str, str]] = {}
+
+        def aliases_for(node: ast.AST) -> Dict[str, str]:
+            fn = ctx.enclosing(node, ast.FunctionDef, ast.AsyncFunctionDef)
+            if fn is None:
+                return {}
+            key = id(fn)
+            if key not in alias_cache:
+                alias_cache[key] = _function_aliases(fn)
+            return alias_cache[key]
+
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.For):
+                iters = [node.iter]
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                iters = [g.iter for g in node.generators]
+            else:
+                continue
+            aliases = aliases_for(node)
+            cols = []
+            for it in iters:
+                cols.extend(_iter_columns(it, aliases))
+            if not cols:
+                continue
+            names = ", ".join(f"`{c}`" for c in dict.fromkeys(cols))
+            out.append(self.finding(
+                ctx, node,
+                f"Python-level loop over SoA column(s) {names}; vectorize "
+                f"through soa.FleetState batch ops, or suppress citing the "
+                f"<=7-slot scalar-walk measurement (see soa.py)"))
+        return out
