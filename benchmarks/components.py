@@ -228,6 +228,72 @@ def trace_scaling(fast=True):
     return rows
 
 
+def batch_rollout(fast=True):
+    """Replica-batched engine vs the warm-pool path on a B=16 smoke grid.
+
+    The rollout this measures is the sweep driver's: B independent cells,
+    same fleet shape, different (policy, seed).  The warm-pool side
+    dispatches each cell to its worker pool; the batched side runs all B
+    cells in one lockstep ``BatchSim`` in-process.  Event counts come from
+    one profiled serial pass (the sim is deterministic, so every engine
+    replays the identical event stream).
+
+    Two baselines, because the pool path's cost depends on who is asking:
+
+    * ``pool_wall_s`` — what ``--engine pool`` costs a *fresh driver
+      process* (one CLI sweep): worker spawn + import + jit-warm
+      initializer + the cells.  This is the cost the in-process batched
+      engine eliminates outright, and the >=4x acceptance target is
+      measured against it (measured once — it is cold by definition).
+    * ``pool_warm_wall_s`` — the amortized per-sweep cost inside a
+      long-lived driver that reuses the warm pool (min-of-reps after a
+      warm-up sweep).  Recorded so nobody mistakes the headline for the
+      amortized regime: against this baseline the batched engine wins
+      only the fused-dispatch margin (~2x here), because both engines
+      pay the same per-event scalar machinery and the bit-identity
+      contract forbids approximating it away.
+
+    The gated column is the batched engine's aggregate us/event (walls
+    are min-of-reps); derived records both baselines' events/sec and both
+    speedups against the >=4x target."""
+    from repro.launch.sweep import run_sweep, shutdown_pool
+
+    B = 16
+    kw = dict(policies=["miso", "srpt"], scenarios=["smoke"],
+              seeds=list(range(B // 2)))
+    # one profiled serial pass for the denominators (not timed)
+    prof = run_sweep(serial=True, profile=True, **kw)
+    events = sum(r["profile"]["events"] for r in prof["results"])
+    reps = 3 if fast else 10
+    shutdown_pool()                            # cold-driver baseline
+    t0 = time.perf_counter()
+    run_sweep(workers=1, **kw)
+    pool_wall = time.perf_counter() - t0
+    pool_warm = float("inf")                   # amortized baseline
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run_sweep(workers=1, **kw)
+        pool_warm = min(pool_warm, time.perf_counter() - t0)
+    shutdown_pool()
+    batched_wall = float("inf")
+    rep = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        rep = run_sweep(serial=True, engine="batched", **kw)
+        batched_wall = min(batched_wall, time.perf_counter() - t0)
+    assert rep["config"]["batched_cells"] == B, "batched path fell back"
+    return [row(
+        "batch_rollout", batched_wall / max(events, 1),
+        f"B={B};events={events};pool_wall_s={pool_wall:.3f};"
+        f"pool_warm_wall_s={pool_warm:.3f};"
+        f"batched_wall_s={batched_wall:.3f};"
+        f"pool_events_per_s={events / max(pool_wall, 1e-9):.0f};"
+        f"pool_warm_events_per_s={events / max(pool_warm, 1e-9):.0f};"
+        f"batched_events_per_s={events / max(batched_wall, 1e-9):.0f};"
+        f"speedup={pool_wall / batched_wall:.2f}x;"
+        f"speedup_warm={pool_warm / batched_wall:.2f}x;target=4.00x")]
+
+
 def tpu_cluster(fast=True):
     """MISO over TPU-pod sub-slices (the DESIGN.md adaptation)."""
     from repro.core.estimators import OracleEstimator
@@ -261,7 +327,8 @@ def write_report(path: str, fast: bool = True) -> dict:
         "rows": [{"name": n, "us_per_call": float(us), "derived": d}
                  for n, us, d in (optimizer_latency(fast=fast)
                                   + scheduling_policies(fast=fast)
-                                  + trace_scaling(fast=fast))],
+                                  + trace_scaling(fast=fast)
+                                  + batch_rollout(fast=fast))],
     }
     with open(path, "w") as f:
         json.dump(report, f, indent=1)

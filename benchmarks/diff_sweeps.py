@@ -36,6 +36,14 @@ acceptance curve.
 
   PYTHONPATH=src:. python benchmarks/diff_sweeps.py \\
       benchmarks/baselines/BENCH_components.json BENCH_components.json
+
+``--exact`` (sweep reports only) switches from threshold gating to
+bit-identical comparison of every summary column except wall-clock: any
+differing value is a regression.  This is the CI equivalence gate for the
+replica-batched engine — the same grid run through ``--engine pool`` and
+``--engine batched`` must produce byte-equal scheduling results, because
+the batched engine is a re-staging of the scalar tick, not an
+approximation of it.
 """
 from __future__ import annotations
 
@@ -45,8 +53,10 @@ import sys
 from typing import Dict, List, Tuple
 
 # rows of a miso-components report whose us_per_call is gated (higher is
-# a regression); everything else in that report is informational
-GATED_ROW_PREFIX = "trace_scaling_"
+# a regression); everything else in that report is informational.
+# trace_scaling_* is the scalar engine's µs/event acceptance curve;
+# batch_rollout is the replica-batched engine's aggregate µs/event.
+GATED_ROW_PREFIX = ("trace_scaling_", "batch_rollout")
 THRESHOLD_SWEEP = 0.02
 THRESHOLD_COMPONENTS = 0.10
 
@@ -145,6 +155,35 @@ def diff_components(base_path: str, new_path: str,
     return regressions, notes
 
 
+def diff_exact(base_path: str, new_path: str) -> Tuple[List[str], List[str]]:
+    """Bit-identical comparison of two sweep reports (``--exact``).
+
+    Every summary column except wall-clock timing must match exactly —
+    no threshold, no direction.  Used by CI to prove the replica-batched
+    engine reproduces the pool engine's scheduling results byte-for-byte.
+    """
+    base = load_summary(base_path)
+    new = load_summary(new_path)
+    regressions, notes = [], []
+    for cell in sorted(set(base) | set(new)):
+        scenario, policy, placer, objective = cell
+        label = f"{scenario}/{policy}/{placer}/{objective}"
+        if cell not in new:
+            regressions.append(f"{label}: missing from candidate")
+            continue
+        if cell not in base:
+            notes.append(f"{label}: new cell (no baseline)")
+            continue
+        b, n = base[cell], new[cell]
+        for k in sorted(set(b) | set(n)):
+            if "wall" in k:
+                continue
+            if b.get(k) != n.get(k):
+                regressions.append(
+                    f"{label} {k}: {b.get(k)!r} != {n.get(k)!r}")
+    return regressions, notes
+
+
 def diff_reports(base_path: str, new_path: str,
                  threshold: float) -> Tuple[List[str], List[str]]:
     """Returns (regressions, notes): human-readable per-cell findings."""
@@ -186,16 +225,27 @@ def main(argv=None) -> int:
     ap.add_argument("--threshold", type=float, default=None,
                     help="relative regression to flag (default 2%% for "
                          "sweep reports, 10%% for components reports)")
+    ap.add_argument("--exact", action="store_true",
+                    help="sweep reports only: require every non-timing "
+                         "summary column to match bit-for-bit (the "
+                         "batched-engine CI equivalence gate)")
     args = ap.parse_args(argv)
     kind = report_kind(args.baseline)
-    if kind == "miso-components":
+    if args.exact and kind != "miso-sweep":
+        ap.error("--exact only applies to miso-sweep reports")
+    if args.exact:
+        gate = "exact match"
+        regressions, notes = diff_exact(args.baseline, args.candidate)
+    elif kind == "miso-components":
         threshold = (THRESHOLD_COMPONENTS if args.threshold is None
                      else args.threshold)
+        gate = f"{threshold:.0%}"
         regressions, notes = diff_components(args.baseline, args.candidate,
                                              threshold)
     else:
         threshold = (THRESHOLD_SWEEP if args.threshold is None
                      else args.threshold)
+        gate = f"{threshold:.0%}"
         regressions, notes = diff_reports(args.baseline, args.candidate,
                                           threshold)
     for line in notes:
@@ -203,11 +253,10 @@ def main(argv=None) -> int:
     if regressions:
         for line in regressions:
             print(f"[diff-sweeps] REGRESSION: {line}")
-        print(f"[diff-sweeps] {len(regressions)} regression(s) over "
-              f"{threshold:.0%} vs {args.baseline}")
+        print(f"[diff-sweeps] {len(regressions)} regression(s) "
+              f"({gate}) vs {args.baseline}")
         return 1
-    print(f"[diff-sweeps] OK: no regression over {threshold:.0%} "
-          f"vs {args.baseline}")
+    print(f"[diff-sweeps] OK: no regression ({gate}) vs {args.baseline}")
     return 0
 
 

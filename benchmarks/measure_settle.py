@@ -1,0 +1,106 @@
+"""Measure the scalar-fallback thresholds for the vectorized fleet settle.
+
+Produces the speedup table recorded next to ``_FREE_VEC_MIN`` /
+``_OCC_VEC_MIN`` in ``src/repro/core/sim/soa.py`` (the measurement the
+MS110 suppressions cite).  On the reference container the verdict is that
+the scalar loop wins at every row count — the vector path's gather/apply
+attribute traffic costs more than the arithmetic numpy absorbs — which is
+why both shipped thresholds are ``None`` (never auto-vectorize).  Re-run
+this script before flipping them on a different host.  Two sweeps:
+
+* free rows — resident-free GPUs settled by the masked energy/clock
+  vector update vs. the per-GPU scalar ``advance`` loop;
+* occupied rows — progressing GPUs (3 residents each, clean watts memo,
+  periodic-checkpoint interval armed) settled by the ``(rows, slots)``
+  matrix path vs. the scalar loop.
+
+Run:  PYTHONPATH=src python benchmarks/measure_settle.py
+"""
+from __future__ import annotations
+
+import time
+from types import SimpleNamespace
+
+from repro.core.estimators import OracleEstimator
+from repro.core.fleet import homogeneous_fleet
+from repro.core.jobs import WORKLOADS, Job
+from repro.core.partitions import a100_mig_space
+from repro.core.perfmodel import PerfModel
+from repro.core.sim import soa
+from repro.core.sim.gpu import GPU, MIG_RUN
+
+SPACE = a100_mig_space()
+PM = PerfModel(SPACE)
+SPEC = homogeneous_fleet(SPACE, PM, OracleEstimator(PM), 1)[0]
+PROFILE = WORKLOADS[0]
+
+
+class _Sink:
+    def shift(self, d):
+        pass
+
+
+def build(n, occupied):
+    sim = SimpleNamespace(cfg=SimpleNamespace(ckpt_interval_s=600.0),
+                          work_agg=_Sink())
+    gpus = []
+    for gid in range(n):
+        g = GPU(gid, sim, SPEC)
+        g.last_update = 10.0
+        g.energy_j = 1000.0
+        if occupied:
+            g.phase = MIG_RUN
+            for k in range(3):
+                job = Job(jid=gid * 8 + k, profile=PROFILE, arrival=0.0,
+                          work=1e9)
+                rj = g._add_resident(job)
+                rj.slice_size = 1
+                g._spd[k] = 0.5 + 0.1 * k
+                g._ckt[k] = 100.0 * k
+            g._spd_key = object()
+            g._w_key = g._spd_key
+            g._w_val = 300.0
+    # reset state the build mutated so every timed settle is identical
+        gpus.append(g)
+    return gpus
+
+
+def reset(gpus):
+    for g in gpus:
+        g.last_update = 10.0
+        g.energy_j = 1000.0
+        for i in range(len(g._ckt)):
+            g._ckt[i] = 100.0 * i
+            g._ckw[i] = 0.0
+            g._rjobs[i].job.remaining = 1e9
+
+
+def bench(n, occupied, vector, reps=400):
+    gpus = build(n, occupied)
+    t = 2000.0
+    best = float("inf")
+    for _ in range(reps):
+        reset(gpus)
+        t0 = time.perf_counter()
+        if vector:
+            # force the vector path regardless of the shipped defaults so
+            # the measurement is of the path, not the gate
+            soa.settle_rows(gpus, t, free_min=1, occ_min=1)
+        else:
+            for g in gpus:
+                g.advance(t)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def sweep(occupied, label):
+    print(f"-- {label} rows (scalar us / vector us / speedup)")
+    for n in (2, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256, 512):
+        v = bench(n, occupied, vector=True)
+        s = bench(n, occupied, vector=False)
+        print(f"  n={n:4d}  {s*1e6:8.2f}  {v*1e6:8.2f}  {s/v:5.2f}x")
+
+
+if __name__ == "__main__":
+    sweep(False, "free")
+    sweep(True, "occupied")

@@ -259,11 +259,7 @@ class ClusterSim:
                 g = gpus[payload]
                 if stamp != g.stamp or t < g.phase_end - 1e-9:
                     continue
-                batch = self._drain_same_tick_timers(t, g)
-                if batch is None:
-                    self.end_phase(g)
-                else:
-                    self.end_phase_batch(batch)
+                self._dispatch_timer(t, g)
             elif kind == "completion":
                 gid, jid = payload
                 g = gpus[gid]
@@ -274,25 +270,9 @@ class ClusterSim:
                 if rj is None or rj.job.remaining > 1e-6:
                     self._schedule_gpu_events(g)
                     continue
-                batch = self._drain_same_tick_completions(t, g, rj.job)
-                if batch is None:
-                    self._on_completion(g, rj.job)
-                else:
-                    self._on_completion_batch(batch)
+                self._dispatch_completion(t, g, rj.job)
             elif kind == "arrival":
-                # drain every further arrival stamped exactly t so the FCFS
-                # admit runs once over the whole burst (trace replays carry
-                # integer timestamps with heavy same-second bursts); for
-                # FCFS this is literally the same placement sequence, and
-                # queue-scanning disciplines (SRPT) see the full burst at
-                # once — their intended semantics
-                self._enqueue(self.jobs[payload])
-                while events and events[0][0] == t and events[0][2] == "arrival":
-                    _, _, _, jid2, _ = heappop(events)
-                    if prof is not None:
-                        prof["events"] += 1.0
-                    self._enqueue(self.jobs[jid2])
-                self.policy.admit()
+                self._dispatch_arrival(t, payload)
             elif kind == "failure":
                 self._on_failure(self.gpus[payload])
             elif kind == "rack_failure":
@@ -307,11 +287,243 @@ class ClusterSim:
         # settle every GPU's accounting (and energy integral) to the final
         # clock; completed-job metrics are already fixed, so this only
         # extends idle/energy windows.  One masked vector update covers the
-        # resident-free rows (bit-identical to the scalar advance — see
-        # core/sim/soa.py); occupied rows keep scalar operation order.
+        # eligible rows (bit-identical to the scalar advance — see
+        # core/sim/soa.py); the rest keep scalar operation order.
         self.fleet_state.settle_all(self.t)
         if prof is not None:
             prof["total_s"] += time.perf_counter() - t_run0
+        return self.finish(settle=False)
+
+    # ------------------------------------------------- stepping / batching
+    # The same event bodies run() inlines, exposed one tick at a time so
+    # BatchSim (core/sim/batch.py) can advance many replicas in lockstep.
+    # run() stays the hot scalar path: the dispatchers below are only
+    # called on *valid* timer/completion/arrival events, whose policy work
+    # dwarfs one extra method call; stale-stamp traffic never leaves the
+    # inline loop.
+
+    def _dispatch_timer(self, t: float, g: GPU, collect: bool = False):
+        """Process a valid gpu_timer event (plus its same-tick batch).
+
+        ``collect=True`` (BatchSim) returns a :class:`PendingPhaseEnd`
+        holding the policy's estimator work instead of finishing the tick,
+        or True when the policy has no batchable work (processed inline)."""
+        batch = self._drain_same_tick_timers(t, g)
+        if collect:
+            gs = [g] if batch is None else batch
+            pend = self._collect_phase_end(gs)
+            return True if pend is None else pend
+        if batch is None:
+            self.end_phase(g)
+        else:
+            self.end_phase_batch(batch)
+        return True
+
+    def _dispatch_completion(self, t: float, g: GPU, job: Job,
+                             collect: bool = False):
+        """Process a valid completion event (plus its same-tick batch);
+        ``collect=True`` may return a :class:`PendingCompletion`."""
+        batch = self._drain_same_tick_completions(t, g, job)
+        if collect:
+            items = [(g, job)] if batch is None else batch
+            pend = self._collect_completions(items)
+            return True if pend is None else pend
+        if batch is None:
+            self._on_completion(g, job)
+        else:
+            self._on_completion_batch(batch)
+        return True
+
+    def _dispatch_arrival(self, t: float, jid: int) -> None:
+        # drain every further arrival stamped exactly t so the FCFS
+        # admit runs once over the whole burst (trace replays carry
+        # integer timestamps with heavy same-second bursts); for
+        # FCFS this is literally the same placement sequence, and
+        # queue-scanning disciplines (SRPT) see the full burst at
+        # once — their intended semantics
+        events = self.events
+        prof = self.prof
+        self._enqueue(self.jobs[jid])
+        while events and events[0][0] == t and events[0][2] == "arrival":
+            _, _, _, jid2, _ = heapq.heappop(events)
+            if prof is not None:
+                prof["events"] += 1.0
+            self._enqueue(self.jobs[jid2])
+        self.policy.admit()
+
+    def step_event(self, collect: bool = False):
+        """Advance the simulation by one *processed* event tick.
+
+        Pops events exactly as :meth:`run` does (stale-stamped entries are
+        skipped without returning) and processes the first valid one.
+        Returns:
+
+        * ``True`` — a tick was fully processed, more work may remain;
+        * ``False`` — terminal: heap empty, all jobs completed, or the
+          clock cap was passed (matching run()'s loop conditions);
+        * a pending object (``collect=True`` only) — the tick's policy
+          decisions were *collected* but not applied: the caller owns the
+          estimate -> partition -> apply pipeline (see
+          :class:`PendingPhaseEnd` / :class:`PendingCompletion`), which
+          lets BatchSim fuse this work across replicas.
+        """
+        events = self.events
+        gpus = self.gpus
+        prof = self.prof
+        n_target = len(self.jobs)
+        max_sim_s = self.cfg.max_sim_s
+        while events and len(self.completed) < n_target:
+            t, _, kind, payload, stamp = heapq.heappop(events)
+            if t > max_sim_s:
+                return False
+            self.t = t
+            if prof is not None:
+                prof["events"] += 1.0
+            if kind == "gpu_timer":
+                g = gpus[payload]
+                if stamp != g.stamp or t < g.phase_end - 1e-9:
+                    continue
+                return self._dispatch_timer(t, g, collect)
+            elif kind == "completion":
+                gid, jid = payload
+                g = gpus[gid]
+                if stamp != g.stamp:
+                    continue
+                g.advance(t)
+                rj = g.jobs.get(jid)
+                if rj is None or rj.job.remaining > 1e-6:
+                    self._schedule_gpu_events(g)
+                    continue
+                return self._dispatch_completion(t, g, rj.job, collect)
+            elif kind == "arrival":
+                self._dispatch_arrival(t, payload)
+                return True
+            elif kind == "failure":
+                self._on_failure(gpus[payload])
+                return True
+            elif kind == "rack_failure":
+                self._on_rack_failure(payload)
+                return True
+            elif kind == "fault":
+                name, data = payload
+                self.fault_injectors[name].on_event(data)
+                return True
+            elif kind == "repair":
+                self.policy.admit()
+                return True
+        return False
+
+    def run_until_collect(self):
+        """Drain events inline — :meth:`run`'s hoisted hot loop — until a
+        tick yields a pending collect batch, and return it.  Ticks whose
+        policy has no batchable work are processed inline exactly as
+        ``step_event(collect=True)`` would; returns None when the replica
+        is terminal (heap empty, all jobs completed, or clock cap passed).
+
+        This is BatchSim's per-round frontier: every live replica
+        surrenders exactly one pending per round, so the cross-replica
+        fusion batch is as wide as the batch itself while the per-event
+        overhead stays at run()-loop level (no per-event method call).
+        A replica whose policy never collects (no fusable hooks) runs to
+        completion in one call — bit-identical to its scalar run."""
+        events = self.events
+        completed = self.completed
+        gpus = self.gpus
+        heappop = heapq.heappop
+        prof = self.prof
+        n_target = len(self.jobs)
+        max_sim_s = self.cfg.max_sim_s
+        while events and len(completed) < n_target:
+            t, _, kind, payload, stamp = heappop(events)
+            if t > max_sim_s:
+                return None
+            self.t = t
+            if prof is not None:
+                prof["events"] += 1.0
+            if kind == "gpu_timer":
+                g = gpus[payload]
+                if stamp != g.stamp or t < g.phase_end - 1e-9:
+                    continue
+                r = self._dispatch_timer(t, g, collect=True)
+                if r is not True:
+                    return r
+            elif kind == "completion":
+                gid, jid = payload
+                g = gpus[gid]
+                if stamp != g.stamp:
+                    continue
+                g.advance(t)
+                rj = g.jobs.get(jid)
+                if rj is None or rj.job.remaining > 1e-6:
+                    self._schedule_gpu_events(g)
+                    continue
+                r = self._dispatch_completion(t, g, rj.job, collect=True)
+                if r is not True:
+                    return r
+            elif kind == "arrival":
+                self._dispatch_arrival(t, payload)
+            elif kind == "failure":
+                self._on_failure(gpus[payload])
+            elif kind == "rack_failure":
+                self._on_rack_failure(payload)
+            elif kind == "fault":
+                name, data = payload
+                self.fault_injectors[name].on_event(data)
+            elif kind == "repair":
+                self.policy.admit()
+        return None
+
+    def _collect_phase_end(self, gs: List[GPU]):
+        """Collect-mode twin of :meth:`end_phase_batch`: same reconfig
+        filter and pre-phase accounting, but the policy's estimator windows
+        are *collected* for cross-replica fusion instead of being estimated
+        here.  Returns None when the policy has nothing to fuse (the whole
+        tick was processed inline, exactly as end_phase_batch would)."""
+        if self._reconfig_hooks:
+            gs = [g for g in gs
+                  if not (g.phase == CKPT and self._reconfig_failed(g))]
+            if not gs:
+                return None
+        for g in gs:
+            self._pre_phase_end(g)
+        work = self.policy.collect_phase_end(gs)
+        if work is None:
+            # policy has no batchable estimator work this tick (or does not
+            # support collection): fall through to the scalar batch path
+            self.policy.on_phase_end_batch(gs)
+            for g in gs:
+                self.finalize(g)
+            return None
+        return PendingPhaseEnd(self, gs, work)
+
+    def _collect_completions(self, items: List[Tuple[GPU, Job]]):
+        """Collect-mode twin of :meth:`_on_completion_batch`: completion
+        accounting runs now; the policy's repartition decisions are
+        collected for cross-replica fusion.  Returns None when the policy
+        does not support collection (tick processed inline) or had no
+        decisions to make (finalize/admit run inline)."""
+        for g, job in items:
+            self._finish(g, job)
+        decisions = self.policy.collect_completion(items)
+        if decisions is None:
+            self.policy.on_completion_batch(items)
+            for g, _ in items:
+                self.finalize(g)
+            self.policy.admit()
+            return None
+        if not decisions:
+            for g, _ in items:
+                self.finalize(g)
+            self.policy.admit()
+            return None
+        return PendingCompletion(self, items, decisions)
+
+    def finish(self, settle: bool = True) -> TraceMetrics:
+        """Final accounting + metric collection (end of run()/BatchSim).
+        ``settle=False`` is for callers that already settled the fleet to
+        ``self.t`` (run()'s tail, BatchSim's batched settle)."""
+        if settle:
+            self.fleet_state.settle_all(self.t)
         fs = self.fstats
         if fs["n_quarantines"]:
             # a quarantine still open at the final clock only occupied the
@@ -813,6 +1025,77 @@ class ClusterSim:
         g.refresh_speeds()
         if schedule:
             self._schedule_gpu_events(g)
+
+
+class PendingPhaseEnd:
+    """A collected same-tick phase-end batch awaiting its estimator pass.
+
+    Produced by ``step_event(collect=True)`` when the tick's policy has MPS
+    windows to estimate.  The owner (BatchSim) runs the pipeline in stages
+    so the expensive middle fuses across replicas:
+
+    1. ``work`` — :class:`~repro.core.sim.policies.base.EstimateWork` items
+       whose ``ests`` the owner fills via one fused ``estimate_batch`` per
+       estimator object (stage A);
+    2. :meth:`apply` — store the estimates / run the non-MPS transitions in
+       scalar order and collect
+       :class:`~repro.core.sim.policies.base.RepartDecision` items, whose
+       ``choice`` the owner fills via fused ``optimize_partition_batch``
+       calls (stages B/C);
+    3. :meth:`finish` — apply the solved choices and finalize the GPUs,
+       completing the tick exactly as ``end_phase_batch`` would (stage D).
+    """
+
+    __slots__ = ("sim", "gs", "work", "decisions")
+    kind = "phase_end"
+
+    def __init__(self, sim: "ClusterSim", gs: List[GPU], work: list):
+        self.sim = sim
+        self.gs = gs
+        self.work = work
+        self.decisions: list = []
+
+    def apply(self) -> list:
+        self.decisions = self.sim.policy.apply_phase_end(self.gs, self.work)
+        return self.decisions
+
+    def finish(self) -> None:
+        sim = self.sim
+        pol = sim.policy
+        for d in self.decisions:
+            pol.apply_decision(d)
+        for g in self.gs:
+            sim.finalize(g)
+
+
+class PendingCompletion:
+    """A collected same-tick completion batch awaiting its partition pass.
+
+    Completion accounting and the policy's non-repartition side effects
+    already ran; ``decisions`` (non-empty) awaits fused Algorithm-1 solves.
+    :meth:`finish` applies the solved choices, finalizes the affected GPUs
+    and admits the queue once — the tail of ``_on_completion_batch``."""
+
+    __slots__ = ("sim", "items", "decisions")
+    kind = "completion"
+
+    def __init__(self, sim: "ClusterSim", items: List[Tuple[GPU, Job]],
+                 decisions: list):
+        self.sim = sim
+        self.items = items
+        self.decisions = decisions
+
+    def apply(self) -> list:
+        return self.decisions
+
+    def finish(self) -> None:
+        sim = self.sim
+        pol = sim.policy
+        for d in self.decisions:
+            pol.apply_decision(d)
+        for g, _ in self.items:
+            sim.finalize(g)
+        pol.admit()
 
 
 def simulate(jobs, cfg: SimConfig, space: Optional[PartitionSpace] = None,

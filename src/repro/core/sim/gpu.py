@@ -200,7 +200,8 @@ class GPU:
         del self._ckt[i]
         del self._ckw[i]
         # misolint: disable=MS110 -- slot re-indexing IS the column
-        # maintenance; nothing to vectorize at <=7 slots
+        # maintenance; <=7 slots, scalar wins per the measure_settle.py
+        # numbers recorded in soa.py
         for r in self._rjobs[i:]:
             r.slot -= 1
         return rj
@@ -238,8 +239,9 @@ class GPU:
                 if self.phase == MIG_RUN:
                     w = self._idle_w
                     slice_w = self._slice_w
-                    # misolint: disable=MS110 -- sanctioned scalar walk:
-                    # <=7 residents, result memoized on the speed-cache key
+                    # misolint: disable=MS110 -- sanctioned scalar walk
+                    # (<=7 residents, memoized on the speed-cache key;
+                    # measure_settle.py numbers recorded in soa.py)
                     for rj in self._rjobs:
                         if rj.slice_size:
                             # misolint: disable=MS107 -- bounded watts sum over
@@ -259,8 +261,10 @@ class GPU:
             # scalar column walk: slot order == placement (dict) order, so
             # the progress/aggregate float-op sequence is the historical
             # one.  Measured: at <=7 residents a numpy row round-trip costs
-            # more than this whole loop; the vectorized path lives in
-            # soa.FleetState for fleet-scope batches only.
+            # more than this whole loop (benchmarks/measure_settle.py; the
+            # numbers are recorded next to _FREE_VEC_MIN/_OCC_VEC_MIN in
+            # soa.py); the vectorized path lives in soa.FleetState for
+            # fleet-scope batches only.
             if phase == MIG_RUN or phase == MPS_PROF:
                 interval = self.sim.cfg.ckpt_interval_s
                 run = phase == MIG_RUN
@@ -314,11 +318,13 @@ class GPU:
                 # runs to completion commits (engine.end_phase resets the
                 # since_ckpt counters); a failure mid-save loses everything
                 # back to the last *completed* checkpoint
-                # misolint: disable=MS110 -- sanctioned scalar walk (<=7)
+                # misolint: disable=MS110 -- sanctioned scalar walk (<=7
+                # slots; measure_settle.py numbers recorded in soa.py)
                 for rj in rjobs:
                     rj.job.t_ckpt += dt
             else:
-                # misolint: disable=MS110 -- sanctioned scalar walk (<=7)
+                # misolint: disable=MS110 -- sanctioned scalar walk (<=7
+                # slots; measure_settle.py numbers recorded in soa.py)
                 for rj in rjobs:
                     rj.job.t_queue += dt
         self.last_update = t
@@ -341,8 +347,8 @@ class GPU:
             else self.speed_scale * self.speed_fault
         if self.phase == MIG_RUN:
             slice_speed = self.pm.slice_speed
-            # misolint: disable=MS110 -- scalar column walk (<=7 slots),
-            # see the layout rationale in soa.py
+            # misolint: disable=MS110 -- scalar column walk (<=7 slots;
+            # layout rationale and measure_settle.py numbers in soa.py)
             for i, rj in enumerate(rjs):
                 job = rj.job
                 prof = job.profile if not job.phases else \
@@ -351,7 +357,8 @@ class GPU:
                           if rj.slice_size else 0.0)
         elif self.phase == MPS_PROF:
             if rjs:
-                # misolint: disable=MS110 -- scalar column walk (<=7 slots)
+                # misolint: disable=MS110 -- scalar column walk (<=7 slots;
+                # measure_settle.py numbers recorded in soa.py)
                 profs = [rj.job.profile if not rj.job.phases else
                          rj.job.profile_at(1.0 - rj.job.remaining / rj.job.work)
                          for rj in rjs]
@@ -369,7 +376,8 @@ class GPU:
         best = None
         lu = self.last_update
         spd = self._spd
-        # misolint: disable=MS110 -- scalar column walk (<=7 slots)
+        # misolint: disable=MS110 -- scalar column walk (<=7 slots;
+        # measure_settle.py numbers recorded in soa.py)
         for i, rj in enumerate(self._rjobs):
             s = spd[i]
             if s > 1e-12:
@@ -384,7 +392,8 @@ class GPU:
     def ckpt_duration(self) -> float:
         if not self._rjobs:
             return self.sim.cfg.mig_reconfig_s * self.sim.cfg.overhead_scale
-        # misolint: disable=MS110 -- scalar column walk (<=7 slots)
+        # misolint: disable=MS110 -- scalar column walk (<=7 slots;
+        # measure_settle.py numbers recorded in soa.py)
         per_job = max(
             self.sim.cfg.ckpt_base_s + rj.job.profile.mem_gb / self.sim.cfg.ckpt_bw_gbps
             for rj in self._rjobs)

@@ -74,6 +74,47 @@ def available_policies() -> List[str]:
     return sorted(_REGISTRY)
 
 
+class EstimateWork:
+    """One MPS profiling window collected for a fused estimator pass.
+
+    Produced by :meth:`Policy.collect_phase_end`; the owner (BatchSim)
+    groups items by estimator object and fills ``ests`` with one
+    ``estimate_batch`` call per group — one stacked predictor forward for
+    every same-tick window across every replica."""
+
+    __slots__ = ("g", "jids", "profs", "qos", "mat", "ests")
+
+    def __init__(self, g: GPU, jids, profs, qos, mat):
+        self.g = g
+        self.jids = jids
+        self.profs = profs
+        self.qos = qos
+        self.mat = mat          # measured MPS matrix (None: estimator-only)
+        self.ests: Optional[list] = None   # filled by the owner (stage A)
+
+
+class RepartDecision:
+    """One pending Algorithm-1 decision collected for a fused solve.
+
+    Produced by :meth:`Policy.collect_repartitions`; the owner groups
+    decisions by (space, power, objective) and fills ``choice`` through
+    ``optimize_partition_batch`` —  exactly the stacked DP
+    ``choose_partition_batch`` runs, so the solved choice is bit-identical
+    to the scalar ``repartition`` path.  ``Policy.apply_decision`` then
+    applies it."""
+
+    __slots__ = ("policy", "g", "jids", "speeds", "overhead", "choice")
+
+    def __init__(self, policy: "Policy", g: GPU, jids, speeds,
+                 overhead: bool):
+        self.policy = policy
+        self.g = g
+        self.jids = jids
+        self.speeds = speeds
+        self.overhead = overhead
+        self.choice = None      # filled by the owner (stage C)
+
+
 class Policy(ABC):
     """Base class for scheduling policies (one instance per simulation)."""
 
@@ -209,6 +250,69 @@ class Policy(ABC):
         re-optimizations into one batched Algorithm-1 pass."""
         for g, job in items:
             self.on_completion(g, job)
+
+    # ------------------------------------------- collect/apply (BatchSim)
+    # The staged twin of the batch hooks above, used by the replica-batched
+    # engine (core/sim/batch.py): instead of estimating and solving inside
+    # the hook, a policy *collects* its estimator windows and Algorithm-1
+    # decisions so the owner can fuse them across replicas.  Contract: a
+    # ``collect_*`` hook either returns None having touched NOTHING (the
+    # engine falls back to the scalar batch hook), or performs all of its
+    # non-fusable side effects and returns the collected work — never both.
+    # The default implementations return None: a policy that doesn't opt in
+    # simply runs its scalar hooks inside the batched engine, which keeps
+    # the bit-identity contract trivially.
+
+    def collect_phase_end(self, gs: Sequence[GPU]
+                          ) -> Optional[List[EstimateWork]]:
+        """Collect this tick's estimator windows instead of running them.
+        None (default) = no fusable work: the engine processes the tick via
+        ``on_phase_end_batch``.  A non-None return must be non-empty; the
+        engine will call :meth:`apply_phase_end` with the estimated work."""
+        return None
+
+    def apply_phase_end(self, gs: Sequence[GPU],
+                        work: Sequence[EstimateWork]
+                        ) -> List[RepartDecision]:
+        """Resume the phase-end tick once ``work[i].ests`` are filled:
+        store estimates / run non-profiling transitions in scalar hook
+        order, and return the repartition decisions still to be solved."""
+        raise NotImplementedError(
+            f"{type(self).__name__}.collect_phase_end returned work but "
+            f"apply_phase_end is not implemented")
+
+    def collect_completion(self, items: Sequence[tuple]
+                           ) -> Optional[List[RepartDecision]]:
+        """Collect this tick's completion-triggered repartitions.  None
+        (default) = not supported: the engine falls back to
+        ``on_completion_batch``.  A supporting policy performs its
+        non-repartition side effects and returns the (possibly empty)
+        decision list."""
+        return None
+
+    def collect_repartitions(self, gs: Sequence[GPU], overhead: bool = False
+                             ) -> List[RepartDecision]:
+        """Collect-mode twin of :meth:`repartition_many`: emptied GPUs go
+        IDLE immediately (no optimizer run, exactly as the scalar path);
+        the rest become pending decisions carrying their slice-speed
+        estimates.  The solved choices are applied by
+        :meth:`apply_decision` in collection order — cross-GPU independent,
+        so any order is bit-identical to the scalar loop."""
+        out: List[RepartDecision] = []
+        for g in gs:
+            jids = list(g.jobs)
+            if not jids:
+                g.phase = IDLE
+                g.partition = ()
+                continue
+            out.append(RepartDecision(self, g, jids,
+                                      self.partition_speeds(g, jids),
+                                      overhead))
+        return out
+
+    def apply_decision(self, d: RepartDecision) -> None:
+        """Apply one solved repartition decision (stage D)."""
+        self._apply_choice(d.g, d.jids, d.choice, d.overhead)
 
     def on_fault_evict(self, g: GPU):
         """Fault injection just killed *some* residents of ``g``

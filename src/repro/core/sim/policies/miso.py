@@ -15,7 +15,8 @@ import time
 
 from repro.core.jobs import Job
 from repro.core.sim.gpu import CKPT, GPU, IDLE, MIG_RUN, MPS_PROF
-from repro.core.sim.policies.base import Policy, register_policy
+from repro.core.sim.policies.base import (EstimateWork, Policy,
+                                          register_policy)
 
 
 @register_policy
@@ -83,6 +84,50 @@ class MisoPolicy(Policy):
             else:
                 self.on_phase_end(g)
         self.repartition_many(prof_gs, overhead=True)
+
+    # ------------------------------------------- collect/apply (BatchSim)
+
+    def collect_phase_end(self, gs):
+        """Collect every MPS window ending at this tick: the mix and its
+        (noise-drawing) measurement happen NOW, in event order — exactly
+        where :meth:`on_phase_end_batch` draws them — so the dedicated
+        noise stream sees the same sequence; only the estimator forward is
+        deferred for cross-replica fusion."""
+        prof_gs = [g for g in gs if g.phase == MPS_PROF]
+        if not prof_gs:
+            return None
+        work = []
+        for g in prof_gs:
+            jids, profs, qos = self._mix(g)
+            work.append(EstimateWork(g, jids, profs, qos,
+                                     self._measure(g, profs)))
+        return work
+
+    def apply_phase_end(self, gs, work):
+        """Stage B: estimates are in — store them / run the non-profiling
+        transitions in scalar hook order, and hand back the repartition
+        decisions for the fused Algorithm-1 pass."""
+        by_gid = {w.g.gid: w for w in work}
+        prof_gs = []
+        for g in gs:
+            if g.phase == MPS_PROF:
+                w = by_gid[g.gid]
+                self._store_estimates(g, w.jids, w.ests)
+                prof_gs.append(g)
+            else:
+                self.on_phase_end(g)
+        return self.collect_repartitions(prof_gs, overhead=True)
+
+    def collect_completion(self, items):
+        """Collect-mode twin of :meth:`on_completion_batch`: emptied GPUs
+        go IDLE now; re-optimizations of GPUs that keep running jobs are
+        returned as pending decisions for the fused solve."""
+        repart = [g for g, _ in items if g.jobs and g.phase == MIG_RUN]
+        for g, _ in items:
+            if not g.jobs:
+                g.phase = IDLE
+                g.partition = ()
+        return self.collect_repartitions(repart, overhead=True)
 
     def on_completion(self, g: GPU, job: Job):
         # re-optimize with known profiles (no new MPS sweep needed)

@@ -23,6 +23,14 @@ class OraclePolicy(Policy):
     def on_completion(self, g: GPU, job: Job):
         self.repartition(g)
 
+    def collect_completion(self, items):
+        """Replica-batched engine: every affected GPU re-optimizes (emptied
+        ones go IDLE inside the collect), exactly the per-GPU
+        :meth:`on_completion` reactions — zero-overhead, so ``overhead``
+        stays False."""
+        return self.collect_repartitions([g for g, _ in items],
+                                         overhead=False)
+
     def partition_speeds(self, g: GPU, jids: Sequence[int]) -> List[Dict[int, float]]:
         """Ground truth straight from the GPU's estimator, fresh every time."""
         sim = self.sim

@@ -138,6 +138,13 @@ class SrptPolicy(MisoPolicy):
             self._forget(job)
         super().on_completion_batch(items)
 
+    def collect_completion(self, items):
+        # mirror on_completion_batch for the replica-batched engine: the
+        # profile bookkeeping runs before the inherited decision collection
+        for _, job in items:
+            self._forget(job)
+        return super().collect_completion(items)
+
     def _forget(self, job: Job):
         for key in [k for k in self._known_profiles if k[0] == job.jid]:
             del self._known_profiles[key]

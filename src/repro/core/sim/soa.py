@@ -13,39 +13,88 @@ measurably fastest on the event loop's access patterns:
   ``rj.speed`` etc.; the engine's hot loops walk the columns directly.
 * **Per-GPU rows** (energy integral, accounting clock, repair deadline)
   stay as plain attributes for the single-GPU per-event path, and this
-  module gathers them into fleet-wide numpy arrays at *batch barriers* —
-  points where one masked vector update replaces O(fleet) Python-loop
-  iterations (the end-of-run settle, rack-scale evacuations, rollout
-  sweeps).  All vector arithmetic is elementwise (sub/mul/maximum/where),
-  which IEEE-754 guarantees bit-identical to the scalar expressions in
-  ``GPU.advance`` — the repo's golden traces are the proof obligation, and
-  :func:`settle_scalar` stays behind as the property-test oracle.
+  module can gather them into fleet-wide numpy arrays at *batch barriers*
+  (the end-of-run settle, rack-scale evacuations, rollout sweeps, and the
+  replica-batched engine's cross-replica settle in ``core/sim/batch.py``).
+  Measurement puts the scalar loop ahead of that masked vector update at
+  every fleet size on the reference container (see the threshold comment
+  below), so the vector path ships disabled by default — it is retained as
+  the property-tested batch-semantics contract and for hosts where the
+  numpy-dispatch trade flips.  All its vector arithmetic is elementwise
+  (sub/mul/maximum/where), which IEEE-754 guarantees bit-identical to the
+  scalar expressions in ``GPU.advance`` — the repo's golden traces are the
+  proof obligation, and :func:`settle_scalar` stays behind as the
+  property-test oracle.
 
 Masked-update contract
 ----------------------
-``settle_all`` partitions the fleet by ``bool(g.jobs)``: resident-free GPUs
-(idle floors, possibly under repair) take the vectorized path; GPUs with
-residents route through ``GPU.advance`` so per-job progress, checkpoint
-marks and the Kahan work-aggregate shifts keep their exact scalar operation
-order.  The vector path reproduces ``advance``'s energy integral for the
-resident-free case:
+:func:`settle_rows` partitions its rows into three classes:
 
-    dt   = t - last_update
-    live = dt                      if last_update >= down_until
-           max(0.0, t-down_until)  otherwise
-    energy += idle_w * live        when dt > 0 and live > 0
+* **free** (``not g.jobs``) — the historical vector path: one masked
+  energy/clock update (a resident-free GPU's wall power is exactly its
+  idle floor in every phase — see the watts derivation in ``GPU.advance``):
 
-(a resident-free GPU's wall power is exactly its idle floor in every
-phase — see the watts derivation in ``GPU.advance``).
+      dt   = t - last_update
+      live = dt                      if last_update >= down_until
+             max(0.0, t-down_until)  otherwise
+      energy += idle_w * live        when dt > 0 and live > 0
+
+* **occupied, vector-eligible** (``g.jobs`` and ``dt > 0`` and phase in
+  (MIG_RUN, MPS_PROF) and the wall-watts memo is clean
+  (``g._w_key is g._spd_key``) and < 8 residents) — the progress integral
+  runs as masked ``(rows, slots)`` matrix ops whose per-slot expressions
+  (``done = s*dt``; the repeated-subtraction checkpoint boundary — NEVER
+  fmod, whose result is not the scalar loop's) are elementwise-identical
+  to ``GPU.advance``; the per-row work drain uses ``np.sum`` over < 8
+  slots, which numpy reduces strictly left-to-right (its pairwise split
+  starts at n == 8 — the reason for the residency cap), with trailing
+  zero-padding neutral because every partial sum is non-negative.  The
+  Kahan ``work_agg.shift`` calls are issued in gid order interleaved with
+  the scalar rows, preserving the fleet-wide shift sequence.
+* **everything else** (dt <= 0, CKPT/IDLE occupied, dirty watts memo,
+  >= 8 residents) — per-GPU ``GPU.advance``, the scalar oracle.
+
+State-for-state the result is bit-identical to :func:`settle_scalar`;
+``tests/test_soa.py`` holds the property.
 """
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Dict, List, Sequence
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.core.sim.gpu import MIG_RUN, MPS_PROF
+
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
     from repro.core.sim.gpu import GPU
+
+# Scalar-fallback thresholds, re-measured for the occupied-row extension.
+# (benchmarks/measure_settle.py; 1-CPU container, CPython 3.10, numpy 2.0,
+# min-of-400 per point; speedup = scalar_us / vector_us, < 1 = scalar wins)
+#
+#   free rows      n=8: 0.21x   n=32: 0.45x   n=128: 0.69x   n=512: 0.80x
+#   occupied rows  n=8: 0.24x   n=32: 0.49x   n=128: 0.65x   n=512: 0.69x
+#
+# The historical "break-even at 8 free rows" does NOT reproduce: the
+# scalar loop wins at every measured row count, and the *marginal* per-row
+# cost of the vector path is itself higher (free: ~0.36 vs ~0.30 us/row;
+# occupied: ~3.3 vs ~2.3 us/row), so the speedup curve is bounded below
+# 1.0 — no break-even exists on this host at any fleet size.  The reason
+# is structural: simulation state lives in per-GPU Python attributes, so
+# the vector path pays the same attribute reads (gather) and writes
+# (apply) the scalar loop pays, plus numpy dispatch, while the arithmetic
+# it absorbs is the cheap part.  This is the measurement the MS110
+# suppressions cite when they keep scalar walks over the SoA columns
+# (<= 7 slots per row) instead of numpy rewrites.
+#
+# Defaults therefore route every row through the scalar oracle; the masked
+# vector path stays behind explicit per-call thresholds as the
+# property-tested batch-semantics contract (tests/test_soa.py force it;
+# re-run benchmarks/measure_settle.py before enabling it on a host where
+# the numpy-dispatch trade might flip).  Bit-identity makes the choice
+# correctness-neutral either way.
+_FREE_VEC_MIN: Optional[int] = None     # no measured break-even <= 512 rows
+_OCC_VEC_MIN: Optional[int] = None      # no measured break-even <= 512 rows
 
 
 def settle_scalar(gpus: Sequence["GPU"], t: float) -> None:
@@ -56,14 +105,242 @@ def settle_scalar(gpus: Sequence["GPU"], t: float) -> None:
         g.advance(t)
 
 
+def settle_rows(gpus: Sequence["GPU"],
+                ts: Union[float, Sequence[float]],
+                idle_w: Optional[np.ndarray] = None,
+                free_min: Optional[int] = None,
+                occ_min: Optional[int] = None) -> None:
+    """Settle ``gpus[i]`` to clock ``ts[i]`` (or a shared scalar ``ts``),
+    vectorizing the rows that are eligible under the masked-update contract
+    above and routing the rest through the scalar ``GPU.advance``.
+
+    This is the shared core of :meth:`FleetState.settle_all` (one replica,
+    one clock) and ``BatchSim``'s cross-replica settle (``B*G`` rows, one
+    clock per replica).  ``idle_w``, when given, must be the per-row idle
+    floor array (callers that own the rows precompute it once).
+
+    ``free_min`` / ``occ_min`` engage the masked vector path when at least
+    that many rows of the class are eligible; ``None`` falls back to the
+    module defaults — which, per the measurement above, keep everything on
+    the scalar oracle.  Bit-identity holds for every threshold choice.
+    """
+    n = len(gpus)
+    if n == 0:
+        return
+    if free_min is None:
+        free_min = _FREE_VEC_MIN
+    if occ_min is None:
+        occ_min = _OCC_VEC_MIN
+    if isinstance(ts, (int, float)):
+        t = float(ts)
+        ts_list: Optional[List[float]] = None
+    else:
+        ts_list = [float(x) for x in ts]
+        t = 0.0
+    free: List[int] = []
+    occ: List[int] = []
+    rest: List[int] = []
+    for i, g in enumerate(gpus):
+        if not g.jobs:
+            free.append(i)
+        elif ((t if ts_list is None else ts_list[i]) > g.last_update
+                and (g.phase == MIG_RUN or g.phase == MPS_PROF)
+                and g._w_key is g._spd_key and len(g._rjobs) < 8):
+            occ.append(i)
+        else:
+            rest.append(i)
+    do_free = free_min is not None and len(free) >= free_min
+    do_occ = occ_min is not None and len(occ) >= occ_min
+    if not do_free and not do_occ:
+        # under both numpy break-even row counts: scalar is faster AND
+        # trivially identical
+        if ts_list is None:
+            for g in gpus:
+                g.advance(t)
+        else:
+            for i, g in enumerate(gpus):
+                g.advance(ts_list[i])
+        return
+
+    if do_free:
+        nf = len(free)
+        lu = np.fromiter((gpus[i].last_update for i in free), np.float64, nf)
+        du = np.fromiter((gpus[i].down_until for i in free), np.float64, nf)
+        ej = np.fromiter((gpus[i].energy_j for i in free), np.float64, nf)
+        if idle_w is not None:
+            iw = idle_w[np.asarray(free, dtype=np.intp)]
+        else:
+            iw = np.fromiter((gpus[i]._idle_w for i in free), np.float64, nf)
+        if ts_list is None:
+            dt = t - lu
+            tt: Union[float, np.ndarray] = t
+        else:
+            tt = np.fromiter((ts_list[i] for i in free), np.float64, nf)
+            dt = tt - lu
+        if du.any():
+            # live window: repairs power the GPU off until down_until;
+            # down_until only moves forward, so a window straddles at most
+            # one repair boundary (same derivation as GPU.advance)
+            live = np.where(lu >= du, dt, np.maximum(0.0, tt - du))
+            pos = (dt > 0.0) & (live > 0.0)
+        else:
+            # repair-free fleet (the common case): last_update >= 0 == every
+            # down_until, so live == dt exactly — three fewer array ops
+            live = dt
+            pos = dt > 0.0
+        free_e = np.where(pos, ej + iw * live, ej).tolist()
+        # free rows never touch the work aggregate, so their application
+        # order is unconstrained: scatter them out of band in one zip loop
+        if ts_list is None:
+            for i, e in zip(free, free_e):
+                g = gpus[i]
+                g.energy_j = e
+                g.last_update = t
+        else:
+            for i, e in zip(free, free_e):
+                g = gpus[i]
+                g.energy_j = e
+                g.last_update = ts_list[i]
+    elif free:
+        # too few free rows to pay numpy's fixed cost: scalar, and (no
+        # work-aggregate traffic) order-free like the vector scatter above
+        if ts_list is None:
+            for i in free:
+                gpus[i].advance(t)
+        else:
+            for i in free:
+                gpus[i].advance(ts_list[i])
+
+    if not do_occ:
+        # occupied-but-under-threshold rows join the scalar remainder; keep
+        # gid order across the merge for the work-aggregate shift sequence
+        if occ:
+            rest = sorted(rest + occ)
+        if ts_list is None:
+            for i in rest:
+                gpus[i].advance(t)
+        else:
+            for i in rest:
+                gpus[i].advance(ts_list[i])
+        return
+
+    no = len(occ)
+    lens = [len(gpus[i]._rjobs) for i in occ]
+    s_max = max(lens)
+    cnt = no * s_max
+    pad = [0.0] * s_max
+    sr: List[float] = []
+    tr: List[float] = []
+    wr: List[float] = []
+    for i in occ:
+        g = gpus[i]
+        p = pad[len(g._rjobs):]
+        sr.extend(g._spd)
+        sr.extend(p)
+        tr.extend(g._ckt)
+        tr.extend(p)
+        wr.extend(g._ckw)
+        wr.extend(p)
+    spd = np.array(sr).reshape(no, s_max)
+    ckt = np.array(tr).reshape(no, s_max)
+    ckw = np.array(wr).reshape(no, s_max)
+    msk = np.arange(s_max) < np.array(lens, dtype=np.intp)[:, None]
+    w = np.fromiter((gpus[i]._w_val for i in occ), np.float64, no)
+    itv = np.fromiter((gpus[i].sim.cfg.ckpt_interval_s for i in occ),
+                      np.float64, no)
+    lu = np.fromiter((gpus[i].last_update for i in occ), np.float64, no)
+    du = np.fromiter((gpus[i].down_until for i in occ), np.float64, no)
+    ej = np.fromiter((gpus[i].energy_j for i in occ), np.float64, no)
+    if ts_list is None:
+        dt = t - lu                      # > 0 for every row by eligibility
+        tt = t
+    else:
+        tt = np.fromiter((ts_list[i] for i in occ), np.float64, no)
+        dt = tt - lu
+    if du.any():
+        live = np.where(lu >= du, dt, np.maximum(0.0, tt - du))
+        # energy: the memoized wall watts over the live part of the window
+        occ_e = np.where(live > 0.0, ej + w * live, ej).tolist()
+    else:
+        # repair-free: live == dt > 0 on every row, the where mask is all-on
+        occ_e = (ej + w * dt).tolist()
+    dtc = dt[:, None]
+    done = spd * dtc                     # padded slots: 0.0 * dt == 0.0
+    # per-row work drain; < 8 slots per row keeps np.sum left-to-right
+    dec_l = done.sum(axis=1).tolist()
+    # periodic-checkpoint bookkeeping: masked repeated subtraction — each
+    # pass peels one boundary exactly like the scalar while-loop (fmod
+    # would round differently and break bit-identity)
+    itvc = itv[:, None]
+    m = msk & (itvc > 0.0)
+    ct = np.where(m, ckt + dtc, ckt)
+    cw = np.where(m, ckw + done, ckw)
+    bm = m & (ct >= itvc)
+    while bm.any():
+        ct = np.where(bm, ct - itvc, ct)
+        cw = np.where(bm, spd * ct, cw)
+        bm = bm & (ct >= itvc)
+    dt_l = dt.tolist()
+    done_l = done.tolist()
+    ct_l = ct.tolist()
+    cw_l = cw.tolist()
+    itv_l = itv.tolist()
+
+    def apply_occ(r: int, i: int) -> None:
+        g = gpus[i]
+        g.energy_j = occ_e[r]
+        g.last_update = t if ts_list is None else ts_list[i]
+        row_done = done_l[r]
+        dt_i = dt_l[r]
+        run = g.phase == MIG_RUN
+        # misolint: disable=MS110 -- scatter of the vectorized progress
+        # back into per-job attributes; <=7 slots, and the attribute
+        # writes dominate either way (see the _OCC_VEC_MIN measurement)
+        for s_i, rj in enumerate(g._rjobs):
+            job = rj.job
+            job.remaining -= row_done[s_i]
+            if run:
+                job.t_run += dt_i
+            else:
+                job.t_mps += dt_i
+        if itv_l[r] > 0.0:
+            k = lens[r]
+            g._ckt[:] = ct_l[r][:k]
+            g._ckw[:] = cw_l[r][:k]
+        d = dec_l[r]
+        if d:
+            g.sim.work_agg.shift(-d)
+
+    if not rest:
+        for r, i in enumerate(occ):
+            apply_occ(r, i)
+        return
+    # occupied scalar rows can shift the Kahan work aggregate too: a two-
+    # pointer merge applies both classes in gid order, preserving the
+    # fleet-wide shift sequence of settle_scalar
+    oi = ri = 0
+    n_occ = len(occ)
+    n_rest = len(rest)
+    while oi < n_occ or ri < n_rest:
+        if ri >= n_rest or (oi < n_occ and occ[oi] < rest[ri]):
+            apply_occ(oi, occ[oi])
+            oi += 1
+        else:
+            i = rest[ri]
+            gpus[i].advance(t if ts_list is None else ts_list[i])
+            ri += 1
+
+
 class FleetState:
     """Fleet-wide SoA staging buffers + the vectorized batch operations.
 
     The object attributes on :class:`GPU` stay canonical; ``gather()``
     snapshots them into numpy arrays, the vector ops compute on the arrays,
     and ``scatter()`` writes results back.  Gather/scatter cost O(fleet)
-    attribute traffic once per *batch*, not per event — the win is every
-    Python-level ``advance`` call the mask elides.
+    attribute traffic once per *batch*, not per event — but that attribute
+    traffic is most of what the scalar ``advance`` loop pays too, which is
+    why the measured thresholds (see module comment) keep the scalar path
+    as the default.
     """
 
     __slots__ = ("gpus", "n", "idle_w", "last_update", "down_until",
@@ -103,37 +380,18 @@ class FleetState:
 
     # -------------------------------------------------- batch operations
 
-    def settle_all(self, t: float) -> None:
+    def settle_all(self, t: float,
+                   free_min: Optional[int] = None,
+                   occ_min: Optional[int] = None) -> None:
         """Advance every GPU's accounting clock and energy integral to
-        ``t`` — one masked vector update for the resident-free rows, the
-        scalar ``advance`` for rows with residents (whose per-job progress
-        and Kahan shifts must keep scalar operation order).  State-for-state
-        bit-identical to :func:`settle_scalar`."""
-        gpus = self.gpus
-        free = [i for i, g in enumerate(gpus) if not g.jobs]
-        if len(free) < 8:
-            # under the numpy break-even row count: scalar is faster AND
-            # trivially identical
-            settle_scalar(gpus, t)
-            return
-        self.gather()
-        idx = np.asarray(free, dtype=np.intp)
-        lu = self.last_update[idx]
-        du = self.down_until[idx]
-        dt = t - lu
-        # live window: repairs power the GPU off until down_until;
-        # down_until only moves forward, so a window straddles at most one
-        # repair boundary (same derivation as GPU.advance)
-        live = np.where(lu >= du, dt, np.maximum(0.0, t - du))
-        pos = (dt > 0.0) & (live > 0.0)
-        add = self.idle_w[idx] * live
-        self.energy_j[idx] = np.where(pos, self.energy_j[idx] + add,
-                                      self.energy_j[idx])
-        self.last_update[idx] = t
-        self.scatter(free)
-        for i, g in enumerate(gpus):
-            if g.jobs:
-                g.advance(t)
+        ``t`` — masked vector updates for the eligible rows (resident-free
+        ones, and occupied progressing ones with a clean watts memo), the
+        scalar ``advance`` for everything else.  State-for-state
+        bit-identical to :func:`settle_scalar` (see the masked-update
+        contract in the module docstring); thresholds as in
+        :func:`settle_rows`."""
+        settle_rows(self.gpus, t, idle_w=self.idle_w,
+                    free_min=free_min, occ_min=occ_min)
 
     # ------------------------------------------------- resident snapshot
 
@@ -160,7 +418,8 @@ class FleetState:
             ck_t[i, :k] = g._ckt
             ck_w[i, :k] = g._ckw
             # misolint: disable=MS110 -- gather into the (G, S) export is
-            # itself the vectorization boundary; <=7 slots per row
+            # itself the vectorization boundary; <=7 slots per row (the
+            # measure_settle.py bound recorded above)
             remaining[i, :k] = [rj.job.remaining for rj in g._rjobs]
             mask[i, :k] = True
         return {"speed": speed, "since_ckpt_t": ck_t, "since_ckpt_work": ck_w,

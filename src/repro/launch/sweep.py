@@ -27,6 +27,17 @@ energy columns; v4 adds the robustness columns — ``goodput`` /
 in every result, ``goodput_mean`` / ``work_lost_s_mean`` in the summary —
 plus a top-level ``errors`` list of cells that crashed or timed out).
 
+Two execution engines share the cell-build path (``--engine``):
+
+* ``pool`` (default) — one process per cell on the persistent warm pool
+  below;
+* ``batched`` — cells sharing a resolved fleet spec coalesce into one
+  in-process lockstep replica batch (``core/sim/batch.py``): estimator
+  forwards and Algorithm-1 solves fuse across cells, metrics stay
+  bit-identical per cell, and ``config.batched_cells`` records how many
+  cells actually ran batched.  Profiled sweeps and groups that fail to
+  build or run fall back to the pool path per cell.
+
 Warm-pool execution (the driver loop that makes cheap rollouts cheap):
 
 * The worker pool is a **process-lifetime singleton**, not a per-sweep
@@ -219,20 +230,18 @@ def _get_fleet(spec: str) -> list:
     return fleet
 
 
-def run_task(task: Dict) -> Dict:
-    """One sweep cell: simulate (policy, placer, objective, scenario, seed)
-    on a fleet.
-
-    Module-level and dict-in/dict-out so it pickles cleanly into worker
-    processes.
-    """
+def _build_cell(task: Dict, profile: bool = False):
+    """Resolve one cell's (scenario, fleet, config) and construct its
+    ready-to-run ``ClusterSim`` on a deep copy of the (possibly cached)
+    pristine trace.  Shared by the per-process scalar path and the
+    in-process batched engine, so a cell is built identically either way.
+    Returns ``(sim, meta)`` where ``meta`` carries everything
+    :func:`_cell_result` needs to describe the cell."""
     import copy
 
-    from repro.core.fleet import describe_fleet
     from repro.core.scenarios import get_scenario
     from repro.core.simulator import ClusterSim, SimConfig
 
-    t0 = time.time()
     sc = get_scenario(task["scenario"])
     jobs, gen_s, trace_src = _get_jobs(task, sc)
     fleet = _get_fleet(task.get("fleet") or sc.fleet)
@@ -241,46 +250,31 @@ def run_task(task: Dict) -> Dict:
     cfg_kwargs = dict(sc.sim_kwargs)     # scenario-bundled SimConfig knobs
     if task.get("mtbf") is not None:     # explicit --mtbf wins, 0 included
         cfg_kwargs["gpu_mtbf_s"] = task["mtbf"]
-    profile = bool(task.get("profile"))
     cfg = SimConfig(n_gpus=len(fleet), policy=task["policy"],
                     placer=placer, objective=objective, seed=task["seed"],
                     profile=profile, **cfg_kwargs)
-    # inline simulate(): deep-copy the pristine (possibly cached) trace,
-    # then run — split out so setup vs. simulation time are separable
     t_set0 = time.perf_counter()
     sim = ClusterSim(copy.deepcopy(list(jobs)), cfg, fleet=fleet)
     setup_s = time.perf_counter() - t_set0
-    t_run0 = time.perf_counter()
-    m = sim.run()
-    run_s = time.perf_counter() - t_run0
-    prof_out = None
-    if profile:
-        p = sim.prof
-        prof_out = {
-            "placement_s": p["placement_s"],
-            "alg1_s": p["alg1_s"],
-            "estimator_s": p["estimator_s"],
-            # everything else the run loop did: heap churn, accounting,
-            # phase bookkeeping
-            "event_loop_s": max(0.0, p["total_s"] - p["placement_s"]
-                                - p["alg1_s"] - p["estimator_s"]),
-            "total_s": p["total_s"],
-            "events": int(p["events"]),
-            # per-cell overhead buckets (everything that is not the
-            # simulation itself); trace_src says whether job generation
-            # was skipped by the content-addressed cache
-            "gen_s": gen_s,
-            "setup_s": setup_s,
-            "trace_src": trace_src,
-        }
-    out = {
+    meta = {"task": task, "placer": placer, "objective": objective,
+            "fleet": fleet, "n_jobs": len(jobs), "gen_s": gen_s,
+            "setup_s": setup_s, "trace_src": trace_src}
+    return sim, meta
+
+
+def _cell_result(meta: Dict, m, wall_s: float) -> Dict:
+    """The schema-stable result record for one finished cell."""
+    from repro.core.fleet import describe_fleet
+
+    task = meta["task"]
+    return {
         "policy": task["policy"],
-        "placer": placer,
-        "objective": objective,
+        "placer": meta["placer"],
+        "objective": meta["objective"],
         "scenario": task["scenario"],
         "seed": task["seed"],
-        "fleet": describe_fleet(fleet),
-        "n_jobs": len(jobs),
+        "fleet": describe_fleet(meta["fleet"]),
+        "n_jobs": meta["n_jobs"],
         "n_completed": len(m.jcts),
         "metrics": {
             "avg_jct_s": m.avg_jct,
@@ -305,12 +299,88 @@ def run_task(task: Dict) -> Dict:
             "n_quarantines": m.n_quarantines,
             "n_migrations": m.n_migrations,
         },
-        "wall_s": time.time() - t0,
+        "wall_s": wall_s,
     }
-    if prof_out is not None:
-        prof_out["overhead_s"] = max(0.0, out["wall_s"] - run_s)
-        out["profile"] = prof_out
+
+
+def run_task(task: Dict) -> Dict:
+    """One sweep cell: simulate (policy, placer, objective, scenario, seed)
+    on a fleet.
+
+    Module-level and dict-in/dict-out so it pickles cleanly into worker
+    processes.
+    """
+    t0 = time.time()
+    profile = bool(task.get("profile"))
+    sim, meta = _build_cell(task, profile)
+    t_run0 = time.perf_counter()
+    m = sim.run()
+    run_s = time.perf_counter() - t_run0
+    out = _cell_result(meta, m, time.time() - t0)
+    if profile:
+        p = sim.prof
+        out["profile"] = {
+            "placement_s": p["placement_s"],
+            "alg1_s": p["alg1_s"],
+            "estimator_s": p["estimator_s"],
+            # everything else the run loop did: heap churn, accounting,
+            # phase bookkeeping
+            "event_loop_s": max(0.0, p["total_s"] - p["placement_s"]
+                                - p["alg1_s"] - p["estimator_s"]),
+            "total_s": p["total_s"],
+            "events": int(p["events"]),
+            # per-cell overhead buckets (everything that is not the
+            # simulation itself); trace_src says whether job generation
+            # was skipped by the content-addressed cache
+            "gen_s": meta["gen_s"],
+            "setup_s": meta["setup_s"],
+            "trace_src": meta["trace_src"],
+            "overhead_s": max(0.0, out["wall_s"] - run_s),
+        }
     return out
+
+
+def _run_batched(tasks: List[Dict]) -> Tuple[List[Dict], List[Dict]]:
+    """Run sweep cells through the in-process replica-batched engine.
+
+    Cells coalesce by resolved fleet spec: one spec string means one fleet
+    shape *and* (via the fleet cache) shared ``GPUSpec`` objects, so every
+    replica in a group fuses its estimator forwards and Algorithm-1 solves
+    with the others (``core/sim/batch.py``).  Each group runs as one
+    lockstep ``BatchSim``; per-replica metrics are bit-identical to the
+    scalar engine, and ``wall_s`` is the group's wall-clock amortized over
+    its members (lockstep execution has no per-cell attribution).
+
+    Returns ``(results, fallback_tasks)``: a group whose build or run
+    raises falls back wholesale to the warm-pool path (which retries,
+    times out and error-records per cell), as do any cells this function
+    never attempts.  Per-cell SIGALRM budgets cannot interrupt a lockstep
+    round, so ``cell_timeout`` is enforced only on fallback cells.
+    """
+    from repro.core.scenarios import get_scenario
+    from repro.core.sim.batch import BatchSim
+
+    _warm_runtime()
+    groups: Dict[str, List[Dict]] = {}
+    for task in tasks:
+        sc = get_scenario(task["scenario"])
+        groups.setdefault(task.get("fleet") or sc.fleet, []).append(task)
+    results: List[Dict] = []
+    fallback: List[Dict] = []
+    for members in groups.values():
+        t0 = time.time()
+        try:
+            built = [_build_cell(t) for t in members]
+            ms = BatchSim([sim for sim, _ in built]).run()
+        except Exception:
+            # anything from a bad scenario to a diverging replica: the
+            # scalar pool path owns per-cell isolation and error records
+            fallback.extend(members)
+            continue
+        wall = (time.time() - t0) / len(members)
+        results.extend(_cell_result(meta, m, wall)
+                       for (_, meta), m in zip(built, ms))
+    return results, fallback
 
 
 class CellTimeout(Exception):
@@ -400,7 +470,8 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
               profile: bool = False, retries: int = 1,
               cell_timeout: Optional[float] = None,
               resume: Optional[str] = None,
-              trace_cache: Optional[str] = None) -> Dict:
+              trace_cache: Optional[str] = None,
+              engine: str = "pool") -> Dict:
     """Run the full grid and return the JSON-ready report dict.
 
     ``placers=None`` / ``objectives=None`` run each scenario's own default;
@@ -414,7 +485,16 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
     error cells are re-run).  ``trace_cache`` names a directory for the
     on-disk tier of the content-addressed trace cache (None = in-process
     memo only).  Parallel grids run on the persistent warm pool — see the
-    module docstring."""
+    module docstring.
+
+    ``engine="batched"`` routes cells through the in-process
+    replica-batched engine first: cells sharing a resolved fleet spec run
+    in lockstep with fused estimator / Algorithm-1 services and
+    bit-identical per-cell metrics (coalesce and fallback rules:
+    :func:`_run_batched`).  Profiled sweeps keep the pool path — the
+    per-component clocks are not accumulated through the collect
+    pipeline — and any cell the batched engine could not run falls back
+    to the pool/serial path below."""
     tasks = [{"policy": p, "placer": pl, "objective": ob, "scenario": sc,
               "seed": s, "fleet": fleet, "n_jobs": n_jobs, "mtbf": mtbf,
               "profile": profile, "retries": retries,
@@ -434,6 +514,10 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
                 else:
                     fresh.append(t)
             tasks = fresh
+    t0 = time.time()
+    batched_results: List[Dict] = []
+    if engine == "batched" and tasks and not profile:
+        batched_results, tasks = _run_batched(tasks)
     if workers is None and not serial:
         # tiny grids (e.g. the CI smoke sweep) finish faster in-process than
         # a pool takes to start; an explicit --workers always gets the pool
@@ -441,8 +525,7 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
         total_jobs = sum(t["n_jobs"] or get_scenario(t["scenario"]).n_jobs
                          for t in tasks)
         serial = total_jobs <= _AUTO_SERIAL_JOBS
-    t0 = time.time()
-    if not tasks:                        # fully resumed: nothing to run
+    if not tasks:          # fully resumed or fully batched: nothing pooled
         results = []
         workers_used = 1
     elif serial or len(tasks) == 1:
@@ -463,7 +546,8 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
             workers_used = _POOL_WORKERS
             results = list(pool.map(run_task_safe, tasks))
     errors = [r for r in results if "error" in r]
-    results = [r for r in results if "error" not in r] + resumed
+    results = [r for r in results if "error" not in r] + batched_results \
+        + resumed
     sort_key = lambda r: (r["scenario"], r["policy"], r["placer"],
                           r["objective"], r["seed"])
     results.sort(key=sort_key)
@@ -509,6 +593,10 @@ def run_sweep(policies: Sequence[str], scenarios: Sequence[str],
             "cell_timeout_s": cell_timeout,
             "resumed_cells": len(resumed),
             "trace_cache": trace_cache,
+            "engine": engine,
+            # cells the batched engine actually ran (0 under --profile or
+            # when every group fell back to the pool path)
+            "batched_cells": len(batched_results),
         },
         "wall_s_total": time.time() - t0,
         "results": results,
@@ -570,6 +658,17 @@ def _print_summary(report: Dict) -> None:
                   f"(gen {mean_ms('gen_s'):.1f} ms, "
                   f"setup {mean_ms('setup_s'):.1f} ms; "
                   f"trace cache {hits}/{n} hits)")
+        # per-cell wall-clock spread: mean alone hides a grid whose tail
+        # cell dominates the sweep; name the slowest cell so it can be
+        # bounded (--cell-timeout) or investigated directly
+        walls = sorted(r["wall_s"] for r in profiled)
+        pct = lambda q: walls[min(len(walls) - 1,
+                                  int(round(q * (len(walls) - 1))))]
+        slow = max(profiled, key=lambda r: r["wall_s"])
+        print(f"[sweep] per-cell wall: p50 {pct(0.50):.2f}s "
+              f"p95 {pct(0.95):.2f}s; slowest {slow['scenario']}/"
+              f"{slow['policy']}/{slow['placer']}/{slow['objective']} "
+              f"seed={slow['seed']} at {slow['wall_s']:.2f}s")
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -626,6 +725,15 @@ def build_parser() -> argparse.ArgumentParser:
                     help="directory for the on-disk tier of the "
                          "content-addressed trace cache (default: "
                          "in-process memo only)")
+    ap.add_argument("--engine", choices=("pool", "batched"),
+                    default="pool",
+                    help="cell execution engine: 'pool' runs one process "
+                         "per cell on the warm worker pool; 'batched' "
+                         "coalesces cells that share a fleet spec into "
+                         "one in-process lockstep replica batch with "
+                         "fused estimator/Algorithm-1 services "
+                         "(bit-identical metrics; profiled sweeps and "
+                         "failed groups fall back to the pool)")
     ap.add_argument("--out", default="BENCH_sweep.json",
                     help="JSON report path")
     return ap
@@ -659,7 +767,8 @@ def main(argv=None) -> int:
                        mtbf=args.mtbf, workers=args.workers,
                        serial=args.serial, profile=args.profile,
                        retries=args.retries, cell_timeout=args.cell_timeout,
-                       resume=args.resume, trace_cache=args.trace_cache)
+                       resume=args.resume, trace_cache=args.trace_cache,
+                       engine=args.engine)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1, sort_keys=False)
         f.write("\n")

@@ -450,6 +450,33 @@ def test_ms110_negative_non_column_loops_and_scope():
     assert ids(fs) == []
 
 
+def test_ms110_replica_major_gather_recognized_in_batch_module():
+    """batch.py's (B, G, S) export scatter — a comprehension over a column
+    stored straight into a subscripted row — is the vectorization boundary
+    itself: recognized without a suppression, but only in batch.py."""
+    gather = """
+        def resident_matrix(self):
+            for i, g in enumerate(self.gpus):
+                k = len(g._rjobs)
+                remaining[b, gg, :k] = [rj.job.remaining for rj in g._rjobs]
+    """
+    assert ids(lint(gather, "src/repro/core/sim/batch.py")) == []
+    # the identical gather elsewhere in core/sim/ still needs a suppression
+    assert ids(lint(gather, SIM)) == ["MS110"]
+
+
+def test_ms110_batch_module_plain_walks_still_fire():
+    """Recognition is surgical: a column walk in batch.py that is not a
+    subscript-store gather is still a flagged scalar loop."""
+    fs = lint("""
+        def walk(self, g):
+            for rj in g._rjobs:
+                touch(rj)
+            xs = [rj.job.remaining for rj in g._rjobs]
+    """, "src/repro/core/sim/batch.py")
+    assert ids(fs) == ["MS110", "MS110"]
+
+
 def test_ms110_suppression_with_reason_is_clean():
     fs = lint("""
         def advance(self, dt):

@@ -73,6 +73,13 @@ def make_fleet(params, interval):
             g._spd[k] = r["speed"]
             g._ckt[k] = r["since_t"]
             g._ckw[k] = r["since_w"]
+        if p.get("clean_watts"):
+            # simulate a refresh_speeds + advance having memoized the wall
+            # watts: a clean identity chain is what makes an occupied row
+            # eligible for the vectorized settle path
+            g._spd_key = object()
+            g._w_key = g._spd_key
+            g._w_val = p.get("wall_w", 275.0)
         gpus.append(g)
     return gpus, sim
 
@@ -94,25 +101,31 @@ def fleet_state(gpus):
     return out
 
 
-def check_settle_matches(params, t, interval):
+def check_settle_matches(params, t, interval, free_min=1, occ_min=1):
+    """Bit-identity of the thresholded settle against the scalar oracle.
+    Defaults force the masked vector path wherever a row is eligible (the
+    shipped module defaults are None = always-scalar, which would make the
+    property vacuous); explicit thresholds exercise the gating itself."""
     vec_gpus, vec_sim = make_fleet(params, interval)
     ref_gpus, ref_sim = make_fleet(params, interval)
     assert fleet_state(vec_gpus) == fleet_state(ref_gpus)  # build is stable
-    FleetState(vec_gpus).settle_all(t)
+    FleetState(vec_gpus).settle_all(t, free_min=free_min, occ_min=occ_min)
     settle_scalar(ref_gpus, t)
     assert fleet_state(vec_gpus) == fleet_state(ref_gpus)
     assert ([repr(s) for s in vec_sim.work_agg.shifts]
             == [repr(s) for s in ref_sim.work_agg.shifts])
 
 
-def random_params(rng, n=None):
+def random_params(rng, n=None, occupied_p=0.4, clean_p=0.5):
     """One fleet parameter set; mixes free/occupied GPUs, live/dead/
-    straddling repair windows, and all four phases."""
+    straddling repair windows, all four phases, and clean/dirty wall-watts
+    memos (a clean memo on a progressing occupied GPU is what routes it
+    onto the vectorized settle path)."""
     if n is None:
         n = int(rng.integers(1, 41))
     params = []
     for _ in range(n):
-        occupied = rng.random() < 0.4
+        occupied = rng.random() < occupied_p
         residents = []
         if occupied:
             for _ in range(int(rng.integers(1, 5))):
@@ -132,6 +145,8 @@ def random_params(rng, n=None):
             "energy": float(rng.uniform(0.0, 1e7)),
             "phase": int(rng.integers(0, len(PHASES))),
             "residents": residents,
+            "clean_watts": bool(occupied and rng.random() < clean_p),
+            "wall_w": float(rng.uniform(60.0, 500.0)),
         })
     return params
 
@@ -139,18 +154,38 @@ def random_params(rng, n=None):
 @pytest.mark.parametrize("seed", range(30))
 def test_settle_all_matches_scalar_seeded(seed):
     """Seeded randomized sweep — the always-on property check (hypothesis
-    is not in the container image).  Fleet sizes cross the <8-free-GPU
-    scalar-fallback threshold from both sides."""
+    is not in the container image).  Each fleet runs under three threshold
+    regimes: vector forced everywhere, mid thresholds (so free/occupied
+    classes cross their gates from both sides), and the shipped all-scalar
+    defaults (trivially identical — guards the gate wiring)."""
     rng = np.random.default_rng(0xA15E + seed)
     params = random_params(rng)
     t = float(rng.uniform(0.0, 1500.0))          # sometimes before clocks
+    interval = float(rng.choice([0.0, 45.0, 300.0]))
+    check_settle_matches(params, t, interval, free_min=1, occ_min=1)
+    check_settle_matches(params, t, interval, free_min=4, occ_min=8)
+    check_settle_matches(params, t, interval,
+                         free_min=None, occ_min=None)
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_settle_all_matches_scalar_occupied_vector(seed):
+    """Dense occupied fleets with mostly-clean watts memos: the
+    (rows, slots) matrix path — progress drain, repeated-subtraction
+    checkpoint boundaries, gid-ordered Kahan shifts — is exercised against
+    the scalar oracle, not just the free-row path."""
+    rng = np.random.default_rng(0x0CC0 + seed)
+    n = int(rng.integers(4, 65))
+    params = random_params(rng, n=n, occupied_p=0.85, clean_p=0.85)
+    t = float(rng.uniform(0.0, 1500.0))
     interval = float(rng.choice([0.0, 45.0, 300.0]))
     check_settle_matches(params, t, interval)
 
 
 def test_settle_all_matches_scalar_edges():
     """Hand-picked boundaries: dt == 0, whole window dead, repair ending
-    exactly at t, empty fleet, exactly-8 free GPUs (vector threshold)."""
+    exactly at t, empty fleet — all eight rows on the forced free-row
+    vector path."""
     base = {"energy": 100.0, "phase": 3, "residents": []}
     params = [
         dict(base, last_update=50.0, down_until=0.0),     # plain live
@@ -164,6 +199,35 @@ def test_settle_all_matches_scalar_edges():
     ]
     check_settle_matches(params, 100.0, 0.0)
     check_settle_matches([], 100.0, 0.0)
+
+
+def test_settle_all_matches_scalar_occupied_edges():
+    """Hand-picked occupied-row boundaries at an explicit 16-row gate:
+    checkpoint boundary landing exactly on the interval, many boundaries
+    inside one window, zero-speed residents, a dead-then-live straddle,
+    and mixed-in ineligible rows (dirty memo, CKPT phase, dt == 0) that
+    must stay on the scalar path."""
+    run = {"speed": 1.25, "remaining": 400.0, "since_t": 10.0,
+           "since_w": 12.5, "slice": 1}
+    eligible = {
+        "last_update": 50.0, "down_until": 0.0, "energy": 100.0,
+        "phase": 3, "clean_watts": True, "wall_w": 300.0,
+        "residents": [dict(run), dict(run, speed=0.0),
+                      dict(run, since_t=149.0)],
+    }
+    params = [dict(eligible) for _ in range(16)]
+    # exactly-on-the-boundary since_t: 149 + dt(=250) crosses at 45*k
+    params[0] = dict(eligible, residents=[dict(run, since_t=35.0)])
+    # repair straddle: dead from 100 to 180, still progresses (scalar
+    # advance charges progress over the whole dt — the contract to match)
+    params[1] = dict(eligible, down_until=180.0, last_update=100.0)
+    # ineligible rows interleaved: dirty memo / CKPT phase / clock at t
+    params.append(dict(eligible, clean_watts=False))
+    params.append(dict(eligible, phase=1))
+    params.append(dict(eligible, last_update=300.0))
+    check_settle_matches(params, 300.0, 45.0, occ_min=16)
+    # one row short of the 16-row gate: everything scalar, still identical
+    check_settle_matches(params[:15], 300.0, 45.0, occ_min=16)
 
 
 if HAVE_HYPOTHESIS:

@@ -405,6 +405,66 @@ def test_diff_main_autodetects_components_kind(tmp_path):
     assert ds.main([str(sb), str(sb)]) == 0
 
 
+def test_diff_components_gates_batch_rollout_row(tmp_path):
+    """batch_rollout is a gated row like the trace tiers: slower than
+    threshold fails, and vanishing from the candidate fails coverage."""
+    ds = _load_diff_sweeps()
+    pb = tmp_path / "base.json"
+    pb.write_text(json.dumps(_components_report(
+        {"batch_rollout": 60.0, "optimizer_latency": 100.0})))
+    pc = tmp_path / "cand.json"
+    pc.write_text(json.dumps(_components_report(
+        {"batch_rollout": 90.0, "optimizer_latency": 100.0})))
+    regressions, _ = ds.diff_components(str(pb), str(pc), threshold=0.10)
+    assert len(regressions) == 1 and "batch_rollout" in regressions[0]
+    pc.write_text(json.dumps(_components_report(
+        {"optimizer_latency": 100.0})))
+    regressions, _ = ds.diff_components(str(pb), str(pc), threshold=0.10)
+    assert any("batch_rollout" in r and "missing" in r for r in regressions)
+
+
+def test_diff_exact_flags_any_metric_drift(tmp_path):
+    """``--exact`` turns sub-threshold drift into a regression: the
+    batched-equivalence CI gate accepts byte-equal results only (timing
+    columns stay exempt, and components reports reject the flag)."""
+    ds = _load_diff_sweeps()
+
+    def mk(stp, wall=1.0):
+        return {"schema_version": 4, "kind": "miso-sweep",
+                "summary": {"smoke": {"miso": {"least-loaded":
+                            {"throughput": {"stp_mean": stp,
+                                            "wall_s_mean": wall}}}}}}
+
+    pb, pc = tmp_path / "b.json", tmp_path / "c.json"
+    pb.write_text(json.dumps(mk(1.0)))
+    pc.write_text(json.dumps(mk(1.0 + 1e-12)))
+    regressions, _ = ds.diff_exact(str(pb), str(pc))
+    assert len(regressions) == 1 and "stp_mean" in regressions[0]
+    # drift far below 2% passes the threshold differ but fails --exact
+    assert ds.main([str(pb), str(pc)]) == 0
+    assert ds.main([str(pb), str(pc), "--exact"]) == 1
+    # identical metrics with different wall-clock: exact passes
+    pc.write_text(json.dumps(mk(1.0, wall=9.9)))
+    assert ds.main([str(pb), str(pc), "--exact"]) == 0
+    comp = tmp_path / "comp.json"
+    comp.write_text(json.dumps(_components_report({"batch_rollout": 60.0})))
+    with pytest.raises(SystemExit):
+        ds.main([str(comp), str(comp), "--exact"])
+
+
+def test_diff_exact_pool_vs_batched_end_to_end(tmp_path):
+    """The CI equivalence gate end-to-end: the same grid through both
+    engines summarizes byte-equal, so ``--exact`` returns 0."""
+    ds = _load_diff_sweeps()
+    kw = dict(policies=["miso", "srpt"], scenarios=["smoke"], seeds=[0])
+    pa, pb = tmp_path / "pool.json", tmp_path / "batched.json"
+    pa.write_text(json.dumps(run_sweep(serial=True, **kw)))
+    rep = run_sweep(serial=True, engine="batched", **kw)
+    assert rep["config"]["batched_cells"] == 2
+    pb.write_text(json.dumps(rep))
+    assert ds.main([str(pa), str(pb), "--exact"]) == 0
+
+
 def test_profile_stamps_lint_version():
     """``--profile`` reports carry the misolint rule-set hash so archived
     numbers record which determinism contract the tree was clean under."""
@@ -416,3 +476,120 @@ def test_profile_stamps_lint_version():
     # and only --profile reports pay for the stamp
     bare = run_sweep(["miso"], ["smoke"], seeds=[0], serial=True)
     assert "lint_version" not in bare
+
+
+# ------------------------------------------------------------ trace cache
+
+
+def _cache_task(seed=0, n_jobs=None, trace_cache=None):
+    return {"policy": "miso", "scenario": "smoke", "seed": seed,
+            "n_jobs": n_jobs, "trace_cache": trace_cache}
+
+
+def test_trace_memo_fifo_eviction_bounds_memory(monkeypatch):
+    """The in-process trace memo is FIFO-bounded: a long rollout loop over
+    many distinct cells must not accumulate every trace it ever generated."""
+    from repro.core.scenarios import get_scenario
+    from repro.launch import sweep as sw
+
+    monkeypatch.setattr(sw, "_TRACE_CACHE", {})
+    monkeypatch.setattr(sw, "_TRACE_CACHE_MAX", 4)
+    sc = get_scenario("smoke")
+    for seed in range(10):                     # 10 distinct keys
+        sw._get_jobs(_cache_task(seed=seed), sc)
+    assert len(sw._TRACE_CACHE) == 4
+    # FIFO: the four *newest* survive, and a surviving key is a memo hit
+    jobs, _, src = sw._get_jobs(_cache_task(seed=9), sc)
+    assert src == "memo"
+    _, _, src0 = sw._get_jobs(_cache_task(seed=0), sc)
+    assert src0 == "fresh"                     # evicted long ago
+
+
+def test_trace_cache_corrupt_pickle_regenerates(tmp_path, monkeypatch):
+    """A truncated/corrupt on-disk trace entry regenerates (and heals the
+    file) instead of crashing the cell."""
+    import hashlib
+
+    from repro.core.scenarios import get_scenario
+    from repro.launch import sweep as sw
+
+    monkeypatch.setattr(sw, "_TRACE_CACHE", {})
+    sc = get_scenario("smoke")
+    task = _cache_task(trace_cache=str(tmp_path))
+    key = sw._trace_key(task, sc)
+    h = hashlib.sha256(repr(key).encode()).hexdigest()[:24]
+    path = tmp_path / f"trace_{h}.pkl"
+
+    # cold write, then destroy the entry two ways
+    jobs, _, src = sw._get_jobs(task, sc)
+    assert src == "fresh" and path.exists()
+    good = path.read_bytes()
+
+    for corrupt in (good[: len(good) // 2], b"\x80garbage"):
+        path.write_bytes(corrupt)
+        monkeypatch.setattr(sw, "_TRACE_CACHE", {})   # force the disk tier
+        jobs2, _, src2 = sw._get_jobs(task, sc)
+        assert src2 == "fresh"                 # fell through, regenerated
+        assert [j.jid for j in jobs2] == [j.jid for j in jobs]
+        assert path.read_bytes() == good       # healed atomically
+    monkeypatch.setattr(sw, "_TRACE_CACHE", {})
+    _, _, src3 = sw._get_jobs(task, sc)
+    assert src3 == "disk"                      # healthy entry serves again
+
+
+# --------------------------------------------------------- batched engine
+
+
+def _strip(rep):
+    return [(r["policy"], r["scenario"], r["seed"], r["placer"],
+             r["metrics"]) for r in rep["results"]]
+
+
+def test_batched_engine_bit_identical_to_pool():
+    """`--engine batched` coalesces same-fleet cells into one lockstep
+    replica batch; every cell's metrics stay bit-identical to the scalar
+    per-process path."""
+    kw = dict(policies=["miso", "srpt"], scenarios=["smoke"],
+              seeds=[0, 1], serial=True)
+    a = run_sweep(engine="pool", **kw)
+    b = run_sweep(engine="batched", **kw)
+    assert _strip(a) == _strip(b)
+    assert b["config"]["engine"] == "batched"
+    assert b["config"]["batched_cells"] == 4
+    assert not b["errors"]
+
+
+def test_batched_engine_coalesces_by_fleet():
+    """Cells with different fleet shapes land in different lockstep groups
+    (hetero_smoke: a100+h100 vs smoke: a100-only) — all still run batched,
+    none fall back."""
+    rep = run_sweep(["miso"], ["smoke", "hetero_smoke"], seeds=[0],
+                    serial=True, engine="batched")
+    assert rep["config"]["batched_cells"] == 2
+    fleets = {r["scenario"]: r["fleet"] for r in rep["results"]}
+    assert fleets["smoke"] != fleets["hetero_smoke"]
+
+
+def test_batched_engine_group_failure_falls_back(monkeypatch):
+    """A group whose lockstep run dies falls back to the per-cell scalar
+    path: the sweep still returns every cell, with batched_cells == 0."""
+    from repro.core.sim import batch as batch_mod
+
+    def boom(self):
+        raise RuntimeError("injected lockstep failure")
+
+    monkeypatch.setattr(batch_mod.BatchSim, "run", boom)
+    rep = run_sweep(["miso"], ["smoke"], seeds=[0, 1], serial=True,
+                    engine="batched")
+    assert rep["config"]["batched_cells"] == 0
+    assert len(rep["results"]) == 2 and not rep["errors"]
+
+
+def test_batched_engine_profile_falls_back():
+    """--profile keeps the scalar path (per-component clocks are not
+    accumulated through the collect pipeline) but still completes."""
+    rep = run_sweep(["miso"], ["smoke"], seeds=[0], serial=True,
+                    profile=True, engine="batched")
+    assert rep["config"]["batched_cells"] == 0
+    (r,) = rep["results"]
+    assert "profile" in r and r["profile"]["events"] > 0

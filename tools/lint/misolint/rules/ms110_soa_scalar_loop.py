@@ -17,6 +17,15 @@ plain ``for`` statements and comprehensions, through ``enumerate`` /
 ``zip`` / ``list`` / ``reversed`` / ``sorted`` wrappers, subscripted
 column slices (``self._rjobs[i:]``), and simple local aliases bound from a
 column in the same function (``rjobs = self._rjobs``).
+
+One pattern is recognized rather than flagged: the **replica-major
+gather** in ``core/sim/batch.py`` — a comprehension over a column whose
+value is stored straight into a subscripted destination row
+(``out[b, g, :k] = [... for rj in g._rjobs]``).  That scatter builds the
+``(B, G, S)`` export arrays that ARE the vectorization boundary: each row
+is one GPU's <=7-slot column (the same length bound that sanctions the
+scalar walks), and there is no ``FleetState`` batch op left to route it
+through — the gather is how rows become batch-shaped in the first place.
 """
 from __future__ import annotations
 
@@ -31,6 +40,23 @@ COLUMNS = ("_rjobs", "_spd", "_ckt", "_ckw")
 
 #: builtins that forward iteration to their argument(s)
 _WRAPPERS = ("enumerate", "zip", "list", "tuple", "reversed", "sorted")
+
+#: the one module whose subscript-store gathers are replica-major exports
+BATCH_MODULE = "src/repro/core/sim/batch.py"
+
+
+def _is_replica_major_gather(ctx: ModuleContext, node: ast.AST) -> bool:
+    """A comprehension in ``core/sim/batch.py`` whose value lands directly
+    in a subscripted store — ``out[b, g, :k] = [... for rj in col]`` — is
+    the replica-major export gather, not a scalar walk to vectorize."""
+    if ctx.path != BATCH_MODULE:
+        return False
+    if not isinstance(node, (ast.ListComp, ast.GeneratorExp)):
+        return False
+    parent = ctx.parent(node)
+    return (isinstance(parent, ast.Assign)
+            and len(parent.targets) == 1
+            and isinstance(parent.targets[0], ast.Subscript))
 
 
 def _column_of(node: ast.AST,
@@ -111,6 +137,8 @@ class SoaScalarLoopRule(Rule):
             for it in iters:
                 cols.extend(_iter_columns(it, aliases))
             if not cols:
+                continue
+            if _is_replica_major_gather(ctx, node):
                 continue
             names = ", ".join(f"`{c}`" for c in dict.fromkeys(cols))
             out.append(self.finding(
